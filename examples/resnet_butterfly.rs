@@ -1,0 +1,68 @@
+//! Table 2 (paper §4.2): a residual CNN ± {nothing, FC, BPBP} inserted
+//! before the classifier head, on the synthetic CIFAR-gray dataset.
+//!
+//! ```text
+//! cargo run --release --example resnet_butterfly -- --epochs 2 --train-samples 800
+//! ```
+//!
+//! The backbone is a compact 3-stage ResNet (DESIGN.md §5 documents the
+//! ResNet18 → compact substitution); the experiment's claim is the
+//! relative delta between the three pre-classifier variants, which is
+//! preserved.
+
+use butterfly::cli::Args;
+use butterfly::data::batcher::BatchIter;
+use butterfly::data::synth::{generate, DatasetKind, CLASSES};
+use butterfly::nn::convnet::{PreClassifier, SmallResNet};
+use butterfly::util::rng::Rng;
+use butterfly::util::table::Table;
+use std::time::Instant;
+
+fn main() {
+    let args = Args::from_env_no_command().unwrap_or_default();
+    let epochs = args.usize_or("epochs", 2).unwrap();
+    let train_n = args.usize_or("train-samples", 800).unwrap();
+    let test_n = args.usize_or("test-samples", 300).unwrap();
+    let width = args.usize_or("width", 8).unwrap();
+    let blocks = args.usize_or("blocks", 1).unwrap();
+    let lr = args.f64_or("lr", 0.01).unwrap() as f32;
+
+    println!("== resnet_butterfly: Table 2 (pre-classifier {{none, fc, bpbp}}) ==");
+    let train = generate(DatasetKind::CifarGray, train_n, 42);
+    let test = generate(DatasetKind::CifarGray, test_n, 43);
+
+    let mut table = Table::new(&["last layer", "test acc", "params", "Δ params"])
+        .with_title("Table 2 analogue (compact ResNet, synthetic CIFAR-gray)");
+    let mut base_params = 0usize;
+    for pre in [PreClassifier::None, PreClassifier::Fc, PreClassifier::Bpbp] {
+        let t0 = Instant::now();
+        let mut rng = Rng::new(7);
+        let mut net = SmallResNet::new(32, CLASSES, width, blocks, pre, &mut rng);
+        if pre == PreClassifier::None {
+            base_params = net.param_count();
+        }
+        let mut data_rng = Rng::new(11);
+        for epoch in 0..epochs {
+            let mut iter = BatchIter::new(&train, 25, &mut data_rng);
+            let mut loss_sum = 0.0f64;
+            let mut nb = 0usize;
+            while let Some((x, y)) = iter.next_batch() {
+                let (loss, _) = net.train_step(&x, &y, lr, 0.9, 2e-4);
+                loss_sum += loss as f64;
+                nb += 1;
+            }
+            eprintln!("  [{}] epoch {epoch}: mean loss {:.4}", pre.name(), loss_sum / nb as f64);
+        }
+        let acc = net.evaluate(&test, 50);
+        eprintln!("  [{}] test acc {acc:.3} ({:.1}s)", pre.name(), t0.elapsed().as_secs_f64());
+        table.add_row(vec![
+            pre.name().to_string(),
+            format!("{acc:.3}"),
+            net.param_count().to_string(),
+            format!("+{}", net.param_count() - base_params),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("(paper: None 93.58, FC 93.89, BPBP 94.01 on real CIFAR-10/ResNet18 —");
+    println!(" the claim reproduced here is the ordering and the tiny BPBP parameter delta)");
+}

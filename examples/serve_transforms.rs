@@ -1,0 +1,70 @@
+//! Serving demo (systems extension of Figure 4): install several
+//! transforms behind the router and measure latency/throughput as a
+//! function of the batching window.
+//!
+//! ```text
+//! cargo run --release --example serve_transforms -- --n 1024 --requests 4000
+//! ```
+
+use butterfly::butterfly::closed_form::{convolution_stack, dft_stack, hadamard_stack};
+use butterfly::cli::Args;
+use butterfly::serving::{BatcherConfig, Router};
+use butterfly::util::rng::Rng;
+use butterfly::util::table::Table;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let args = Args::from_env_no_command().unwrap_or_default();
+    let n = args.usize_or("n", 1024).unwrap();
+    let requests = args.usize_or("requests", 4000).unwrap();
+    let clients = args.usize_or("clients", 8).unwrap();
+
+    println!("== serve_transforms: router + dynamic batcher over learned fast multiplies ==");
+    let mut h = vec![0.0f32; n];
+    Rng::new(3).fill_normal(&mut h, 0.0, (1.0 / n as f64).sqrt() as f32);
+
+    let mut table = Table::new(&["max_batch", "max_wait", "req/s", "mean batch", "p-mean latency µs"])
+        .with_title(format!("serving sweep (N={n}, {clients} clients, {requests} requests, 2 replicas)"));
+    for (max_batch, wait_us) in [(1usize, 0u64), (8, 200), (32, 500), (64, 1000)] {
+        let mut router = Router::new();
+        let cfg = BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_micros(wait_us),
+            queue_cap: 16384,
+        };
+        router.install("dft", &dft_stack(n), 2, cfg.clone());
+        router.install("hadamard", &hadamard_stack(n), 1, cfg.clone());
+        router.install("conv", &convolution_stack(&h), 1, cfg);
+        let t0 = Instant::now();
+        let threads: Vec<_> = (0..clients)
+            .map(|t| {
+                let handle = router.handle("dft").unwrap();
+                let per = requests / clients;
+                std::thread::spawn(move || {
+                    let mut rng = Rng::new(50 + t as u64);
+                    for _ in 0..per {
+                        let mut x = vec![0.0f32; n];
+                        rng.fill_normal(&mut x, 0.0, 1.0);
+                        handle.call_real(x).expect("serve");
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = router.stats();
+        let s = &stats["dft"];
+        table.add_row(vec![
+            max_batch.to_string(),
+            format!("{wait_us}µs"),
+            format!("{:.0}", s.served as f64 / wall),
+            format!("{:.2}", s.mean_batch),
+            format!("{:.0}", s.mean_latency_micros),
+        ]);
+        router.shutdown();
+    }
+    println!("{}", table.render());
+    println!("(larger windows trade latency for batching efficiency — the standard serving knob)");
+}

@@ -1,0 +1,84 @@
+//! The Figure-3 grid (paper §4.1): recover all eight transforms over a
+//! range of N, comparing the butterfly parameterization against the
+//! sparse / low-rank / sparse+low-rank baselines at equal multiplication
+//! budget.
+//!
+//! ```text
+//! cargo run --release --example transform_zoo -- --max-n 64
+//! cargo run --release --example transform_zoo -- --max-n 1024 --max-resource 81   # full (slow)
+//! ```
+
+use butterfly::baselines::{butterfly_budget, lowrank_baseline, sparse_baseline, sparse_plus_lowrank_baseline};
+use butterfly::cli::Args;
+use butterfly::coordinator::{run_job, FactorizeJob, Metrics, Registry, SchedulerConfig};
+use butterfly::transforms::matrices::target_matrix;
+use butterfly::transforms::spec::ALL_TRANSFORMS;
+use butterfly::util::rng::Rng;
+use butterfly::util::table::{fmt_sci, Table};
+use std::time::Instant;
+
+fn main() {
+    let args = Args::from_env_no_command().unwrap_or_default();
+    let max_n = args.usize_or("max-n", 64).unwrap();
+    let cfg = SchedulerConfig {
+        workers: args.usize_or("workers", 0).unwrap(),
+        max_resource: args.usize_or("max-resource", 27).unwrap(),
+        eta: 3,
+        step_quantum: args.usize_or("quantum", 60).unwrap(),
+        seed: args.u64_or("seed", 42).unwrap(),
+    };
+    let mut ns = vec![];
+    let mut n = 8;
+    while n <= max_n {
+        ns.push(n);
+        n *= 2;
+    }
+
+    let mut grid = Table::new(
+        &std::iter::once("transform".to_string())
+            .chain(ns.iter().map(|n| format!("N={n}")))
+            .collect::<Vec<_>>()
+            .iter()
+            .map(|s| s.as_str())
+            .collect::<Vec<_>>(),
+    )
+    .with_title("Figure 3: butterfly recovery RMSE (early stop at 1e-4)");
+    let mut base_table = Table::new(&["transform", "N", "butterfly", "sparse", "low-rank", "sparse+lr"])
+        .with_title("Figure 3 baselines @ equal multiply budget (largest N)");
+
+    for kind in ALL_TRANSFORMS {
+        let mut row = vec![kind.name().to_string()];
+        let mut last_rmse = f64::NAN;
+        for &n in &ns {
+            let t0 = Instant::now();
+            let job = FactorizeJob::paper(kind, n, cfg.seed, 50_000);
+            let res = run_job(&job, &cfg, &Metrics::new(), &Registry::new());
+            last_rmse = res.best_rmse;
+            row.push(fmt_sci(res.best_rmse));
+            eprintln!(
+                "  {} N={n}: rmse {} ({} trials, {:.1}s){}",
+                kind.name(),
+                fmt_sci(res.best_rmse),
+                res.trials_run,
+                t0.elapsed().as_secs_f64(),
+                if res.reached_target { "  ✓ machine precision" } else { "" }
+            );
+        }
+        grid.add_row(row);
+        // baselines at the largest N for this transform
+        let n = *ns.last().unwrap();
+        let mut rng = Rng::new(cfg.seed);
+        let target = target_matrix(kind, n, &mut rng);
+        let budget = butterfly_budget(n, kind.recommended_depth());
+        base_table.add_row(vec![
+            kind.name().to_string(),
+            n.to_string(),
+            fmt_sci(last_rmse),
+            fmt_sci(sparse_baseline(&target, budget).rmse),
+            fmt_sci(lowrank_baseline(&target, budget).rmse),
+            fmt_sci(sparse_plus_lowrank_baseline(&target, budget).rmse),
+        ]);
+    }
+    println!("{}", grid.render());
+    println!("{}", base_table.render());
+}

@@ -1,0 +1,172 @@
+"""AOT lowering: jax → HLO **text** → ``artifacts/`` + manifest.json.
+
+Run once by ``make artifacts``; the Rust runtime
+(``rust/src/runtime/engine.rs``) loads and compiles the results on the
+PJRT CPU client. Python never runs at serve time.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Usage::
+
+    cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+APPLY_BATCH = 16
+MLP_N = 1024
+MLP_BATCH = 50
+MLP_EVAL_BATCH = 100
+CLASSES = 10
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(name, shape):
+    return {"name": name, "shape": list(shape)}
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def entry_bp_apply(n: int, depth: int):
+    p = model.theta_len(n, depth)
+    fn = functools.partial(model.bp_apply_packed, n=n, depth=depth, use_pallas=True)
+    lowered = jax.jit(fn).lower(f32([p]), f32([2, APPLY_BATCH, n]))
+    return {
+        "name": f"bp_apply_n{n}_d{depth}",
+        "lowered": lowered,
+        "inputs": [spec("theta", [p]), spec("x", [2, APPLY_BATCH, n])],
+        "outputs": [spec("y", [2, APPLY_BATCH, n])],
+        "meta": {"n": n, "depth": depth, "batch": APPLY_BATCH},
+    }
+
+
+def entry_factorize_step(n: int, depth: int):
+    p = model.theta_len(n, depth)
+    fn = functools.partial(model.factorize_step, n=n, depth=depth, use_pallas=True)
+    lowered = jax.jit(fn).lower(f32([p]), f32([p]), f32([p]), f32([1]), f32([1]), f32([2, n, n]))
+    return {
+        "name": f"factorize_step_n{n}_d{depth}",
+        "lowered": lowered,
+        "inputs": [
+            spec("theta", [p]),
+            spec("m", [p]),
+            spec("v", [p]),
+            spec("t", [1]),
+            spec("lr", [1]),
+            spec("target", [2, n, n]),
+        ],
+        "outputs": [spec("theta2", [p]), spec("m2", [p]), spec("v2", [p]), spec("loss", [1])],
+        "meta": {"n": n, "depth": depth},
+    }
+
+
+def entry_mlp_train(n: int, batch: int, classes: int):
+    p = model.mlp_theta_len(n, classes)
+    fn = functools.partial(model.mlp_train_step, n=n, classes=classes, use_pallas=True)
+    lowered = jax.jit(fn).lower(
+        f32([p]), f32([p]), f32([batch, n]), f32([batch, classes]), f32([1]), f32([p])
+    )
+    return {
+        "name": f"mlp_train_n{n}_b{batch}",
+        "lowered": lowered,
+        "inputs": [
+            spec("theta", [p]),
+            spec("vel", [p]),
+            spec("x", [batch, n]),
+            spec("y_onehot", [batch, classes]),
+            spec("lr", [1]),
+            spec("mask", [p]),
+        ],
+        "outputs": [spec("theta2", [p]), spec("vel2", [p]), spec("loss", [1]), spec("acc", [1])],
+        "meta": {"n": n, "batch": batch, "classes": classes},
+    }
+
+
+def entry_mlp_eval(n: int, batch: int, classes: int):
+    p = model.mlp_theta_len(n, classes)
+    fn = functools.partial(model.mlp_eval, n=n, classes=classes, use_pallas=True)
+    lowered = jax.jit(fn).lower(f32([p]), f32([batch, n]), f32([batch, classes]))
+    return {
+        "name": f"mlp_eval_n{n}_b{batch}",
+        "lowered": lowered,
+        "inputs": [spec("theta", [p]), spec("x", [batch, n]), spec("y_onehot", [batch, classes])],
+        "outputs": [spec("loss", [1]), spec("acc", [1])],
+        "meta": {"n": n, "batch": batch, "classes": classes},
+    }
+
+
+def build_entries(fast: bool):
+    entries = []
+    apply_ns = [8, 16, 64] if fast else [8, 16, 32, 64, 128, 256, 1024]
+    for n in apply_ns:
+        entries.append(entry_bp_apply(n, 1))
+    entries.append(entry_bp_apply(16, 2))
+    fac_ns = [8, 16] if fast else [8, 16, 32, 64]
+    for n in fac_ns:
+        entries.append(entry_factorize_step(n, 1))
+    entries.append(entry_factorize_step(8, 2))
+    if not fast:
+        entries.append(entry_mlp_train(MLP_N, MLP_BATCH, CLASSES))
+        entries.append(entry_mlp_eval(MLP_N, MLP_EVAL_BATCH, CLASSES))
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    ap.add_argument("--fast", action="store_true", help="small entry set (CI/tests)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"version": 1, "entries": []}
+    for e in build_entries(args.fast):
+        t0 = time.time()
+        text = to_hlo_text(e["lowered"])
+        path = f"{e['name']}.hlo.txt"
+        with open(os.path.join(args.out, path), "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "name": e["name"],
+                "path": path,
+                "inputs": e["inputs"],
+                "outputs": e["outputs"],
+                "meta": e["meta"],
+            }
+        )
+        print(
+            f"[aot] {e['name']}: {len(text) / 1e6:.2f} MB HLO in {time.time() - t0:.1f}s",
+            file=sys.stderr,
+        )
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(manifest['entries'])} entries to {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

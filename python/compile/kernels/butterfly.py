@@ -1,0 +1,131 @@
+"""Layer 1: the butterfly-level Pallas kernel.
+
+One grid step processes one batch tile of a single butterfly level:
+the ``[TB, N]`` planar tile is reshaped in-register to
+``[TB, blocks, 2, half]`` and the pair exchange becomes an elementwise
+complex FMA against the level's ``[half, 2, 2]`` twiddle tensor, which
+stays resident in VMEM across the whole batch sweep.
+
+HARDWARE ADAPTATION (the paper's kernel is CUDA): on GPU the authors
+assign a threadblock per batch tile and stage twiddles in shared memory.
+The TPU analogue implemented here: BlockSpec tiles the batch×N plane
+into VMEM-resident blocks (full-N rows so a level's pair exchange stays
+in-block), the twiddle operand is un-blocked (index_map pins it, so
+Mosaic keeps it in VMEM across grid steps), and the 2×2-unit contraction
+is expressed as reshape + elementwise FMA — a VPU workload, which is the
+roofline-optimal form for this bandwidth-bound transform (no MXU matmul
+is wasted on 2×2 tiles). See DESIGN.md §Hardware-Adaptation.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU lowering is a compile-only target.
+
+Autodiff: ``pallas_call`` has no AD rule, so the level is wrapped in a
+``custom_vjp`` whose backward pass *reuses the same kernel* with the
+adjoint twiddles (conj(G)ᵀ) — the butterfly's backward is itself a
+butterfly — plus a jnp einsum for the twiddle cotangents.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import adjoint_twiddle
+
+# Batch tile height. 64 rows × 1024 cols × 4 B × (re+im in & out + twiddle)
+# ≈ 1.1 MiB — comfortably inside a TPU core's ~16 MiB VMEM with double
+# buffering (see DESIGN.md §Hardware-Adaptation for the footprint table).
+DEFAULT_TILE = 64
+
+
+def _level_kernel(xr_ref, xi_ref, twr_ref, twi_ref, or_ref, oi_ref, *, half: int):
+    xr = xr_ref[...]
+    xi = xi_ref[...]
+    tb, n = xr.shape
+    blocks = n // (2 * half)
+    xr = xr.reshape(tb, blocks, 2, half)
+    xi = xi.reshape(tb, blocks, 2, half)
+    twr = twr_ref[...]
+    twi = twi_ref[...]
+    lo_r, lo_i = xr[:, :, 0, :], xi[:, :, 0, :]
+    hi_r, hi_i = xr[:, :, 1, :], xi[:, :, 1, :]
+
+    def g(r, c):
+        return twr[:, r, c][None, None, :], twi[:, r, c][None, None, :]
+
+    def cmul(ar, ai, br, bi):
+        return ar * br - ai * bi, ar * bi + ai * br
+
+    g00r, g00i = g(0, 0)
+    g01r, g01i = g(0, 1)
+    g10r, g10i = g(1, 0)
+    g11r, g11i = g(1, 1)
+    a_r, a_i = cmul(g00r, g00i, lo_r, lo_i)
+    b_r, b_i = cmul(g01r, g01i, hi_r, hi_i)
+    c_r, c_i = cmul(g10r, g10i, lo_r, lo_i)
+    d_r, d_i = cmul(g11r, g11i, hi_r, hi_i)
+    or_ref[...] = jnp.stack([a_r + b_r, c_r + d_r], axis=2).reshape(tb, n)
+    oi_ref[...] = jnp.stack([a_i + b_i, c_i + d_i], axis=2).reshape(tb, n)
+
+
+def _tile(batch: int) -> int:
+    if batch % DEFAULT_TILE == 0:
+        return DEFAULT_TILE
+    return batch  # single tile; interpret mode has no VMEM ceiling
+
+
+def _level_pallas_raw(x_re, x_im, tw_re, tw_im, level: int):
+    B, N = x_re.shape
+    half = 1 << level
+    tb = _tile(B)
+    grid = (B // tb,)
+    spec_x = pl.BlockSpec((tb, N), lambda i: (i, 0))
+    # twiddles are un-blocked: same VMEM-resident operand for every tile
+    spec_tw = pl.BlockSpec((half, 2, 2), lambda i: (0, 0, 0))
+    out = pl.pallas_call(
+        functools.partial(_level_kernel, half=half),
+        grid=grid,
+        in_specs=[spec_x, spec_x, spec_tw, spec_tw],
+        out_specs=[spec_x, spec_x],
+        out_shape=[jax.ShapeDtypeStruct((B, N), x_re.dtype)] * 2,
+        interpret=True,
+    )(x_re, x_im, tw_re, tw_im)
+    return tuple(out)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def butterfly_level(x_re, x_im, tw_re, tw_im, level: int):
+    """Differentiable butterfly level backed by the Pallas kernel."""
+    return _level_pallas_raw(x_re, x_im, tw_re, tw_im, level)
+
+
+def _fwd(x_re, x_im, tw_re, tw_im, level):
+    y = _level_pallas_raw(x_re, x_im, tw_re, tw_im, level)
+    return y, (x_re, x_im, tw_re, tw_im)
+
+
+def _bwd(level, saved, ct):
+    x_re, x_im, tw_re, tw_im, = saved
+    dy_re, dy_im = ct
+    # dx: the same butterfly kernel with adjoint twiddles conj(G)ᵀ.
+    at_re, at_im = adjoint_twiddle(tw_re, tw_im)
+    dx_re, dx_im = _level_pallas_raw(dy_re, dy_im, at_re, at_im, level)
+    # dG = Σ_{batch, blocks} dy ⊗ conj(x), unit-tied — an einsum over the
+    # blocked views (L2 graph code, not kernel code).
+    B, N = x_re.shape
+    half = 1 << level
+    blocks = N // (2 * half)
+    xr = x_re.reshape(B, blocks, 2, half)
+    xi = x_im.reshape(B, blocks, 2, half)
+    dr = dy_re.reshape(B, blocks, 2, half)
+    di = dy_im.reshape(B, blocks, 2, half)
+    # dg[r, c, u] = Σ dy[r] * conj(x[c]) (complex)
+    dtw_re = jnp.einsum("bkru,bkcu->urc", dr, xr) + jnp.einsum("bkru,bkcu->urc", di, xi)
+    dtw_im = jnp.einsum("bkru,bkcu->urc", di, xr) - jnp.einsum("bkru,bkcu->urc", dr, xi)
+    return dx_re, dx_im, dtw_re, dtw_im
+
+
+butterfly_level.defvjp(_fwd, _bwd)

@@ -1,0 +1,126 @@
+"""Pure-jnp oracle for the butterfly kernels.
+
+Everything here is the *specification*: the Pallas kernel
+(`kernels.butterfly`) and the Rust fast path must agree with these
+functions bit-for-bit (up to fp32 reassociation). Used by pytest /
+hypothesis and as the non-Pallas fallback in `model.py`.
+
+Layout contract (mirrors ``rust/src/butterfly/params.rs``):
+
+- batches are planar complex pairs ``(x_re, x_im)`` of shape ``[B, N]``;
+- level ``l`` mixes pairs at distance ``2^l`` inside blocks of ``2^{l+1}``
+  and is applied first for ``l = 0``;
+- twiddles are factor-tied: level ``l`` has ``2^l`` units of shape
+  ``[2, 2]``, shared across blocks, stored planar as
+  ``(tw_re [U,2,2], tw_im [U,2,2])``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def cmul(ar, ai, br, bi):
+    """Planar complex multiply."""
+    return ar * br - ai * bi, ar * bi + ai * br
+
+
+def butterfly_level_ref(x_re, x_im, tw_re, tw_im, level: int):
+    """Apply one butterfly level to a planar batch ``[B, N]``.
+
+    ``tw_*`` has shape ``[2^level, 2, 2]`` (factor-tied units).
+    """
+    B, N = x_re.shape
+    half = 1 << level
+    m = half * 2
+    blocks = N // m
+    xr = x_re.reshape(B, blocks, 2, half)
+    xi = x_im.reshape(B, blocks, 2, half)
+    lo_r, lo_i = xr[:, :, 0, :], xi[:, :, 0, :]
+    hi_r, hi_i = xr[:, :, 1, :], xi[:, :, 1, :]
+
+    def g(r, c):
+        return tw_re[:, r, c][None, None, :], tw_im[:, r, c][None, None, :]
+
+    g00r, g00i = g(0, 0)
+    g01r, g01i = g(0, 1)
+    g10r, g10i = g(1, 0)
+    g11r, g11i = g(1, 1)
+    a_r, a_i = cmul(g00r, g00i, lo_r, lo_i)
+    b_r, b_i = cmul(g01r, g01i, hi_r, hi_i)
+    c_r, c_i = cmul(g10r, g10i, lo_r, lo_i)
+    d_r, d_i = cmul(g11r, g11i, hi_r, hi_i)
+    out_r = jnp.stack([a_r + b_r, c_r + d_r], axis=2).reshape(B, N)
+    out_i = jnp.stack([a_i + b_i, c_i + d_i], axis=2).reshape(B, N)
+    return out_r, out_i
+
+
+def adjoint_twiddle(tw_re, tw_im):
+    """Twiddles of the backward (vjp) level: conj(G)ᵀ per unit."""
+    return tw_re.transpose(0, 2, 1), -tw_im.transpose(0, 2, 1)
+
+
+def generator_table(m: int, gate: int) -> np.ndarray:
+    """Gather table of P^a / P^b / P^c on a block of size m
+    (``out[i] = in[g[i]]``), matching
+    ``rust/src/butterfly/permutation.rs``."""
+    h = m // 2
+    g = np.arange(m)
+    if gate == 0:  # a: even-odd separation
+        g[:h] = 2 * np.arange(h)
+        g[h:] = 2 * np.arange(h) + 1
+    elif gate == 1:  # b: reverse first half
+        g[:h] = h - 1 - np.arange(h)
+    elif gate == 2:  # c: reverse second half
+        g[h:] = m - 1 - np.arange(h)
+    else:
+        raise ValueError(gate)
+    return g
+
+
+def _apply_generator(x, gate: int, m: int):
+    """``x [B, blocks, m] → P^gate x`` via transpose/flip/concat only —
+    NO gather. (xla_extension 0.5.1, which executes the AOT artifacts,
+    mis-executes the gathers jnp fancy-indexing lowers to for some
+    shapes; these primitives round-trip exactly. The even-odd separation
+    P^a *is* a transpose: ``[m/2, 2] → [2, m/2]``.)"""
+    h = m // 2
+    if gate == 0:
+        B, blocks, _ = x.shape
+        return x.reshape(B, blocks, h, 2).transpose(0, 1, 3, 2).reshape(B, blocks, m)
+    lo, hi = x[:, :, :h], x[:, :, h:]
+    if gate == 1:
+        return jnp.concatenate([lo[:, :, ::-1], hi], axis=2)
+    return jnp.concatenate([lo, hi[:, :, ::-1]], axis=2)
+
+
+def perm_step_ref(x_re, x_im, probs, step: int, n: int):
+    """One relaxed permutation step (eq. (3)): three sigmoid gates at
+    block size ``n >> step``, applied a → b → c."""
+    m = n >> step
+    blocks = n // m
+    B = x_re.shape[0]
+    for gate in range(3):
+        p = probs[gate]
+        xr = x_re.reshape(B, blocks, m)
+        xi = x_im.reshape(B, blocks, m)
+        x_re = (p * _apply_generator(xr, gate, m) + (1.0 - p) * xr).reshape(B, n)
+        x_im = (p * _apply_generator(xi, gate, m) + (1.0 - p) * xi).reshape(B, n)
+    return x_re, x_im
+
+
+def bp_module_ref(x_re, x_im, levels_tw, logits, n: int, use_level=None):
+    """One BP module: relaxed permutation then all butterfly levels.
+
+    ``levels_tw`` is a list of ``(tw_re, tw_im)`` per level; ``logits``
+    has shape ``[L, 3]``. ``use_level`` lets the caller substitute a
+    different level implementation (e.g. the Pallas kernel)."""
+    L = len(levels_tw)
+    probs_all = 1.0 / (1.0 + jnp.exp(-logits))
+    for k in range(L):
+        x_re, x_im = perm_step_ref(x_re, x_im, probs_all[k], k, n)
+    level_fn = use_level or butterfly_level_ref
+    for l, (tw_re, tw_im) in enumerate(levels_tw):
+        x_re, x_im = level_fn(x_re, x_im, tw_re, tw_im, l)
+    return x_re, x_im

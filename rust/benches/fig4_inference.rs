@@ -1,0 +1,74 @@
+//! Figure 4 (right): single-vector inference speed across N —
+//! the learned butterfly fast multiply (BP) vs dense GEMV, and vs the
+//! hand-written FFT / DCT / DST this library also implements.
+//!
+//! The paper's claim shapes to verify: BP is 1–2 orders of magnitude
+//! faster than GEMV at large N, within ~5× of the FFT and ~3× of
+//! DCT/DST — all single-threaded.
+
+use butterfly::butterfly::closed_form::dft_stack;
+use butterfly::butterfly::fast::{FastBp, Workspace};
+use butterfly::linalg::dense::Mat;
+use butterfly::transforms::fast::{FftPlan, RealTransformPlan};
+use butterfly::util::rng::Rng;
+use butterfly::util::table::Table;
+use butterfly::util::timer::{bench, black_box, BenchConfig};
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let mut table = Table::new(&[
+        "N", "GEMV ns", "BP ns", "FFT ns", "DCT ns", "DST ns", "BP/GEMV speedup", "BP/FFT ratio",
+    ])
+    .with_title("Figure 4 (right): single-vector transform timings (single-threaded)");
+
+    for n in [64usize, 128, 256, 512, 1024, 2048] {
+        let mut rng = Rng::new(7);
+        // dense real GEMV (the O(N²) baseline)
+        let dense = Mat::from_fn(n, n, |_, _| rng.normal_f32(0.0, 1.0));
+        let mut x = vec![0.0f32; n];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let mut y = vec![0.0f32; n];
+        let gemv = bench(&cfg, || dense.matvec_into(black_box(&x), &mut y)).median();
+
+        // learned butterfly (hardened closed-form DFT stack = what a
+        // trained BP model serves)
+        let fast = FastBp::from_stack(&dft_stack(n));
+        let mut ws = Workspace::new(n);
+        let mut re = x.clone();
+        let mut im = vec![0.0f32; n];
+        let bp = bench(&cfg, || {
+            re.copy_from_slice(&x);
+            im.iter_mut().for_each(|v| *v = 0.0);
+            fast.apply_complex(black_box(&mut re), black_box(&mut im), &mut ws);
+        })
+        .median();
+
+        // specialized transforms
+        let plan = FftPlan::new(n);
+        let mut fr = x.clone();
+        let mut fi = vec![0.0f32; n];
+        let fft = bench(&cfg, || {
+            fr.copy_from_slice(&x);
+            fi.iter_mut().for_each(|v| *v = 0.0);
+            plan.forward(black_box(&mut fr), black_box(&mut fi));
+        })
+        .median();
+        let mut rplan = RealTransformPlan::new(n);
+        let mut out = vec![0.0f32; n];
+        let dct = bench(&cfg, || rplan.dct2(black_box(&x), &mut out)).median();
+        let dst = bench(&cfg, || rplan.dst2(black_box(&x), &mut out)).median();
+
+        table.add_row(vec![
+            n.to_string(),
+            format!("{gemv:.0}"),
+            format!("{bp:.0}"),
+            format!("{fft:.0}"),
+            format!("{dct:.0}"),
+            format!("{dst:.0}"),
+            format!("{:.1}x", gemv / bp),
+            format!("{:.2}x", bp / fft),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("paper shape: BP ≫ GEMV at large N (1–2 orders), BP within ~5x of FFT.");
+}

@@ -1,0 +1,65 @@
+//! Figure 4 (left): training-step speed at the paper's setting
+//! (N = 1024, batch 256): butterfly forward+backward vs dense GEMM
+//! forward+backward, with the batched FFT as the specialized lower
+//! bound.
+//!
+//! Paper claim shape: butterfly training is *faster than dense GEMM*
+//! (they report 15% faster on GPU) and within a small factor of the FFT.
+
+use butterfly::butterfly::params::Field;
+use butterfly::nn::butterfly_layer::ButterflyLayer;
+use butterfly::nn::layers::{DenseLayer, Layer};
+use butterfly::transforms::fast::FftPlan;
+use butterfly::util::rng::Rng;
+use butterfly::util::table::Table;
+use butterfly::util::timer::{bench, black_box, BenchConfig};
+
+fn main() {
+    let mut cfg = BenchConfig::from_env();
+    cfg.runs = cfg.runs.min(5); // steps are heavy
+    let n = std::env::var("FIG4_N").ok().and_then(|v| v.parse().ok()).unwrap_or(1024usize);
+    let batch = std::env::var("FIG4_BATCH").ok().and_then(|v| v.parse().ok()).unwrap_or(256usize);
+    let mut rng = Rng::new(3);
+    let mut x = vec![0.0f32; batch * n];
+    rng.fill_normal(&mut x, 0.0, 1.0);
+
+    // butterfly BPBP fwd+bwd (the paper's trained module)
+    let mut bfly = ButterflyLayer::new(n, 2, Field::Real, &mut rng);
+    let bf = bench(&cfg, || {
+        let y = bfly.forward(black_box(&x), batch, true);
+        bfly.zero_grad();
+        black_box(bfly.backward(&y, batch));
+    })
+    .median();
+
+    // dense GEMM fwd+bwd
+    let mut dense = DenseLayer::new(n, n, &mut rng);
+    let dn = bench(&cfg, || {
+        let y = dense.forward(black_box(&x), batch, true);
+        dense.zero_grad();
+        black_box(dense.backward(&y, batch));
+    })
+    .median();
+
+    // batched FFT (specialized lower bound; forward only ×3 to mimic
+    // fwd+bwd cost of a linear layer)
+    let plan = FftPlan::new(n);
+    let mut re = x.clone();
+    let mut im = vec![0.0f32; batch * n];
+    let ff = bench(&cfg, || {
+        for b in 0..batch {
+            plan.forward(&mut re[b * n..(b + 1) * n], &mut im[b * n..(b + 1) * n]);
+        }
+        black_box(&mut re);
+    })
+    .median()
+        * 3.0;
+
+    let mut t = Table::new(&["method", "step ms", "vs dense"])
+        .with_title(format!("Figure 4 (left): fwd+bwd step, N={n}, batch={batch}"));
+    t.add_row(vec!["dense GEMM".into(), format!("{:.1}", dn / 1e6), "1.00x".into()]);
+    t.add_row(vec!["butterfly BPBP".into(), format!("{:.1}", bf / 1e6), format!("{:.2}x", dn / bf)]);
+    t.add_row(vec!["FFT ×3 (bound)".into(), format!("{:.1}", ff / 1e6), format!("{:.2}x", dn / ff)]);
+    println!("{}", t.render());
+    println!("paper shape: butterfly trains faster than dense GEMM at N=1024.");
+}

@@ -1,0 +1,69 @@
+//! Proposition 1 exactness + cost: closed-form BP/BP² stacks vs their
+//! dense targets across N, with construction and fast-apply timings.
+
+use butterfly::butterfly::closed_form::{convolution_stack, dct_stack, dft_stack, dst_stack, hadamard_stack};
+use butterfly::butterfly::fast::{FastBp, Workspace};
+use butterfly::linalg::dense::{CMat, Mat};
+use butterfly::transforms::matrices;
+use butterfly::util::rng::Rng;
+use butterfly::util::table::{fmt_sci, Table};
+use butterfly::util::timer::{bench, black_box, BenchConfig};
+
+fn real_plane_rmse(m: &CMat, t: &Mat) -> f64 {
+    let n = m.rows;
+    let mut acc = 0.0f64;
+    for i in 0..n * n {
+        let d = (m.re[i] - t.data[i]) as f64;
+        acc += d * d;
+    }
+    (acc / (n * n) as f64).sqrt()
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let fast_mode = std::env::var("BENCH_FAST").ok().as_deref() == Some("1");
+    let ns: &[usize] = if fast_mode { &[64] } else { &[64, 256, 1024] };
+    let mut table = Table::new(&["transform", "class", "N", "rmse", "apply ns"])
+        .with_title("Proposition 1: closed-form factorizations (exactness + O(N log N) apply)");
+    for &n in ns {
+        let mut rng = Rng::new(1);
+        let mut h = vec![0.0f32; n];
+        rng.fill_normal(&mut h, 0.0, (1.0 / n as f64).sqrt() as f32);
+        let rows: Vec<(&str, &str, _, f64)> = vec![
+            ("dft", "(BP)^1", dft_stack(n), dft_stack(n).to_matrix().rmse_to(&matrices::dft_matrix(n))),
+            (
+                "hadamard",
+                "(BP)^1",
+                hadamard_stack(n),
+                hadamard_stack(n).to_matrix().rmse_to(&matrices::hadamard_matrix(n).to_cmat()),
+            ),
+            ("dct", "(BP)^2 ℜ", dct_stack(n), real_plane_rmse(&dct_stack(n).to_matrix(), &matrices::dct_matrix(n))),
+            ("dst", "(BP)^2 ℜ", dst_stack(n), real_plane_rmse(&dst_stack(n).to_matrix(), &matrices::dst_matrix(n))),
+            (
+                "convolution",
+                "(BP)^2",
+                convolution_stack(&h),
+                convolution_stack(&h).to_matrix().rmse_to(&matrices::circulant_matrix(&h).to_cmat()),
+            ),
+        ];
+        for (name, class, stack, rmse) in rows {
+            let fast = FastBp::from_stack(&stack);
+            let mut ws = Workspace::new(n);
+            let mut re = vec![0.0f32; n];
+            let mut im = vec![0.0f32; n];
+            rng.fill_normal(&mut re, 0.0, 1.0);
+            let apply = bench(&cfg, || {
+                fast.apply_complex(black_box(&mut re), black_box(&mut im), &mut ws);
+            })
+            .median();
+            table.add_row(vec![
+                name.to_string(),
+                class.to_string(),
+                n.to_string(),
+                fmt_sci(rmse),
+                format!("{apply:.0}"),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+}

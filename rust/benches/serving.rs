@@ -1,0 +1,77 @@
+//! E8: serving throughput/latency vs batching window, plus the raw
+//! single-thread capacity of the hardened fast multiply (the router's
+//! upper bound).
+
+use butterfly::butterfly::closed_form::dft_stack;
+use butterfly::butterfly::fast::{FastBp, Workspace};
+use butterfly::serving::{BatcherConfig, Router};
+use butterfly::util::rng::Rng;
+use butterfly::util::table::Table;
+use butterfly::util::timer::{bench, black_box, BenchConfig};
+use std::time::{Duration, Instant};
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let fast_mode = std::env::var("BENCH_FAST").ok().as_deref() == Some("1");
+    let n = 1024usize;
+    let requests: usize = if fast_mode { 400 } else { 4000 };
+    let clients = 8usize;
+
+    // raw capacity: one worker, batch-32 applies
+    let stack = dft_stack(n);
+    let fast = FastBp::from_stack(&stack);
+    let mut ws = Workspace::new(n);
+    let mut re = vec![0.0f32; 32 * n];
+    let mut im = vec![0.0f32; 32 * n];
+    Rng::new(1).fill_normal(&mut re, 0.0, 1.0);
+    let per_batch = bench(&cfg, || {
+        fast.apply_complex_batch(black_box(&mut re), black_box(&mut im), 32, &mut ws);
+    })
+    .median();
+    let raw_rps = 32.0 / (per_batch / 1e9);
+    println!("raw fast-multiply capacity (1 worker, batch 32): {raw_rps:.0} req/s\n");
+
+    let mut table = Table::new(&["max_batch", "window µs", "replicas", "req/s", "mean batch", "mean latency µs"])
+        .with_title(format!("serving bench: N={n}, {clients} clients, {requests} requests"));
+    for (max_batch, wait_us, replicas) in
+        [(1usize, 0u64, 1usize), (8, 200, 1), (32, 500, 1), (32, 500, 2), (64, 1000, 2)]
+    {
+        let mut router = Router::new();
+        router.install(
+            "dft",
+            &stack,
+            replicas,
+            BatcherConfig { max_batch, max_wait: Duration::from_micros(wait_us), queue_cap: 65536 },
+        );
+        let t0 = Instant::now();
+        let threads: Vec<_> = (0..clients)
+            .map(|t| {
+                let h = router.handle("dft").unwrap();
+                let per = requests / clients;
+                std::thread::spawn(move || {
+                    let mut rng = Rng::new(t as u64);
+                    for _ in 0..per {
+                        let mut x = vec![0.0f32; 1024];
+                        rng.fill_normal(&mut x, 0.0, 1.0);
+                        h.call_real(x).expect("serve");
+                    }
+                })
+            })
+            .collect();
+        for th in threads {
+            th.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = router.shutdown();
+        let s = &stats["dft"];
+        table.add_row(vec![
+            max_batch.to_string(),
+            wait_us.to_string(),
+            replicas.to_string(),
+            format!("{:.0}", s.served as f64 / wall),
+            format!("{:.2}", s.served as f64 / s.batches.max(1) as f64),
+            format!("{:.0}", s.mean_latency_micros),
+        ]);
+    }
+    println!("{}", table.render());
+}

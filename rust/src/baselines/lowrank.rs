@@ -1,0 +1,74 @@
+//! Low-rank baseline: truncated SVD with the rank chosen so the factor
+//! parameter count matches the sparsity budget (paper §4.1: "the sparsity
+//! budget is used in the parameters of the low-rank factors").
+
+use crate::baselines::BaselineFit;
+use crate::linalg::dense::CMat;
+use crate::linalg::svd::{low_rank_approx, svd_complex};
+
+/// Rank implied by a budget: factors `U: N×k`, `V: k×N` cost `2Nk`
+/// parameters ⇒ `k = budget / 2N` (at least 1).
+pub fn budget_rank(n: usize, budget: usize) -> usize {
+    (budget / (2 * n)).max(1)
+}
+
+pub fn lowrank_baseline(target: &CMat, budget: usize) -> BaselineFit {
+    let k = budget_rank(target.rows, budget).min(target.rows.min(target.cols));
+    let approx = low_rank_approx(target, k);
+    BaselineFit { rmse: approx.rmse_to(target), used_budget: 2 * target.rows * k }
+}
+
+/// Optimal rank-k error directly from the singular values (Eckart–Young):
+/// `‖T − T_k‖_F² = Σ_{i>k} σ_i²`. Used to cross-check the SVD path.
+pub fn eckart_young_rmse(target: &CMat, k: usize) -> f64 {
+    let svd = svd_complex(target);
+    let tail: f64 = svd.s.iter().skip(k).map(|&s| (s as f64) * (s as f64)).sum();
+    tail.sqrt() / target.rows as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::complex::Cpx;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn full_rank_is_exact() {
+        let mut rng = Rng::new(3);
+        let t = CMat::from_fn(8, 8, |_, _| Cpx::new(rng.normal_f32(0.0, 1.0), rng.normal_f32(0.0, 1.0)));
+        let fit = lowrank_baseline(&t, 2 * 8 * 8);
+        assert!(fit.rmse < 1e-4, "rmse {}", fit.rmse);
+    }
+
+    #[test]
+    fn rank1_matrix_needs_rank1() {
+        let u: Vec<f32> = (0..8).map(|i| (i + 1) as f32).collect();
+        let t = CMat::from_fn(8, 8, |i, j| Cpx::real(u[i] * u[j]));
+        let fit = lowrank_baseline(&t, 2 * 8); // k = 1
+        assert!(fit.rmse < 1e-4, "rmse {}", fit.rmse);
+    }
+
+    #[test]
+    fn unitary_fourier_is_hard_for_lowrank() {
+        // all singular values of a unitary matrix are 1 ⇒ rank-k error is
+        // √(N−k)/N; with k = 2log₂N + … ≪ N, RMSE stays large.
+        let n = 64;
+        let f = crate::transforms::matrices::dft_matrix(n);
+        let budget = crate::baselines::butterfly_budget(n, 1);
+        let fit = lowrank_baseline(&f, budget);
+        let k = budget_rank(n, budget);
+        let want = ((n - k) as f64).sqrt() / n as f64;
+        assert!((fit.rmse - want).abs() < 0.02, "rmse {} want {want}", fit.rmse);
+    }
+
+    #[test]
+    fn matches_eckart_young() {
+        let mut rng = Rng::new(11);
+        let t = CMat::from_fn(12, 12, |_, _| Cpx::new(rng.normal_f32(0.0, 1.0), 0.0));
+        for k in [1usize, 3, 6] {
+            let fit = lowrank_baseline(&t, 2 * 12 * k);
+            let want = eckart_young_rmse(&t, k);
+            assert!((fit.rmse - want).abs() < 1e-3, "k={k}: {} vs {want}", fit.rmse);
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! Matrix-compression baselines of Figure 3 (paper §4.1 "Methods"):
+//! sparse (top-s), low-rank (truncated SVD), and sparse + low-rank
+//! (robust-PCA-style), all held to the **same total sparsity budget**
+//! as the butterfly parameterization — i.e. the same multiplication cost.
+
+pub mod lowrank;
+pub mod rpca;
+pub mod sparse;
+
+pub use lowrank::lowrank_baseline;
+pub use rpca::sparse_plus_lowrank_baseline;
+pub use sparse::sparse_baseline;
+
+use crate::butterfly::params::log2_exact;
+
+/// The sparsity budget equivalent to a depth-`k` BP stack over `N`
+/// (paper: "maintaining the same total sparsity budget (i.e. computation
+/// cost of a multiplication)"): each butterfly matrix has `2N` nonzeros
+/// per level × `log₂N` levels, plus `N` for the permutation.
+pub fn butterfly_budget(n: usize, depth: usize) -> usize {
+    depth * (2 * n * log2_exact(n) + n)
+}
+
+/// Result of fitting a baseline to a target.
+#[derive(Debug, Clone)]
+pub struct BaselineFit {
+    /// Paper's RMSE: (1/N)·‖T − approx‖_F.
+    pub rmse: f64,
+    /// Nonzeros / parameters actually used.
+    pub used_budget: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_matches_paper_accounting() {
+        // N=1024, BP: 2·1024·10 + 1024 = 21504
+        assert_eq!(butterfly_budget(1024, 1), 21504);
+        assert_eq!(butterfly_budget(1024, 2), 43008);
+    }
+}

@@ -1,0 +1,86 @@
+//! Sparse baseline: keep the `s` largest-magnitude entries (paper §4.1:
+//! "this is the same as choosing the largest s entries where s is the
+//! sparsity budget") — the optimal single sparse matrix under a
+//! Frobenius objective.
+
+use crate::baselines::BaselineFit;
+use crate::linalg::dense::CMat;
+
+/// Fit the best `s`-sparse approximation and report its RMSE.
+pub fn sparse_baseline(target: &CMat, budget: usize) -> BaselineFit {
+    let approx = sparse_approx(target, budget);
+    BaselineFit { rmse: approx.rmse_to(target), used_budget: budget.min(target.rows * target.cols) }
+}
+
+/// The approximating matrix itself (used by tests and the serving demo).
+pub fn sparse_approx(target: &CMat, budget: usize) -> CMat {
+    let n2 = target.rows * target.cols;
+    let s = budget.min(n2);
+    // select the s largest |entry|² without sorting all n² when s << n²:
+    // partial select via a simple threshold pass using select_nth.
+    let mut mags: Vec<(f32, usize)> =
+        (0..n2).map(|i| (target.re[i] * target.re[i] + target.im[i] * target.im[i], i)).collect();
+    if s < n2 {
+        mags.select_nth_unstable_by(s, |a, b| b.0.partial_cmp(&a.0).unwrap());
+    }
+    let mut out = CMat::zeros(target.rows, target.cols);
+    for &(_, i) in mags.iter().take(s) {
+        out.re[i] = target.re[i];
+        out.im[i] = target.im[i];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::complex::Cpx;
+
+    #[test]
+    fn full_budget_is_exact() {
+        let t = CMat::from_fn(4, 4, |i, j| Cpx::new((i * 4 + j) as f32, -(i as f32)));
+        let fit = sparse_baseline(&t, 16);
+        assert!(fit.rmse < 1e-9);
+    }
+
+    #[test]
+    fn keeps_largest_entries() {
+        let mut t = CMat::zeros(3, 3);
+        t.re[0] = 10.0;
+        t.re[4] = 5.0;
+        t.re[8] = 1.0;
+        let a = sparse_approx(&t, 2);
+        assert_eq!(a.re[0], 10.0);
+        assert_eq!(a.re[4], 5.0);
+        assert_eq!(a.re[8], 0.0);
+    }
+
+    #[test]
+    fn identity_is_perfectly_sparse() {
+        // The identity needs only N nonzeros — a case where sparse beats
+        // butterfly-sized budgets trivially.
+        let t = CMat::eye(16);
+        let fit = sparse_baseline(&t, 16);
+        assert!(fit.rmse < 1e-9);
+    }
+
+    #[test]
+    fn dense_fourier_is_hard_for_sparse() {
+        // every |F_kn| = 1/√N: dropping any entry costs; with budget
+        // 2N log N ≪ N² the RMSE is bounded below.
+        let f = crate::transforms::matrices::dft_matrix(64);
+        let fit = sparse_baseline(&f, crate::baselines::butterfly_budget(64, 1));
+        assert!(fit.rmse > 1e-2, "rmse = {}", fit.rmse);
+    }
+
+    #[test]
+    fn rmse_decreases_with_budget() {
+        let f = crate::transforms::matrices::dft_matrix(32);
+        let mut last = f64::INFINITY;
+        for s in [32usize, 128, 512, 1024] {
+            let fit = sparse_baseline(&f, s);
+            assert!(fit.rmse <= last + 1e-12);
+            last = fit.rmse;
+        }
+    }
+}

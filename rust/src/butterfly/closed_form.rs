@@ -1,0 +1,357 @@
+//! Closed-form BP / BP² factorizations (Proposition 1 and Appendix A).
+//!
+//! These constructions serve three purposes:
+//! 1. **Exactness witnesses** — tests verify the BP hierarchy captures the
+//!    DFT/Hadamard (BP¹) and convolution (BP²) to fp32 roundoff, and the
+//!    DCT/DST up to the appendix's final `ℜ(·)` step (the learned
+//!    experiments of §4.1 discover fully-complex factorizations whose
+//!    imaginary plane also vanishes; the closed forms here carry a
+//!    residual imaginary part by construction).
+//! 2. **Warm starts / oracles** for the coordinator and the Figure-4
+//!    benchmarks (a hardened closed-form DFT stack *is* the radix-2 FFT).
+//! 3. **Fixed-permutation NN layers** (Table 1 uses bit-reversal, i.e.
+//!    the DFT's permutation).
+//!
+//! Conventions match `transforms::matrices`: unitary/orthonormal scaling,
+//! `F_kn = ε^{kn}/√N` with `ε = e^{−2πi/N}`.
+
+use crate::butterfly::module::{BpModule, BpStack};
+use crate::butterfly::params::{BpParams, Field, PermTying, TwiddleTying};
+use crate::linalg::complex::Cpx;
+use crate::transforms::spec::TransformKind;
+use crate::util::rng::Rng;
+use std::f64::consts::PI;
+
+/// Set every unit of every level to the 2×2 identity.
+fn identity_levels(p: &mut BpParams) {
+    for l in 0..p.levels {
+        for u in 0..BpParams::level_units(p.n, p.twiddle_tying, l) {
+            p.set_unit(l, u, [[(1.0, 0.0), (0.0, 0.0)], [(0.0, 0.0), (1.0, 0.0)]]);
+        }
+    }
+}
+
+/// Fill levels with radix-2 FFT twiddles: level ℓ (block size m = 2^{ℓ+1})
+/// unit j gets `scale · [[1, w_j], [1, −w_j]]`, `w_j = e^{sign·2πi·j/m}`.
+/// `sign = −1` is the forward DFT (ε twiddles), `+1` the inverse.
+/// `scale = 1/√2` yields the unitary transform after all L levels.
+fn fft_levels(p: &mut BpParams, sign: f64, scale: f32) {
+    assert_eq!(p.twiddle_tying, TwiddleTying::Factor, "FFT twiddles are factor-tied by nature");
+    for l in 0..p.levels {
+        let m = (1usize << (l + 1)) as f64;
+        for j in 0..(1usize << l) {
+            let w = Cpx::cis(sign * 2.0 * PI * j as f64 / m);
+            p.set_unit(
+                l,
+                j,
+                [
+                    [(scale, 0.0), (w.re * scale, w.im * scale)],
+                    [(scale, 0.0), (-w.re * scale, -w.im * scale)],
+                ],
+            );
+        }
+    }
+}
+
+/// Fold a left diagonal `diag(d)` into the **top** butterfly factor
+/// (level L−1, single block): row `k` of the factor is scaled by `d_k`.
+/// Unit `j` owns rows `j` and `j + N/2`.
+fn fold_diag_top(p: &mut BpParams, d: &[Cpx]) {
+    let n = p.n;
+    assert_eq!(d.len(), n);
+    let l = p.levels - 1;
+    let half = n / 2;
+    for j in 0..half {
+        for (r, &row) in [j, j + half].iter().enumerate() {
+            for c in 0..2 {
+                let g = Cpx::new(p.data[p.tw_idx(l, 0, j, r, c)], p.data[p.tw_idx(l, 1, j, r, c)]);
+                let gd = d[row] * g;
+                p.set_tw(l, 0, j, r, c, gd.re);
+                p.set_tw(l, 1, j, r, c, gd.im);
+            }
+        }
+    }
+}
+
+/// `(BP)¹` unitary DFT (Proposition 1.1): bit-reversal permutation +
+/// Cooley-Tukey twiddles, each level scaled 1/√2.
+pub fn dft_stack(n: usize) -> BpStack {
+    let mut p = BpParams::new(n, Field::Complex, TwiddleTying::Factor, PermTying::Untied);
+    fft_levels(&mut p, -1.0, (0.5f32).sqrt());
+    p.fix_bit_reversal();
+    BpStack::new(vec![BpModule::new(p)])
+}
+
+/// `(BP)¹` unitary inverse DFT (conjugate twiddles).
+pub fn idft_stack(n: usize) -> BpStack {
+    let mut p = BpParams::new(n, Field::Complex, TwiddleTying::Factor, PermTying::Untied);
+    fft_levels(&mut p, 1.0, (0.5f32).sqrt());
+    p.fix_bit_reversal();
+    BpStack::new(vec![BpModule::new(p)])
+}
+
+/// `(BP)¹` normalized Walsh–Hadamard (Proposition 1 / Appendix A.3):
+/// identity permutation, every unit `(1/√2)·[[1,1],[1,−1]]`.
+pub fn hadamard_stack(n: usize) -> BpStack {
+    let mut p = BpParams::new(n, Field::Real, TwiddleTying::Factor, PermTying::Untied);
+    let s = (0.5f32).sqrt();
+    for l in 0..p.levels {
+        for j in 0..(1usize << l) {
+            p.set_unit(l, j, [[(s, 0.0), (s, 0.0)], [(s, 0.0), (-s, 0.0)]]);
+        }
+    }
+    p.fix_identity_perm();
+    BpStack::new(vec![BpModule::new(p)])
+}
+
+/// The DCT/DST pre-permutation `P'` of Appendix A.1 (evens ascending, then
+/// odds descending — `[0,1,2,3] → [0,2,3,1]`): gates `{a, c}` at step 0,
+/// identity below.
+fn makhoul_perm_choices(levels: usize) -> Vec<[bool; 3]> {
+    let mut ch = vec![[false, false, false]; levels];
+    ch[0] = [true, false, true];
+    ch
+}
+
+/// `(BP)²` orthonormal DCT-II (Appendix A.1): the real part of
+/// `diag(s_k e^{−iπk/2N}) · F_unnorm · P'`. Module 1 carries `P'` with an
+/// identity butterfly; module 2 is the unnormalized FFT with the output
+/// diagonal folded into its top factor. The reconstruction's *real plane*
+/// equals the DCT exactly; the imaginary plane is nonzero (the appendix's
+/// final ℜ step).
+pub fn dct_stack(n: usize) -> BpStack {
+    let mut m1 = BpParams::new(n, Field::Complex, TwiddleTying::Factor, PermTying::Untied);
+    identity_levels(&mut m1);
+    m1.fix_permutation(&makhoul_perm_choices(m1.levels));
+
+    let mut m2 = BpParams::new(n, Field::Complex, TwiddleTying::Factor, PermTying::Untied);
+    fft_levels(&mut m2, -1.0, 1.0); // unnormalized F
+    let d: Vec<Cpx> = (0..n)
+        .map(|k| {
+            let s = if k == 0 { (1.0 / n as f64).sqrt() } else { (2.0 / n as f64).sqrt() };
+            Cpx::cis(-PI * k as f64 / (2.0 * n as f64)).scale(s as f32)
+        })
+        .collect();
+    fold_diag_top(&mut m2, &d);
+    m2.fix_bit_reversal();
+    BpStack::new(vec![BpModule::new(m1), BpModule::new(m2)])
+}
+
+/// `(BP)²` orthonormal DST-II (Appendix A.2, via the identity
+/// `DST(x) = R · DCT(S x)`, `S = diag((−1)^n)`, `R` = row reversal,
+/// commuted into the factors:
+/// `DST = ℜ[ diag(κ) · conj(F) · D · P' ]` with
+/// `D_m = e^{+2πim/N}·σ_m` (σ = −1 on the second half) and
+/// `κ_k = s^{dst}_k · e^{−iπ(N−1−k)/2N}`.
+/// Module 1 carries `P'` and the diagonal `D` (as untied level-0 diagonal
+/// units); module 2 is the conjugate FFT with `κ` folded on top. Real
+/// plane exact, imaginary plane nonzero (final ℜ step).
+pub fn dst_stack(n: usize) -> BpStack {
+    // module 1: perm P', butterfly = diag(D) at level 0 (untied), identity above
+    let mut m1 = BpParams::new(n, Field::Complex, TwiddleTying::Block, PermTying::Untied);
+    identity_levels(&mut m1);
+    for b in 0..n / 2 {
+        let d0 = diag_d(n, 2 * b);
+        let d1 = diag_d(n, 2 * b + 1);
+        m1.set_unit(0, b, [[(d0.re, d0.im), (0.0, 0.0)], [(0.0, 0.0), (d1.re, d1.im)]]);
+    }
+    m1.fix_permutation(&makhoul_perm_choices(m1.levels));
+
+    // module 2: bit-reversal + conj(F) levels, κ on top
+    let mut m2 = BpParams::new(n, Field::Complex, TwiddleTying::Factor, PermTying::Untied);
+    fft_levels(&mut m2, 1.0, 1.0); // conj(F), unnormalized
+    let kappa: Vec<Cpx> = (0..n)
+        .map(|k| {
+            let s = if k == n - 1 { (1.0 / n as f64).sqrt() } else { (2.0 / n as f64).sqrt() };
+            Cpx::cis(-PI * (n - 1 - k) as f64 / (2.0 * n as f64)).scale(s as f32)
+        })
+        .collect();
+    fold_diag_top(&mut m2, &kappa);
+    m2.fix_bit_reversal();
+
+    return BpStack::new(vec![BpModule::new(m1), BpModule::new(m2)]);
+
+    fn diag_d(n: usize, m: usize) -> Cpx {
+        let sigma = if m >= n / 2 { -1.0f32 } else { 1.0 };
+        Cpx::cis(2.0 * PI * m as f64 / n as f64).scale(sigma)
+    }
+}
+
+/// `(BP)²` circulant convolution (Appendix A.4):
+/// `A = F⁻¹ · diag(F h) · F` — module 1 is the unnormalized FFT with
+/// `diag(F h)` folded into its top factor, module 2 the conjugate FFT
+/// with `1/N` folded on top. Fully exact (imaginary plane cancels).
+pub fn convolution_stack(h: &[f32]) -> BpStack {
+    let n = h.len();
+    // D = F h (unnormalized forward DFT of the filter), computed densely
+    // in f64 — this is setup code, not a hot path.
+    let mut d = vec![Cpx::ZERO; n];
+    for (k, dk) in d.iter_mut().enumerate() {
+        let mut acc_re = 0.0f64;
+        let mut acc_im = 0.0f64;
+        for (j, &hj) in h.iter().enumerate() {
+            let th = -2.0 * PI * (k as f64) * (j as f64) / n as f64;
+            acc_re += hj as f64 * th.cos();
+            acc_im += hj as f64 * th.sin();
+        }
+        *dk = Cpx::new(acc_re as f32, acc_im as f32);
+    }
+
+    let mut m1 = BpParams::new(n, Field::Complex, TwiddleTying::Factor, PermTying::Untied);
+    fft_levels(&mut m1, -1.0, 1.0);
+    fold_diag_top(&mut m1, &d);
+    m1.fix_bit_reversal();
+
+    let mut m2 = BpParams::new(n, Field::Complex, TwiddleTying::Factor, PermTying::Untied);
+    fft_levels(&mut m2, 1.0, 1.0);
+    let inv_n = vec![Cpx::real(1.0 / n as f32); n];
+    fold_diag_top(&mut m2, &inv_n);
+    m2.fix_bit_reversal();
+
+    BpStack::new(vec![BpModule::new(m1), BpModule::new(m2)])
+}
+
+/// How a closed-form stack should be compared to its dense target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompareMode {
+    /// Full complex equality.
+    Exact,
+    /// Real plane only (the appendix's trailing ℜ(·)).
+    RealPart,
+}
+
+/// Closed-form stack for a transform kind, if Proposition 1 provides one.
+/// `rng` seeds stochastic targets (the convolution filter) the same way
+/// `transforms::matrices::target_matrix` does.
+pub fn closed_form_stack(kind: TransformKind, n: usize, rng: &mut Rng) -> Option<(BpStack, CompareMode)> {
+    match kind {
+        TransformKind::Dft => Some((dft_stack(n), CompareMode::Exact)),
+        TransformKind::Hadamard => Some((hadamard_stack(n), CompareMode::Exact)),
+        TransformKind::Dct => Some((dct_stack(n), CompareMode::RealPart)),
+        TransformKind::Dst => Some((dst_stack(n), CompareMode::RealPart)),
+        TransformKind::Convolution => {
+            // reproduce convolution_matrix's filter draw exactly
+            let mut h = vec![0.0f32; n];
+            rng.fill_normal(&mut h, 0.0, (1.0 / n as f64).sqrt() as f32);
+            Some((convolution_stack(&h), CompareMode::Exact))
+        }
+        TransformKind::Hartley | TransformKind::Legendre | TransformKind::Randn => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::CMat;
+    use crate::transforms::matrices;
+
+    fn rmse(a: &CMat, b: &CMat) -> f64 {
+        a.rmse_to(b)
+    }
+
+    fn real_plane_rmse(m: &CMat, t: &crate::linalg::dense::Mat) -> f64 {
+        let n = m.rows;
+        let mut acc = 0.0f64;
+        for i in 0..n * n {
+            let d = (m.re[i] - t.data[i]) as f64;
+            acc += d * d;
+        }
+        (acc / (n * n) as f64).sqrt()
+    }
+
+    #[test]
+    fn dft_exact_to_machine_precision() {
+        for n in [2usize, 4, 8, 16, 64, 256] {
+            let stack = dft_stack(n);
+            let target = matrices::dft_matrix(n);
+            let e = rmse(&stack.to_matrix(), &target);
+            assert!(e < 1e-6, "DFT n={n}: rmse {e}");
+        }
+    }
+
+    #[test]
+    fn idft_exact_and_inverse() {
+        for n in [4usize, 16, 64] {
+            let stack = idft_stack(n);
+            let target = matrices::idft_matrix(n);
+            assert!(rmse(&stack.to_matrix(), &target) < 1e-6);
+            // F · F⁻¹ = I
+            let prod = dft_stack(n).to_matrix().matmul(&stack.to_matrix());
+            assert!(rmse(&prod, &CMat::eye(n)) < 1e-6, "n={n}");
+        }
+    }
+
+    #[test]
+    fn hadamard_exact() {
+        for n in [2usize, 8, 64, 512] {
+            let stack = hadamard_stack(n);
+            let target = matrices::hadamard_matrix(n).to_cmat();
+            let e = rmse(&stack.to_matrix(), &target);
+            assert!(e < 1e-6, "Hadamard n={n}: rmse {e}");
+        }
+    }
+
+    #[test]
+    fn dct_real_plane_exact() {
+        for n in [4usize, 16, 64, 256] {
+            let stack = dct_stack(n);
+            let m = stack.to_matrix();
+            let e = real_plane_rmse(&m, &matrices::dct_matrix(n));
+            assert!(e < 1e-6, "DCT n={n}: re-plane rmse {e}");
+        }
+    }
+
+    #[test]
+    fn dst_real_plane_exact() {
+        for n in [4usize, 16, 64, 256] {
+            let stack = dst_stack(n);
+            let m = stack.to_matrix();
+            let e = real_plane_rmse(&m, &matrices::dst_matrix(n));
+            assert!(e < 1e-6, "DST n={n}: re-plane rmse {e}");
+        }
+    }
+
+    #[test]
+    fn convolution_fully_exact() {
+        let mut rng = Rng::new(42);
+        for n in [4usize, 16, 128] {
+            let mut h = vec![0.0f32; n];
+            rng.fill_normal(&mut h, 0.0, (1.0 / n as f64).sqrt() as f32);
+            let stack = convolution_stack(&h);
+            let target = matrices::circulant_matrix(&h).to_cmat();
+            let e = rmse(&stack.to_matrix(), &target);
+            assert!(e < 1e-6, "conv n={n}: rmse {e}");
+        }
+    }
+
+    #[test]
+    fn closed_form_stack_covers_prop1() {
+        let mut rng = Rng::new(3);
+        use crate::transforms::spec::ALL_TRANSFORMS;
+        for kind in ALL_TRANSFORMS {
+            let got = closed_form_stack(kind, 16, &mut rng);
+            assert_eq!(got.is_some(), kind.exactly_representable() && kind != TransformKind::Hartley,
+                "{kind}");
+        }
+    }
+
+    #[test]
+    fn dft_stack_is_the_fft() {
+        // hardened closed-form DFT applied to a vector = fft_unitary
+        use crate::transforms::fast::fft_unitary;
+        let n = 64;
+        let stack = dft_stack(n);
+        let mut rng = Rng::new(5);
+        let mut re = vec![0.0f32; n];
+        let mut im = vec![0.0f32; n];
+        rng.fill_normal(&mut re, 0.0, 1.0);
+        rng.fill_normal(&mut im, 0.0, 1.0);
+        let x: Vec<Cpx> = re.iter().zip(&im).map(|(&r, &i)| Cpx::new(r, i)).collect();
+        let want = fft_unitary(&x);
+        stack.apply_vec(&mut re, &mut im);
+        for i in 0..n {
+            assert!((re[i] - want[i].re).abs() < 1e-4, "re[{i}]");
+            assert!((im[i] - want[i].im).abs() < 1e-4, "im[{i}]");
+        }
+    }
+}

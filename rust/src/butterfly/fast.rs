@@ -1,0 +1,345 @@
+//! The optimized O(N log N) inference path ("given the parameters of the
+//! BP model, it is easy to implement this fast algorithm" — paper §4.3).
+//!
+//! [`FastBp`] is built from a trained [`BpStack`] by (i) hardening each
+//! relaxed permutation to its argmax choice and composing it into a single
+//! gather table per module, and (ii) expanding the (possibly factor-tied)
+//! twiddles into flat per-position arrays so the hot loop does no index
+//! arithmetic beyond unit strides.
+//!
+//! This is the serving hot path benchmarked in Figure 4 (right): butterfly
+//! vs GEMV vs FFT/DCT/DST.
+
+use crate::butterfly::module::BpStack;
+use crate::butterfly::params::Field;
+use crate::butterfly::permutation::{hard_perm_table, RelaxedPerm};
+
+/// One hardened BP module: a gather table + expanded twiddles.
+struct FastStage {
+    /// `out[i] = in[perm[i]]`; `None` when the hardened choice is the
+    /// identity (skips the gather entirely).
+    perm: Option<Vec<usize>>,
+    /// Per level: `[n/2]` units × 4 reals `[g00, g01, g10, g11]`
+    /// (real path) laid out in (block, j) application order.
+    tw_re: Vec<Vec<f32>>,
+    /// Same layout for the imaginary parts (empty when real).
+    tw_im: Vec<Vec<f32>>,
+}
+
+/// Hardened fast-multiply form of a BP stack.
+pub struct FastBp {
+    pub n: usize,
+    pub levels: usize,
+    /// Whether any twiddle has a nonzero imaginary part.
+    pub complex: bool,
+    stages: Vec<FastStage>,
+}
+
+/// Reusable scratch for gather stages (avoids per-call allocation in the
+/// serving loop).
+pub struct Workspace {
+    buf_re: Vec<f32>,
+    buf_im: Vec<f32>,
+}
+
+impl Workspace {
+    pub fn new(n: usize) -> Self {
+        Workspace { buf_re: vec![0.0; n], buf_im: vec![0.0; n] }
+    }
+}
+
+impl FastBp {
+    /// Harden a trained stack. Twiddles whose imaginary plane is entirely
+    /// below `1e-12` in magnitude collapse to the real-only path.
+    pub fn from_stack(stack: &BpStack) -> Self {
+        let n = stack.n();
+        let levels = stack.modules[0].params.levels;
+        let mut complex = false;
+        let mut stages = Vec::with_capacity(stack.depth());
+        for m in &stack.modules {
+            let p = &m.params;
+            let choices = RelaxedPerm::harden(p);
+            let is_identity = choices.iter().all(|c| !c[0] && !c[1] && !c[2]);
+            let perm = if is_identity { None } else { Some(hard_perm_table(n, &choices)) };
+            let mut tw_re = Vec::with_capacity(levels);
+            let mut tw_im = Vec::with_capacity(levels);
+            let mut mod_complex = p.field == Field::Complex;
+            for l in 0..levels {
+                let half = 1usize << l;
+                let blocks = n >> (l + 1);
+                let mut vre = Vec::with_capacity(n / 2 * 4);
+                let mut vim = Vec::with_capacity(n / 2 * 4);
+                let mut any_im = false;
+                for b in 0..blocks {
+                    for j in 0..half {
+                        let u = p.unit_index(l, b, j);
+                        for r in 0..2 {
+                            for c in 0..2 {
+                                vre.push(p.data[p.tw_idx(l, 0, u, r, c)]);
+                                let im = p.data[p.tw_idx(l, 1, u, r, c)];
+                                any_im |= im.abs() > 1e-12;
+                                vim.push(im);
+                            }
+                        }
+                    }
+                }
+                mod_complex |= any_im;
+                tw_re.push(vre);
+                tw_im.push(vim);
+            }
+            if mod_complex {
+                complex = true;
+            }
+            stages.push(FastStage { perm, tw_re, tw_im });
+        }
+        // If nothing is actually complex, drop the imaginary twiddles so
+        // the real path can be used.
+        if !complex {
+            for s in &mut stages {
+                s.tw_im.clear();
+            }
+        }
+        FastBp { n, levels, complex, stages }
+    }
+
+    /// Single-vector real apply. Panics if the stack is complex (callers
+    /// that may have complex stacks should use [`apply_complex`]).
+    ///
+    /// [`apply_complex`]: FastBp::apply_complex
+    pub fn apply_real(&self, x: &mut [f32], ws: &mut Workspace) {
+        assert!(!self.complex, "complex FastBp: use apply_complex");
+        debug_assert_eq!(x.len(), self.n);
+        let n = self.n;
+        for s in &self.stages {
+            if let Some(t) = &s.perm {
+                let buf = &mut ws.buf_re;
+                for i in 0..n {
+                    buf[i] = x[t[i]];
+                }
+                x.copy_from_slice(&buf[..n]);
+            }
+            for (l, tw) in s.tw_re.iter().enumerate() {
+                let half = 1usize << l;
+                let m = half << 1;
+                let blocks = n / m;
+                for b in 0..blocks {
+                    let base = b * m;
+                    let toff = b * half * 4;
+                    let (lo, hi) = x[base..base + m].split_at_mut(half);
+                    let twb = &tw[toff..toff + half * 4];
+                    for j in 0..half {
+                        let t = j * 4;
+                        let x0 = lo[j];
+                        let x1 = hi[j];
+                        lo[j] = twb[t] * x0 + twb[t + 1] * x1;
+                        hi[j] = twb[t + 2] * x0 + twb[t + 3] * x1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Single-vector complex apply (planar).
+    pub fn apply_complex(&self, re: &mut [f32], im: &mut [f32], ws: &mut Workspace) {
+        debug_assert_eq!(re.len(), self.n);
+        let n = self.n;
+        for s in &self.stages {
+            if let Some(t) = &s.perm {
+                for i in 0..n {
+                    ws.buf_re[i] = re[t[i]];
+                    ws.buf_im[i] = im[t[i]];
+                }
+                re.copy_from_slice(&ws.buf_re[..n]);
+                im.copy_from_slice(&ws.buf_im[..n]);
+            }
+            for l in 0..self.levels {
+                let twr = &s.tw_re[l];
+                let half = 1usize << l;
+                let m = half << 1;
+                let blocks = n / m;
+                if self.complex {
+                    let twi = &s.tw_im[l];
+                    // §Perf iteration 1: split each block's lo/hi halves
+                    // into disjoint slices so the inner loop is
+                    // bounds-check-free and auto-vectorizable (see
+                    // EXPERIMENTS.md §Perf for before/after).
+                    for b in 0..blocks {
+                        let base = b * m;
+                        let toff = b * half * 4;
+                        let (re_lo, re_hi) = re[base..base + m].split_at_mut(half);
+                        let (im_lo, im_hi) = im[base..base + m].split_at_mut(half);
+                        let tw_r = &twr[toff..toff + half * 4];
+                        let tw_i = &twi[toff..toff + half * 4];
+                        for j in 0..half {
+                            let t = j * 4;
+                            let (x0r, x0i) = (re_lo[j], im_lo[j]);
+                            let (x1r, x1i) = (re_hi[j], im_hi[j]);
+                            let y0r = tw_r[t] * x0r - tw_i[t] * x0i + tw_r[t + 1] * x1r - tw_i[t + 1] * x1i;
+                            let y0i = tw_r[t] * x0i + tw_i[t] * x0r + tw_r[t + 1] * x1i + tw_i[t + 1] * x1r;
+                            let y1r = tw_r[t + 2] * x0r - tw_i[t + 2] * x0i + tw_r[t + 3] * x1r - tw_i[t + 3] * x1i;
+                            let y1i = tw_r[t + 2] * x0i + tw_i[t + 2] * x0r + tw_r[t + 3] * x1i + tw_i[t + 3] * x1r;
+                            re_lo[j] = y0r;
+                            im_lo[j] = y0i;
+                            re_hi[j] = y1r;
+                            im_hi[j] = y1i;
+                        }
+                    }
+                } else {
+                    for b in 0..blocks {
+                        let base = b * m;
+                        let toff = b * half * 4;
+                        let (re_lo, re_hi) = re[base..base + m].split_at_mut(half);
+                        let (im_lo, im_hi) = im[base..base + m].split_at_mut(half);
+                        let tw = &twr[toff..toff + half * 4];
+                        for j in 0..half {
+                            let t = j * 4;
+                            let (x0r, x0i) = (re_lo[j], im_lo[j]);
+                            let (x1r, x1i) = (re_hi[j], im_hi[j]);
+                            re_lo[j] = tw[t] * x0r + tw[t + 1] * x1r;
+                            im_lo[j] = tw[t] * x0i + tw[t + 1] * x1i;
+                            re_hi[j] = tw[t + 2] * x0r + tw[t + 3] * x1r;
+                            im_hi[j] = tw[t + 2] * x0i + tw[t + 3] * x1i;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Batched real apply over row-major `[batch, n]`.
+    pub fn apply_real_batch(&self, x: &mut [f32], batch: usize, ws: &mut Workspace) {
+        for bi in 0..batch {
+            self.apply_real(&mut x[bi * self.n..(bi + 1) * self.n], ws);
+        }
+    }
+
+    /// Batched complex apply over row-major `[batch, n]` planes.
+    pub fn apply_complex_batch(&self, re: &mut [f32], im: &mut [f32], batch: usize, ws: &mut Workspace) {
+        for bi in 0..batch {
+            let r = bi * self.n..(bi + 1) * self.n;
+            self.apply_complex(&mut re[r.clone()], &mut im[r], ws);
+        }
+    }
+
+    /// FLOP count of one multiply (real-arith ops): the O(N log N) claim.
+    pub fn flops_per_apply(&self) -> usize {
+        // per level: n/2 units × (4 mul + 2 add) real, ×4 when complex
+        let per_level = self.n / 2 * 6 * if self.complex { 4 } else { 1 };
+        self.stages.len() * self.levels * per_level
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::butterfly::module::{BpModule, BpStack};
+    use crate::butterfly::params::{BpParams, Field, InitScheme, PermTying, TwiddleTying};
+    use crate::util::rng::Rng;
+
+    fn hardened_stack(n: usize, depth: usize, field: Field, seed: u64) -> BpStack {
+        let mut rng = Rng::new(seed);
+        let mods = (0..depth)
+            .map(|_| {
+                let mut p = BpParams::init(
+                    n,
+                    field,
+                    TwiddleTying::Factor,
+                    PermTying::Untied,
+                    InitScheme::OrthogonalLike,
+                    &mut rng,
+                );
+                let choices: Vec<[bool; 3]> = (0..p.levels)
+                    .map(|_| [rng.below(2) == 1, rng.below(2) == 1, rng.below(2) == 1])
+                    .collect();
+                p.fix_permutation(&choices);
+                BpModule::new(p)
+            })
+            .collect();
+        BpStack::new(mods)
+    }
+
+    #[test]
+    fn fast_matches_module_complex() {
+        let n = 32;
+        let stack = hardened_stack(n, 2, Field::Complex, 5);
+        let fast = FastBp::from_stack(&stack);
+        assert!(fast.complex);
+        let mut rng = Rng::new(6);
+        let mut re = vec![0.0f32; n];
+        let mut im = vec![0.0f32; n];
+        rng.fill_normal(&mut re, 0.0, 1.0);
+        rng.fill_normal(&mut im, 0.0, 1.0);
+        let (mut r2, mut i2) = (re.clone(), im.clone());
+        stack.apply_vec(&mut re, &mut im);
+        let mut ws = Workspace::new(n);
+        fast.apply_complex(&mut r2, &mut i2, &mut ws);
+        for i in 0..n {
+            assert!((re[i] - r2[i]).abs() < 1e-4, "re[{i}]: {} vs {}", re[i], r2[i]);
+            assert!((im[i] - i2[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn fast_matches_module_real() {
+        let n = 64;
+        let stack = hardened_stack(n, 1, Field::Real, 7);
+        let fast = FastBp::from_stack(&stack);
+        assert!(!fast.complex);
+        let mut rng = Rng::new(8);
+        let mut x = vec![0.0f32; n];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let mut re = x.clone();
+        let mut im = vec![0.0f32; n];
+        stack.apply_vec(&mut re, &mut im);
+        let mut ws = Workspace::new(n);
+        fast.apply_real(&mut x, &mut ws);
+        for i in 0..n {
+            assert!((x[i] - re[i]).abs() < 1e-4, "x[{i}]: {} vs {}", x[i], re[i]);
+        }
+        assert!(im.iter().all(|&v| v.abs() < 1e-6));
+    }
+
+    #[test]
+    fn real_path_agrees_with_complex_path() {
+        let n = 16;
+        let stack = hardened_stack(n, 1, Field::Real, 11);
+        let fast = FastBp::from_stack(&stack);
+        let mut rng = Rng::new(12);
+        let mut x = vec![0.0f32; n];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let mut re = x.clone();
+        let mut im = vec![0.0f32; n];
+        let mut ws = Workspace::new(n);
+        fast.apply_real(&mut x, &mut ws);
+        fast.apply_complex(&mut re, &mut im, &mut ws);
+        for i in 0..n {
+            assert!((x[i] - re[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn batch_apply_matches_loop() {
+        let n = 16;
+        let batch = 4;
+        let stack = hardened_stack(n, 2, Field::Real, 13);
+        let fast = FastBp::from_stack(&stack);
+        let mut rng = Rng::new(14);
+        let mut x = vec![0.0f32; batch * n];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let mut ws = Workspace::new(n);
+        let mut batched = x.clone();
+        fast.apply_real_batch(&mut batched, batch, &mut ws);
+        for bi in 0..batch {
+            let mut row = x[bi * n..(bi + 1) * n].to_vec();
+            fast.apply_real(&mut row, &mut ws);
+            assert_eq!(row, batched[bi * n..(bi + 1) * n]);
+        }
+    }
+
+    #[test]
+    fn flops_are_n_log_n() {
+        let stack = hardened_stack(1024, 1, Field::Real, 15);
+        let fast = FastBp::from_stack(&stack);
+        assert_eq!(fast.flops_per_apply(), 512 * 6 * 10);
+    }
+}

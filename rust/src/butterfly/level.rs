@@ -1,0 +1,277 @@
+//! A single butterfly level: forward and analytic backward over a planar
+//! complex batch.
+//!
+//! Batch layout: `re`/`im` are row-major `[batch, n]` planes. Level ℓ
+//! pairs element `i0 = b·2^{ℓ+1} + j` with `i1 = i0 + 2^ℓ` and mixes them
+//! with the 2×2 (complex) unit `G`:
+//!
+//! ```text
+//! y0 = g00·x0 + g01·x1
+//! y1 = g10·x0 + g11·x1
+//! ```
+//!
+//! Backward (treating complex multiply as its ℝ-bilinear 2×2 form, which
+//! is what "optimize over complex entries" means for a real-valued loss):
+//! `dx = conj(G)ᵀ applied pairwise`, `dG += dy ⊗ conj(x)`.
+
+use crate::butterfly::params::BpParams;
+use crate::linalg::complex::Cpx;
+
+/// Apply level `level` of module `p` in place to a `[batch, n]` planar
+/// complex batch.
+pub fn level_forward(p: &BpParams, level: usize, re: &mut [f32], im: &mut [f32], batch: usize) {
+    let n = p.n;
+    debug_assert_eq!(re.len(), batch * n);
+    debug_assert_eq!(im.len(), batch * n);
+    let half = 1usize << level; // in-block pair distance
+    let m = half << 1; // block size
+    let blocks = n / m;
+    for bi in 0..batch {
+        let row = bi * n;
+        for b in 0..blocks {
+            let base = row + b * m;
+            for j in 0..half {
+                let u = p.unit_index(level, b, j);
+                let g00 = Cpx::new(p.data[p.tw_idx(level, 0, u, 0, 0)], p.data[p.tw_idx(level, 1, u, 0, 0)]);
+                let g01 = Cpx::new(p.data[p.tw_idx(level, 0, u, 0, 1)], p.data[p.tw_idx(level, 1, u, 0, 1)]);
+                let g10 = Cpx::new(p.data[p.tw_idx(level, 0, u, 1, 0)], p.data[p.tw_idx(level, 1, u, 1, 0)]);
+                let g11 = Cpx::new(p.data[p.tw_idx(level, 0, u, 1, 1)], p.data[p.tw_idx(level, 1, u, 1, 1)]);
+                let i0 = base + j;
+                let i1 = i0 + half;
+                let x0 = Cpx::new(re[i0], im[i0]);
+                let x1 = Cpx::new(re[i1], im[i1]);
+                let y0 = g00 * x0 + g01 * x1;
+                let y1 = g10 * x0 + g11 * x1;
+                re[i0] = y0.re;
+                im[i0] = y0.im;
+                re[i1] = y1.re;
+                im[i1] = y1.im;
+            }
+        }
+    }
+}
+
+/// Backward through level `level`.
+///
+/// Inputs: the level's *input* activations `x` (saved from the forward
+/// pass) and the upstream gradient `dy` (in place — transformed into
+/// `dx` on return). Twiddle gradients are accumulated into `grad`, which
+/// has the same layout as `p.data` (logit slots untouched).
+pub fn level_backward(
+    p: &BpParams,
+    level: usize,
+    x_re: &[f32],
+    x_im: &[f32],
+    dy_re: &mut [f32],
+    dy_im: &mut [f32],
+    grad: &mut [f32],
+    batch: usize,
+) {
+    let n = p.n;
+    debug_assert_eq!(x_re.len(), batch * n);
+    debug_assert_eq!(dy_re.len(), batch * n);
+    debug_assert_eq!(grad.len(), p.data.len());
+    let half = 1usize << level;
+    let m = half << 1;
+    let blocks = n / m;
+    for bi in 0..batch {
+        let row = bi * n;
+        for b in 0..blocks {
+            let base = row + b * m;
+            for j in 0..half {
+                let u = p.unit_index(level, b, j);
+                let g00 = Cpx::new(p.data[p.tw_idx(level, 0, u, 0, 0)], p.data[p.tw_idx(level, 1, u, 0, 0)]);
+                let g01 = Cpx::new(p.data[p.tw_idx(level, 0, u, 0, 1)], p.data[p.tw_idx(level, 1, u, 0, 1)]);
+                let g10 = Cpx::new(p.data[p.tw_idx(level, 0, u, 1, 0)], p.data[p.tw_idx(level, 1, u, 1, 0)]);
+                let g11 = Cpx::new(p.data[p.tw_idx(level, 0, u, 1, 1)], p.data[p.tw_idx(level, 1, u, 1, 1)]);
+                let i0 = base + j;
+                let i1 = i0 + half;
+                let x0 = Cpx::new(x_re[i0], x_im[i0]);
+                let x1 = Cpx::new(x_re[i1], x_im[i1]);
+                let d0 = Cpx::new(dy_re[i0], dy_im[i0]);
+                let d1 = Cpx::new(dy_re[i1], dy_im[i1]);
+
+                // dG += dy ⊗ conj(x)
+                let dg00 = d0 * x0.conj();
+                let dg01 = d0 * x1.conj();
+                let dg10 = d1 * x0.conj();
+                let dg11 = d1 * x1.conj();
+                grad[p.tw_idx(level, 0, u, 0, 0)] += dg00.re;
+                grad[p.tw_idx(level, 1, u, 0, 0)] += dg00.im;
+                grad[p.tw_idx(level, 0, u, 0, 1)] += dg01.re;
+                grad[p.tw_idx(level, 1, u, 0, 1)] += dg01.im;
+                grad[p.tw_idx(level, 0, u, 1, 0)] += dg10.re;
+                grad[p.tw_idx(level, 1, u, 1, 0)] += dg10.im;
+                grad[p.tw_idx(level, 0, u, 1, 1)] += dg11.re;
+                grad[p.tw_idx(level, 1, u, 1, 1)] += dg11.im;
+
+                // dx = conj(G)ᵀ dy  (pairwise)
+                let dx0 = g00.conj() * d0 + g10.conj() * d1;
+                let dx1 = g01.conj() * d0 + g11.conj() * d1;
+                dy_re[i0] = dx0.re;
+                dy_im[i0] = dx0.im;
+                dy_re[i1] = dx1.re;
+                dy_im[i1] = dx1.im;
+            }
+        }
+    }
+}
+
+/// Reconstruct level `level` as a dense complex matrix (test/debug aid;
+/// `O(N²)` — never on a hot path).
+pub fn level_matrix(p: &BpParams, level: usize) -> crate::linalg::dense::CMat {
+    let n = p.n;
+    let mut m = crate::linalg::dense::CMat::zeros(n, n);
+    let half = 1usize << level;
+    let blk = half << 1;
+    for b in 0..(n / blk) {
+        for j in 0..half {
+            let u = p.unit_index(level, b, j);
+            let i0 = b * blk + j;
+            let i1 = i0 + half;
+            let g = |r: usize, c: usize| {
+                Cpx::new(p.data[p.tw_idx(level, 0, u, r, c)], p.data[p.tw_idx(level, 1, u, r, c)])
+            };
+            m.set(i0, i0, g(0, 0));
+            m.set(i0, i1, g(0, 1));
+            m.set(i1, i0, g(1, 0));
+            m.set(i1, i1, g(1, 1));
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::butterfly::params::{Field, InitScheme, PermTying, TwiddleTying};
+    use crate::util::rng::Rng;
+
+    fn rand_params(n: usize, tying: TwiddleTying, seed: u64) -> BpParams {
+        let mut rng = Rng::new(seed);
+        BpParams::init(n, Field::Complex, tying, PermTying::Untied, InitScheme::OrthogonalLike, &mut rng)
+    }
+
+    #[test]
+    fn forward_matches_dense_level_matrix() {
+        for tying in [TwiddleTying::Factor, TwiddleTying::Block] {
+            let n = 16;
+            let p = rand_params(n, tying, 3);
+            let mut rng = Rng::new(11);
+            for level in 0..p.levels {
+                let mut xr = vec![0.0f32; n];
+                let mut xi = vec![0.0f32; n];
+                rng.fill_normal(&mut xr, 0.0, 1.0);
+                rng.fill_normal(&mut xi, 0.0, 1.0);
+                let x: Vec<Cpx> = xr.iter().zip(&xi).map(|(&r, &i)| Cpx::new(r, i)).collect();
+                let dense = level_matrix(&p, level);
+                let want = dense.matvec(&x);
+                let (mut yr, mut yi) = (xr.clone(), xi.clone());
+                level_forward(&p, level, &mut yr, &mut yi, 1);
+                for i in 0..n {
+                    assert!((yr[i] - want[i].re).abs() < 1e-4, "level {level} re[{i}]");
+                    assert!((yi[i] - want[i].im).abs() < 1e-4, "level {level} im[{i}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_rows_are_independent() {
+        let n = 8;
+        let p = rand_params(n, TwiddleTying::Block, 5);
+        let mut rng = Rng::new(9);
+        let batch = 3;
+        let mut re = vec![0.0f32; batch * n];
+        let mut im = vec![0.0f32; batch * n];
+        rng.fill_normal(&mut re, 0.0, 1.0);
+        rng.fill_normal(&mut im, 0.0, 1.0);
+        let mut batched_re = re.clone();
+        let mut batched_im = im.clone();
+        level_forward(&p, 1, &mut batched_re, &mut batched_im, batch);
+        for bi in 0..batch {
+            let mut rr = re[bi * n..(bi + 1) * n].to_vec();
+            let mut ri = im[bi * n..(bi + 1) * n].to_vec();
+            level_forward(&p, 1, &mut rr, &mut ri, 1);
+            assert_eq!(rr, batched_re[bi * n..(bi + 1) * n]);
+            assert_eq!(ri, batched_im[bi * n..(bi + 1) * n]);
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        for tying in [TwiddleTying::Factor, TwiddleTying::Block] {
+            let n = 8;
+            let level = 1;
+            let mut p = rand_params(n, tying, 17);
+            let mut rng = Rng::new(23);
+            let batch = 2;
+            let mut xr = vec![0.0f32; batch * n];
+            let mut xi = vec![0.0f32; batch * n];
+            rng.fill_normal(&mut xr, 0.0, 1.0);
+            rng.fill_normal(&mut xi, 0.0, 1.0);
+
+            // loss = Σ (y_re² + y_im²)/2 ⇒ dy = y
+            let loss = |p: &BpParams, xr: &[f32], xi: &[f32]| -> f64 {
+                let (mut yr, mut yi) = (xr.to_vec(), xi.to_vec());
+                level_forward(p, level, &mut yr, &mut yi, batch);
+                yr.iter().chain(yi.iter()).map(|&v| (v as f64) * (v as f64) / 2.0).sum()
+            };
+
+            let (mut yr, mut yi) = (xr.clone(), xi.clone());
+            level_forward(&p, level, &mut yr, &mut yi, batch);
+            let mut dyr = yr.clone();
+            let mut dyi = yi.clone();
+            let mut grad = vec![0.0f32; p.data.len()];
+            level_backward(&p, level, &xr, &xi, &mut dyr, &mut dyi, &mut grad, batch);
+
+            // twiddle finite differences (spot-check a handful of coords)
+            let eps = 1e-3f32;
+            let coords: Vec<usize> = (0..p.logits_off()).step_by(5).collect();
+            for &i in &coords {
+                let orig = p.data[i];
+                p.data[i] = orig + eps;
+                let lp = loss(&p, &xr, &xi);
+                p.data[i] = orig - eps;
+                let lm = loss(&p, &xr, &xi);
+                p.data[i] = orig;
+                let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                assert!(
+                    (fd - grad[i]).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "{tying:?} coord {i}: fd {fd} vs analytic {}",
+                    grad[i]
+                );
+            }
+
+            // input finite differences
+            for i in (0..batch * n).step_by(3) {
+                let orig = xr[i];
+                xr[i] = orig + eps;
+                let lp = loss(&p, &xr, &xi);
+                xr[i] = orig - eps;
+                let lm = loss(&p, &xr, &xi);
+                xr[i] = orig;
+                let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                assert!((fd - dyr[i]).abs() < 2e-2 * (1.0 + fd.abs()), "dx re coord {i}: fd {fd} vs {}", dyr[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn identity_unit_level_is_identity() {
+        let n = 8;
+        let mut p = BpParams::new(n, Field::Real, TwiddleTying::Block, PermTying::Untied);
+        for l in 0..p.levels {
+            for u in 0..n / 2 {
+                p.set_unit(l, u, [[(1.0, 0.0), (0.0, 0.0)], [(0.0, 0.0), (1.0, 0.0)]]);
+            }
+        }
+        let mut re: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let mut im = vec![0.0f32; n];
+        for l in 0..p.levels {
+            level_forward(&p, l, &mut re, &mut im, 1);
+        }
+        assert_eq!(re, (0..n).map(|i| i as f32).collect::<Vec<_>>());
+        assert!(im.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,35 @@
+//! The paper's contribution: the butterfly (BP / BPBP) parameterization of
+//! fast recursive linear transforms (Dao et al., ICML 2019, §3.2).
+//!
+//! A BP module over `N = 2^L` consists of
+//!  - a *butterfly matrix* `B = B_N · diag(B_{N/2}, B_{N/2}) · … ·
+//!    diag(B_2, …, B_2)` — `L` levels of 2×2 twiddle units, where level 0
+//!    (block size 2) is applied first so "closer elements interact first"
+//!    (paper Fig. 1 ordering), and
+//!  - a *relaxed recursive permutation* `P` — `L` block-diagonal steps,
+//!    each a product of three sigmoid-gated choices
+//!    `(p_s P^s + (1−p_s) I)`, `s ∈ {c, b, a}` (paper eq. (3)).
+//!
+//! Module layout:
+//!  - [`params`] — parameter container + flat-vector views for optimizers.
+//!  - [`level`] — a single butterfly level: forward + analytic backward.
+//!  - [`permutation`] — the 8-choice relaxed permutation: forward,
+//!    backward, hardening, hard tables.
+//!  - [`module`] — BP stacks: batched apply, dense reconstruction,
+//!    Frobenius factorization loss + gradient (the training objective).
+//!  - [`fast`] — the optimized O(N log N) inference path on hardened
+//!    parameters (the serving hot loop).
+//!  - [`closed_form`] — Proposition 1 constructions: exact BP (DFT, iDFT,
+//!    Hadamard) and BP² (DCT, DST, convolution) factorizations.
+
+pub mod closed_form;
+pub mod fast;
+pub mod level;
+pub mod module;
+pub mod params;
+pub mod permutation;
+
+pub use fast::{FastBp, Workspace};
+pub use module::{BpModule, BpStack, FactorizeLoss, StackGrad};
+pub use params::{BpParams, Field, InitScheme, PermTying, TwiddleTying};
+pub use permutation::{hard_perm_table, PermChoice, RelaxedPerm};

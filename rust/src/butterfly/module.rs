@@ -1,0 +1,417 @@
+//! BP modules and stacks: forward, backward, dense reconstruction, and
+//! the Frobenius factorization objective of paper eq. (4).
+//!
+//! A [`BpModule`] computes `x → B (P x)` (relaxed permutation, then the
+//! `L` butterfly levels, level 0 first). A [`BpStack`] composes `k`
+//! modules — `(BP)^k` in the paper's hierarchy (Definition 1); `k = 1` is
+//! BP, `k = 2` is BPBP.
+//!
+//! Batches are row-major planar complex `[batch, n]` pairs of `f32`
+//! planes. Applying a module to the identity batch yields the transpose
+//! of its dense matrix (row `j` of the output is `M e_j`, i.e. column `j`
+//! of `M`).
+
+use crate::butterfly::level::{level_backward, level_forward};
+use crate::butterfly::params::BpParams;
+use crate::butterfly::permutation::{PermSaves, RelaxedPerm};
+use crate::linalg::dense::CMat;
+
+/// One BP module.
+#[derive(Debug, Clone)]
+pub struct BpModule {
+    pub params: BpParams,
+}
+
+/// Saved activations for one module's backward pass.
+pub struct ModuleSaves {
+    perm: PermSaves,
+    /// Input to butterfly level ℓ (level 0's input = permutation output).
+    level_inputs: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+impl BpModule {
+    pub fn new(params: BpParams) -> Self {
+        BpModule { params }
+    }
+
+    pub fn n(&self) -> usize {
+        self.params.n
+    }
+
+    /// Forward in place, no saves (inference).
+    pub fn apply_batch(&self, re: &mut [f32], im: &mut [f32], batch: usize) {
+        RelaxedPerm::forward(&self.params, re, im, batch, None);
+        for l in 0..self.params.levels {
+            level_forward(&self.params, l, re, im, batch);
+        }
+    }
+
+    /// Forward in place, recording every stage input for backward.
+    pub fn forward_saving(&self, re: &mut [f32], im: &mut [f32], batch: usize) -> ModuleSaves {
+        let mut perm = PermSaves { stages: Vec::with_capacity(3 * self.params.levels) };
+        RelaxedPerm::forward(&self.params, re, im, batch, Some(&mut perm));
+        let mut level_inputs = Vec::with_capacity(self.params.levels);
+        for l in 0..self.params.levels {
+            level_inputs.push((re.to_vec(), im.to_vec()));
+            level_forward(&self.params, l, re, im, batch);
+        }
+        ModuleSaves { perm, level_inputs }
+    }
+
+    /// Backward: `dy` (in place → `dx`), parameter gradients accumulated
+    /// into `grad` (same layout as `params.data`).
+    pub fn backward(
+        &self,
+        saves: &ModuleSaves,
+        dy_re: &mut [f32],
+        dy_im: &mut [f32],
+        grad: &mut [f32],
+        batch: usize,
+    ) {
+        for l in (0..self.params.levels).rev() {
+            let (xr, xi) = &saves.level_inputs[l];
+            level_backward(&self.params, l, xr, xi, dy_re, dy_im, grad, batch);
+        }
+        RelaxedPerm::backward(&self.params, &saves.perm, dy_re, dy_im, grad, batch);
+    }
+
+    /// Single-vector apply (planar complex).
+    pub fn apply_vec(&self, re: &mut [f32], im: &mut [f32]) {
+        self.apply_batch(re, im, 1);
+    }
+
+    /// Dense reconstruction `M` with `(Mx)_i = Σ_j M_ij x_j` (O(N² log N);
+    /// test/loss aid, never a hot path).
+    pub fn to_matrix(&self) -> CMat {
+        stack_to_matrix(std::slice::from_ref(self))
+    }
+}
+
+/// A `(BP)^k` stack: `x → Bₖ Pₖ (… (B₁ P₁ x))` — `modules[0]` applied
+/// first.
+#[derive(Debug, Clone)]
+pub struct BpStack {
+    pub modules: Vec<BpModule>,
+}
+
+/// Per-module gradient buffers, parallel to `BpStack::modules`.
+pub type StackGrad = Vec<Vec<f32>>;
+
+impl BpStack {
+    pub fn new(modules: Vec<BpModule>) -> Self {
+        assert!(!modules.is_empty());
+        let n = modules[0].n();
+        assert!(modules.iter().all(|m| m.n() == n), "stack modules must share n");
+        BpStack { modules }
+    }
+
+    pub fn from_params(params: Vec<BpParams>) -> Self {
+        Self::new(params.into_iter().map(BpModule::new).collect())
+    }
+
+    pub fn n(&self) -> usize {
+        self.modules[0].n()
+    }
+
+    pub fn depth(&self) -> usize {
+        self.modules.len()
+    }
+
+    /// Total trainable scalar count (paper's compression accounting).
+    pub fn trainable_len(&self) -> usize {
+        self.modules.iter().map(|m| m.params.trainable_len()).sum()
+    }
+
+    pub fn zero_grad(&self) -> StackGrad {
+        self.modules.iter().map(|m| vec![0.0f32; m.params.data.len()]).collect()
+    }
+
+    pub fn apply_batch(&self, re: &mut [f32], im: &mut [f32], batch: usize) {
+        for m in &self.modules {
+            m.apply_batch(re, im, batch);
+        }
+    }
+
+    pub fn apply_vec(&self, re: &mut [f32], im: &mut [f32]) {
+        self.apply_batch(re, im, 1);
+    }
+
+    /// Forward with saves for all modules.
+    pub fn forward_saving(&self, re: &mut [f32], im: &mut [f32], batch: usize) -> Vec<ModuleSaves> {
+        self.modules.iter().map(|m| m.forward_saving(re, im, batch)).collect()
+    }
+
+    /// Backward through the whole stack.
+    pub fn backward(
+        &self,
+        saves: &[ModuleSaves],
+        dy_re: &mut [f32],
+        dy_im: &mut [f32],
+        grad: &mut StackGrad,
+        batch: usize,
+    ) {
+        for (i, m) in self.modules.iter().enumerate().rev() {
+            m.backward(&saves[i], dy_re, dy_im, &mut grad[i], batch);
+        }
+    }
+
+    /// Dense reconstruction of the whole stack.
+    pub fn to_matrix(&self) -> CMat {
+        stack_to_matrix(&self.modules)
+    }
+
+    /// RMSE against a target, paper convention: `(1/N)·‖T − M‖_F`.
+    pub fn rmse_to(&self, target: &CMat) -> f64 {
+        self.to_matrix().rmse_to(target)
+    }
+}
+
+fn stack_to_matrix(modules: &[BpModule]) -> CMat {
+    let n = modules[0].n();
+    // identity rows e_j → output row j = M e_j = column j of M
+    let mut re = vec![0.0f32; n * n];
+    let im = vec![0.0f32; n * n];
+    for j in 0..n {
+        re[j * n + j] = 1.0;
+    }
+    let mut re = re;
+    let mut im = im;
+    for m in modules {
+        m.apply_batch(&mut re, &mut im, n);
+    }
+    let mut out = CMat::zeros(n, n);
+    for j in 0..n {
+        for i in 0..n {
+            out.re[i * n + j] = re[j * n + i];
+            out.im[i * n + j] = im[j * n + i];
+        }
+    }
+    out
+}
+
+/// The factorization objective of eq. (4):
+/// `L = (1/N²)·‖T − M‖_F²` where `M` is the stack's dense matrix,
+/// computed (with its gradient) by streaming identity columns through the
+/// stack in chunks — memory stays `O(chunk · N · levels)` instead of
+/// `O(N² · levels)`.
+pub struct FactorizeLoss {
+    pub target: CMat,
+    /// Identity columns processed per forward/backward sweep.
+    pub chunk: usize,
+}
+
+impl FactorizeLoss {
+    pub fn new(target: CMat) -> Self {
+        let n = target.rows;
+        // ~64 columns balances save-buffer memory vs loop overhead.
+        let chunk = 64.min(n);
+        FactorizeLoss { target, chunk }
+    }
+
+    pub fn n(&self) -> usize {
+        self.target.rows
+    }
+
+    /// Loss only (no gradient).
+    pub fn loss(&self, stack: &BpStack) -> f64 {
+        let n = self.n();
+        let m = stack.to_matrix();
+        let d = m.sub(&self.target);
+        let f = d.frobenius_norm();
+        f * f / (n as f64 * n as f64)
+    }
+
+    /// Paper's reported RMSE: `(1/N)·‖T − M‖_F` = sqrt(loss).
+    pub fn rmse(&self, stack: &BpStack) -> f64 {
+        self.loss(stack).sqrt()
+    }
+
+    /// Compute loss and accumulate parameter gradients into `grad`.
+    pub fn loss_and_grad(&self, stack: &BpStack, grad: &mut StackGrad) -> f64 {
+        let n = self.n();
+        let inv_n2 = 1.0 / (n as f64 * n as f64);
+        let mut total = 0.0f64;
+        let mut j0 = 0usize;
+        while j0 < n {
+            let b = self.chunk.min(n - j0);
+            // rows = identity columns e_{j0..j0+b}
+            let mut re = vec![0.0f32; b * n];
+            let mut im = vec![0.0f32; b * n];
+            for (bi, j) in (j0..j0 + b).enumerate() {
+                re[bi * n + j] = 1.0;
+            }
+            let saves = stack.forward_saving(&mut re, &mut im, b);
+            // dy = (2/N²)(y − T[:, j]); loss += (1/N²)‖y − T[:, j]‖²
+            let mut dyr = vec![0.0f32; b * n];
+            let mut dyi = vec![0.0f32; b * n];
+            for (bi, j) in (j0..j0 + b).enumerate() {
+                for i in 0..n {
+                    let er = re[bi * n + i] - self.target.re[i * n + j];
+                    let ei = im[bi * n + i] - self.target.im[i * n + j];
+                    total += (er as f64 * er as f64 + ei as f64 * ei as f64) * inv_n2;
+                    dyr[bi * n + i] = (2.0 * inv_n2) as f32 * er;
+                    dyi[bi * n + i] = (2.0 * inv_n2) as f32 * ei;
+                }
+            }
+            stack.backward(&saves, &mut dyr, &mut dyi, grad, b);
+            j0 += b;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::butterfly::params::{Field, InitScheme, PermTying, TwiddleTying};
+    use crate::linalg::complex::Cpx;
+    use crate::util::rng::Rng;
+
+    fn rand_stack(n: usize, depth: usize, seed: u64) -> BpStack {
+        let mut rng = Rng::new(seed);
+        let mods = (0..depth)
+            .map(|_| {
+                let mut p = BpParams::init(
+                    n,
+                    Field::Complex,
+                    TwiddleTying::Factor,
+                    PermTying::Untied,
+                    InitScheme::OrthogonalLike,
+                    &mut rng,
+                );
+                for k in 0..p.levels {
+                    for g in 0..3 {
+                        p.set_logit(k, g, rng.normal_f32(0.0, 1.0));
+                    }
+                }
+                BpModule::new(p)
+            })
+            .collect();
+        BpStack::new(mods)
+    }
+
+    #[test]
+    fn to_matrix_agrees_with_apply() {
+        let stack = rand_stack(16, 2, 3);
+        let n = 16;
+        let m = stack.to_matrix();
+        let mut rng = Rng::new(4);
+        let mut re = vec![0.0f32; n];
+        let mut im = vec![0.0f32; n];
+        rng.fill_normal(&mut re, 0.0, 1.0);
+        rng.fill_normal(&mut im, 0.0, 1.0);
+        let x: Vec<Cpx> = re.iter().zip(&im).map(|(&r, &i)| Cpx::new(r, i)).collect();
+        let want = m.matvec(&x);
+        stack.apply_vec(&mut re, &mut im);
+        for i in 0..n {
+            assert!((re[i] - want[i].re).abs() < 1e-3, "re[{i}] {} vs {}", re[i], want[i].re);
+            assert!((im[i] - want[i].im).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn apply_is_linear() {
+        let stack = rand_stack(8, 1, 9);
+        let n = 8;
+        let mut rng = Rng::new(10);
+        let mut xr = vec![0.0f32; n];
+        let mut xi = vec![0.0f32; n];
+        let mut yr = vec![0.0f32; n];
+        let mut yi = vec![0.0f32; n];
+        rng.fill_normal(&mut xr, 0.0, 1.0);
+        rng.fill_normal(&mut xi, 0.0, 1.0);
+        rng.fill_normal(&mut yr, 0.0, 1.0);
+        rng.fill_normal(&mut yi, 0.0, 1.0);
+        let a = 1.7f32;
+        // M(a·x + y)
+        let mut sr: Vec<f32> = xr.iter().zip(&yr).map(|(&x, &y)| a * x + y).collect();
+        let mut si: Vec<f32> = xi.iter().zip(&yi).map(|(&x, &y)| a * x + y).collect();
+        stack.apply_vec(&mut sr, &mut si);
+        // a·Mx + My
+        let (mut mxr, mut mxi) = (xr.clone(), xi.clone());
+        stack.apply_vec(&mut mxr, &mut mxi);
+        let (mut myr, mut myi) = (yr.clone(), yi.clone());
+        stack.apply_vec(&mut myr, &mut myi);
+        for i in 0..n {
+            assert!((sr[i] - (a * mxr[i] + myr[i])).abs() < 1e-3);
+            assert!((si[i] - (a * mxi[i] + myi[i])).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn factorize_loss_zero_on_self() {
+        let stack = rand_stack(16, 1, 21);
+        let loss = FactorizeLoss::new(stack.to_matrix());
+        assert!(loss.loss(&stack) < 1e-10);
+        let mut grad = stack.zero_grad();
+        let l = loss.loss_and_grad(&stack, &mut grad);
+        assert!(l < 1e-10);
+    }
+
+    #[test]
+    fn loss_and_grad_matches_loss() {
+        let stack = rand_stack(8, 2, 33);
+        let target = rand_stack(8, 2, 34).to_matrix();
+        let loss = FactorizeLoss::new(target);
+        let mut grad = stack.zero_grad();
+        let l1 = loss.loss_and_grad(&stack, &mut grad);
+        let l2 = loss.loss(&stack);
+        assert!((l1 - l2).abs() < 1e-8, "{l1} vs {l2}");
+    }
+
+    #[test]
+    fn factorize_grad_matches_finite_differences() {
+        let mut stack = rand_stack(8, 2, 55);
+        let target = rand_stack(8, 2, 56).to_matrix();
+        let loss = FactorizeLoss::new(target);
+        let mut grad = stack.zero_grad();
+        loss.loss_and_grad(&stack, &mut grad);
+
+        let eps = 1e-3f32;
+        for mi in 0..stack.depth() {
+            let coords: Vec<usize> = (0..stack.modules[mi].params.data.len()).step_by(7).collect();
+            for &i in &coords {
+                let orig = stack.modules[mi].params.data[i];
+                stack.modules[mi].params.data[i] = orig + eps;
+                let lp = loss.loss(&stack);
+                stack.modules[mi].params.data[i] = orig - eps;
+                let lm = loss.loss(&stack);
+                stack.modules[mi].params.data[i] = orig;
+                let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                let an = grad[mi][i];
+                assert!(
+                    (fd - an).abs() < 5e-2 * (1.0 + fd.abs()),
+                    "module {mi} coord {i}: fd {fd} vs analytic {an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chunking_is_invisible() {
+        let stack = rand_stack(16, 1, 77);
+        let target = rand_stack(16, 1, 78).to_matrix();
+        let mut l_full = FactorizeLoss::new(target.clone());
+        l_full.chunk = 16;
+        let mut l_small = FactorizeLoss::new(target);
+        l_small.chunk = 3;
+        let mut g1 = stack.zero_grad();
+        let mut g2 = stack.zero_grad();
+        let a = l_full.loss_and_grad(&stack, &mut g1);
+        let b = l_small.loss_and_grad(&stack, &mut g2);
+        assert!((a - b).abs() < 1e-9);
+        for (x, y) in g1.iter().flatten().zip(g2.iter().flatten()) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rmse_matches_paper_definition() {
+        let stack = rand_stack(8, 1, 88);
+        let target = CMat::zeros(8, 8);
+        let loss = FactorizeLoss::new(target.clone());
+        let m = stack.to_matrix();
+        let want = m.frobenius_norm() / 8.0;
+        assert!((loss.rmse(&stack) - want).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,540 @@
+//! Parameter containers for BP modules.
+//!
+//! Layout contract (shared with the JAX layer, see
+//! `python/compile/model.py` and DESIGN.md §4): for `N = 2^L`, the
+//! twiddle store is a sequence of per-level segments
+//!
+//! ```text
+//! data = [ level 0 seg | level 1 seg | … | level L−1 seg | logits ]
+//! level ℓ seg = [2 (re/im plane), U_ℓ (units), 2, 2] f32
+//! ```
+//!
+//! where level ℓ mixes pairs at distance `2^ℓ` inside blocks of size
+//! `2^{ℓ+1}` and is applied *first* for ℓ = 0 ("closer elements interact
+//! first", paper Fig. 1). The unit count `U_ℓ` depends on the twiddle
+//! tying scheme:
+//!
+//! - **Paper-tied** (`TwiddleTying::Factor`): the repeated diagonal blocks
+//!   of each butterfly factor share weights — factor `B_{2^{ℓ+1}}` has
+//!   `U_ℓ = 2^ℓ` distinct units reused across all `N/2^{ℓ+1}` blocks.
+//!   Total `4N − 4` complex entries, the paper's §3.3 accounting
+//!   (2N + N + … + 4).
+//! - **Untied** (`TwiddleTying::Block`): every block has its own unit,
+//!   `U_ℓ = N/2`. Strictly more expressive; kept as an ablation axis
+//!   (DESIGN.md E7) and because some closed-form constructions (DST's
+//!   folded `D'`; per-block diagonals) need it.
+//!
+//! The 2×2 unit is `[[g00, g01], [g10, g11]]` with
+//! `y_lo = g00·x_lo + g01·x_hi`, `y_hi = g10·x_lo + g11·x_hi`.
+//!
+//! Permutation gate logits `(ℓ_a, ℓ_b, ℓ_c)` per recursive step follow the
+//! twiddles: `[L, 3]` (untied), `[3]` (tied), per eq. (3). Step `k`
+//! permutes block-diagonally at block size `N/2^k`; step 0 (whole vector)
+//! is applied to the input first, matching the unrolled eq. (1) where
+//! `P_N` is the right-most factor.
+//!
+//! Everything lives in one flat `Vec<f32>` so a single optimizer walks all
+//! parameters of a (possibly multi-module) model uniformly.
+
+use crate::util::rng::Rng;
+
+/// Real or complex parameterization. The paper optimizes over complex
+/// entries for transform recovery (§4.1) and evaluates both for NN
+/// compression (Table 1). `Real` keeps the imaginary twiddle plane pinned
+/// at zero (excluded from the trainable mask).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Field {
+    Real,
+    Complex,
+}
+
+impl Field {
+    pub fn name(self) -> &'static str {
+        match self {
+            Field::Real => "real",
+            Field::Complex => "complex",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Field> {
+        match s {
+            "real" => Some(Field::Real),
+            "complex" => Some(Field::Complex),
+            _ => None,
+        }
+    }
+}
+
+/// Twiddle weight-tying scheme (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TwiddleTying {
+    /// Paper scheme: blocks within a factor share weights (4N−4 entries).
+    Factor,
+    /// Every block independent (2N·log₂N entries).
+    Block,
+}
+
+impl TwiddleTying {
+    pub fn name(self) -> &'static str {
+        match self {
+            TwiddleTying::Factor => "factor-tied",
+            TwiddleTying::Block => "untied",
+        }
+    }
+}
+
+/// Whether permutation-gate logits are shared across the `L` recursive
+/// steps (paper §3.3: tying reflects self-similar reductions and cuts the
+/// count from `3·log₂N` to 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PermTying {
+    Tied,
+    Untied,
+    /// Permutation frozen to a hard choice (e.g. bit-reversal for the
+    /// Table 1 NN experiments); logits carry no gradient.
+    Fixed,
+}
+
+/// Twiddle initialization schemes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum InitScheme {
+    /// Near-orthogonal random init (§3.2 Initialization): real entries
+    /// 𝒩(0, 1/2) so 𝔼 BᵀB = I; complex entries re/im ~ 𝒩(0, 1/4) each so
+    /// 𝔼 B*B = I.
+    OrthogonalLike,
+    /// Identity butterfly (g = I per unit) plus small noise — useful for
+    /// residual-style layers and ablations.
+    NearIdentity { noise: f32 },
+    /// Random Givens rotation per unit (+ global phase when complex).
+    RandomRotation,
+}
+
+/// Parameters of a single BP module (one butterfly matrix + one relaxed
+/// permutation) over dimension `n = 2^levels`.
+#[derive(Debug, Clone)]
+pub struct BpParams {
+    pub n: usize,
+    /// L = log₂ n.
+    pub levels: usize,
+    pub field: Field,
+    pub twiddle_tying: TwiddleTying,
+    pub perm_tying: PermTying,
+    /// Flat storage (see module docs).
+    pub data: Vec<f32>,
+    /// Start offset of each level's segment in `data`.
+    level_off: Vec<usize>,
+    /// Offset of the logits block.
+    logits_off: usize,
+}
+
+impl BpParams {
+    /// Distinct twiddle units at level ℓ under `tying`.
+    #[inline(always)]
+    pub fn level_units(n: usize, tying: TwiddleTying, level: usize) -> usize {
+        match tying {
+            TwiddleTying::Factor => 1 << level,
+            TwiddleTying::Block => n / 2,
+        }
+    }
+
+    /// Number of logit parameters for the given tying mode.
+    pub fn logits_len(levels: usize, tying: PermTying) -> usize {
+        match tying {
+            PermTying::Tied => 3,
+            // Fixed perms still *store* per-level logits (hardened to
+            // ±BIG) so the forward pass is uniform; they're not trained.
+            PermTying::Untied | PermTying::Fixed => 3 * levels,
+        }
+    }
+
+    pub fn new(n: usize, field: Field, twiddle_tying: TwiddleTying, perm_tying: PermTying) -> Self {
+        let levels = log2_exact(n);
+        let mut level_off = Vec::with_capacity(levels);
+        let mut off = 0usize;
+        for l in 0..levels {
+            level_off.push(off);
+            off += 2 * Self::level_units(n, twiddle_tying, l) * 4;
+        }
+        let logits_off = off;
+        let len = off + Self::logits_len(levels, perm_tying);
+        BpParams {
+            n,
+            levels,
+            field,
+            twiddle_tying,
+            perm_tying,
+            data: vec![0.0; len],
+            level_off,
+            logits_off,
+        }
+    }
+
+    /// Construct with the given initialization scheme. Logits start at 0
+    /// (every gate probability = 0.5, the maximum-entropy relaxation).
+    pub fn init(
+        n: usize,
+        field: Field,
+        twiddle_tying: TwiddleTying,
+        perm_tying: PermTying,
+        scheme: InitScheme,
+        rng: &mut Rng,
+    ) -> Self {
+        let mut p = Self::new(n, field, twiddle_tying, perm_tying);
+        p.init_twiddle(scheme, rng);
+        p
+    }
+
+    /// Write one twiddle scalar (index computed before the mutable borrow).
+    #[inline(always)]
+    pub fn set_tw(&mut self, level: usize, plane: usize, unit: usize, row: usize, col: usize, v: f32) {
+        let i = self.tw_idx(level, plane, unit, row, col);
+        self.data[i] = v;
+    }
+
+    fn init_twiddle(&mut self, scheme: InitScheme, rng: &mut Rng) {
+        for l in 0..self.levels {
+            for u in 0..Self::level_units(self.n, self.twiddle_tying, l) {
+                match scheme {
+                    InitScheme::OrthogonalLike => {
+                        let std = match self.field {
+                            Field::Real => (0.5f32).sqrt(),
+                            Field::Complex => 0.5,
+                        };
+                        for r in 0..2 {
+                            for c in 0..2 {
+                                let v = rng.normal_f32(0.0, std);
+                                self.set_tw(l, 0, u, r, c, v);
+                                if self.field == Field::Complex {
+                                    let vi = rng.normal_f32(0.0, std);
+                                    self.set_tw(l, 1, u, r, c, vi);
+                                }
+                            }
+                        }
+                    }
+                    InitScheme::NearIdentity { noise } => {
+                        for r in 0..2 {
+                            for c in 0..2 {
+                                let base = if r == c { 1.0 } else { 0.0 };
+                                let v = base + rng.normal_f32(0.0, noise);
+                                self.set_tw(l, 0, u, r, c, v);
+                                if self.field == Field::Complex {
+                                    let vi = rng.normal_f32(0.0, noise);
+                                    self.set_tw(l, 1, u, r, c, vi);
+                                }
+                            }
+                        }
+                    }
+                    InitScheme::RandomRotation => {
+                        let th = rng.range(0.0, std::f64::consts::TAU);
+                        let (s, c) = (th.sin() as f32, th.cos() as f32);
+                        self.set_tw(l, 0, u, 0, 0, c);
+                        self.set_tw(l, 0, u, 0, 1, -s);
+                        self.set_tw(l, 0, u, 1, 0, s);
+                        self.set_tw(l, 0, u, 1, 1, c);
+                        if self.field == Field::Complex {
+                            // rotate the whole unit by a global phase φ:
+                            // G ← e^{iφ} G
+                            let ph = rng.range(0.0, std::f64::consts::TAU);
+                            let (ps, pc) = (ph.sin() as f32, ph.cos() as f32);
+                            for r in 0..2 {
+                                for cc in 0..2 {
+                                    let re = self.data[self.tw_idx(l, 0, u, r, cc)];
+                                    self.set_tw(l, 0, u, r, cc, pc * re);
+                                    self.set_tw(l, 1, u, r, cc, ps * re);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Index into `data` for twiddle `(level, plane, unit, row, col)`.
+    /// `unit` is a *parameter* unit index in `0..level_units(level)`; use
+    /// [`unit_index`] to map a (block, offset) position to it.
+    #[inline(always)]
+    pub fn tw_idx(&self, level: usize, plane: usize, unit: usize, row: usize, col: usize) -> usize {
+        debug_assert!(
+            level < self.levels
+                && plane < 2
+                && unit < Self::level_units(self.n, self.twiddle_tying, level)
+                && row < 2
+                && col < 2
+        );
+        self.level_off[level] + ((plane * Self::level_units(self.n, self.twiddle_tying, level) + unit) * 2 + row) * 2 + col
+    }
+
+    /// Map the unit at (block `b`, in-block offset `j`) of level ℓ to its
+    /// parameter unit index. Under factor tying all blocks share `j`.
+    #[inline(always)]
+    pub fn unit_index(&self, level: usize, block: usize, j: usize) -> usize {
+        match self.twiddle_tying {
+            TwiddleTying::Factor => j,
+            TwiddleTying::Block => block * (1 << level) + j,
+        }
+    }
+
+    /// Start offset of level ℓ's segment.
+    #[inline(always)]
+    pub fn level_offset(&self, level: usize) -> usize {
+        self.level_off[level]
+    }
+
+    /// Offset of the logits block inside `data`.
+    #[inline(always)]
+    pub fn logits_off(&self) -> usize {
+        self.logits_off
+    }
+
+    /// Logit for permutation step `k`, gate `s ∈ {0:a, 1:b, 2:c}`.
+    #[inline(always)]
+    pub fn logit(&self, step: usize, gate: usize) -> f32 {
+        self.data[self.logit_index(step, gate)]
+    }
+
+    #[inline(always)]
+    pub fn logit_index(&self, step: usize, gate: usize) -> usize {
+        debug_assert!(step < self.levels && gate < 3);
+        match self.perm_tying {
+            PermTying::Tied => self.logits_off + gate,
+            PermTying::Untied | PermTying::Fixed => self.logits_off + step * 3 + gate,
+        }
+    }
+
+    pub fn set_logit(&mut self, step: usize, gate: usize, v: f32) {
+        let i = self.logit_index(step, gate);
+        self.data[i] = v;
+    }
+
+    /// Freeze the permutation to a hard per-step choice (gates saturated).
+    /// `choices[k] = [a, b, c]` booleans. Used for fixed-permutation
+    /// experiments (Table 1) and when installing a learned module for
+    /// serving.
+    pub fn fix_permutation(&mut self, choices: &[[bool; 3]]) {
+        assert_eq!(choices.len(), self.levels);
+        assert!(
+            self.perm_tying != PermTying::Tied || choices.windows(2).all(|w| w[0] == w[1]),
+            "tied logits cannot encode per-step-distinct choices"
+        );
+        const BIG: f32 = 30.0; // σ(±30) rounds to exactly 1.0/0.0 in f32
+        for (k, ch) in choices.iter().enumerate() {
+            for (g, &on) in ch.iter().enumerate() {
+                let i = self.logit_index(k, g);
+                self.data[i] = if on { BIG } else { -BIG };
+            }
+        }
+        self.perm_tying = PermTying::Fixed;
+    }
+
+    /// Fix the permutation to the FFT's bit-reversal (P^a at every step).
+    pub fn fix_bit_reversal(&mut self) {
+        let ch = vec![[true, false, false]; self.levels];
+        self.fix_permutation(&ch);
+    }
+
+    /// Fix the permutation to the identity.
+    pub fn fix_identity_perm(&mut self) {
+        let ch = vec![[false, false, false]; self.levels];
+        self.fix_permutation(&ch);
+    }
+
+    /// Set the 2×2 unit `(level, unit)` from complex entries given as
+    /// row-major `[[(re, im); 2]; 2]`.
+    pub fn set_unit(&mut self, level: usize, unit: usize, g: [[(f32, f32); 2]; 2]) {
+        for r in 0..2 {
+            for c in 0..2 {
+                let (re, im) = g[r][c];
+                self.set_tw(level, 0, unit, r, c, re);
+                self.set_tw(level, 1, unit, r, c, im);
+            }
+        }
+    }
+
+    /// Canonicalize to untied logits (the AOT/theta interchange layout):
+    /// tied logits are replicated across the `L` steps; untied/fixed
+    /// parameters are returned unchanged.
+    pub fn with_untied_logits(&self) -> BpParams {
+        if self.perm_tying != PermTying::Tied {
+            return self.clone();
+        }
+        let mut out = BpParams::new(self.n, self.field, self.twiddle_tying, PermTying::Untied);
+        out.data[..self.logits_off].copy_from_slice(&self.data[..self.logits_off]);
+        for k in 0..self.levels {
+            for g in 0..3 {
+                let v = self.logit(k, g);
+                out.set_logit(k, g, v);
+            }
+        }
+        out
+    }
+
+    /// Total number of *trainable* scalars (excludes the imaginary plane
+    /// for real modules and logits for fixed perms). This matches the
+    /// paper's §3.3 accounting: factor-tied complex ⇒ 2·(4N−4) reals.
+    pub fn trainable_len(&self) -> usize {
+        let tw_planar = self.logits_off; // twiddle block size
+        let tw = match self.field {
+            Field::Real => tw_planar / 2,
+            Field::Complex => tw_planar,
+        };
+        let lg = match self.perm_tying {
+            PermTying::Fixed => 0,
+            t => Self::logits_len(self.levels, t),
+        };
+        tw + lg
+    }
+
+    /// Trainable mask over `data` (1.0 = trainable, 0.0 = frozen). The
+    /// optimizer multiplies gradients by this, keeping frozen coordinates
+    /// pinned without branching in the update loop.
+    pub fn trainable_mask(&self) -> Vec<f32> {
+        let mut m = vec![1.0f32; self.data.len()];
+        if self.field == Field::Real {
+            for l in 0..self.levels {
+                let units = Self::level_units(self.n, self.twiddle_tying, l);
+                let start = self.tw_idx(l, 1, 0, 0, 0);
+                for i in start..start + units * 4 {
+                    m[i] = 0.0;
+                }
+            }
+        }
+        if self.perm_tying == PermTying::Fixed {
+            for i in self.logits_off..self.data.len() {
+                m[i] = 0.0;
+            }
+        }
+        m
+    }
+}
+
+/// log₂ of a power of two; panics otherwise (the paper pads non-powers of
+/// two with zeros — callers are expected to pad before reaching here).
+pub fn log2_exact(n: usize) -> usize {
+    assert!(n.is_power_of_two() && n >= 2, "butterfly size must be a power of two ≥ 2, got {n}");
+    n.trailing_zeros() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_sizes_factor_tied() {
+        // N=16, L=4: units per level 1,2,4,8 → planar scalars 8·(1+2+4+8)
+        // = 120 = 2·(4N−4); logits 12 (untied).
+        let p = BpParams::new(16, Field::Complex, TwiddleTying::Factor, PermTying::Untied);
+        assert_eq!(p.levels, 4);
+        assert_eq!(p.data.len(), 120 + 12);
+        let t = BpParams::new(16, Field::Complex, TwiddleTying::Factor, PermTying::Tied);
+        assert_eq!(t.data.len(), 120 + 3);
+    }
+
+    #[test]
+    fn layout_sizes_untied() {
+        // N=16: 4 levels × 2 planes × 8 units × 4 = 256 scalars.
+        let p = BpParams::new(16, Field::Complex, TwiddleTying::Block, PermTying::Untied);
+        assert_eq!(p.data.len(), 256 + 12);
+    }
+
+    #[test]
+    fn paper_parameter_count() {
+        // §3.3: butterfly matrix has 4N−4 (complex) entries under factor
+        // tying; we store 2 scalars per complex entry.
+        for n in [8usize, 16, 64, 256] {
+            let p = BpParams::new(n, Field::Complex, TwiddleTying::Factor, PermTying::Tied);
+            assert_eq!(p.logits_off, 2 * (4 * n - 4));
+            assert_eq!(p.trainable_len(), 2 * (4 * n - 4) + 3);
+            let r = BpParams::new(n, Field::Real, TwiddleTying::Factor, PermTying::Tied);
+            assert_eq!(r.trainable_len(), 4 * n - 4 + 3);
+        }
+    }
+
+    #[test]
+    fn tw_idx_is_bijective_over_layout() {
+        for tying in [TwiddleTying::Factor, TwiddleTying::Block] {
+            let p = BpParams::new(8, Field::Real, tying, PermTying::Untied);
+            let mut seen = vec![false; p.logits_off];
+            for l in 0..3 {
+                for pl in 0..2 {
+                    for u in 0..BpParams::level_units(8, tying, l) {
+                        for r in 0..2 {
+                            for c in 0..2 {
+                                let i = p.tw_idx(l, pl, u, r, c);
+                                assert!(!seen[i], "dup at ({l},{pl},{u},{r},{c})");
+                                seen[i] = true;
+                            }
+                        }
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&x| x));
+        }
+    }
+
+    #[test]
+    fn unit_index_tying() {
+        let f = BpParams::new(16, Field::Real, TwiddleTying::Factor, PermTying::Tied);
+        // level 1, block size 4, blocks 0..4, j in 0..2 — all blocks share
+        assert_eq!(f.unit_index(1, 0, 1), 1);
+        assert_eq!(f.unit_index(1, 3, 1), 1);
+        let u = BpParams::new(16, Field::Real, TwiddleTying::Block, PermTying::Tied);
+        assert_eq!(u.unit_index(1, 0, 1), 1);
+        assert_eq!(u.unit_index(1, 3, 1), 7);
+    }
+
+    #[test]
+    fn orthogonal_like_init_is_near_isometric() {
+        // 𝔼 BᵀB = I ⇒ per-unit first-column norms² should average ~1.
+        let mut rng = Rng::new(7);
+        let p = BpParams::init(
+            1024,
+            Field::Real,
+            TwiddleTying::Block,
+            PermTying::Untied,
+            InitScheme::OrthogonalLike,
+            &mut rng,
+        );
+        let units = 512;
+        let mut acc = 0.0f64;
+        for u in 0..units {
+            let g00 = p.data[p.tw_idx(0, 0, u, 0, 0)] as f64;
+            let g10 = p.data[p.tw_idx(0, 0, u, 1, 0)] as f64;
+            acc += g00 * g00 + g10 * g10;
+        }
+        let mean = acc / units as f64;
+        assert!((mean - 1.0).abs() < 0.1, "mean col norm² = {mean}");
+    }
+
+    #[test]
+    fn fixed_perm_masks_logits() {
+        let mut p = BpParams::new(8, Field::Complex, TwiddleTying::Factor, PermTying::Untied);
+        p.fix_bit_reversal();
+        let m = p.trainable_mask();
+        assert!(m[p.logits_off()..].iter().all(|&x| x == 0.0));
+        assert!((p.logit(0, 0) - 30.0).abs() < 1e-6);
+        assert!((p.logit(0, 1) + 30.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn real_field_masks_imag_plane() {
+        let p = BpParams::new(8, Field::Real, TwiddleTying::Factor, PermTying::Untied);
+        let m = p.trainable_mask();
+        for l in 0..3 {
+            for u in 0..BpParams::level_units(8, TwiddleTying::Factor, l) {
+                for r in 0..2 {
+                    for c in 0..2 {
+                        assert_eq!(m[p.tw_idx(l, 1, u, r, c)], 0.0);
+                        assert_eq!(m[p.tw_idx(l, 0, u, r, c)], 1.0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_pow2_panics() {
+        BpParams::new(12, Field::Real, TwiddleTying::Factor, PermTying::Tied);
+    }
+}

@@ -1,0 +1,455 @@
+//! The relaxed recursive permutation (paper §3.2, "Learning a recursive
+//! permutation").
+//!
+//! `P^{(N)}` factors into `L = log₂N` block-diagonal steps. Step `k`
+//! operates independently on blocks of size `m = N/2^k` (step 0 — the
+//! whole vector — is applied to the input first, matching eq. (1) where
+//! `P_N` is the right-most factor). Within a block of size `m`, three
+//! generators can each be switched on:
+//!
+//! - `P^a` — separate even and odd indices: `[0,1,2,3] → [0,2,1,3]`
+//! - `P^b` — reverse the first half: `[0,1,|2,3] → [1,0,|2,3]`
+//! - `P^c` — reverse the second half: `[0,1,|2,3] → [0,1,|3,2]`
+//!
+//! composed as `P = P^c P^b P^a` (so `a` acts on the input first). The
+//! relaxation (eq. (3)) replaces each binary choice with a sigmoid gate:
+//! `P = ∏_{s=c,b,a} (p_s P^s + (1−p_s) I)`, `p_s = σ(ℓ_s)`.
+//!
+//! Choosing `P^a` at every step composes to the FFT's **bit-reversal**
+//! permutation — recovered by the learned logits in the paper's §4.1.
+
+use crate::butterfly::params::BpParams;
+
+/// Hard per-step choice: `[a, b, c]` switched on/off for each of the `L`
+/// recursive steps.
+pub type PermChoice = Vec<[bool; 3]>;
+
+/// Gather table for generator `gate ∈ {0:a, 1:b, 2:c}` on a block of size
+/// `m`: `out[i] = in[g[i]]`.
+pub fn generator_table(m: usize, gate: usize) -> Vec<usize> {
+    let h = m / 2;
+    let mut g: Vec<usize> = (0..m).collect();
+    match gate {
+        0 => {
+            for j in 0..h {
+                g[j] = 2 * j;
+                g[h + j] = 2 * j + 1;
+            }
+        }
+        1 => {
+            for j in 0..h {
+                g[j] = h - 1 - j;
+            }
+        }
+        2 => {
+            for j in 0..h {
+                g[h + j] = m - 1 - j;
+            }
+        }
+        _ => panic!("gate must be 0..3"),
+    }
+    g
+}
+
+/// Compose the full hard permutation table over `n` for the per-step
+/// `choices` (`out[i] = in[table[i]]`).
+pub fn hard_perm_table(n: usize, choices: &[[bool; 3]]) -> Vec<usize> {
+    let levels = crate::butterfly::params::log2_exact(n);
+    assert_eq!(choices.len(), levels);
+    let mut t: Vec<usize> = (0..n).collect();
+    for (k, ch) in choices.iter().enumerate() {
+        let m = n >> k;
+        // within-block step table: s[i] = ga[gb[gc[i]]] over chosen gates
+        let mut s: Vec<usize> = (0..m).collect();
+        // apply as composition P^c P^b P^a acting on x: a first ⇒
+        // s[i] = ga[gb[gc[i]]]
+        let ga = if ch[0] { generator_table(m, 0) } else { (0..m).collect() };
+        let gb = if ch[1] { generator_table(m, 1) } else { (0..m).collect() };
+        let gc = if ch[2] { generator_table(m, 2) } else { (0..m).collect() };
+        for i in 0..m {
+            s[i] = ga[gb[gc[i]]];
+        }
+        // replicate block-diagonally and fold into the running table:
+        // t_k[i] = t_{k-1}[blockwise_s[i]]
+        let prev = t.clone();
+        for blk in 0..(n / m) {
+            let base = blk * m;
+            for i in 0..m {
+                t[base + i] = prev[base + s[i]];
+            }
+        }
+    }
+    t
+}
+
+/// Invert a gather table: if `out[i] = in[t[i]]`, the inverse satisfies
+/// `inv[t[i]] = i`.
+pub fn invert_table(t: &[usize]) -> Vec<usize> {
+    let mut inv = vec![0usize; t.len()];
+    for (i, &src) in t.iter().enumerate() {
+        inv[src] = i;
+    }
+    inv
+}
+
+#[inline(always)]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Saved activations for backward: the input to each of the `3L` gate
+/// stages, in application order.
+pub struct PermSaves {
+    pub stages: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+/// The relaxed permutation of one BP module. Stateless — all parameters
+/// live in [`BpParams`]; this type just namespaces the algorithms.
+pub struct RelaxedPerm;
+
+impl RelaxedPerm {
+    /// Apply one gate stage in place: `y = p·(P^g x) + (1−p)·x`,
+    /// block-diagonally at block size `m`.
+    fn gate_stage(
+        re: &mut [f32],
+        im: &mut [f32],
+        scratch_re: &mut [f32],
+        scratch_im: &mut [f32],
+        n: usize,
+        batch: usize,
+        m: usize,
+        table: &[usize],
+        p: f32,
+    ) {
+        // snap saturated gates so hardened modules are *exactly* their
+        // hard permutation (σ(±30) is within 1e-13 of {0,1} but not equal)
+        let p = if p < 1e-7 { 0.0 } else if p > 1.0 - 1e-7 { 1.0 } else { p };
+        if p == 0.0 {
+            return; // off gate: exact identity
+        }
+        let q = 1.0 - p;
+        for bi in 0..batch {
+            let row = bi * n;
+            for blk in 0..(n / m) {
+                let base = row + blk * m;
+                let src_re = &re[base..base + m];
+                let src_im = &im[base..base + m];
+                for i in 0..m {
+                    scratch_re[i] = p * src_re[table[i]] + q * src_re[i];
+                    scratch_im[i] = p * src_im[table[i]] + q * src_im[i];
+                }
+                re[base..base + m].copy_from_slice(&scratch_re[..m]);
+                im[base..base + m].copy_from_slice(&scratch_im[..m]);
+            }
+        }
+    }
+
+    /// Forward through all `L` steps × 3 gates, in place. If `saves` is
+    /// provided, the input to every stage is recorded (needed for
+    /// backward).
+    pub fn forward(
+        params: &BpParams,
+        re: &mut [f32],
+        im: &mut [f32],
+        batch: usize,
+        mut saves: Option<&mut PermSaves>,
+    ) {
+        let n = params.n;
+        let mut sr = vec![0.0f32; n];
+        let mut si = vec![0.0f32; n];
+        for k in 0..params.levels {
+            let m = n >> k;
+            for gate in 0..3 {
+                let p = sigmoid(params.logit(k, gate));
+                if let Some(s) = saves.as_deref_mut() {
+                    s.stages.push((re.to_vec(), im.to_vec()));
+                }
+                let table = generator_table(m, gate);
+                Self::gate_stage(re, im, &mut sr, &mut si, n, batch, m, &table, p);
+            }
+        }
+    }
+
+    /// Backward through the permutation. `dy` (in place → `dx`), gate
+    /// gradients accumulated into `grad` at the logit slots.
+    pub fn backward(
+        params: &BpParams,
+        saves: &PermSaves,
+        dy_re: &mut [f32],
+        dy_im: &mut [f32],
+        grad: &mut [f32],
+        batch: usize,
+    ) {
+        let n = params.n;
+        debug_assert_eq!(saves.stages.len(), 3 * params.levels);
+        let mut dxr = vec![0.0f32; batch * n];
+        let mut dxi = vec![0.0f32; batch * n];
+        // walk stages in reverse order
+        for k in (0..params.levels).rev() {
+            let m = n >> k;
+            for gate in (0..3).rev() {
+                let stage_idx = k * 3 + gate;
+                let (x_re, x_im) = &saves.stages[stage_idx];
+                let logit = params.logit(k, gate);
+                let p = sigmoid(logit);
+                let q = 1.0 - p;
+                let table = generator_table(m, gate);
+                dxr.iter_mut().for_each(|v| *v = 0.0);
+                dxi.iter_mut().for_each(|v| *v = 0.0);
+                let mut dp = 0.0f64;
+                for bi in 0..batch {
+                    let row = bi * n;
+                    for blk in 0..(n / m) {
+                        let base = row + blk * m;
+                        for i in 0..m {
+                            let gi = base + table[i];
+                            let oi = base + i;
+                            let dr = dy_re[oi];
+                            let di = dy_im[oi];
+                            // y_i = p·x_{g(i)} + (1−p)·x_i
+                            dxr[gi] += p * dr;
+                            dxi[gi] += p * di;
+                            dxr[oi] += q * dr;
+                            dxi[oi] += q * di;
+                            dp += (dr * (x_re[gi] - x_re[oi])) as f64;
+                            dp += (di * (x_im[gi] - x_im[oi])) as f64;
+                        }
+                    }
+                }
+                // chain through the sigmoid; tied logits accumulate into
+                // the shared slot via logit_index.
+                if params.perm_tying != crate::butterfly::params::PermTying::Fixed {
+                    grad[params.logit_index(k, gate)] += (dp as f32) * p * q;
+                }
+                dy_re.copy_from_slice(&dxr);
+                dy_im.copy_from_slice(&dxi);
+            }
+        }
+    }
+
+    /// Harden the learned gates to their most likely binary choice.
+    pub fn harden(params: &BpParams) -> PermChoice {
+        (0..params.levels)
+            .map(|k| {
+                let mut ch = [false; 3];
+                for g in 0..3 {
+                    ch[g] = sigmoid(params.logit(k, g)) > 0.5;
+                }
+                ch
+            })
+            .collect()
+    }
+
+    /// Minimum gate "peakedness" over all stages: `max(p, 1−p)` minimized.
+    /// The paper reports learned gates putting ≥ 0.99 on a choice; this is
+    /// the diagnostic the coordinator logs for that claim.
+    pub fn min_confidence(params: &BpParams) -> f32 {
+        let mut best = 1.0f32;
+        for k in 0..params.levels {
+            for g in 0..3 {
+                let p = sigmoid(params.logit(k, g));
+                best = best.min(p.max(1.0 - p));
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::butterfly::params::{Field, PermTying, TwiddleTying};
+    use crate::transforms::fast::bit_reversal_table;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn generators_are_permutations() {
+        for m in [2usize, 4, 8, 16] {
+            for gate in 0..3 {
+                let g = generator_table(m, gate);
+                let mut seen = vec![false; m];
+                for &i in &g {
+                    assert!(!seen[i]);
+                    seen[i] = true;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn even_odd_example_from_paper() {
+        // [0,1,2,3] → [0,2,1,3]
+        let g = generator_table(4, 0);
+        let x = [0, 1, 2, 3];
+        let y: Vec<i32> = (0..4).map(|i| x[g[i]]).collect();
+        assert_eq!(y, vec![0, 2, 1, 3]);
+    }
+
+    #[test]
+    fn all_a_composes_to_bit_reversal() {
+        for n in [4usize, 8, 16, 64, 256, 1024] {
+            let levels = n.trailing_zeros() as usize;
+            let choices = vec![[true, false, false]; levels];
+            let t = hard_perm_table(n, &choices);
+            assert_eq!(t, bit_reversal_table(n), "n = {n}");
+        }
+    }
+
+    #[test]
+    fn dct_style_prepermutation() {
+        // Appendix A.1: separate even/odd then reverse the odds:
+        // [0,1,2,3] → [0,2,3,1]. That is P^c P^a at the top step only.
+        let mut choices = vec![[false, false, false]; 2];
+        choices[0] = [true, false, true];
+        let t = hard_perm_table(4, &choices);
+        let x = [0, 1, 2, 3];
+        let y: Vec<i32> = (0..4).map(|i| x[t[i]]).collect();
+        assert_eq!(y, vec![0, 2, 3, 1]);
+    }
+
+    #[test]
+    fn saturated_relaxed_equals_hard() {
+        let n = 16;
+        let mut rng = Rng::new(1);
+        for trial in 0..8 {
+            let mut params = BpParams::new(n, Field::Real, TwiddleTying::Factor, PermTying::Untied);
+            let choices: PermChoice = (0..params.levels)
+                .map(|_| [rng.below(2) == 1, rng.below(2) == 1, rng.below(2) == 1])
+                .collect();
+            params.fix_permutation(&choices);
+            let mut re: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let mut im = vec![0.0f32; n];
+            RelaxedPerm::forward(&params, &mut re, &mut im, 1, None);
+            let t = hard_perm_table(n, &choices);
+            let want: Vec<f32> = (0..n).map(|i| t[i] as f32).collect();
+            assert_eq!(re, want, "trial {trial} choices {choices:?}");
+        }
+    }
+
+    #[test]
+    fn half_gates_preserve_sum() {
+        // every generator is a permutation, so p·Px + (1−p)·x preserves
+        // the total sum of entries for any gate setting.
+        let n = 32;
+        let mut rng = Rng::new(2);
+        let mut params = BpParams::new(n, Field::Real, TwiddleTying::Factor, PermTying::Untied);
+        for k in 0..params.levels {
+            for g in 0..3 {
+                params.set_logit(k, g, rng.normal_f32(0.0, 2.0));
+            }
+        }
+        let mut re = vec![0.0f32; n];
+        rng.fill_normal(&mut re, 0.0, 1.0);
+        let sum0: f32 = re.iter().sum();
+        let mut im = vec![0.0f32; n];
+        RelaxedPerm::forward(&params, &mut re, &mut im, 1, None);
+        let sum1: f32 = re.iter().sum();
+        assert!((sum0 - sum1).abs() < 1e-4);
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let n = 8;
+        let batch = 2;
+        let mut rng = Rng::new(77);
+        for tying in [PermTying::Untied, PermTying::Tied] {
+            let mut params = BpParams::new(n, Field::Real, TwiddleTying::Factor, tying);
+            let levels = params.levels;
+            for k in 0..levels {
+                for g in 0..3 {
+                    params.set_logit(k, g, rng.normal_f32(0.0, 1.0));
+                }
+            }
+            let mut xr = vec![0.0f32; batch * n];
+            let mut xi = vec![0.0f32; batch * n];
+            rng.fill_normal(&mut xr, 0.0, 1.0);
+            rng.fill_normal(&mut xi, 0.0, 1.0);
+
+            let loss = |params: &BpParams| -> f64 {
+                let (mut r, mut i) = (xr.clone(), xi.clone());
+                RelaxedPerm::forward(params, &mut r, &mut i, batch, None);
+                r.iter().chain(i.iter()).map(|&v| (v as f64) * (v as f64) / 2.0).sum()
+            };
+
+            let mut saves = PermSaves { stages: Vec::new() };
+            let (mut yr, mut yi) = (xr.clone(), xi.clone());
+            RelaxedPerm::forward(&params, &mut yr, &mut yi, batch, Some(&mut saves));
+            let (mut dyr, mut dyi) = (yr.clone(), yi.clone());
+            let mut grad = vec![0.0f32; params.data.len()];
+            RelaxedPerm::backward(&params, &saves, &mut dyr, &mut dyi, &mut grad, batch);
+
+            let eps = 1e-3f32;
+            for k in 0..levels {
+                for g in 0..3 {
+                    let i = params.logit_index(k, g);
+                    let orig = params.data[i];
+                    params.data[i] = orig + eps;
+                    let lp = loss(&params);
+                    params.data[i] = orig - eps;
+                    let lm = loss(&params);
+                    params.data[i] = orig;
+                    let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                    // tied logits hit the same slot for all k — fd already
+                    // reflects the tied perturbation, so compare directly.
+                    assert!(
+                        (fd - grad[i]).abs() < 3e-2 * (1.0 + fd.abs()),
+                        "{tying:?} logit ({k},{g}): fd {fd} vs analytic {}",
+                        grad[i]
+                    );
+                    if tying == PermTying::Tied {
+                        break; // slots repeat; one gate set is enough
+                    }
+                }
+                if tying == PermTying::Tied {
+                    break;
+                }
+            }
+
+            // input gradient
+            let eps = 1e-3f32;
+            for i in (0..batch * n).step_by(3) {
+                let orig = xr[i];
+                let mut xp = xr.clone();
+                xp[i] = orig + eps;
+                let lp = {
+                    let (mut r, mut im2) = (xp.clone(), xi.clone());
+                    RelaxedPerm::forward(&params, &mut r, &mut im2, batch, None);
+                    r.iter().chain(im2.iter()).map(|&v| (v as f64) * (v as f64) / 2.0).sum::<f64>()
+                };
+                xp[i] = orig - eps;
+                let lm = {
+                    let (mut r, mut im2) = (xp.clone(), xi.clone());
+                    RelaxedPerm::forward(&params, &mut r, &mut im2, batch, None);
+                    r.iter().chain(im2.iter()).map(|&v| (v as f64) * (v as f64) / 2.0).sum::<f64>()
+                };
+                let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                assert!((fd - dyr[i]).abs() < 3e-2 * (1.0 + fd.abs()), "dx[{i}]: fd {fd} vs {}", dyr[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn harden_roundtrip() {
+        let n = 16;
+        let mut params = BpParams::new(n, Field::Real, TwiddleTying::Factor, PermTying::Untied);
+        let choices: PermChoice = vec![
+            [true, false, true],
+            [false, true, false],
+            [true, true, true],
+            [false, false, false],
+        ];
+        params.fix_permutation(&choices);
+        assert_eq!(RelaxedPerm::harden(&params), choices);
+        assert!(RelaxedPerm::min_confidence(&params) > 0.999);
+    }
+
+    #[test]
+    fn invert_table_roundtrip() {
+        let choices = vec![[true, false, false]; 4];
+        let t = hard_perm_table(16, &choices);
+        let inv = invert_table(&t);
+        for i in 0..16 {
+            assert_eq!(inv[t[i]], i);
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Hand-rolled argument parsing (no clap in the vendored crate set):
+//! `butterfly <command> [--key value] [--flag]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed invocation: a subcommand plus `--key value` options and
+/// `--flag` booleans.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut it = argv.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut args = Args { command, ..Default::default() };
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    args.options.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// For examples/benches with no subcommand: every argv token is an
+    /// option/flag.
+    pub fn from_env_no_command() -> Result<Args, String> {
+        Self::parse(std::iter::once("run".to_string()).chain(std::env::args().skip(1)))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} wants an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} wants a number, got '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} wants an integer, got '{v}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn command_options_flags_positional() {
+        // NB: `--flag value`-style ambiguity resolves toward options, so
+        // positionals go before trailing flags.
+        let a = parse("factorize --transform dft --n 64 extra --verbose");
+        assert_eq!(a.command, "factorize");
+        assert_eq!(a.get("transform"), Some("dft"));
+        assert_eq!(a.usize_or("n", 8).unwrap(), 64);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("serve --port=8080 --replicas=3");
+        assert_eq!(a.get("port"), Some("8080"));
+        assert_eq!(a.usize_or("replicas", 1).unwrap(), 3);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("zoo");
+        assert_eq!(a.usize_or("n", 8).unwrap(), 8);
+        let b = parse("zoo --n eight");
+        assert!(b.usize_or("n", 8).is_err());
+    }
+
+    #[test]
+    fn empty_is_help() {
+        let a = Args::parse(std::iter::empty::<String>()).unwrap();
+        assert_eq!(a.command, "help");
+    }
+}

@@ -1,0 +1,118 @@
+//! Recovery jobs and their hyper-parameter space.
+
+use crate::butterfly::params::{Field, PermTying};
+use crate::linalg::dense::CMat;
+use crate::transforms::matrices::target_matrix;
+use crate::transforms::spec::TransformKind;
+use crate::util::rng::Rng;
+
+/// A fully-specified factorization-recovery job: learn a depth-`depth`
+/// BP stack approximating `target` (paper eq. (4)).
+#[derive(Clone)]
+pub struct FactorizeJob {
+    pub kind: TransformKind,
+    pub n: usize,
+    pub depth: usize,
+    pub field: Field,
+    pub target: CMat,
+    /// Early-stop threshold on RMSE (paper: 1e-4 ⇒ machine precision).
+    pub target_rmse: f64,
+    /// Maximum Adam steps any single trial may consume.
+    pub max_steps: usize,
+}
+
+impl FactorizeJob {
+    /// The paper's §4.1 setup for one (transform, N) cell: depth from
+    /// `TransformKind::recommended_depth` (BPBP for convolution, BP
+    /// otherwise), complex entries, RMSE target 1e-4.
+    pub fn paper(kind: TransformKind, n: usize, seed: u64, max_steps: usize) -> Self {
+        let mut rng = Rng::new(seed);
+        FactorizeJob {
+            kind,
+            n,
+            depth: kind.recommended_depth(),
+            field: Field::Complex,
+            target: target_matrix(kind, n, &mut rng),
+            target_rmse: 1e-4,
+            max_steps,
+        }
+    }
+
+    pub fn id(&self) -> String {
+        format!("{}-n{}-d{}", self.kind.name(), self.n, self.depth)
+    }
+}
+
+/// One sampled hyper-parameter configuration (the Hyperband arm).
+/// Appendix C.1: learning rate in [1e-4, 0.5] (log-uniform here),
+/// random init seed, and whether the permutation logits are tied.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrialConfig {
+    pub lr: f32,
+    pub seed: u64,
+    pub perm_tying: PermTying,
+}
+
+impl TrialConfig {
+    pub fn sample(rng: &mut Rng) -> Self {
+        let log_lo = (1e-4f64).ln();
+        let log_hi = (0.5f64).ln();
+        let lr = rng.range(log_lo, log_hi).exp() as f32;
+        TrialConfig {
+            lr,
+            seed: rng.next_u64(),
+            perm_tying: if rng.below(2) == 0 { PermTying::Tied } else { PermTying::Untied },
+        }
+    }
+}
+
+/// Outcome of a completed job.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub job_id: String,
+    pub best_rmse: f64,
+    pub best_config: TrialConfig,
+    pub reached_target: bool,
+    pub total_steps: usize,
+    pub trials_run: usize,
+    /// Learned parameters of the best trial (theta packing).
+    pub best_theta: Vec<f32>,
+    /// Diagnostic: min gate confidence of the best trial's permutations
+    /// (paper: learned gates put ≥ 0.99 on a choice).
+    pub perm_confidence: f32,
+    pub wall_secs: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_job_uses_recommended_depth() {
+        let j = FactorizeJob::paper(TransformKind::Convolution, 16, 1, 100);
+        assert_eq!(j.depth, 2);
+        let j = FactorizeJob::paper(TransformKind::Dft, 16, 1, 100);
+        assert_eq!(j.depth, 1);
+        assert_eq!(j.id(), "dft-n16-d1");
+    }
+
+    #[test]
+    fn config_sampling_spans_lr_range() {
+        let mut rng = Rng::new(3);
+        let mut lo = f32::INFINITY;
+        let mut hi = 0.0f32;
+        let mut tied = 0;
+        for _ in 0..200 {
+            let c = TrialConfig::sample(&mut rng);
+            lo = lo.min(c.lr);
+            hi = hi.max(c.lr);
+            assert!(c.lr >= 1e-4 && c.lr <= 0.5);
+            if c.perm_tying == PermTying::Tied {
+                tied += 1;
+            }
+        }
+        assert!(lo < 1e-3, "lo {lo}");
+        assert!(hi > 0.1, "hi {hi}");
+        assert!(tied > 50 && tied < 150);
+    }
+}

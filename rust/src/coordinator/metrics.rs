@@ -1,0 +1,77 @@
+//! Coordinator-wide metrics: lock-free counters the scheduler updates and
+//! the CLI/benches report.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+#[derive(Default)]
+pub struct Metrics {
+    pub trials_started: AtomicUsize,
+    pub trials_completed: AtomicUsize,
+    pub trials_pruned: AtomicUsize,
+    pub steps_total: AtomicUsize,
+    pub jobs_completed: AtomicUsize,
+    pub targets_reached: AtomicUsize,
+    /// Cumulative optimizer wall time, microseconds.
+    pub train_micros: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            trials_started: self.trials_started.load(Ordering::Relaxed),
+            trials_completed: self.trials_completed.load(Ordering::Relaxed),
+            trials_pruned: self.trials_pruned.load(Ordering::Relaxed),
+            steps_total: self.steps_total.load(Ordering::Relaxed),
+            jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
+            targets_reached: self.targets_reached.load(Ordering::Relaxed),
+            train_micros: self.train_micros.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub trials_started: usize,
+    pub trials_completed: usize,
+    pub trials_pruned: usize,
+    pub steps_total: usize,
+    pub jobs_completed: usize,
+    pub targets_reached: usize,
+    pub train_micros: u64,
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "trials {}/{} (pruned {}), steps {}, jobs {} (hit target {}), train {:.2}s",
+            self.trials_completed,
+            self.trials_started,
+            self.trials_pruned,
+            self.steps_total,
+            self.jobs_completed,
+            self.targets_reached,
+            self.train_micros as f64 / 1e6
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.trials_started.fetch_add(3, Ordering::Relaxed);
+        m.steps_total.fetch_add(100, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.trials_started, 3);
+        assert_eq!(s.steps_total, 100);
+        assert!(s.to_string().contains("steps 100"));
+    }
+}

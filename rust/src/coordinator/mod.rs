@@ -1,0 +1,28 @@
+//! The Layer-3 coordinator: trial orchestration for transform recovery.
+//!
+//! The paper's experimental procedure (§4.1 / Appendix C.1) is: for each
+//! (transform, N), run Adam on the factorization objective under
+//! Hyperband over {learning rate, init seed, logit tying}, early-stopping
+//! when RMSE < 1e-4 ("machine precision"). This module is that procedure
+//! as a system:
+//!
+//! - [`job`] — the unit of work: a fully-specified recovery job and the
+//!   hyper-parameter space sampled over it.
+//! - [`trial`] — one configuration's training state (checkpointable,
+//!   resumable — what successive halving promotes).
+//! - [`scheduler`] — a worker pool (std threads + channels) executing
+//!   Hyperband rungs in parallel across trials.
+//! - [`registry`] — shared trial/job bookkeeping the CLI and tests query.
+//! - [`metrics`] — coordinator-wide counters.
+
+pub mod job;
+pub mod metrics;
+pub mod registry;
+pub mod scheduler;
+pub mod trial;
+
+pub use job::{FactorizeJob, JobResult, TrialConfig};
+pub use metrics::Metrics;
+pub use registry::{Registry, TrialStatus};
+pub use scheduler::{run_job, SchedulerConfig};
+pub use trial::Trial;

@@ -1,0 +1,130 @@
+//! Shared trial bookkeeping: what the CLI's status output and the tests
+//! inspect while (and after) a job runs.
+
+use crate::coordinator::job::TrialConfig;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrialStatus {
+    Running,
+    Pruned,
+    Completed,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrialRecord {
+    pub id: usize,
+    pub config: TrialConfig,
+    pub status: TrialStatus,
+    pub steps: usize,
+    pub rmse: f64,
+    pub rung: usize,
+}
+
+/// Thread-safe trial registry.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<HashMap<usize, TrialRecord>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&self, id: usize, config: TrialConfig) {
+        let mut g = self.inner.lock().unwrap();
+        g.insert(id, TrialRecord { id, config, status: TrialStatus::Running, steps: 0, rmse: f64::INFINITY, rung: 0 });
+    }
+
+    pub fn update(&self, id: usize, steps: usize, rmse: f64, rung: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(r) = g.get_mut(&id) {
+            r.steps = steps;
+            r.rmse = rmse;
+            r.rung = rung;
+        }
+    }
+
+    pub fn set_status(&self, id: usize, status: TrialStatus) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(r) = g.get_mut(&id) {
+            r.status = status;
+        }
+    }
+
+    pub fn get(&self, id: usize) -> Option<TrialRecord> {
+        self.inner.lock().unwrap().get(&id).cloned()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// All records, best RMSE first.
+    pub fn leaderboard(&self) -> Vec<TrialRecord> {
+        let mut v: Vec<TrialRecord> = self.inner.lock().unwrap().values().cloned().collect();
+        v.sort_by(|a, b| a.rmse.partial_cmp(&b.rmse).unwrap());
+        v
+    }
+
+    pub fn count_status(&self, status: TrialStatus) -> usize {
+        self.inner.lock().unwrap().values().filter(|r| r.status == status).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::butterfly::params::PermTying;
+
+    fn cfg() -> TrialConfig {
+        TrialConfig { lr: 0.1, seed: 1, perm_tying: PermTying::Tied }
+    }
+
+    #[test]
+    fn insert_update_leaderboard() {
+        let r = Registry::new();
+        r.insert(0, cfg());
+        r.insert(1, cfg());
+        r.update(0, 10, 0.5, 0);
+        r.update(1, 10, 0.1, 0);
+        let lb = r.leaderboard();
+        assert_eq!(lb[0].id, 1);
+        assert_eq!(lb[1].id, 0);
+        r.set_status(0, TrialStatus::Pruned);
+        assert_eq!(r.count_status(TrialStatus::Pruned), 1);
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn concurrent_updates() {
+        use std::sync::Arc;
+        let r = Arc::new(Registry::new());
+        for i in 0..8 {
+            r.insert(i, cfg());
+        }
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let r = Arc::clone(&r);
+                std::thread::spawn(move || {
+                    for s in 0..100 {
+                        r.update(i, s, 1.0 / (s + 1) as f64, 0);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.len(), 8);
+        for i in 0..8 {
+            assert_eq!(r.get(i).unwrap().steps, 99);
+        }
+    }
+}

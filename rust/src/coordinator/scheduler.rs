@@ -1,0 +1,224 @@
+//! Parallel Hyperband execution: a worker pool (std threads + channels)
+//! advances the surviving trials of each successive-halving rung
+//! concurrently, with early stopping the moment any trial reaches the
+//! paper's machine-precision threshold.
+
+use crate::coordinator::job::{FactorizeJob, JobResult, TrialConfig};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::registry::{Registry, TrialStatus};
+use crate::coordinator::trial::Trial;
+use crate::opt::hyperband::{Hyperband, HyperbandConfig};
+use crate::runtime::engine::pack_stack;
+use crate::util::log;
+use crate::util::rng::Rng;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Worker threads (0 ⇒ available parallelism).
+    pub workers: usize,
+    /// Hyperband max resource R (in resource units).
+    pub max_resource: usize,
+    /// Halving rate η.
+    pub eta: usize,
+    /// Adam steps per resource unit.
+    pub step_quantum: usize,
+    /// RNG seed for configuration sampling.
+    pub seed: u64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { workers: 0, max_resource: 27, eta: 3, step_quantum: 20, seed: 0xB077_E7F1 }
+    }
+}
+
+impl SchedulerConfig {
+    fn effective_workers(&self) -> usize {
+        if self.workers > 0 {
+            self.workers
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        }
+    }
+}
+
+/// A unit of worker work: advance `trial` to `to_steps` cumulative steps.
+struct WorkItem {
+    id: usize,
+    trial: Trial,
+    to_steps: usize,
+}
+
+struct WorkDone {
+    id: usize,
+    trial: Trial,
+    rmse: f64,
+}
+
+/// Run a full Hyperband search for one job on a worker pool; returns the
+/// best trial found.
+pub fn run_job(job: &FactorizeJob, cfg: &SchedulerConfig, metrics: &Metrics, registry: &Registry) -> JobResult {
+    let t0 = Instant::now();
+    let hb = Hyperband::new(HyperbandConfig {
+        max_resource: cfg.max_resource,
+        eta: cfg.eta,
+        target_loss: Some(job.target_rmse * job.target_rmse),
+    });
+    let mut rng = Rng::new(cfg.seed ^ job.n as u64 ^ (job.kind.name().len() as u64) << 32);
+    let stop = AtomicBool::new(false);
+    let mut next_id = 0usize;
+    let mut best: Option<(f64, TrialConfig, Vec<f32>, f32)> = None;
+    let mut total_steps = 0usize;
+    let mut trials_run = 0usize;
+
+    'brackets: for rungs in hb.brackets() {
+        // sample the bracket population
+        let mut pop: Vec<(usize, Trial)> = (0..rungs[0].n)
+            .map(|_| {
+                let config = TrialConfig::sample(&mut rng);
+                let id = next_id;
+                next_id += 1;
+                registry.insert(id, config);
+                metrics.trials_started.fetch_add(1, Ordering::Relaxed);
+                trials_run += 1;
+                (id, Trial::new(job, config))
+            })
+            .collect();
+
+        for (ri, rung) in rungs.iter().enumerate() {
+            let to_steps = (rung.r * cfg.step_quantum).min(job.max_steps);
+            let queue: Mutex<VecDeque<WorkItem>> = Mutex::new(
+                pop.drain(..).map(|(id, trial)| WorkItem { id, trial, to_steps }).collect(),
+            );
+            let n_items = queue.lock().unwrap().len();
+            let (tx, rx) = mpsc::channel::<WorkDone>();
+            let workers = cfg.effective_workers().min(n_items.max(1));
+            std::thread::scope(|scope| {
+                for _ in 0..workers {
+                    let tx = tx.clone();
+                    let queue = &queue;
+                    let stop = &stop;
+                    let job = &job;
+                    scope.spawn(move || loop {
+                        let item = queue.lock().unwrap().pop_front();
+                        let Some(mut item) = item else { break };
+                        let k = item.to_steps.saturating_sub(item.trial.steps_done);
+                        let rmse = if k > 0 && !stop.load(Ordering::Relaxed) {
+                            let r = item.trial.advance(k, job.target_rmse);
+                            if r <= job.target_rmse {
+                                stop.store(true, Ordering::Relaxed);
+                            }
+                            r
+                        } else {
+                            item.trial.last_loss.sqrt()
+                        };
+                        let _ = tx.send(WorkDone { id: item.id, trial: item.trial, rmse });
+                    });
+                }
+                drop(tx);
+            });
+            let mut done: Vec<WorkDone> = rx.into_iter().collect();
+            for d in &done {
+                registry.update(d.id, d.trial.steps_done, d.rmse, ri);
+                total_steps += d.trial.steps_done;
+            }
+            done.sort_by(|a, b| a.rmse.partial_cmp(&b.rmse).unwrap());
+            // track global best
+            if let Some(top) = done.first() {
+                if best.as_ref().map_or(true, |(r, ..)| top.rmse < *r) {
+                    best = Some((
+                        top.rmse,
+                        top.trial.config,
+                        pack_stack(&top.trial.canonical_stack()),
+                        top.trial.perm_confidence(),
+                    ));
+                }
+            }
+            if stop.load(Ordering::Relaxed) {
+                for d in &done {
+                    registry.set_status(d.id, TrialStatus::Completed);
+                }
+                log::info(&format!(
+                    "job {}: target rmse {:.1e} reached after {} steps",
+                    job.id(),
+                    job.target_rmse,
+                    total_steps
+                ));
+                break 'brackets;
+            }
+            // successive halving
+            let keep = if ri + 1 < rungs.len() { rungs[ri + 1].n } else { done.len() };
+            for d in done.iter().skip(keep) {
+                registry.set_status(d.id, TrialStatus::Pruned);
+                metrics.trials_pruned.fetch_add(1, Ordering::Relaxed);
+            }
+            pop = done
+                .into_iter()
+                .take(keep)
+                .map(|d| {
+                    if ri + 1 == rungs.len() {
+                        registry.set_status(d.id, TrialStatus::Completed);
+                        metrics.trials_completed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    (d.id, d.trial)
+                })
+                .collect();
+        }
+    }
+
+    let (best_rmse, best_config, best_theta, perm_confidence) =
+        best.expect("hyperband ran at least one trial");
+    metrics.steps_total.fetch_add(total_steps, Ordering::Relaxed);
+    metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+    let reached = best_rmse <= job.target_rmse;
+    if reached {
+        metrics.targets_reached.fetch_add(1, Ordering::Relaxed);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    metrics.train_micros.fetch_add((wall * 1e6) as u64, Ordering::Relaxed);
+    JobResult {
+        job_id: job.id(),
+        best_rmse,
+        best_config,
+        reached_target: reached,
+        total_steps,
+        trials_run,
+        best_theta,
+        perm_confidence,
+        wall_secs: wall,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transforms::spec::TransformKind;
+
+    #[test]
+    fn recovers_small_hadamard_to_machine_precision() {
+        let job = FactorizeJob::paper(TransformKind::Hadamard, 8, 42, 8000);
+        let cfg = SchedulerConfig { workers: 4, max_resource: 27, eta: 3, step_quantum: 100, seed: 7 };
+        let metrics = Metrics::new();
+        let registry = Registry::new();
+        let res = run_job(&job, &cfg, &metrics, &registry);
+        assert!(res.best_rmse < 2e-3, "best rmse {}", res.best_rmse);
+        assert!(res.trials_run >= 9);
+        assert!(registry.len() >= res.trials_run.min(9));
+        assert!(metrics.snapshot().steps_total > 0);
+    }
+
+    #[test]
+    fn single_worker_matches_contract() {
+        let job = FactorizeJob::paper(TransformKind::Dft, 4, 1, 600);
+        let cfg = SchedulerConfig { workers: 1, max_resource: 9, eta: 3, step_quantum: 20, seed: 3 };
+        let metrics = Metrics::new();
+        let registry = Registry::new();
+        let res = run_job(&job, &cfg, &metrics, &registry);
+        assert!(res.best_rmse.is_finite());
+        assert_eq!(res.best_theta.len(), crate::runtime::engine::theta_len(4, 1));
+    }
+}

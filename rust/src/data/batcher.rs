@@ -1,0 +1,143 @@
+//! Dataset container, splits, and shuffled mini-batch iteration
+//! (paper Appendix C.2: batch size 50, validation = 15% of training).
+
+use crate::util::rng::Rng;
+
+/// In-memory dataset: row-major `[n, dim]` features, byte labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub dim: usize,
+    pub classes: usize,
+    pub x: Vec<f32>,
+    pub y: Vec<u8>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Split off the last `frac` of samples (e.g. validation = 15%).
+    pub fn split(&self, frac: f32) -> Split {
+        let n = self.len();
+        let hold = ((n as f32 * frac) as usize).clamp(1, n.saturating_sub(1));
+        let cut = n - hold;
+        let head = Dataset {
+            dim: self.dim,
+            classes: self.classes,
+            x: self.x[..cut * self.dim].to_vec(),
+            y: self.y[..cut].to_vec(),
+        };
+        let tail = Dataset {
+            dim: self.dim,
+            classes: self.classes,
+            x: self.x[cut * self.dim..].to_vec(),
+            y: self.y[cut..].to_vec(),
+        };
+        Split { train: head, holdout: tail }
+    }
+}
+
+pub struct Split {
+    pub train: Dataset,
+    pub holdout: Dataset,
+}
+
+/// Shuffled epoch iterator producing `[batch, dim]` buffers.
+pub struct BatchIter<'a> {
+    data: &'a Dataset,
+    order: Vec<usize>,
+    pos: usize,
+    pub batch: usize,
+}
+
+impl<'a> BatchIter<'a> {
+    pub fn new(data: &'a Dataset, batch: usize, rng: &mut Rng) -> Self {
+        let order = rng.permutation(data.len());
+        BatchIter { data, order, pos: 0, batch }
+    }
+
+    /// Next mini-batch (last one may be short). Returns
+    /// `(x: [b·dim], y: [b])`.
+    #[allow(clippy::type_complexity)]
+    pub fn next_batch(&mut self) -> Option<(Vec<f32>, Vec<u8>)> {
+        if self.pos >= self.order.len() {
+            return None;
+        }
+        let b = self.batch.min(self.order.len() - self.pos);
+        let dim = self.data.dim;
+        let mut x = vec![0.0f32; b * dim];
+        let mut y = vec![0u8; b];
+        for i in 0..b {
+            let src = self.order[self.pos + i];
+            x[i * dim..(i + 1) * dim].copy_from_slice(self.data.row(src));
+            y[i] = self.data.y[src];
+        }
+        self.pos += b;
+        Some((x, y))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize) -> Dataset {
+        Dataset {
+            dim: 2,
+            classes: 2,
+            x: (0..2 * n).map(|i| i as f32).collect(),
+            y: (0..n).map(|i| (i % 2) as u8).collect(),
+        }
+    }
+
+    #[test]
+    fn split_sizes() {
+        let d = toy(100);
+        let s = d.split(0.15);
+        assert_eq!(s.train.len(), 85);
+        assert_eq!(s.holdout.len(), 15);
+        assert_eq!(s.train.x.len(), 85 * 2);
+    }
+
+    #[test]
+    fn batches_cover_every_sample_once() {
+        let d = toy(23);
+        let mut rng = Rng::new(5);
+        let mut it = BatchIter::new(&d, 5, &mut rng);
+        let mut seen = vec![false; 23];
+        let mut total = 0usize;
+        while let Some((x, y)) = it.next_batch() {
+            assert_eq!(x.len(), y.len() * 2);
+            for i in 0..y.len() {
+                let sample = (x[i * 2] as usize) / 2;
+                assert!(!seen[sample]);
+                seen[sample] = true;
+                total += 1;
+            }
+        }
+        assert_eq!(total, 23);
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn rows_stay_attached_to_labels() {
+        let d = toy(10);
+        let mut rng = Rng::new(9);
+        let mut it = BatchIter::new(&d, 4, &mut rng);
+        while let Some((x, y)) = it.next_batch() {
+            for i in 0..y.len() {
+                let sample = (x[i * 2] as usize) / 2;
+                assert_eq!(y[i], (sample % 2) as u8);
+            }
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! Complex arithmetic over `f32` (no `num-complex` in the vendored set).
+//!
+//! Layout note: bulk data (matrices, butterfly twiddles) is stored in
+//! *planar* real/imag arrays to match the `[2, ...]` real-pair layout used
+//! by the JAX model and the PJRT literals; `Cpx` is the scalar type used
+//! inside inner loops and tests.
+
+use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// A complex scalar with `f32` components.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Cpx {
+    pub re: f32,
+    pub im: f32,
+}
+
+impl Cpx {
+    pub const ZERO: Cpx = Cpx { re: 0.0, im: 0.0 };
+    pub const ONE: Cpx = Cpx { re: 1.0, im: 0.0 };
+    pub const I: Cpx = Cpx { re: 0.0, im: 1.0 };
+
+    #[inline]
+    pub fn new(re: f32, im: f32) -> Self {
+        Cpx { re, im }
+    }
+
+    #[inline]
+    pub fn real(re: f32) -> Self {
+        Cpx { re, im: 0.0 }
+    }
+
+    /// e^{iθ} = cosθ + i sinθ. Computed in f64 for accuracy at large N
+    /// (twiddle factors for N=1024 need precise angles).
+    #[inline]
+    pub fn cis(theta: f64) -> Self {
+        Cpx {
+            re: theta.cos() as f32,
+            im: theta.sin() as f32,
+        }
+    }
+
+    #[inline]
+    pub fn conj(self) -> Self {
+        Cpx {
+            re: self.re,
+            im: -self.im,
+        }
+    }
+
+    #[inline]
+    pub fn abs2(self) -> f32 {
+        self.re * self.re + self.im * self.im
+    }
+
+    #[inline]
+    pub fn abs(self) -> f32 {
+        self.abs2().sqrt()
+    }
+
+    /// Multiplicative inverse.
+    #[inline]
+    pub fn inv(self) -> Self {
+        let d = self.abs2();
+        Cpx {
+            re: self.re / d,
+            im: -self.im / d,
+        }
+    }
+
+    /// Scale by a real factor.
+    #[inline]
+    pub fn scale(self, s: f32) -> Self {
+        Cpx {
+            re: self.re * s,
+            im: self.im * s,
+        }
+    }
+
+    pub fn is_finite(self) -> bool {
+        self.re.is_finite() && self.im.is_finite()
+    }
+}
+
+impl Add for Cpx {
+    type Output = Cpx;
+    #[inline]
+    fn add(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl Sub for Cpx {
+    type Output = Cpx;
+    #[inline]
+    fn sub(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+impl Mul for Cpx {
+    type Output = Cpx;
+    #[inline]
+    fn mul(self, o: Cpx) -> Cpx {
+        Cpx::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+}
+
+impl Div for Cpx {
+    type Output = Cpx;
+    #[inline]
+    fn div(self, o: Cpx) -> Cpx {
+        self * o.inv()
+    }
+}
+
+impl Neg for Cpx {
+    type Output = Cpx;
+    #[inline]
+    fn neg(self) -> Cpx {
+        Cpx::new(-self.re, -self.im)
+    }
+}
+
+impl AddAssign for Cpx {
+    #[inline]
+    fn add_assign(&mut self, o: Cpx) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+
+impl SubAssign for Cpx {
+    #[inline]
+    fn sub_assign(&mut self, o: Cpx) {
+        self.re -= o.re;
+        self.im -= o.im;
+    }
+}
+
+impl MulAssign for Cpx {
+    #[inline]
+    fn mul_assign(&mut self, o: Cpx) {
+        *self = *self * o;
+    }
+}
+
+impl Mul<f32> for Cpx {
+    type Output = Cpx;
+    #[inline]
+    fn mul(self, s: f32) -> Cpx {
+        self.scale(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: Cpx, b: Cpx, tol: f32) -> bool {
+        (a - b).abs() <= tol
+    }
+
+    #[test]
+    fn field_axioms_spotcheck() {
+        let a = Cpx::new(1.5, -2.0);
+        let b = Cpx::new(-0.25, 3.0);
+        let c = Cpx::new(4.0, 0.5);
+        assert!(close(a * (b + c), a * b + a * c, 1e-5));
+        assert!(close((a * b) * c, a * (b * c), 1e-4));
+        assert!(close(a + (-a), Cpx::ZERO, 1e-6));
+        assert!(close(a * a.inv(), Cpx::ONE, 1e-6));
+        assert!(close(a / b * b, a, 1e-5));
+    }
+
+    #[test]
+    fn i_squared_is_minus_one() {
+        assert!(close(Cpx::I * Cpx::I, -Cpx::ONE, 1e-7));
+    }
+
+    #[test]
+    fn cis_unit_circle() {
+        for k in 0..16 {
+            let th = 2.0 * std::f64::consts::PI * k as f64 / 16.0;
+            let z = Cpx::cis(th);
+            assert!((z.abs() - 1.0).abs() < 1e-6);
+        }
+        // 8th roots of unity multiply to expected values.
+        let w = Cpx::cis(2.0 * std::f64::consts::PI / 8.0);
+        let mut acc = Cpx::ONE;
+        for _ in 0..8 {
+            acc *= w;
+        }
+        assert!(close(acc, Cpx::ONE, 1e-5));
+    }
+
+    #[test]
+    fn conj_properties() {
+        let a = Cpx::new(2.0, -3.0);
+        let b = Cpx::new(-1.0, 0.5);
+        assert!(close((a * b).conj(), a.conj() * b.conj(), 1e-5));
+        assert!((a * a.conj()).im.abs() < 1e-6);
+        assert!(((a * a.conj()).re - a.abs2()).abs() < 1e-5);
+    }
+}

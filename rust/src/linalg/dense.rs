@@ -1,0 +1,431 @@
+//! Dense real and complex matrices.
+//!
+//! `Mat` is a row-major real `f32` matrix; `CMat` is a complex matrix in
+//! *planar* layout (separate contiguous `re`/`im` planes), matching the
+//! `[2, rows, cols]` real-pair tensors exchanged with the JAX layer. Both
+//! are deliberately simple — the heavy lifting in this library happens in
+//! the structured (butterfly / FFT) paths, and the dense paths serve as
+//! targets, baselines, and oracles.
+
+use crate::linalg::complex::Cpx;
+
+/// Row-major dense real matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f32>>) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        assert!(rows.iter().all(|x| x.len() == c), "ragged rows");
+        Mat {
+            rows: r,
+            cols: c,
+            data: rows.into_iter().flatten().collect(),
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |i, j| self.at(j, i))
+    }
+
+    /// y = A x (naive GEMV; the baseline the paper benchmarks against).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0f32; self.rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// GEMV into a preallocated buffer.
+    pub fn matvec_into(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut acc = 0.0f32;
+            for (a, b) in row.iter().zip(x.iter()) {
+                acc += a * b;
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// C = A B (blocked ikj GEMM — cache-friendly; used by baselines and
+    /// the dense comparison rows of the speed benchmark).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut c = Mat::zeros(m, n);
+        const BK: usize = 64;
+        for kk in (0..k).step_by(BK) {
+            let kend = (kk + BK).min(k);
+            for i in 0..m {
+                for p in kk..kend {
+                    let a = self.data[i * k + p];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &other.data[p * n..(p + 1) * n];
+                    let crow = &mut c.data[i * n..(i + 1) * n];
+                    for j in 0..n {
+                        crow[j] += a * brow[j];
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .map(|(a, b)| a + b)
+                .collect(),
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .map(|(a, b)| a - b)
+                .collect(),
+        }
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|a| a * s).collect(),
+        }
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Promote to a complex matrix with zero imaginary plane.
+    pub fn to_cmat(&self) -> CMat {
+        CMat {
+            rows: self.rows,
+            cols: self.cols,
+            re: self.data.clone(),
+            im: vec![0.0; self.data.len()],
+        }
+    }
+}
+
+/// Planar complex matrix: `re` and `im` are each row-major `rows×cols`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub re: Vec<f32>,
+    pub im: Vec<f32>,
+}
+
+impl CMat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        CMat {
+            rows,
+            cols,
+            re: vec![0.0; rows * cols],
+            im: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = CMat::zeros(n, n);
+        for i in 0..n {
+            m.re[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> Cpx) -> Self {
+        let mut m = CMat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                let z = f(i, j);
+                m.re[i * cols + j] = z.re;
+                m.im[i * cols + j] = z.im;
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> Cpx {
+        let k = i * self.cols + j;
+        Cpx::new(self.re[k], self.im[k])
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, z: Cpx) {
+        let k = i * self.cols + j;
+        self.re[k] = z.re;
+        self.im[k] = z.im;
+    }
+
+    /// y = A x over complex scalars.
+    pub fn matvec(&self, x: &[Cpx]) -> Vec<Cpx> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![Cpx::ZERO; self.rows];
+        for i in 0..self.rows {
+            let mut acc = Cpx::ZERO;
+            let base = i * self.cols;
+            for j in 0..self.cols {
+                acc += Cpx::new(self.re[base + j], self.im[base + j]) * x[j];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// C = A B over complex scalars.
+    pub fn matmul(&self, other: &CMat) -> CMat {
+        assert_eq!(self.cols, other.rows);
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut c = CMat::zeros(m, n);
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.at(i, p);
+                if a.re == 0.0 && a.im == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    let idx = p * n + j;
+                    let b = Cpx::new(other.re[idx], other.im[idx]);
+                    let prod = a * b;
+                    let cidx = i * n + j;
+                    c.re[cidx] += prod.re;
+                    c.im[cidx] += prod.im;
+                }
+            }
+        }
+        c
+    }
+
+    pub fn sub(&self, other: &CMat) -> CMat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        CMat {
+            rows: self.rows,
+            cols: self.cols,
+            re: self.re.iter().zip(&other.re).map(|(a, b)| a - b).collect(),
+            im: self.im.iter().zip(&other.im).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    pub fn conj_transpose(&self) -> CMat {
+        CMat::from_fn(self.cols, self.rows, |i, j| self.at(j, i).conj())
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.re
+            .iter()
+            .zip(self.im.iter())
+            .map(|(&r, &i)| (r as f64) * (r as f64) + (i as f64) * (i as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Paper's RMSE: (1/N)‖T − M‖_F for N×N matrices — i.e. the
+    /// root-mean-square of entrywise error.
+    pub fn rmse_to(&self, other: &CMat) -> f64 {
+        let d = self.sub(other);
+        d.frobenius_norm() / ((self.rows as f64) * (self.cols as f64)).sqrt()
+    }
+
+    /// Pack into the `[2, rows, cols]` real-pair layout (re plane then im
+    /// plane) used by the AOT artifacts.
+    pub fn to_planar(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(2 * self.re.len());
+        out.extend_from_slice(&self.re);
+        out.extend_from_slice(&self.im);
+        out
+    }
+
+    /// Inverse of [`to_planar`].
+    pub fn from_planar(rows: usize, cols: usize, planar: &[f32]) -> Self {
+        assert_eq!(planar.len(), 2 * rows * cols);
+        CMat {
+            rows,
+            cols,
+            re: planar[..rows * cols].to_vec(),
+            im: planar[rows * cols..].to_vec(),
+        }
+    }
+
+    /// Maximum entrywise modulus of the difference.
+    pub fn max_abs_diff(&self, other: &CMat) -> f32 {
+        let mut best = 0.0f32;
+        for (a, b) in self
+            .re
+            .iter()
+            .zip(self.im.iter())
+            .zip(other.re.iter().zip(other.im.iter()))
+        {
+            let d = Cpx::new(a.0 - b.0, a.1 - b.1).abs();
+            best = best.max(d);
+        }
+        best
+    }
+
+    /// The real part as a `Mat`.
+    pub fn real(&self) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.re.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eye_matvec_is_identity() {
+        let a = Mat::eye(5);
+        let x: Vec<f32> = (0..5).map(|i| i as f32).collect();
+        assert_eq!(a.matvec(&x), x);
+    }
+
+    #[test]
+    fn matmul_matches_manual() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(vec![vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn blocked_gemm_matches_naive_random() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(33);
+        let m = Mat::from_fn(70, 65, |_, _| rng.normal_f32(0.0, 1.0));
+        let n = Mat::from_fn(65, 80, |_, _| rng.normal_f32(0.0, 1.0));
+        let c = m.matmul(&n);
+        // naive check on a few entries
+        for &(i, j) in &[(0usize, 0usize), (69, 79), (35, 40)] {
+            let mut acc = 0.0f64;
+            for p in 0..65 {
+                acc += m.at(i, p) as f64 * n.at(p, j) as f64;
+            }
+            assert!((c.at(i, j) as f64 - acc).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn cmat_matvec_complex() {
+        // [[i, 0],[0, -i]] * [1, i] = [i, 1]  (since -i * i = 1)
+        let a = CMat::from_fn(2, 2, |i, j| {
+            if i == j {
+                if i == 0 {
+                    Cpx::I
+                } else {
+                    -Cpx::I
+                }
+            } else {
+                Cpx::ZERO
+            }
+        });
+        let y = a.matvec(&[Cpx::ONE, Cpx::I]);
+        assert!((y[0] - Cpx::I).abs() < 1e-7);
+        assert!((y[1] - Cpx::ONE).abs() < 1e-7);
+    }
+
+    #[test]
+    fn planar_roundtrip() {
+        let a = CMat::from_fn(3, 4, |i, j| Cpx::new(i as f32, j as f32));
+        let p = a.to_planar();
+        assert_eq!(p.len(), 24);
+        let b = CMat::from_planar(3, 4, &p);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rmse_scale() {
+        let a = CMat::zeros(4, 4);
+        let mut b = CMat::zeros(4, 4);
+        for k in 0..16 {
+            b.re[k] = 2.0;
+        }
+        // RMSE of constant-2 error is 2.
+        assert!((a.rmse_to(&b) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn conj_transpose_involution() {
+        let a = CMat::from_fn(3, 5, |i, j| Cpx::new(i as f32 - 1.0, j as f32 + 0.5));
+        let b = a.conj_transpose().conj_transpose();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn cmat_matmul_identity() {
+        let a = CMat::from_fn(4, 4, |i, j| Cpx::new((i * 4 + j) as f32, -(j as f32)));
+        let c = a.matmul(&CMat::eye(4));
+        assert!(a.max_abs_diff(&c) < 1e-6);
+    }
+}

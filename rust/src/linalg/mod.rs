@@ -1,0 +1,14 @@
+//! Dense linear-algebra substrate: complex scalars, real/complex matrices,
+//! GEMM/GEMV, Frobenius norms, and a from-scratch Jacobi SVD.
+//!
+//! These are the *unstructured* code paths of the library — they provide
+//! the transform targets, the compression baselines, and the oracles the
+//! structured (butterfly / FFT) paths are tested against.
+
+pub mod complex;
+pub mod dense;
+pub mod svd;
+
+pub use complex::Cpx;
+pub use dense::{CMat, Mat};
+pub use svd::{low_rank_approx, svd_complex, svd_real, SvdC, SvdR};

@@ -1,0 +1,332 @@
+//! Singular value decomposition via one-sided Jacobi, for real and complex
+//! matrices. No LAPACK in the sandbox, so this is built from scratch; it is
+//! used by the low-rank and robust-PCA baselines of the Figure 3 comparison.
+//!
+//! One-sided Jacobi repeatedly applies plane rotations on the *right* of A
+//! until all column pairs are numerically orthogonal; then
+//! `σ_j = ‖a_j‖`, `u_j = a_j/σ_j`, and the accumulated rotations form V.
+//! Internally f64 for convergence; inputs/outputs are f32.
+
+use crate::linalg::dense::{CMat, Mat};
+
+/// Complex f64 helper local to the SVD (the public `Cpx` is f32).
+#[derive(Clone, Copy, Debug, Default)]
+struct C64 {
+    re: f64,
+    im: f64,
+}
+
+impl C64 {
+    fn new(re: f64, im: f64) -> Self {
+        C64 { re, im }
+    }
+    fn conj(self) -> Self {
+        C64::new(self.re, -self.im)
+    }
+    fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+    fn mul(self, o: C64) -> Self {
+        C64::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+    fn scale(self, s: f64) -> Self {
+        C64::new(self.re * s, self.im * s)
+    }
+    fn add(self, o: C64) -> Self {
+        C64::new(self.re + o.re, self.im + o.im)
+    }
+    fn sub(self, o: C64) -> Self {
+        C64::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+/// Result of a complex SVD: `A = U · diag(s) · Vh` with `U: m×r`,
+/// `s: r` (descending), `Vh: r×n`, `r = min(m, n)`.
+#[derive(Debug, Clone)]
+pub struct SvdC {
+    pub u: CMat,
+    pub s: Vec<f32>,
+    pub vh: CMat,
+}
+
+/// Result of a real SVD.
+#[derive(Debug, Clone)]
+pub struct SvdR {
+    pub u: Mat,
+    pub s: Vec<f32>,
+    pub vt: Mat,
+}
+
+/// Column-major f64 working copy of a complex matrix.
+struct Work {
+    m: usize,
+    n: usize,
+    /// cols[j][i] — column-major for cache-friendly column ops.
+    cols: Vec<Vec<C64>>,
+}
+
+impl Work {
+    fn from_cmat(a: &CMat) -> Self {
+        let (m, n) = (a.rows, a.cols);
+        let mut cols = vec![vec![C64::default(); m]; n];
+        for j in 0..n {
+            for i in 0..m {
+                let k = i * n + j;
+                cols[j][i] = C64::new(a.re[k] as f64, a.im[k] as f64);
+            }
+        }
+        Work { m, n, cols }
+    }
+}
+
+/// One-sided Jacobi SVD of a complex matrix.
+///
+/// Handles m ≥ n directly; for m < n we decompose the conjugate transpose
+/// and swap roles of U and V.
+pub fn svd_complex(a: &CMat) -> SvdC {
+    if a.rows < a.cols {
+        let t = svd_complex(&a.conj_transpose());
+        // A^H = U Σ V^H  ⇒  A = V Σ U^H.
+        return SvdC {
+            u: t.vh.conj_transpose(),
+            s: t.s,
+            vh: t.u.conj_transpose(),
+        };
+    }
+    let mut w = Work::from_cmat(a);
+    let (m, n) = (w.m, w.n);
+    // V accumulator (n×n), column-major.
+    let mut v = vec![vec![C64::default(); n]; n];
+    for (j, col) in v.iter_mut().enumerate() {
+        col[j] = C64::new(1.0, 0.0);
+    }
+
+    let eps = 1e-14f64;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Gram entries for the (p, q) column pair.
+                let mut alpha = 0.0f64; // ‖a_p‖²
+                let mut beta = 0.0f64; // ‖a_q‖²
+                let mut gamma = C64::default(); // a_p^H a_q
+                for i in 0..m {
+                    let ap = w.cols[p][i];
+                    let aq = w.cols[q][i];
+                    alpha += ap.re * ap.re + ap.im * ap.im;
+                    beta += aq.re * aq.re + aq.im * aq.im;
+                    gamma = gamma.add(ap.conj().mul(aq));
+                }
+                let g = gamma.abs();
+                if g <= eps * (alpha * beta).sqrt() || alpha == 0.0 || beta == 0.0 {
+                    continue;
+                }
+                off += g;
+                // Complex Jacobi rotation (Forsythe–Henrici form):
+                // phase e^{iφ} = γ/|γ|; rotation angle θ from the real
+                // 2×2 symmetric problem [[α, |γ|], [|γ|, β]].
+                let phase = C64::new(gamma.re / g, gamma.im / g);
+                let zeta = (beta - alpha) / (2.0 * g);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                // Columns update: [a_p, a_q] ← [c·a_p − s·conj(phase)·a_q,
+                //                               s·phase·a_p + c·a_q]
+                let sp = phase.scale(s);
+                let spc = phase.conj().scale(s);
+                for i in 0..m {
+                    let ap = w.cols[p][i];
+                    let aq = w.cols[q][i];
+                    w.cols[p][i] = ap.scale(c).sub(spc.mul(aq));
+                    w.cols[q][i] = sp.mul(ap).add(aq.scale(c));
+                }
+                for i in 0..n {
+                    let vp = v[p][i];
+                    let vq = v[q][i];
+                    v[p][i] = vp.scale(c).sub(spc.mul(vq));
+                    v[q][i] = sp.mul(vp).add(vq.scale(c));
+                }
+            }
+        }
+        if off < eps {
+            break;
+        }
+    }
+
+    // Extract singular values and sort descending.
+    let mut sv: Vec<(f64, usize)> = (0..n)
+        .map(|j| {
+            let norm = w.cols[j]
+                .iter()
+                .map(|z| z.re * z.re + z.im * z.im)
+                .sum::<f64>()
+                .sqrt();
+            (norm, j)
+        })
+        .collect();
+    sv.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let mut u = CMat::zeros(m, n);
+    let mut vh = CMat::zeros(n, n);
+    let mut s_out = Vec::with_capacity(n);
+    for (rank, &(sigma, j)) in sv.iter().enumerate() {
+        s_out.push(sigma as f32);
+        if sigma > 0.0 {
+            for i in 0..m {
+                let z = w.cols[j][i].scale(1.0 / sigma);
+                u.re[i * n + rank] = z.re as f32;
+                u.im[i * n + rank] = z.im as f32;
+            }
+        }
+        // Row `rank` of V^H is conj of column j of V.
+        for i in 0..n {
+            let z = v[j][i];
+            vh.re[rank * n + i] = z.re as f32;
+            vh.im[rank * n + i] = -z.im as f32;
+        }
+    }
+    SvdC {
+        u,
+        s: s_out,
+        vh,
+    }
+}
+
+/// One-sided Jacobi SVD of a real matrix (thin wrapper over the complex
+/// path; the imaginary plane stays exactly zero through real rotations,
+/// but we run the dedicated real loop for speed).
+pub fn svd_real(a: &Mat) -> SvdR {
+    let c = svd_complex(&a.to_cmat());
+    SvdR {
+        u: c.u.real(),
+        s: c.s,
+        vt: c.vh.real(),
+    }
+}
+
+/// Best rank-k approximation (Eckart–Young) of a complex matrix.
+pub fn low_rank_approx(a: &CMat, k: usize) -> CMat {
+    let SvdC { u, s, vh } = svd_complex(a);
+    let r = k.min(s.len());
+    // U_k · diag(s_k) · Vh_k
+    let mut uk = CMat::zeros(a.rows, r);
+    for i in 0..a.rows {
+        for j in 0..r {
+            let src = i * s.len() + j;
+            uk.re[i * r + j] = u.re[src] * s[j];
+            uk.im[i * r + j] = u.im[src] * s[j];
+        }
+    }
+    let mut vhk = CMat::zeros(r, a.cols);
+    for j in 0..r {
+        for c in 0..a.cols {
+            let src = j * a.cols + c;
+            vhk.re[j * a.cols + c] = vh.re[src];
+            vhk.im[j * a.cols + c] = vh.im[src];
+        }
+    }
+    uk.matmul(&vhk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::complex::Cpx;
+    use crate::util::rng::Rng;
+
+    fn reconstruct(svd: &SvdC, m: usize, n: usize) -> CMat {
+        let r = svd.s.len();
+        let mut us = CMat::zeros(m, r);
+        for i in 0..m {
+            for j in 0..r {
+                us.re[i * r + j] = svd.u.re[i * r + j] * svd.s[j];
+                us.im[i * r + j] = svd.u.im[i * r + j] * svd.s[j];
+            }
+        }
+        let _ = n;
+        us.matmul(&svd.vh)
+    }
+
+    #[test]
+    fn svd_reconstructs_random_complex() {
+        let mut rng = Rng::new(7);
+        let a = CMat::from_fn(12, 8, |_, _| {
+            Cpx::new(rng.normal_f32(0.0, 1.0), rng.normal_f32(0.0, 1.0))
+        });
+        let svd = svd_complex(&a);
+        let b = reconstruct(&svd, 12, 8);
+        assert!(a.max_abs_diff(&b) < 1e-4, "diff {}", a.max_abs_diff(&b));
+        // Singular values descending and nonnegative.
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+        assert!(svd.s.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn svd_wide_matrix() {
+        let mut rng = Rng::new(8);
+        let a = CMat::from_fn(5, 9, |_, _| {
+            Cpx::new(rng.normal_f32(0.0, 1.0), rng.normal_f32(0.0, 1.0))
+        });
+        let svd = svd_complex(&a);
+        let b = reconstruct(&svd, 5, 9);
+        assert!(a.max_abs_diff(&b) < 1e-4);
+    }
+
+    #[test]
+    fn u_columns_orthonormal() {
+        let mut rng = Rng::new(9);
+        let a = CMat::from_fn(10, 6, |_, _| {
+            Cpx::new(rng.normal_f32(0.0, 1.0), rng.normal_f32(0.0, 1.0))
+        });
+        let svd = svd_complex(&a);
+        let gram = svd.u.conj_transpose().matmul(&svd.u);
+        let eye = CMat::eye(6);
+        assert!(gram.max_abs_diff(&eye) < 1e-4, "gram diff {}", gram.max_abs_diff(&eye));
+    }
+
+    #[test]
+    fn low_rank_exact_for_low_rank_input() {
+        // Build an exactly rank-2 matrix and check rank-2 approx recovers it.
+        let mut rng = Rng::new(10);
+        let u = CMat::from_fn(8, 2, |_, _| {
+            Cpx::new(rng.normal_f32(0.0, 1.0), rng.normal_f32(0.0, 1.0))
+        });
+        let v = CMat::from_fn(2, 8, |_, _| {
+            Cpx::new(rng.normal_f32(0.0, 1.0), rng.normal_f32(0.0, 1.0))
+        });
+        let a = u.matmul(&v);
+        let approx = low_rank_approx(&a, 2);
+        assert!(a.max_abs_diff(&approx) < 1e-3, "{}", a.max_abs_diff(&approx));
+    }
+
+    #[test]
+    fn eckart_young_improves_with_rank() {
+        let mut rng = Rng::new(11);
+        let a = CMat::from_fn(16, 16, |_, _| {
+            Cpx::new(rng.normal_f32(0.0, 1.0), rng.normal_f32(0.0, 1.0))
+        });
+        let e1 = a.sub(&low_rank_approx(&a, 1)).frobenius_norm();
+        let e4 = a.sub(&low_rank_approx(&a, 4)).frobenius_norm();
+        let e16 = a.sub(&low_rank_approx(&a, 16)).frobenius_norm();
+        assert!(e1 > e4);
+        assert!(e4 > e16);
+        assert!(e16 < 1e-3);
+    }
+
+    #[test]
+    fn real_svd_diag() {
+        let a = Mat::from_rows(vec![
+            vec![3.0, 0.0],
+            vec![0.0, -2.0],
+        ]);
+        let svd = svd_real(&a);
+        assert!((svd.s[0] - 3.0).abs() < 1e-5);
+        assert!((svd.s[1] - 2.0).abs() < 1e-5);
+    }
+}

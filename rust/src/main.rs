@@ -1,0 +1,263 @@
+//! `butterfly` — the leader binary: learn fast algorithms for linear
+//! transforms via butterfly factorizations (Dao et al., ICML 2019) and
+//! serve them.
+//!
+//! ```text
+//! butterfly factorize --transform dft --n 64        one recovery job
+//! butterfly zoo --max-n 64                          Figure-3 grid (reduced)
+//! butterfly serve --transform dft --n 256           demo serving stack
+//! butterfly engines                                 runtime diagnostics
+//! butterfly help
+//! ```
+
+use butterfly::butterfly::fast::{FastBp, Workspace};
+use butterfly::cli::Args;
+use butterfly::coordinator::{run_job, FactorizeJob, Metrics, Registry, SchedulerConfig};
+use butterfly::runtime::engine::{auto_engine, unpack_stack};
+use butterfly::serving::{BatcherConfig, Router};
+use butterfly::transforms::spec::TransformKind;
+use butterfly::util::log;
+use butterfly::util::table::{fmt_sci, Table};
+use std::time::Instant;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("verbose") {
+        log::set_level(log::Level::Debug);
+    }
+    let code = match args.command.as_str() {
+        "factorize" => cmd_factorize(&args),
+        "zoo" => cmd_zoo(&args),
+        "serve" => cmd_serve(&args),
+        "engines" => cmd_engines(&args),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            0
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{HELP}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "\
+butterfly — learning fast algorithms for linear transforms (ICML 2019)
+
+USAGE: butterfly <command> [options]
+
+COMMANDS:
+  factorize   learn one transform
+              --transform dft|dct|dst|convolution|hadamard|hartley|legendre|randn
+              --n 64          transform size (power of 2)
+              --max-resource 27   hyperband R
+              --quantum 50        adam steps per resource unit
+              --workers 0         worker threads (0 = all cores)
+              --seed 42
+  zoo         run the Figure-3 recovery grid
+              --max-n 64 --transforms dft,dct,... --max-resource 27
+  serve       learn a transform then serve it with dynamic batching
+              --transform dft --n 256 --requests 1000 --replicas 2
+  engines     report available execution engines / artifacts
+  help        this text
+
+Add --verbose anywhere for debug logs.
+";
+
+fn parse_kind(args: &Args) -> Result<TransformKind, String> {
+    let name = args.get_or("transform", "dft");
+    TransformKind::parse(name).ok_or_else(|| format!("unknown transform '{name}'"))
+}
+
+fn cmd_factorize(args: &Args) -> i32 {
+    let run = || -> Result<(), String> {
+        let kind = parse_kind(args)?;
+        let n = args.usize_or("n", 64)?;
+        let seed = args.u64_or("seed", 42)?;
+        let cfg = SchedulerConfig {
+            workers: args.usize_or("workers", 0)?,
+            max_resource: args.usize_or("max-resource", 27)?,
+            eta: 3,
+            step_quantum: args.usize_or("quantum", 50)?,
+            seed,
+        };
+        let max_steps = args.usize_or("max-steps", 20_000)?;
+        let job = FactorizeJob::paper(kind, n, seed, max_steps);
+        log::info(&format!("factorizing {} (n = {n}, depth = {})", kind.name(), job.depth));
+        let metrics = Metrics::new();
+        let registry = Registry::new();
+        let t0 = Instant::now();
+        let res = run_job(&job, &cfg, &metrics, &registry);
+        println!("job            : {}", res.job_id);
+        println!("best RMSE      : {}", fmt_sci(res.best_rmse));
+        println!("machine prec.  : {}", if res.reached_target { "YES (< 1e-4)" } else { "no" });
+        println!("best lr        : {:.4}", res.best_config.lr);
+        println!("perm tying     : {:?}", res.best_config.perm_tying);
+        println!("perm confidence: {:.4}", res.perm_confidence);
+        println!("trials / steps : {} / {}", res.trials_run, res.total_steps);
+        println!("wall           : {:.1}s", t0.elapsed().as_secs_f64());
+        println!("coordinator    : {}", metrics.snapshot());
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+fn cmd_zoo(args: &Args) -> i32 {
+    let run = || -> Result<(), String> {
+        let max_n = args.usize_or("max-n", 64)?;
+        let kinds: Vec<TransformKind> = match args.get("transforms") {
+            None => butterfly::transforms::spec::ALL_TRANSFORMS.to_vec(),
+            Some(list) => list
+                .split(',')
+                .map(|s| TransformKind::parse(s.trim()).ok_or_else(|| format!("unknown transform '{s}'")))
+                .collect::<Result<_, _>>()?,
+        };
+        let cfg = SchedulerConfig {
+            workers: args.usize_or("workers", 0)?,
+            max_resource: args.usize_or("max-resource", 27)?,
+            eta: 3,
+            step_quantum: args.usize_or("quantum", 50)?,
+            seed: args.u64_or("seed", 42)?,
+        };
+        let mut ns = Vec::new();
+        let mut n = 8;
+        while n <= max_n {
+            ns.push(n);
+            n *= 2;
+        }
+        let mut table = Table::new(
+            &std::iter::once("transform".to_string())
+                .chain(ns.iter().map(|n| format!("N={n}")))
+                .collect::<Vec<_>>()
+                .iter()
+                .map(|s| s.as_str())
+                .collect::<Vec<_>>(),
+        )
+        .with_title("Figure 3 (reduced): best RMSE per (transform, N)");
+        for kind in kinds {
+            let mut row = vec![kind.name().to_string()];
+            for &n in &ns {
+                let job = FactorizeJob::paper(kind, n, cfg.seed, 20_000);
+                let metrics = Metrics::new();
+                let registry = Registry::new();
+                let res = run_job(&job, &cfg, &metrics, &registry);
+                row.push(fmt_sci(res.best_rmse));
+                log::info(&format!("{} n={n}: rmse {}", kind.name(), fmt_sci(res.best_rmse)));
+            }
+            table.add_row(row);
+        }
+        println!("{}", table.render());
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let run = || -> Result<(), String> {
+        let kind = parse_kind(args)?;
+        let n = args.usize_or("n", 256)?;
+        let requests = args.usize_or("requests", 1000)?;
+        let replicas = args.usize_or("replicas", 2)?;
+        // learn (or construct) the transform, then install it
+        let mut rng = butterfly::util::rng::Rng::new(7);
+        let stack = match butterfly::butterfly::closed_form::closed_form_stack(kind, n, &mut rng) {
+            Some((s, _)) => s,
+            None => {
+                let job = FactorizeJob::paper(kind, n, 42, 4000);
+                let cfg = SchedulerConfig::default();
+                let res = run_job(&job, &cfg, &Metrics::new(), &Registry::new());
+                log::info(&format!("learned {} to rmse {}", kind.name(), fmt_sci(res.best_rmse)));
+                unpack_stack(n, job.depth, &res.best_theta)
+            }
+        };
+        let mut router = Router::new();
+        router.install(kind.name(), &stack, replicas, BatcherConfig::default());
+        let t0 = Instant::now();
+        let handle = router.handle(kind.name()).unwrap();
+        let client_threads: Vec<_> = (0..4)
+            .map(|t| {
+                let h = handle.clone();
+                let per = requests / 4;
+                std::thread::spawn(move || {
+                    let mut rng = butterfly::util::rng::Rng::new(100 + t);
+                    for _ in 0..per {
+                        let mut x = vec![0.0f32; n];
+                        rng.fill_normal(&mut x, 0.0, 1.0);
+                        h.call_real(x).expect("call");
+                    }
+                })
+            })
+            .collect();
+        for c in client_threads {
+            c.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = router.shutdown();
+        let s = &stats[kind.name()];
+        println!("served {} requests over {replicas} replicas in {wall:.2}s", s.served);
+        println!("throughput : {:.0} req/s", s.served as f64 / wall);
+        println!("mean batch : {:.2}", s.served as f64 / s.batches.max(1) as f64);
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+fn cmd_engines(args: &Args) -> i32 {
+    let dir = args.get_or("artifacts", "artifacts");
+    println!("artifact dir: {dir}");
+    match butterfly::runtime::artifacts::Manifest::load(dir) {
+        Ok(m) => {
+            println!("manifest: {} entries, complete: {}", m.entries.len(), m.complete());
+            for (name, e) in m.entries.iter() {
+                println!("  {name}  ({} inputs, {} outputs)", e.inputs.len(), e.outputs.len());
+            }
+        }
+        Err(e) => println!("manifest: unavailable ({e})"),
+    }
+    let mut engine = auto_engine(dir);
+    println!("selected engine: {}", engine.name());
+    // smoke: tiny native/xla apply
+    let n = 8;
+    let theta = vec![0.0f32; butterfly::runtime::engine::theta_len(n, 1)];
+    let x = butterfly::runtime::tensor::Tensor::zeros(vec![2, 16, n]);
+    let entry = "bp_apply_n8_d1";
+    match engine.run(entry, &[butterfly::runtime::tensor::Tensor::new(vec![theta.len()], theta), x]) {
+        Ok(_) => println!("smoke {entry}: OK"),
+        Err(e) => println!("smoke {entry}: FAILED ({e})"),
+    }
+    // demo: closed-form DFT through the fast path
+    let stack = butterfly::butterfly::closed_form::dft_stack(64);
+    let fast = FastBp::from_stack(&stack);
+    let mut ws = Workspace::new(64);
+    let mut re = vec![0.0f32; 64];
+    re[1] = 1.0;
+    let mut im = vec![0.0f32; 64];
+    fast.apply_complex(&mut re, &mut im, &mut ws);
+    println!("fast DFT(e1)[1] = {:.4}{:+.4}i (want ~0.125 − 0.0123i)", re[1], im[1]);
+    0
+}

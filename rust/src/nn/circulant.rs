@@ -1,0 +1,207 @@
+//! Circulant (1-D circular convolution) layer — the Table 1 "Circulant"
+//! baseline (Cheng et al. 2015), equivalent to learning a single
+//! convolution kernel `h ∈ ℝ^N`.
+//!
+//! Forward and both backward products are computed through the FFT:
+//! `y = ℜ ifft(fft(h) ∘ fft(x))`, `dx = ℜ ifft(conj(H) ∘ DY)`,
+//! `dh = Σ_b ℜ ifft(conj(X_b) ∘ DY_b)` — all O(N log N) like the
+//! butterfly layer it is compared against.
+
+use crate::nn::layers::Layer;
+use crate::transforms::fast::FftPlan;
+use crate::util::rng::Rng;
+
+pub struct CirculantLayer {
+    pub n: usize,
+    pub h: Vec<f32>,
+    pub bias: Vec<f32>,
+    gh: Vec<f32>,
+    gb: Vec<f32>,
+    vh: Vec<f32>,
+    vb: Vec<f32>,
+    plan: FftPlan,
+    saved_x_freq: Vec<f32>, // [batch][2][n] interleaved planes (re|im)
+    saved_batch: usize,
+}
+
+impl CirculantLayer {
+    pub fn new(n: usize, rng: &mut Rng) -> Self {
+        let mut h = vec![0.0f32; n];
+        rng.fill_normal(&mut h, 0.0, (1.0 / n as f64).sqrt() as f32);
+        CirculantLayer {
+            n,
+            h,
+            bias: vec![0.0; n],
+            gh: vec![0.0; n],
+            gb: vec![0.0; n],
+            vh: vec![0.0; n],
+            vb: vec![0.0; n],
+            plan: FftPlan::new(n),
+            saved_x_freq: Vec::new(),
+            saved_batch: 0,
+        }
+    }
+
+    fn h_freq(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut hr = self.h.clone();
+        let mut hi = vec![0.0f32; self.n];
+        self.plan.forward(&mut hr, &mut hi);
+        (hr, hi)
+    }
+}
+
+impl Layer for CirculantLayer {
+    fn forward(&mut self, x: &[f32], batch: usize, train: bool) -> Vec<f32> {
+        let n = self.n;
+        let (hr, hi) = self.h_freq();
+        let mut y = vec![0.0f32; batch * n];
+        if train {
+            self.saved_x_freq = vec![0.0f32; batch * 2 * n];
+            self.saved_batch = batch;
+        }
+        for bi in 0..batch {
+            let mut xr = x[bi * n..(bi + 1) * n].to_vec();
+            let mut xi = vec![0.0f32; n];
+            self.plan.forward(&mut xr, &mut xi);
+            if train {
+                self.saved_x_freq[bi * 2 * n..bi * 2 * n + n].copy_from_slice(&xr);
+                self.saved_x_freq[bi * 2 * n + n..(bi + 1) * 2 * n].copy_from_slice(&xi);
+            }
+            // Y = H ∘ X
+            let mut yr = vec![0.0f32; n];
+            let mut yi = vec![0.0f32; n];
+            for k in 0..n {
+                yr[k] = hr[k] * xr[k] - hi[k] * xi[k];
+                yi[k] = hr[k] * xi[k] + hi[k] * xr[k];
+            }
+            self.plan.inverse_scaled(&mut yr, &mut yi);
+            for i in 0..n {
+                y[bi * n + i] = yr[i] + self.bias[i];
+            }
+        }
+        y
+    }
+
+    fn backward(&mut self, dy: &[f32], batch: usize) -> Vec<f32> {
+        let n = self.n;
+        let (hr, hi) = self.h_freq();
+        let mut dx = vec![0.0f32; batch * n];
+        for bi in 0..batch {
+            for i in 0..n {
+                self.gb[i] += dy[bi * n + i];
+            }
+            let mut dyr = dy[bi * n..(bi + 1) * n].to_vec();
+            let mut dyi = vec![0.0f32; n];
+            self.plan.forward(&mut dyr, &mut dyi);
+            // dx = ifft(conj(H) ∘ DY)
+            let mut dxr = vec![0.0f32; n];
+            let mut dxi = vec![0.0f32; n];
+            for k in 0..n {
+                dxr[k] = hr[k] * dyr[k] + hi[k] * dyi[k];
+                dxi[k] = hr[k] * dyi[k] - hi[k] * dyr[k];
+            }
+            self.plan.inverse_scaled(&mut dxr, &mut dxi);
+            dx[bi * n..(bi + 1) * n].copy_from_slice(&dxr);
+            // dh += ifft(conj(X) ∘ DY)
+            let xr = &self.saved_x_freq[bi * 2 * n..bi * 2 * n + n];
+            let xi = &self.saved_x_freq[bi * 2 * n + n..(bi + 1) * 2 * n];
+            let mut dhr = vec![0.0f32; n];
+            let mut dhi = vec![0.0f32; n];
+            for k in 0..n {
+                dhr[k] = xr[k] * dyr[k] + xi[k] * dyi[k];
+                dhi[k] = xr[k] * dyi[k] - xi[k] * dyr[k];
+            }
+            self.plan.inverse_scaled(&mut dhr, &mut dhi);
+            for k in 0..n {
+                self.gh[k] += dhr[k];
+            }
+        }
+        dx
+    }
+
+    fn zero_grad(&mut self) {
+        self.gh.iter_mut().for_each(|v| *v = 0.0);
+        self.gb.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    fn sgd_step(&mut self, lr: f32, momentum: f32, weight_decay: f32) {
+        for i in 0..self.n {
+            self.vh[i] = momentum * self.vh[i] + self.gh[i] + weight_decay * self.h[i];
+            self.h[i] -= lr * self.vh[i];
+            self.vb[i] = momentum * self.vb[i] + self.gb[i];
+            self.bias[i] -= lr * self.vb[i];
+        }
+    }
+
+    fn param_count(&self) -> usize {
+        2 * self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transforms::matrices::circulant_matrix;
+
+    #[test]
+    fn forward_matches_dense_circulant() {
+        let n = 16;
+        let mut rng = Rng::new(3);
+        let mut layer = CirculantLayer::new(n, &mut rng);
+        let c = circulant_matrix(&layer.h);
+        let mut x = vec![0.0f32; n];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let want = c.matvec(&x);
+        let got = layer.forward(&x, 1, false);
+        for i in 0..n {
+            assert!((got[i] - want[i]).abs() < 1e-4, "[{i}] {} vs {}", got[i], want[i]);
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let n = 8;
+        let mut rng = Rng::new(5);
+        let mut layer = CirculantLayer::new(n, &mut rng);
+        let batch = 2;
+        let mut x = vec![0.0f32; batch * n];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+
+        let loss = |layer: &mut CirculantLayer, x: &[f32]| -> f64 {
+            let y = layer.forward(x, batch, false);
+            y.iter().map(|&v| (v as f64) * (v as f64) / 2.0).sum()
+        };
+
+        let y = layer.forward(&x, batch, true);
+        layer.zero_grad();
+        let dx = layer.backward(&y, batch);
+
+        let eps = 1e-3f32;
+        for i in 0..n {
+            let o = layer.h[i];
+            layer.h[i] = o + eps;
+            let lp = loss(&mut layer, &x);
+            layer.h[i] = o - eps;
+            let lm = loss(&mut layer, &x);
+            layer.h[i] = o;
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!((fd - layer.gh[i]).abs() < 2e-2 * (1.0 + fd.abs()), "h[{i}]: fd {fd} vs {}", layer.gh[i]);
+        }
+        for i in 0..batch * n {
+            let o = x[i];
+            x[i] = o + eps;
+            let lp = loss(&mut layer, &x);
+            x[i] = o - eps;
+            let lm = loss(&mut layer, &x);
+            x[i] = o;
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!((fd - dx[i]).abs() < 2e-2 * (1.0 + fd.abs()), "x[{i}]: fd {fd} vs {}", dx[i]);
+        }
+    }
+
+    #[test]
+    fn param_count_is_2n() {
+        let mut rng = Rng::new(1);
+        assert_eq!(CirculantLayer::new(1024, &mut rng).param_count(), 2048);
+    }
+}

@@ -1,0 +1,344 @@
+//! Core layers: dense (with bias), low-rank dense, ReLU, and the fused
+//! softmax cross-entropy head. Each layer owns its parameters, gradient
+//! accumulators, and momentum-SGD velocity; `backward` consumes the
+//! activations saved by the preceding `forward`.
+
+use crate::util::rng::Rng;
+
+/// Minimal layer interface for sequential models.
+pub trait Layer {
+    /// Forward over a row-major `[batch, in]` buffer → `[batch, out]`.
+    /// `train` enables activation saving for backward.
+    fn forward(&mut self, x: &[f32], batch: usize, train: bool) -> Vec<f32>;
+    /// Backward: upstream `[batch, out]` gradient → `[batch, in]`
+    /// gradient; parameter gradients accumulate internally.
+    fn backward(&mut self, dy: &[f32], batch: usize) -> Vec<f32>;
+    fn zero_grad(&mut self) {}
+    /// Momentum-SGD update from accumulated gradients.
+    fn sgd_step(&mut self, _lr: f32, _momentum: f32, _weight_decay: f32) {}
+    /// Trainable parameter count (compression accounting).
+    fn param_count(&self) -> usize {
+        0
+    }
+}
+
+/// Fully-connected layer `y = W x + b` (`W: [out, in]` row-major).
+pub struct DenseLayer {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    gw: Vec<f32>,
+    gb: Vec<f32>,
+    vw: Vec<f32>,
+    vb: Vec<f32>,
+    saved_x: Vec<f32>,
+}
+
+impl DenseLayer {
+    /// He/Kaiming-style init (uniform ±√(6/in)).
+    pub fn new(in_dim: usize, out_dim: usize, rng: &mut Rng) -> Self {
+        let bound = (6.0 / in_dim as f64).sqrt() as f32;
+        let mut w = vec![0.0f32; out_dim * in_dim];
+        rng.fill_uniform(&mut w, -bound, bound);
+        DenseLayer {
+            in_dim,
+            out_dim,
+            w,
+            b: vec![0.0; out_dim],
+            gw: vec![0.0; out_dim * in_dim],
+            gb: vec![0.0; out_dim],
+            vw: vec![0.0; out_dim * in_dim],
+            vb: vec![0.0; out_dim],
+            saved_x: Vec::new(),
+        }
+    }
+}
+
+impl Layer for DenseLayer {
+    fn forward(&mut self, x: &[f32], batch: usize, train: bool) -> Vec<f32> {
+        debug_assert_eq!(x.len(), batch * self.in_dim);
+        if train {
+            self.saved_x = x.to_vec();
+        }
+        let mut y = vec![0.0f32; batch * self.out_dim];
+        for bi in 0..batch {
+            let xr = &x[bi * self.in_dim..(bi + 1) * self.in_dim];
+            let yr = &mut y[bi * self.out_dim..(bi + 1) * self.out_dim];
+            for o in 0..self.out_dim {
+                let wr = &self.w[o * self.in_dim..(o + 1) * self.in_dim];
+                let mut acc = self.b[o];
+                for i in 0..self.in_dim {
+                    acc += wr[i] * xr[i];
+                }
+                yr[o] = acc;
+            }
+        }
+        y
+    }
+
+    fn backward(&mut self, dy: &[f32], batch: usize) -> Vec<f32> {
+        let mut dx = vec![0.0f32; batch * self.in_dim];
+        for bi in 0..batch {
+            let xr = &self.saved_x[bi * self.in_dim..(bi + 1) * self.in_dim];
+            let dyr = &dy[bi * self.out_dim..(bi + 1) * self.out_dim];
+            let dxr = &mut dx[bi * self.in_dim..(bi + 1) * self.in_dim];
+            for o in 0..self.out_dim {
+                let g = dyr[o];
+                if g == 0.0 {
+                    continue;
+                }
+                self.gb[o] += g;
+                let wr = &self.w[o * self.in_dim..(o + 1) * self.in_dim];
+                let gwr = &mut self.gw[o * self.in_dim..(o + 1) * self.in_dim];
+                for i in 0..self.in_dim {
+                    gwr[i] += g * xr[i];
+                    dxr[i] += g * wr[i];
+                }
+            }
+        }
+        dx
+    }
+
+    fn zero_grad(&mut self) {
+        self.gw.iter_mut().for_each(|v| *v = 0.0);
+        self.gb.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    fn sgd_step(&mut self, lr: f32, momentum: f32, weight_decay: f32) {
+        for i in 0..self.w.len() {
+            self.vw[i] = momentum * self.vw[i] + self.gw[i] + weight_decay * self.w[i];
+            self.w[i] -= lr * self.vw[i];
+        }
+        for i in 0..self.b.len() {
+            self.vb[i] = momentum * self.vb[i] + self.gb[i];
+            self.b[i] -= lr * self.vb[i];
+        }
+    }
+
+    fn param_count(&self) -> usize {
+        self.w.len() + self.b.len()
+    }
+}
+
+/// Low-rank dense `y = U (V x) + b` — the Table 1 "Low-rank" baseline
+/// (Denil et al.), `U: [out, k]`, `V: [k, in]`.
+pub struct LowRankLayer {
+    v_layer: DenseLayer,
+    u_layer: DenseLayer,
+}
+
+impl LowRankLayer {
+    pub fn new(in_dim: usize, out_dim: usize, rank: usize, rng: &mut Rng) -> Self {
+        LowRankLayer { v_layer: DenseLayer::new(in_dim, rank, rng), u_layer: DenseLayer::new(rank, out_dim, rng) }
+    }
+}
+
+impl Layer for LowRankLayer {
+    fn forward(&mut self, x: &[f32], batch: usize, train: bool) -> Vec<f32> {
+        let h = self.v_layer.forward(x, batch, train);
+        self.u_layer.forward(&h, batch, train)
+    }
+    fn backward(&mut self, dy: &[f32], batch: usize) -> Vec<f32> {
+        let dh = self.u_layer.backward(dy, batch);
+        self.v_layer.backward(&dh, batch)
+    }
+    fn zero_grad(&mut self) {
+        self.u_layer.zero_grad();
+        self.v_layer.zero_grad();
+    }
+    fn sgd_step(&mut self, lr: f32, momentum: f32, weight_decay: f32) {
+        self.u_layer.sgd_step(lr, momentum, weight_decay);
+        self.v_layer.sgd_step(lr, momentum, weight_decay);
+    }
+    fn param_count(&self) -> usize {
+        self.u_layer.param_count() + self.v_layer.param_count()
+    }
+}
+
+/// Elementwise ReLU.
+pub struct ReluLayer {
+    mask: Vec<bool>,
+}
+
+impl ReluLayer {
+    pub fn new() -> Self {
+        ReluLayer { mask: Vec::new() }
+    }
+}
+
+impl Default for ReluLayer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Layer for ReluLayer {
+    fn forward(&mut self, x: &[f32], _batch: usize, train: bool) -> Vec<f32> {
+        if train {
+            self.mask = x.iter().map(|&v| v > 0.0).collect();
+        }
+        x.iter().map(|&v| v.max(0.0)).collect()
+    }
+    fn backward(&mut self, dy: &[f32], _batch: usize) -> Vec<f32> {
+        dy.iter().zip(&self.mask).map(|(&g, &m)| if m { g } else { 0.0 }).collect()
+    }
+}
+
+/// Fused softmax + cross-entropy. Returns `(mean loss, dlogits, correct)`
+/// where `dlogits` is already scaled by `1/batch`.
+pub fn softmax_cross_entropy(logits: &[f32], labels: &[u8], batch: usize, classes: usize) -> (f32, Vec<f32>, usize) {
+    debug_assert_eq!(logits.len(), batch * classes);
+    let mut dl = vec![0.0f32; batch * classes];
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    for bi in 0..batch {
+        let row = &logits[bi * classes..(bi + 1) * classes];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f32;
+        for &v in row {
+            denom += (v - max).exp();
+        }
+        let label = labels[bi] as usize;
+        let mut argmax = 0usize;
+        for (c, &v) in row.iter().enumerate() {
+            let p = (v - max).exp() / denom;
+            dl[bi * classes + c] = (p - if c == label { 1.0 } else { 0.0 }) / batch as f32;
+            if v > row[argmax] {
+                argmax = c;
+            }
+        }
+        if argmax == label {
+            correct += 1;
+        }
+        loss += -((row[label] - max) as f64 - (denom as f64).ln());
+    }
+    ((loss / batch as f64) as f32, dl, correct)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_forward_matches_manual() {
+        let mut rng = Rng::new(1);
+        let mut l = DenseLayer::new(3, 2, &mut rng);
+        l.w = vec![1.0, 0.0, -1.0, 2.0, 1.0, 0.0];
+        l.b = vec![0.5, -0.5];
+        let y = l.forward(&[1.0, 2.0, 3.0], 1, false);
+        assert_eq!(y, vec![1.0 - 3.0 + 0.5, 2.0 + 2.0 - 0.5]);
+    }
+
+    #[test]
+    fn dense_backward_finite_diff() {
+        let mut rng = Rng::new(2);
+        let mut l = DenseLayer::new(4, 3, &mut rng);
+        let x: Vec<f32> = (0..8).map(|i| (i as f32) * 0.3 - 1.0).collect();
+        let loss = |l: &mut DenseLayer, x: &[f32]| -> f64 {
+            let y = l.forward(x, 2, false);
+            y.iter().map(|&v| (v as f64) * (v as f64) / 2.0).sum()
+        };
+        let y = l.forward(&x, 2, true);
+        l.zero_grad();
+        let dx = l.backward(&y, 2);
+        let eps = 1e-3f32;
+        for i in (0..l.w.len()).step_by(3) {
+            let o = l.w[i];
+            l.w[i] = o + eps;
+            let lp = loss(&mut l, &x);
+            l.w[i] = o - eps;
+            let lm = loss(&mut l, &x);
+            l.w[i] = o;
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!((fd - l.gw[i]).abs() < 1e-2 * (1.0 + fd.abs()), "w[{i}] fd {fd} vs {}", l.gw[i]);
+        }
+        for i in 0..x.len() {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let lp = loss(&mut l, &xp);
+            xp[i] -= 2.0 * eps;
+            let lm = loss(&mut l, &xp);
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!((fd - dx[i]).abs() < 1e-2 * (1.0 + fd.abs()), "x[{i}]");
+        }
+    }
+
+    #[test]
+    fn relu_masks_gradient() {
+        let mut r = ReluLayer::new();
+        let y = r.forward(&[-1.0, 2.0, 0.0, 3.0], 1, true);
+        assert_eq!(y, vec![0.0, 2.0, 0.0, 3.0]);
+        let dx = r.backward(&[1.0, 1.0, 1.0, 1.0], 1);
+        assert_eq!(dx, vec![0.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn softmax_ce_gradient_sums_to_zero() {
+        let logits = vec![1.0f32, 2.0, 0.5, -1.0, 0.0, 1.0];
+        let (loss, dl, _) = softmax_cross_entropy(&logits, &[1, 2], 2, 3);
+        assert!(loss > 0.0);
+        for bi in 0..2 {
+            let s: f32 = dl[bi * 3..(bi + 1) * 3].iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_ce_finite_diff() {
+        let logits = vec![0.3f32, -0.2, 0.9, 0.1];
+        let labels = [2u8];
+        let (_, dl, _) = softmax_cross_entropy(&logits, &labels, 1, 4);
+        let eps = 1e-3f32;
+        for i in 0..4 {
+            let mut lp = logits.clone();
+            lp[i] += eps;
+            let (a, _, _) = softmax_cross_entropy(&lp, &labels, 1, 4);
+            lp[i] -= 2.0 * eps;
+            let (b, _, _) = softmax_cross_entropy(&lp, &labels, 1, 4);
+            let fd = (a - b) / (2.0 * eps);
+            assert!((fd - dl[i]).abs() < 1e-3, "logit {i}: fd {fd} vs {}", dl[i]);
+        }
+    }
+
+    #[test]
+    fn softmax_ce_counts_correct() {
+        let logits = vec![2.0f32, 0.0, 0.0, 0.0, 3.0, 0.0];
+        let (_, _, correct) = softmax_cross_entropy(&logits, &[0, 2], 2, 3);
+        assert_eq!(correct, 1);
+    }
+
+    #[test]
+    fn lowrank_param_count() {
+        let mut rng = Rng::new(3);
+        let l = LowRankLayer::new(100, 100, 4, &mut rng);
+        assert_eq!(l.param_count(), 4 * 100 + 4 + 100 * 4 + 100);
+    }
+
+    #[test]
+    fn sgd_training_reduces_loss_on_regression() {
+        let mut rng = Rng::new(4);
+        let mut l = DenseLayer::new(2, 1, &mut rng);
+        // fit y = 3x₀ − 2x₁
+        let mut last = f64::INFINITY;
+        for epoch in 0..3 {
+            let mut total = 0.0f64;
+            for _ in 0..100 {
+                let x = [rng.normal_f32(0.0, 1.0), rng.normal_f32(0.0, 1.0)];
+                let t = 3.0 * x[0] - 2.0 * x[1];
+                let y = l.forward(&x, 1, true);
+                let d = y[0] - t;
+                total += (d * d) as f64;
+                l.zero_grad();
+                l.backward(&[d], 1);
+                l.sgd_step(0.05, 0.9, 0.0);
+            }
+            if epoch == 2 {
+                assert!(total < last * 0.1, "loss {total} vs first-epoch {last}");
+            }
+            if epoch == 0 {
+                last = total;
+            }
+        }
+    }
+}

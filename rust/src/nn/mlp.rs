@@ -1,0 +1,251 @@
+//! The Table 1 benchmark model: one hidden layer of dimension N×N
+//! (replaceable by structured classes) + ReLU + dense softmax head
+//! (paper §4.2 / Appendix C.2: batch 50, momentum 0.9, 15% validation).
+
+use crate::butterfly::params::Field;
+use crate::data::batcher::{BatchIter, Dataset};
+use crate::nn::butterfly_layer::ButterflyLayer;
+use crate::nn::circulant::CirculantLayer;
+use crate::nn::layers::{softmax_cross_entropy, DenseLayer, Layer, LowRankLayer, ReluLayer};
+use crate::util::log;
+use crate::util::rng::Rng;
+
+/// Hidden-layer structured classes compared in Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HiddenKind {
+    /// Unstructured dense N×N (the baseline being compressed).
+    Dense,
+    /// BPBP, real twiddles, fixed bit-reversal permutations.
+    BpbpReal,
+    /// BPBP, complex twiddles, fixed bit-reversal permutations.
+    BpbpComplex,
+    /// Low-rank UVᵀ (Denil et al.), rank chosen for parameter parity
+    /// with BPBP real.
+    LowRank { rank: usize },
+    /// Circulant / 1-D convolution (Cheng et al.).
+    Circulant,
+}
+
+impl HiddenKind {
+    pub fn name(self) -> String {
+        match self {
+            HiddenKind::Dense => "unstructured".into(),
+            HiddenKind::BpbpReal => "bpbp-real".into(),
+            HiddenKind::BpbpComplex => "bpbp-complex".into(),
+            HiddenKind::LowRank { rank } => format!("low-rank-{rank}"),
+            HiddenKind::Circulant => "circulant".into(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<HiddenKind> {
+        match s {
+            "unstructured" | "dense" => Some(HiddenKind::Dense),
+            "bpbp-real" | "bpbp" => Some(HiddenKind::BpbpReal),
+            "bpbp-complex" => Some(HiddenKind::BpbpComplex),
+            "circulant" => Some(HiddenKind::Circulant),
+            _ => s.strip_prefix("low-rank-").and_then(|r| r.parse().ok()).map(|rank| HiddenKind::LowRank { rank }),
+        }
+    }
+}
+
+/// Single-hidden-layer classifier.
+pub struct CompressMlp {
+    pub kind: HiddenKind,
+    pub n: usize,
+    pub classes: usize,
+    hidden: Box<dyn Layer>,
+    relu: ReluLayer,
+    head: DenseLayer,
+}
+
+/// Per-epoch training record.
+#[derive(Debug, Clone)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub train_loss: f32,
+    pub val_acc: f32,
+}
+
+/// Final report for one trained model.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub kind: HiddenKind,
+    pub test_acc: f32,
+    pub best_val_acc: f32,
+    pub hidden_params: usize,
+    pub total_params: usize,
+    pub epochs: Vec<EpochStats>,
+}
+
+impl CompressMlp {
+    pub fn new(kind: HiddenKind, n: usize, classes: usize, rng: &mut Rng) -> Self {
+        let hidden: Box<dyn Layer> = match kind {
+            HiddenKind::Dense => Box::new(DenseLayer::new(n, n, rng)),
+            HiddenKind::BpbpReal => Box::new(ButterflyLayer::new(n, 2, Field::Real, rng)),
+            HiddenKind::BpbpComplex => Box::new(ButterflyLayer::new(n, 2, Field::Complex, rng)),
+            HiddenKind::LowRank { rank } => Box::new(LowRankLayer::new(n, n, rank, rng)),
+            HiddenKind::Circulant => Box::new(CirculantLayer::new(n, rng)),
+        };
+        CompressMlp { kind, n, classes, hidden, relu: ReluLayer::new(), head: DenseLayer::new(n, classes, rng) }
+    }
+
+    pub fn hidden_params(&self) -> usize {
+        self.hidden.param_count()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.hidden.param_count() + self.head.param_count()
+    }
+
+    /// Forward to logits.
+    pub fn logits(&mut self, x: &[f32], batch: usize, train: bool) -> Vec<f32> {
+        let h = self.hidden.forward(x, batch, train);
+        let a = self.relu.forward(&h, batch, train);
+        self.head.forward(&a, batch, train)
+    }
+
+    /// One SGD step on a batch; returns (loss, correct).
+    pub fn train_step(&mut self, x: &[f32], y: &[u8], lr: f32, momentum: f32, wd: f32) -> (f32, usize) {
+        let batch = y.len();
+        let logits = self.logits(x, batch, true);
+        let (loss, dl, correct) = softmax_cross_entropy(&logits, y, batch, self.classes);
+        self.hidden.zero_grad();
+        self.head.zero_grad();
+        let da = self.head.backward(&dl, batch);
+        let dh = self.relu.backward(&da, batch);
+        self.hidden.backward(&dh, batch);
+        self.hidden.sgd_step(lr, momentum, wd);
+        self.head.sgd_step(lr, momentum, wd);
+        (loss, correct)
+    }
+
+    /// Accuracy over a dataset (eval mode).
+    pub fn evaluate(&mut self, data: &Dataset, batch: usize) -> f32 {
+        let mut correct = 0usize;
+        let mut i = 0usize;
+        while i < data.len() {
+            let b = batch.min(data.len() - i);
+            let x = &data.x[i * data.dim..(i + b) * data.dim];
+            let logits = self.logits(x, b, false);
+            let (_, _, c) = softmax_cross_entropy(&logits, &data.y[i..i + b], b, self.classes);
+            correct += c;
+            i += b;
+        }
+        correct as f32 / data.len() as f32
+    }
+}
+
+/// Training configuration (paper Appendix C.2 defaults).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub batch: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub val_frac: f32,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { epochs: 5, batch: 50, lr: 0.05, momentum: 0.9, weight_decay: 0.0, val_frac: 0.15, seed: 42 }
+    }
+}
+
+/// Train one model variant on a dataset and report test accuracy at the
+/// best-validation epoch (the paper's model-selection rule).
+pub fn train_mlp(kind: HiddenKind, data: &Dataset, test: &Dataset, cfg: &TrainConfig) -> TrainReport {
+    let mut rng = Rng::new(cfg.seed);
+    let split = data.split(cfg.val_frac);
+    let mut model = CompressMlp::new(kind, data.dim, data.classes, &mut rng);
+    let mut best_val = 0.0f32;
+    let mut best_test = 0.0f32;
+    let mut epochs = Vec::new();
+    for epoch in 0..cfg.epochs {
+        let mut iter = BatchIter::new(&split.train, cfg.batch, &mut rng);
+        let mut total_loss = 0.0f64;
+        let mut batches = 0usize;
+        while let Some((x, y)) = iter.next_batch() {
+            let (loss, _) = model.train_step(&x, &y, cfg.lr, cfg.momentum, cfg.weight_decay);
+            total_loss += loss as f64;
+            batches += 1;
+        }
+        let val_acc = model.evaluate(&split.holdout, cfg.batch);
+        if val_acc >= best_val {
+            best_val = val_acc;
+            best_test = model.evaluate(test, cfg.batch);
+        }
+        let train_loss = (total_loss / batches.max(1) as f64) as f32;
+        log::debug(&format!(
+            "[{}] epoch {epoch}: train loss {train_loss:.4}, val acc {val_acc:.3}",
+            kind.name()
+        ));
+        epochs.push(EpochStats { epoch, train_loss, val_acc });
+    }
+    TrainReport {
+        kind,
+        test_acc: best_test,
+        best_val_acc: best_val,
+        hidden_params: model.hidden_params(),
+        total_params: model.total_params(),
+        epochs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, DatasetKind};
+
+    #[test]
+    fn param_counts_ordering() {
+        let mut rng = Rng::new(1);
+        let n = 64;
+        let dense = CompressMlp::new(HiddenKind::Dense, n, 10, &mut rng).hidden_params();
+        let bpbp_r = CompressMlp::new(HiddenKind::BpbpReal, n, 10, &mut rng).hidden_params();
+        let bpbp_c = CompressMlp::new(HiddenKind::BpbpComplex, n, 10, &mut rng).hidden_params();
+        let circ = CompressMlp::new(HiddenKind::Circulant, n, 10, &mut rng).hidden_params();
+        assert!(bpbp_r < dense / 4, "bpbp {bpbp_r} vs dense {dense}");
+        assert!(bpbp_r < bpbp_c && bpbp_c < dense);
+        assert!(circ < bpbp_r);
+    }
+
+    #[test]
+    fn training_learns_small_problem() {
+        // 64-dim downsampled synthetic task: every structured variant
+        // should beat chance (10%) clearly within a few epochs.
+        let full = generate(DatasetKind::CifarGray, 300, 5);
+        // downsample 1024 → 64 dims by block-averaging (keeps signal)
+        let dim = 64;
+        let pool = full.dim / dim;
+        let shrink = |d: &Dataset| Dataset {
+            dim,
+            classes: d.classes,
+            x: (0..d.len())
+                .flat_map(|i| {
+                    (0..dim).map(move |j| {
+                        let s: f32 = (0..pool).map(|k| d.x[i * d.dim + j * pool + k]).sum();
+                        s / pool as f32
+                    })
+                })
+                .collect(),
+            y: d.y.clone(),
+        };
+        let train = shrink(&full);
+        let test = shrink(&generate(DatasetKind::CifarGray, 100, 6));
+        for kind in [HiddenKind::BpbpReal, HiddenKind::Dense] {
+            let cfg = TrainConfig { epochs: 8, batch: 25, lr: 0.02, ..Default::default() };
+            let rep = train_mlp(kind, &train, &test, &cfg);
+            assert!(rep.test_acc > 0.25, "{}: acc {}", kind.name(), rep.test_acc);
+        }
+    }
+
+    #[test]
+    fn hidden_kind_parse_roundtrip() {
+        for k in [HiddenKind::Dense, HiddenKind::BpbpReal, HiddenKind::BpbpComplex, HiddenKind::Circulant,
+                  HiddenKind::LowRank { rank: 7 }] {
+            assert_eq!(HiddenKind::parse(&k.name()), Some(k));
+        }
+    }
+}

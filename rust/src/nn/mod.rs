@@ -1,0 +1,29 @@
+//! A compact explicit-backprop neural-network substrate.
+//!
+//! This is the apparatus for the paper's §4.2 experiments: the single
+//! hidden layer benchmark (Table 1) and the ResNet + BPBP insertion
+//! (Table 2). It is deliberately minimal — concrete layer structs with
+//! hand-derived backward passes and per-layer momentum-SGD state, not a
+//! general autograd — because the only models required are an MLP and a
+//! small residual CNN, and keeping backward passes explicit makes them
+//! testable against finite differences.
+//!
+//! - [`layers`] — Dense, LowRank, ReLU, bias, softmax cross-entropy.
+//! - [`butterfly_layer`] — the BP/BPBP structured hidden layer (fixed
+//!   bit-reversal permutation, real or complex), the paper's
+//!   contribution as a drop-in module.
+//! - [`circulant`] — FFT-backed circulant (1-D convolution) layer, a
+//!   Table 1 baseline.
+//! - [`mlp`] — the Table 1 single-hidden-layer model.
+//! - [`convnet`] — the Table 2 compact residual CNN.
+
+pub mod butterfly_layer;
+pub mod circulant;
+pub mod convnet;
+pub mod layers;
+pub mod mlp;
+
+pub use butterfly_layer::ButterflyLayer;
+pub use circulant::CirculantLayer;
+pub use layers::{softmax_cross_entropy, DenseLayer, Layer, LowRankLayer, ReluLayer};
+pub use mlp::{CompressMlp, HiddenKind, TrainReport};

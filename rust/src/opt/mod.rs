@@ -1,0 +1,22 @@
+//! Optimizers and hyper-parameter search.
+//!
+//! - [`adam`] — the Adam optimizer used for factorization recovery
+//!   (paper §4.1: "We use the Adam optimizer to minimize the Frobenius
+//!   norm of the error").
+//! - [`sgd`] — momentum SGD used for the NN compression experiments
+//!   (paper Appendix C.2: fixed momentum 0.9).
+//! - [`schedule`] — learning-rate schedules (constant, step decay as in
+//!   Appendix C.3, cosine).
+//! - [`hyperband`] — the Hyperband bandit HPO procedure (Li et al. 2017)
+//!   the paper uses to tune learning rate / initialization seed / logit
+//!   tying (Appendix C.1).
+
+pub mod adam;
+pub mod hyperband;
+pub mod schedule;
+pub mod sgd;
+
+pub use adam::Adam;
+pub use hyperband::{Hyperband, HyperbandConfig, Rung, TrialRunner};
+pub use schedule::LrSchedule;
+pub use sgd::MomentumSgd;

@@ -1,0 +1,61 @@
+//! Learning-rate schedules.
+
+/// A learning-rate schedule evaluated at a step/epoch index.
+#[derive(Debug, Clone)]
+pub enum LrSchedule {
+    Constant { lr: f32 },
+    /// Multiply by `gamma` every `every` steps (paper Appendix C.3:
+    /// "decayed by {0.1, 0.2} every 25 epochs").
+    StepDecay { lr: f32, gamma: f32, every: usize },
+    /// Cosine annealing from `lr` to `min_lr` over `total` steps.
+    Cosine { lr: f32, min_lr: f32, total: usize },
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: usize) -> f32 {
+        match *self {
+            LrSchedule::Constant { lr } => lr,
+            LrSchedule::StepDecay { lr, gamma, every } => lr * gamma.powi((step / every.max(1)) as i32),
+            LrSchedule::Cosine { lr, min_lr, total } => {
+                if total == 0 {
+                    return lr;
+                }
+                let t = (step.min(total)) as f32 / total as f32;
+                min_lr + 0.5 * (lr - min_lr) * (1.0 + (std::f32::consts::PI * t).cos())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::Constant { lr: 0.1 };
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(1000), 0.1);
+    }
+
+    #[test]
+    fn step_decay_quarters() {
+        let s = LrSchedule::StepDecay { lr: 0.1, gamma: 0.1, every: 25 };
+        assert!((s.at(0) - 0.1).abs() < 1e-8);
+        assert!((s.at(24) - 0.1).abs() < 1e-8);
+        assert!((s.at(25) - 0.01).abs() < 1e-8);
+        assert!((s.at(50) - 0.001).abs() < 1e-8);
+    }
+
+    #[test]
+    fn cosine_endpoints() {
+        let s = LrSchedule::Cosine { lr: 1.0, min_lr: 0.0, total: 100 };
+        assert!((s.at(0) - 1.0).abs() < 1e-6);
+        assert!(s.at(100) < 1e-6);
+        assert!((s.at(50) - 0.5).abs() < 1e-6);
+        // monotone decreasing
+        for t in 1..=100 {
+            assert!(s.at(t) <= s.at(t - 1) + 1e-7);
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! Artifact manifest: `artifacts/manifest.json`, written by
+//! `python/compile/aot.py`, read here. Each entry names one AOT-lowered
+//! XLA computation (HLO text) plus its input/output tensor specs so the
+//! Rust side can marshal literals without re-deriving shapes.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Shape/dtype of one argument or result.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered entrypoint.
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub path: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Free-form metadata (n, depth, batch, …) for diagnostics.
+    pub meta: BTreeMap<String, f64>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+fn parse_specs(j: &Json, what: &str) -> Result<Vec<TensorSpec>> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("{what} is not an array"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for item in arr {
+        let name = item
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("{what} item missing name"))?
+            .to_string();
+        let shape = item
+            .get("shape")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("{what} item {name} missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim in {name}")))
+            .collect::<Result<Vec<_>>>()?;
+        out.push(TensorSpec { name, shape });
+    }
+    Ok(out)
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let j = json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let version = j.get("version").and_then(|v| v.as_usize()).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut entries = BTreeMap::new();
+        for e in j.get("entries").and_then(|v| v.as_arr()).ok_or_else(|| anyhow!("missing entries"))? {
+            let name = e
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("entry missing name"))?
+                .to_string();
+            let path = e
+                .get("path")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("entry {name} missing path"))?
+                .to_string();
+            let inputs = parse_specs(e.get("inputs").unwrap_or(&Json::Null), "inputs")?;
+            let outputs = parse_specs(e.get("outputs").unwrap_or(&Json::Null), "outputs")?;
+            let mut meta = BTreeMap::new();
+            if let Some(obj) = e.get("meta").and_then(|v| v.as_obj()) {
+                for (k, v) in obj {
+                    if let Some(x) = v.as_f64() {
+                        meta.insert(k.clone(), x);
+                    }
+                }
+            }
+            entries.insert(name.clone(), EntrySpec { name, path, inputs, outputs, meta });
+        }
+        Ok(Manifest { dir, entries })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("no entry '{name}' in manifest ({} available)", self.entries.len()))
+    }
+
+    pub fn hlo_path(&self, entry: &EntrySpec) -> PathBuf {
+        self.dir.join(&entry.path)
+    }
+
+    /// Whether all referenced HLO files exist on disk.
+    pub fn complete(&self) -> bool {
+        self.entries.values().all(|e| self.hlo_path(e).exists())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "entries": [
+        {"name": "bp_apply_n8_d1",
+         "path": "bp_apply_n8_d1.hlo.txt",
+         "inputs": [{"name": "theta", "shape": [131]},
+                    {"name": "x", "shape": [2, 4, 8]}],
+         "outputs": [{"name": "y", "shape": [2, 4, 8]}],
+         "meta": {"n": 8, "depth": 1}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let e = m.entry("bp_apply_n8_d1").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[1].shape, vec![2, 4, 8]);
+        assert_eq!(e.inputs[1].numel(), 64);
+        assert_eq!(e.meta["n"], 8.0);
+        assert_eq!(m.hlo_path(e), PathBuf::from("/tmp/a/bp_apply_n8_d1.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 3");
+        assert!(Manifest::parse(&bad, PathBuf::from(".")).is_err());
+    }
+
+    #[test]
+    fn missing_entry_is_error() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        assert!(m.entry("nope").is_err());
+    }
+}

@@ -1,0 +1,417 @@
+//! Execution engines.
+//!
+//! [`XlaEngine`] loads manifest-described HLO text, compiles it on the
+//! PJRT CPU client once (cached), and executes it from the Rust hot path.
+//! [`NativeEngine`] implements the same core entry contracts with the
+//! pure-Rust butterfly kernels — used by tests, by trials too small to
+//! amortize PJRT dispatch, and as a fallback when `artifacts/` has not
+//! been built.
+//!
+//! ## Entry contracts (shared with `python/compile/model.py`)
+//!
+//! Parameters of a depth-`D` BP stack over `N = 2^L` travel as one flat
+//! `theta` vector: the concatenation over modules of
+//! `[level-0 twiddle [2, 1, 2, 2] | level-1 [2, 2, 2, 2] | … |
+//!   level-(L−1) [2, 2^{L−1}, 2, 2] | logits [L, 3]]`
+//! (factor-tied twiddles, planar re/im, untied logits) — exactly the
+//! in-memory layout of [`BpParams::data`].
+//!
+//! - `bp_apply_n{N}_d{D}`: `(theta [P], x [2, B, N]) → (y [2, B, N])`
+//! - `factorize_step_n{N}_d{D}`:
+//!   `(theta [P], m [P], v [P], t [1], lr [1], target [2, N, N])
+//!    → (theta' [P], m' [P], v' [P], loss [1])`
+//!   — one fused Adam step on the eq. (4) objective.
+
+use crate::butterfly::module::{BpModule, BpStack, FactorizeLoss};
+use crate::butterfly::params::{BpParams, Field, PermTying, TwiddleTying};
+use crate::linalg::dense::CMat;
+use crate::runtime::artifacts::Manifest;
+use crate::runtime::tensor::Tensor;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+/// Abstract executor: the coordinator and serving layers only see this.
+///
+/// Not `Send` — the PJRT client wraps thread-affine FFI state. Worker
+/// threads construct their own engine via an engine *factory*
+/// (`Fn() -> Box<dyn Engine>` that is `Send + Sync`); see
+/// `coordinator::scheduler`.
+pub trait Engine {
+    fn name(&self) -> &'static str;
+    fn has_entry(&self, entry: &str) -> bool;
+    /// Execute one entry. Input order must match the entry contract.
+    fn run(&mut self, entry: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+}
+
+// ---------------------------------------------------------------------
+// theta packing
+// ---------------------------------------------------------------------
+
+/// Canonical parameter settings for AOT-shared stacks.
+pub fn aot_params(n: usize) -> BpParams {
+    BpParams::new(n, Field::Complex, TwiddleTying::Factor, PermTying::Untied)
+}
+
+/// Flat length of one module's parameters.
+pub fn module_len(n: usize) -> usize {
+    aot_params(n).data.len()
+}
+
+/// Flat length of a depth-`d` stack.
+pub fn theta_len(n: usize, depth: usize) -> usize {
+    depth * module_len(n)
+}
+
+/// Pack a stack into a flat theta (must use the AOT parameter settings).
+pub fn pack_stack(stack: &BpStack) -> Vec<f32> {
+    let mut out = Vec::with_capacity(theta_len(stack.n(), stack.depth()));
+    for m in &stack.modules {
+        assert_eq!(m.params.twiddle_tying, TwiddleTying::Factor, "AOT contract is factor-tied");
+        out.extend_from_slice(&m.params.data);
+    }
+    out
+}
+
+/// Unpack a flat theta into a fresh stack.
+pub fn unpack_stack(n: usize, depth: usize, theta: &[f32]) -> BpStack {
+    let ml = module_len(n);
+    assert_eq!(theta.len(), depth * ml, "theta length mismatch");
+    let modules = (0..depth)
+        .map(|i| {
+            let mut p = aot_params(n);
+            p.data.copy_from_slice(&theta[i * ml..(i + 1) * ml]);
+            BpModule::new(p)
+        })
+        .collect();
+    BpStack::new(modules)
+}
+
+/// Parse `..._n{N}_d{D}` suffixes.
+fn parse_nd(entry: &str) -> Option<(usize, usize)> {
+    let n_pos = entry.rfind("_n")?;
+    let rest = &entry[n_pos + 2..];
+    let d_pos = rest.find("_d")?;
+    let n = rest[..d_pos].parse().ok()?;
+    let d = rest[d_pos + 2..].parse().ok()?;
+    Some((n, d))
+}
+
+// ---------------------------------------------------------------------
+// native engine
+// ---------------------------------------------------------------------
+
+/// Pure-Rust implementation of the core entry contracts.
+#[derive(Default)]
+pub struct NativeEngine;
+
+impl NativeEngine {
+    pub fn new() -> Self {
+        NativeEngine
+    }
+
+    fn bp_apply(&self, n: usize, depth: usize, theta: &Tensor, x: &Tensor) -> Result<Vec<Tensor>> {
+        if x.rank() != 3 || x.shape[0] != 2 || x.shape[2] != n {
+            bail!("bp_apply: x must be [2, B, {n}], got {:?}", x.shape);
+        }
+        let batch = x.shape[1];
+        let stack = unpack_stack(n, depth, &theta.data);
+        let mut re = x.data[..batch * n].to_vec();
+        let mut im = x.data[batch * n..].to_vec();
+        stack.apply_batch(&mut re, &mut im, batch);
+        let mut out = re;
+        out.extend_from_slice(&im);
+        Ok(vec![Tensor::new(x.shape.clone(), out)])
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn factorize_step(
+        &self,
+        n: usize,
+        depth: usize,
+        theta: &Tensor,
+        m: &Tensor,
+        v: &Tensor,
+        t: &Tensor,
+        lr: &Tensor,
+        target: &Tensor,
+    ) -> Result<Vec<Tensor>> {
+        if target.shape != vec![2, n, n] {
+            bail!("factorize_step: target must be [2, {n}, {n}], got {:?}", target.shape);
+        }
+        let stack = unpack_stack(n, depth, &theta.data);
+        let tgt = CMat {
+            rows: n,
+            cols: n,
+            re: target.data[..n * n].to_vec(),
+            im: target.data[n * n..].to_vec(),
+        };
+        let loss_fn = FactorizeLoss::new(tgt);
+        let mut grad = stack.zero_grad();
+        let loss = loss_fn.loss_and_grad(&stack, &mut grad);
+        // flatten the gradient in theta order
+        let flat_grad: Vec<f32> = grad.into_iter().flatten().collect();
+        // Adam update (must match python/compile/model.py adam_update)
+        let step = t.data[0] + 1.0;
+        let lr = lr.data[0];
+        let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+        let bc1 = 1.0 - b1.powf(step);
+        let bc2 = 1.0 - b2.powf(step);
+        let mut theta2 = theta.data.clone();
+        let mut m2 = m.data.clone();
+        let mut v2 = v.data.clone();
+        for i in 0..theta2.len() {
+            let g = flat_grad[i];
+            m2[i] = b1 * m2[i] + (1.0 - b1) * g;
+            v2[i] = b2 * v2[i] + (1.0 - b2) * g * g;
+            let mhat = m2[i] / bc1;
+            let vhat = v2[i] / bc2;
+            theta2[i] -= lr * mhat / (vhat.sqrt() + eps);
+        }
+        Ok(vec![
+            Tensor::new(theta.shape.clone(), theta2),
+            Tensor::new(m.shape.clone(), m2),
+            Tensor::new(v.shape.clone(), v2),
+            Tensor::new(vec![1], vec![loss as f32]),
+        ])
+    }
+}
+
+impl Engine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn has_entry(&self, entry: &str) -> bool {
+        (entry.starts_with("bp_apply") || entry.starts_with("factorize_step")) && parse_nd(entry).is_some()
+    }
+
+    fn run(&mut self, entry: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let (n, d) = parse_nd(entry).ok_or_else(|| anyhow!("native: cannot parse entry '{entry}'"))?;
+        if entry.starts_with("bp_apply") {
+            if inputs.len() != 2 {
+                bail!("bp_apply takes (theta, x)");
+            }
+            self.bp_apply(n, d, &inputs[0], &inputs[1])
+        } else if entry.starts_with("factorize_step") {
+            if inputs.len() != 6 {
+                bail!("factorize_step takes (theta, m, v, t, lr, target)");
+            }
+            self.factorize_step(n, d, &inputs[0], &inputs[1], &inputs[2], &inputs[3], &inputs[4], &inputs[5])
+        } else {
+            bail!("native engine has no entry '{entry}'")
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// XLA / PJRT engine
+// ---------------------------------------------------------------------
+
+/// PJRT CPU executor over AOT artifacts. Compiles each entry once and
+/// caches the loaded executable.
+pub struct XlaEngine {
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaEngine {
+    /// Open the artifact directory (must contain `manifest.json`).
+    pub fn open(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(XlaEngine { manifest, client, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn executable(&mut self, entry: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(entry) {
+            let spec = self.manifest.entry(entry)?;
+            let path = self.manifest.hlo_path(spec);
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling {entry}: {e:?}"))?;
+            crate::util::log::debug(&format!("xla: compiled entry '{entry}' from {}", path.display()));
+            self.cache.insert(entry.to_string(), exe);
+        }
+        Ok(&self.cache[entry])
+    }
+}
+
+impl Engine for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn has_entry(&self, entry: &str) -> bool {
+        self.manifest.entries.contains_key(entry)
+    }
+
+    fn run(&mut self, entry: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self.manifest.entry(entry)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!("entry '{entry}' wants {} inputs, got {}", spec.inputs.len(), inputs.len());
+        }
+        for (t, s) in inputs.iter().zip(&spec.inputs) {
+            if t.shape != s.shape {
+                bail!("entry '{entry}' input '{}': want {:?}, got {:?}", s.name, s.shape, t.shape);
+            }
+        }
+        let exe = self.executable(entry)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let lit = xla::Literal::vec1(&t.data);
+                lit.reshape(&t.dims_i64()).map_err(|e| anyhow!("reshape {:?}: {e:?}", t.shape))
+            })
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals).map_err(|e| anyhow!("execute {entry}: {e:?}"))?;
+        let lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("fetch {entry}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: the result is a tuple.
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple {entry}: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!("entry '{entry}' returned {} outputs, manifest says {}", parts.len(), spec.outputs.len());
+        }
+        parts
+            .into_iter()
+            .zip(&spec.outputs)
+            .map(|(l, s)| {
+                let data = l.to_vec::<f32>().map_err(|e| anyhow!("output '{}': {e:?}", s.name))?;
+                if data.len() != s.numel() {
+                    bail!("output '{}' has {} elements, want {}", s.name, data.len(), s.numel());
+                }
+                Ok(Tensor::new(s.shape.clone(), data))
+            })
+            .collect()
+    }
+}
+
+/// Pick the best available engine: XLA when the artifacts are complete,
+/// native otherwise (logged).
+pub fn auto_engine(artifact_dir: impl AsRef<std::path::Path>) -> Box<dyn Engine> {
+    let dir = artifact_dir.as_ref();
+    match Manifest::load(dir) {
+        Ok(m) if m.complete() => match XlaEngine::open(dir) {
+            Ok(e) => return Box::new(e),
+            Err(err) => crate::util::log::warn(&format!("xla engine unavailable ({err}); using native")),
+        },
+        Ok(_) => crate::util::log::warn("artifacts incomplete; using native engine"),
+        Err(err) => crate::util::log::info(&format!("no artifacts ({err}); using native engine")),
+    }
+    Box::new(NativeEngine::new())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::butterfly::params::InitScheme;
+    use crate::util::rng::Rng;
+
+    fn random_theta(n: usize, depth: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::new();
+        for _ in 0..depth {
+            let p = BpParams::init(
+                n,
+                Field::Complex,
+                TwiddleTying::Factor,
+                PermTying::Untied,
+                InitScheme::OrthogonalLike,
+                &mut rng,
+            );
+            out.extend_from_slice(&p.data);
+        }
+        out
+    }
+
+    #[test]
+    fn parse_entry_names() {
+        assert_eq!(parse_nd("bp_apply_n64_d2"), Some((64, 2)));
+        assert_eq!(parse_nd("factorize_step_n1024_d1"), Some((1024, 1)));
+        assert_eq!(parse_nd("bp_apply"), None);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let theta = random_theta(16, 2, 3);
+        let stack = unpack_stack(16, 2, &theta);
+        assert_eq!(pack_stack(&stack), theta);
+    }
+
+    #[test]
+    fn native_bp_apply_matches_stack() {
+        let n = 16;
+        let theta = random_theta(n, 1, 5);
+        let stack = unpack_stack(n, 1, &theta);
+        let mut rng = Rng::new(6);
+        let batch = 3;
+        let mut xr = vec![0.0f32; batch * n];
+        let mut xi = vec![0.0f32; batch * n];
+        rng.fill_normal(&mut xr, 0.0, 1.0);
+        rng.fill_normal(&mut xi, 0.0, 1.0);
+        let mut x = xr.clone();
+        x.extend_from_slice(&xi);
+        let mut eng = NativeEngine::new();
+        let out = eng
+            .run(
+                "bp_apply_n16_d1",
+                &[Tensor::new(vec![theta.len()], theta.clone()), Tensor::new(vec![2, batch, n], x)],
+            )
+            .unwrap();
+        let (mut wr, mut wi) = (xr, xi);
+        stack.apply_batch(&mut wr, &mut wi, batch);
+        assert_eq!(out[0].data[..batch * n], wr[..]);
+        assert_eq!(out[0].data[batch * n..], wi[..]);
+    }
+
+    #[test]
+    fn native_factorize_step_reduces_loss() {
+        let n = 8;
+        let depth = 1;
+        let theta0 = random_theta(n, depth, 9);
+        let p = theta0.len();
+        let target = crate::transforms::matrices::dft_matrix(n);
+        let mut tdata = target.re.clone();
+        tdata.extend_from_slice(&target.im);
+        let ttensor = Tensor::new(vec![2, n, n], tdata);
+        let mut eng = NativeEngine::new();
+        let mut theta = Tensor::new(vec![p], theta0);
+        let mut m = Tensor::zeros(vec![p]);
+        let mut v = Tensor::zeros(vec![p]);
+        let mut losses = Vec::new();
+        for step in 0..80 {
+            let out = eng
+                .run(
+                    "factorize_step_n8_d1",
+                    &[
+                        theta.clone(),
+                        m.clone(),
+                        v.clone(),
+                        Tensor::new(vec![1], vec![step as f32]),
+                        Tensor::new(vec![1], vec![0.05]),
+                        ttensor.clone(),
+                    ],
+                )
+                .unwrap();
+            losses.push(out[3].data[0]);
+            theta = out[0].clone();
+            m = out[1].clone();
+            v = out[2].clone();
+        }
+        assert!(losses[79] < losses[0] * 0.3, "loss {:?} → {:?}", losses[0], losses[79]);
+    }
+
+    #[test]
+    fn engine_rejects_bad_shapes() {
+        let mut eng = NativeEngine::new();
+        let r = eng.run(
+            "bp_apply_n16_d1",
+            &[Tensor::zeros(vec![theta_len(16, 1)]), Tensor::zeros(vec![2, 3, 8])],
+        );
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,26 @@
+//! The PJRT runtime: Rust loads and executes the AOT artifacts produced
+//! once by `python/compile/aot.py` (Layer 2 JAX graphs containing the
+//! Layer 1 Pallas kernels), so Python is never on the request path.
+//!
+//! - [`tensor`] — a minimal host tensor (shape + f32 buffer) used as the
+//!   engine currency.
+//! - [`artifacts`] — the manifest (`artifacts/manifest.json`) describing
+//!   every lowered entrypoint: HLO-text path, input/output specs.
+//! - [`engine`] — the [`Engine`](engine::Engine) abstraction with two
+//!   implementations:
+//!   [`XlaEngine`](engine::XlaEngine) (PJRT CPU, compile-once-and-cache)
+//!   and [`NativeEngine`](engine::NativeEngine) (pure-Rust butterfly
+//!   kernels implementing the same entry names, used by tests and as a
+//!   no-artifacts fallback).
+//!
+//! Interchange is HLO **text** — jax ≥ 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifacts;
+pub mod engine;
+pub mod tensor;
+
+pub use artifacts::{EntrySpec, Manifest, TensorSpec};
+pub use engine::{Engine, NativeEngine, XlaEngine};
+pub use tensor::Tensor;

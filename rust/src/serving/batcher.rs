@@ -1,0 +1,179 @@
+//! Dynamic batching queue: requests accumulate until either `max_batch`
+//! are pending or `max_wait` has elapsed since the oldest arrival —
+//! the standard latency/throughput knob of serving systems. The queue is
+//! bounded; producers get backpressure errors instead of unbounded
+//! memory growth.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub queue_cap: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2), queue_cap: 1024 }
+    }
+}
+
+struct Inner<T> {
+    queue: VecDeque<(T, Instant)>,
+    closed: bool,
+}
+
+/// MPSC bounded queue with batch-window draining.
+pub struct BatchQueue<T> {
+    cfg: BatcherConfig,
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError {
+    Full,
+    Closed,
+}
+
+impl<T> BatchQueue<T> {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        BatchQueue { cfg, inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }), cv: Condvar::new() }
+    }
+
+    /// Enqueue one request (producer side). Errors instead of blocking
+    /// when the queue is at capacity — the caller decides whether to
+    /// retry, shed, or propagate.
+    pub fn push(&self, item: T) -> Result<(), PushError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed);
+        }
+        if g.queue.len() >= self.cfg.queue_cap {
+            return Err(PushError::Full);
+        }
+        g.queue.push_back((item, Instant::now()));
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Drain the next batch (consumer side). Blocks until at least one
+    /// request is available, then waits up to `max_wait` (measured from
+    /// the oldest request) for the batch to fill. Returns `None` once
+    /// closed and empty.
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.queue.is_empty() {
+                break;
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+        // batch window: wait for more arrivals up to max_wait from the
+        // oldest pending request
+        let oldest = g.queue.front().unwrap().1;
+        while g.queue.len() < self.cfg.max_batch && !g.closed {
+            let elapsed = oldest.elapsed();
+            if elapsed >= self.cfg.max_wait {
+                break;
+            }
+            let (g2, timeout) = self.cv.wait_timeout(g, self.cfg.max_wait - elapsed).unwrap();
+            g = g2;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let take = g.queue.len().min(self.cfg.max_batch);
+        Some(g.queue.drain(..take).map(|(t, _)| t).collect())
+    }
+
+    /// Close the queue: producers fail, the consumer drains what's left.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn batches_up_to_max_batch() {
+        let q = BatchQueue::new(BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(5), queue_cap: 100 });
+        for i in 0..10 {
+            q.push(i).unwrap();
+        }
+        let b1 = q.next_batch().unwrap();
+        assert_eq!(b1, vec![0, 1, 2, 3]);
+        let b2 = q.next_batch().unwrap();
+        assert_eq!(b2.len(), 4);
+    }
+
+    #[test]
+    fn backpressure_on_full() {
+        let q = BatchQueue::new(BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1), queue_cap: 2 });
+        q.push(0).unwrap();
+        q.push(1).unwrap();
+        assert_eq!(q.push(2), Err(PushError::Full));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = BatchQueue::new(BatcherConfig::default());
+        q.push(7).unwrap();
+        q.close();
+        assert_eq!(q.push(8), Err(PushError::Closed));
+        assert_eq!(q.next_batch().unwrap(), vec![7]);
+        assert!(q.next_batch().is_none());
+    }
+
+    #[test]
+    fn consumer_wakes_on_late_producer() {
+        let q = Arc::new(BatchQueue::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 16,
+        }));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.next_batch());
+        std::thread::sleep(Duration::from_millis(20));
+        q.push(42).unwrap();
+        let got = h.join().unwrap().unwrap();
+        assert_eq!(got, vec![42]);
+    }
+
+    #[test]
+    fn window_waits_for_stragglers() {
+        let q = Arc::new(BatchQueue::new(BatcherConfig {
+            max_batch: 2,
+            max_wait: Duration::from_millis(50),
+            queue_cap: 16,
+        }));
+        q.push(1).unwrap();
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            q2.push(2).unwrap();
+        });
+        let b = q.next_batch().unwrap();
+        h.join().unwrap();
+        assert_eq!(b.len(), 2, "straggler should join the batch within the window");
+    }
+}

@@ -1,0 +1,23 @@
+//! Batched transform serving (vLLM-router-style): once a transform is
+//! learned, its hardened O(N log N) fast multiply is installed behind a
+//! router + dynamic batcher — bounded queue, batch window, backpressure.
+//!
+//! This is the systems face of the paper's Figure 4 (right) claim: the
+//! learned BP multiply is fast enough to serve as a drop-in replacement
+//! for hand-tuned transform kernels, and (unlike FFTW/cuFFT) one serving
+//! stack covers *every* transform the parameterization can learn.
+//!
+//! - [`batcher`] — the dynamic batching queue (max batch / max wait).
+//! - [`service`] — a worker thread owning one [`FastBp`] and draining
+//!   the queue.
+//! - [`router`] — name → service dispatch with round-robin replicas.
+//!
+//! [`FastBp`]: crate::butterfly::fast::FastBp
+
+pub mod batcher;
+pub mod router;
+pub mod service;
+
+pub use batcher::{BatchQueue, BatcherConfig};
+pub use router::Router;
+pub use service::{ServiceHandle, ServiceStats, TransformService};

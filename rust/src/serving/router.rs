@@ -1,0 +1,139 @@
+//! Request router: transform name → service, with round-robin across
+//! replicas (multiple worker threads serving the same learned transform,
+//! useful because one `FastBp` worker is single-threaded by design).
+
+use crate::butterfly::module::BpStack;
+use crate::serving::batcher::BatcherConfig;
+use crate::serving::service::{ServiceHandle, ServiceStats, TransformService};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+struct Route {
+    services: Vec<TransformService>,
+    next: AtomicUsize,
+}
+
+/// Name-based dispatch over installed transform services.
+#[derive(Default)]
+pub struct Router {
+    routes: HashMap<String, Route>,
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install a learned stack under `name` with `replicas` workers.
+    pub fn install(&mut self, name: &str, stack: &BpStack, replicas: usize, cfg: BatcherConfig) {
+        let services = (0..replicas.max(1))
+            .map(|i| TransformService::spawn(format!("{name}#{i}"), stack, cfg.clone()))
+            .collect();
+        self.routes.insert(name.to_string(), Route { services, next: AtomicUsize::new(0) });
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.routes.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Round-robin handle for `name`.
+    pub fn handle(&self, name: &str) -> Option<ServiceHandle> {
+        let route = self.routes.get(name)?;
+        let i = route.next.fetch_add(1, Ordering::Relaxed) % route.services.len();
+        Some(route.services[i].handle())
+    }
+
+    /// Synchronous routed call.
+    pub fn call(&self, name: &str, re: Vec<f32>, im: Vec<f32>) -> Result<(Vec<f32>, Vec<f32>), String> {
+        self.handle(name).ok_or_else(|| format!("no route '{name}'"))?.call(re, im)
+    }
+
+    /// Aggregate stats per route.
+    pub fn stats(&self) -> HashMap<String, ServiceStats> {
+        self.routes
+            .iter()
+            .map(|(name, route)| {
+                let mut agg = ServiceStats {
+                    served: 0,
+                    batches: 0,
+                    rejected: 0,
+                    mean_latency_micros: 0.0,
+                    mean_batch: 0.0,
+                };
+                let mut lat_sum = 0.0f64;
+                for s in &route.services {
+                    let st = s.handle().stats();
+                    lat_sum += st.mean_latency_micros * st.served as f64;
+                    agg.served += st.served;
+                    agg.batches += st.batches;
+                    agg.rejected += st.rejected;
+                }
+                if agg.served > 0 {
+                    agg.mean_latency_micros = lat_sum / agg.served as f64;
+                }
+                if agg.batches > 0 {
+                    agg.mean_batch = agg.served as f64 / agg.batches as f64;
+                }
+                (name.clone(), agg)
+            })
+            .collect()
+    }
+
+    /// Shut everything down, returning final per-route stats.
+    pub fn shutdown(self) -> HashMap<String, ServiceStats> {
+        let mut out = HashMap::new();
+        for (name, route) in self.routes {
+            let mut agg: Option<ServiceStats> = None;
+            for s in route.services {
+                let st = s.shutdown();
+                agg = Some(match agg {
+                    None => st,
+                    Some(mut a) => {
+                        a.served += st.served;
+                        a.batches += st.batches;
+                        a.rejected += st.rejected;
+                        a
+                    }
+                });
+            }
+            out.insert(name, agg.unwrap());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::butterfly::closed_form::{dft_stack, hadamard_stack};
+
+    #[test]
+    fn routes_by_name() {
+        let mut r = Router::new();
+        r.install("dft", &dft_stack(8), 1, BatcherConfig::default());
+        r.install("hadamard", &hadamard_stack(8), 2, BatcherConfig::default());
+        assert_eq!(r.names().len(), 2);
+        let x = vec![1.0f32, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let (re, _) = r.call("hadamard", x.clone(), vec![0.0; 8]).unwrap();
+        // Hadamard of e₀ = first column = 1/√8 everywhere
+        for v in &re {
+            assert!((v - 1.0 / (8.0f32).sqrt()).abs() < 1e-5);
+        }
+        assert!(r.call("nope", x, vec![0.0; 8]).is_err());
+        let stats = r.shutdown();
+        assert_eq!(stats["hadamard"].served, 1);
+        assert_eq!(stats["dft"].served, 0);
+    }
+
+    #[test]
+    fn round_robin_spreads_over_replicas() {
+        let mut r = Router::new();
+        r.install("dft", &dft_stack(8), 3, BatcherConfig::default());
+        for _ in 0..9 {
+            r.call("dft", vec![1.0; 8], vec![0.0; 8]).unwrap();
+        }
+        let stats = r.shutdown();
+        // all served, across replicas
+        assert_eq!(stats["dft"].served, 9);
+    }
+}

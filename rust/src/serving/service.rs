@@ -1,0 +1,255 @@
+//! One transform service: a worker thread owning a hardened [`FastBp`]
+//! multiply, draining a [`BatchQueue`] and answering per-request
+//! channels. Requests are single vectors; the worker coalesces them into
+//! batches and applies the fast multiply batch-wise.
+
+use crate::butterfly::fast::{FastBp, Workspace};
+use crate::butterfly::module::BpStack;
+use crate::serving::batcher::{BatchQueue, BatcherConfig, PushError};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+/// A request: planar complex input + reply channel.
+struct Request {
+    re: Vec<f32>,
+    im: Vec<f32>,
+    reply: mpsc::Sender<(Vec<f32>, Vec<f32>)>,
+    enqueued: Instant,
+}
+
+#[derive(Default)]
+struct Stats {
+    served: AtomicUsize,
+    batches: AtomicUsize,
+    rejected: AtomicUsize,
+    /// Sum of request latencies, microseconds.
+    latency_micros: AtomicU64,
+}
+
+/// Snapshot of a service's counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceStats {
+    pub served: usize,
+    pub batches: usize,
+    pub rejected: usize,
+    pub mean_latency_micros: f64,
+    pub mean_batch: f64,
+}
+
+/// Client handle (cheap to clone, thread-safe).
+#[derive(Clone)]
+pub struct ServiceHandle {
+    n: usize,
+    queue: Arc<BatchQueue<Request>>,
+    stats: Arc<Stats>,
+}
+
+impl ServiceHandle {
+    /// Synchronous call: submit one vector, wait for the transform.
+    pub fn call(&self, re: Vec<f32>, im: Vec<f32>) -> Result<(Vec<f32>, Vec<f32>), String> {
+        assert_eq!(re.len(), self.n);
+        assert_eq!(im.len(), self.n);
+        let (tx, rx) = mpsc::channel();
+        let req = Request { re, im, reply: tx, enqueued: Instant::now() };
+        match self.queue.push(req) {
+            Ok(()) => {}
+            Err(PushError::Full) => {
+                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err("queue full (backpressure)".into());
+            }
+            Err(PushError::Closed) => return Err("service shut down".into()),
+        }
+        rx.recv().map_err(|_| "service dropped request".to_string())
+    }
+
+    /// Real-input convenience (imaginary plane zero).
+    pub fn call_real(&self, x: Vec<f32>) -> Result<Vec<f32>, String> {
+        let n = x.len();
+        self.call(x, vec![0.0; n]).map(|(re, _)| re)
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        let served = self.stats.served.load(Ordering::Relaxed);
+        let batches = self.stats.batches.load(Ordering::Relaxed);
+        ServiceStats {
+            served,
+            batches,
+            rejected: self.stats.rejected.load(Ordering::Relaxed),
+            mean_latency_micros: if served > 0 {
+                self.stats.latency_micros.load(Ordering::Relaxed) as f64 / served as f64
+            } else {
+                0.0
+            },
+            mean_batch: if batches > 0 { served as f64 / batches as f64 } else { 0.0 },
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+/// A running transform service (worker thread + queue).
+pub struct TransformService {
+    pub name: String,
+    handle: ServiceHandle,
+    queue: Arc<BatchQueue<Request>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TransformService {
+    /// Install a trained stack as a service. The stack is hardened into
+    /// its fast-multiply form on the worker thread.
+    pub fn spawn(name: impl Into<String>, stack: &BpStack, cfg: BatcherConfig) -> Self {
+        let name = name.into();
+        let n = stack.n();
+        let fast = FastBp::from_stack(stack);
+        let queue = Arc::new(BatchQueue::new(cfg));
+        let stats = Arc::new(Stats::default());
+        let handle = ServiceHandle { n, queue: Arc::clone(&queue), stats: Arc::clone(&stats) };
+        let wq = Arc::clone(&queue);
+        let wstats = Arc::clone(&stats);
+        let worker = std::thread::Builder::new()
+            .name(format!("serve-{name}"))
+            .spawn(move || {
+                let mut ws = Workspace::new(n);
+                while let Some(batch) = wq.next_batch() {
+                    let b = batch.len();
+                    // coalesce into one planar [b, n] buffer
+                    let mut re = vec![0.0f32; b * n];
+                    let mut im = vec![0.0f32; b * n];
+                    for (i, r) in batch.iter().enumerate() {
+                        re[i * n..(i + 1) * n].copy_from_slice(&r.re);
+                        im[i * n..(i + 1) * n].copy_from_slice(&r.im);
+                    }
+                    fast.apply_complex_batch(&mut re, &mut im, b, &mut ws);
+                    let now = Instant::now();
+                    for (i, r) in batch.into_iter().enumerate() {
+                        let lat = now.duration_since(r.enqueued).as_micros() as u64;
+                        wstats.latency_micros.fetch_add(lat, Ordering::Relaxed);
+                        let _ = r.reply.send((
+                            re[i * n..(i + 1) * n].to_vec(),
+                            im[i * n..(i + 1) * n].to_vec(),
+                        ));
+                    }
+                    wstats.served.fetch_add(b, Ordering::Relaxed);
+                    wstats.batches.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+            .expect("spawn service worker");
+        TransformService { name, handle, queue, worker: Some(worker) }
+    }
+
+    pub fn handle(&self) -> ServiceHandle {
+        self.handle.clone()
+    }
+
+    pub fn n(&self) -> usize {
+        self.handle.n
+    }
+
+    /// Graceful shutdown: drain, then join the worker.
+    pub fn shutdown(mut self) -> ServiceStats {
+        self.queue.close();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        self.handle.stats()
+    }
+}
+
+impl Drop for TransformService {
+    fn drop(&mut self) {
+        self.queue.close();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::butterfly::closed_form::dft_stack;
+    use crate::transforms::fast::fft_unitary;
+    use crate::linalg::complex::Cpx;
+    use crate::util::rng::Rng;
+    use std::time::Duration;
+
+    #[test]
+    fn serves_the_fft() {
+        let n = 64;
+        let svc = TransformService::spawn("dft", &dft_stack(n), BatcherConfig::default());
+        let h = svc.handle();
+        let mut rng = Rng::new(1);
+        let mut re = vec![0.0f32; n];
+        rng.fill_normal(&mut re, 0.0, 1.0);
+        let x: Vec<Cpx> = re.iter().map(|&r| Cpx::real(r)).collect();
+        let want = fft_unitary(&x);
+        let (gr, gi) = h.call(re, vec![0.0; n]).unwrap();
+        for i in 0..n {
+            assert!((gr[i] - want[i].re).abs() < 1e-4);
+            assert!((gi[i] - want[i].im).abs() < 1e-4);
+        }
+        let stats = svc.shutdown();
+        assert_eq!(stats.served, 1);
+    }
+
+    #[test]
+    fn concurrent_clients_get_their_own_answers() {
+        let n = 16;
+        let svc = TransformService::spawn(
+            "dft",
+            &dft_stack(n),
+            BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(3), queue_cap: 256 },
+        );
+        let handles: Vec<_> = (0..16)
+            .map(|k| {
+                let h = svc.handle();
+                std::thread::spawn(move || {
+                    // delta at position k: DFT column k
+                    let mut x = vec![0.0f32; n];
+                    x[k] = 1.0;
+                    let (re, im) = h.call(x, vec![0.0; n]).unwrap();
+                    (k, re, im)
+                })
+            })
+            .collect();
+        let f = crate::transforms::matrices::dft_matrix(n);
+        for h in handles {
+            let (k, re, im) = h.join().unwrap();
+            for i in 0..n {
+                assert!((re[i] - f.re[i * n + k]).abs() < 1e-4, "col {k} re[{i}]");
+                assert!((im[i] - f.im[i * n + k]).abs() < 1e-4, "col {k} im[{i}]");
+            }
+        }
+        let stats = svc.shutdown();
+        assert_eq!(stats.served, 16);
+        assert!(stats.batches <= 16);
+    }
+
+    #[test]
+    fn stats_track_batching() {
+        let n = 8;
+        let svc = TransformService::spawn(
+            "dft",
+            &dft_stack(n),
+            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(10), queue_cap: 64 },
+        );
+        let h = svc.handle();
+        let clients: Vec<_> = (0..8)
+            .map(|_| {
+                let h = h.clone();
+                std::thread::spawn(move || h.call_real(vec![1.0; 8]).unwrap())
+            })
+            .collect();
+        for c in clients {
+            c.join().unwrap();
+        }
+        let stats = svc.shutdown();
+        assert_eq!(stats.served, 8);
+        assert!(stats.mean_batch >= 1.0);
+        assert!(stats.mean_latency_micros > 0.0);
+    }
+}

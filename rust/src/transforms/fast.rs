@@ -1,0 +1,477 @@
+//! Hand-written fast algorithms for the target transforms — the
+//! "specialized implementations" column of the paper's Figure 4, rebuilt on
+//! this substrate so the speed comparison is apples-to-apples
+//! (single-threaded, same compiler, same memory system).
+//!
+//! Contents: a planned radix-2 Cooley–Tukey FFT (SoA layout, precomputed
+//! twiddles + bit-reversal table), inverse FFT, fast Walsh–Hadamard, fast
+//! DCT-II / DST-II (Makhoul's FFT reductions), fast Hartley, and circulant
+//! (convolution) application. Every routine matches the corresponding
+//! dense matrix in [`crate::transforms::matrices`] to fp32 precision and
+//! doubles as the test oracle for the closed-form butterfly constructions.
+
+use crate::linalg::Cpx;
+
+/// Bit-reversal permutation table for n = 2^log2n: `table[i]` = reverse of
+/// the log2n-bit representation of i (the permutation P^(N) of the FFT,
+/// e.g. [0..8) → [0, 4, 2, 6, 1, 5, 3, 7]).
+pub fn bit_reversal_table(n: usize) -> Vec<usize> {
+    assert!(n.is_power_of_two());
+    let bits = n.trailing_zeros();
+    if bits == 0 {
+        return vec![0];
+    }
+    (0..n)
+        .map(|i| (i.reverse_bits() >> (usize::BITS - bits)) & (n - 1))
+        .collect()
+}
+
+/// A reusable FFT plan: twiddle tables and the bit-reversal index table.
+/// Construction is O(N); each execution is O(N log N) with no allocation
+/// beyond the caller's buffers.
+pub struct FftPlan {
+    pub n: usize,
+    bitrev: Vec<usize>,
+    /// Per-stage twiddles, stage s has 2^s entries (half block size m/2
+    /// where m = 2^{s+1}); stored as separate re/im for SoA inner loops.
+    tw_re: Vec<Vec<f32>>,
+    tw_im: Vec<Vec<f32>>,
+}
+
+impl FftPlan {
+    pub fn new(n: usize) -> Self {
+        assert!(n.is_power_of_two() && n >= 1);
+        let stages = n.trailing_zeros() as usize;
+        let mut tw_re = Vec::with_capacity(stages);
+        let mut tw_im = Vec::with_capacity(stages);
+        for s in 0..stages {
+            let half = 1usize << s; // m/2 for block size m = 2^{s+1}
+            let m = half * 2;
+            let mut re = Vec::with_capacity(half);
+            let mut im = Vec::with_capacity(half);
+            for j in 0..half {
+                // Forward DFT kernel uses ω^{-j} = e^{-2πi j/m}.
+                let theta = -2.0 * std::f64::consts::PI * (j as f64) / (m as f64);
+                re.push(theta.cos() as f32);
+                im.push(theta.sin() as f32);
+            }
+            tw_re.push(re);
+            tw_im.push(im);
+        }
+        FftPlan {
+            n,
+            bitrev: bit_reversal_table(n),
+            tw_re,
+            tw_im,
+        }
+    }
+
+    /// In-place forward DFT (NOT unitary-scaled: X_k = Σ x_n ω^{-kn}).
+    /// `re`/`im` are the signal's planes, length n.
+    pub fn forward(&self, re: &mut [f32], im: &mut [f32]) {
+        self.run(re, im, false);
+    }
+
+    /// In-place unnormalized inverse DFT (x_n = Σ X_k ω^{+kn}; divide by N
+    /// yourself or use [`FftPlan::inverse_scaled`]).
+    pub fn inverse(&self, re: &mut [f32], im: &mut [f32]) {
+        self.run(re, im, true);
+    }
+
+    /// Inverse DFT including the 1/N scaling.
+    pub fn inverse_scaled(&self, re: &mut [f32], im: &mut [f32]) {
+        self.run(re, im, true);
+        let inv = 1.0 / self.n as f32;
+        for v in re.iter_mut() {
+            *v *= inv;
+        }
+        for v in im.iter_mut() {
+            *v *= inv;
+        }
+    }
+
+    fn run(&self, re: &mut [f32], im: &mut [f32], inverse: bool) {
+        let n = self.n;
+        assert_eq!(re.len(), n);
+        assert_eq!(im.len(), n);
+        // Bit-reversal reordering.
+        for i in 0..n {
+            let j = self.bitrev[i];
+            if i < j {
+                re.swap(i, j);
+                im.swap(i, j);
+            }
+        }
+        // Iterative butterflies, smallest blocks first (decimation in time).
+        for s in 0..self.tw_re.len() {
+            let half = 1usize << s;
+            let m = half * 2;
+            let twr = &self.tw_re[s];
+            let twi = &self.tw_im[s];
+            let mut base = 0;
+            while base < n {
+                for j in 0..half {
+                    let wr = twr[j];
+                    let wi = if inverse { -twi[j] } else { twi[j] };
+                    let a = base + j;
+                    let b = a + half;
+                    // t = w * x[b]
+                    let tr = wr * re[b] - wi * im[b];
+                    let ti = wr * im[b] + wi * re[b];
+                    re[b] = re[a] - tr;
+                    im[b] = im[a] - ti;
+                    re[a] += tr;
+                    im[a] += ti;
+                }
+                base += m;
+            }
+        }
+    }
+}
+
+/// One-shot unitary DFT of a complex signal (matches
+/// [`crate::transforms::matrices::dft_matrix`] applied to x).
+pub fn fft_unitary(x: &[Cpx]) -> Vec<Cpx> {
+    let n = x.len();
+    let plan = FftPlan::new(n);
+    let mut re: Vec<f32> = x.iter().map(|z| z.re).collect();
+    let mut im: Vec<f32> = x.iter().map(|z| z.im).collect();
+    plan.forward(&mut re, &mut im);
+    let s = 1.0 / (n as f32).sqrt();
+    re.iter()
+        .zip(im.iter())
+        .map(|(&r, &i)| Cpx::new(r * s, i * s))
+        .collect()
+}
+
+/// Fast Walsh–Hadamard transform with 1/√2 per-level normalization,
+/// in place; matches [`crate::transforms::matrices::hadamard_matrix`].
+pub fn fwht(x: &mut [f32]) {
+    let n = x.len();
+    assert!(n.is_power_of_two());
+    let mut h = 1usize;
+    let s = std::f32::consts::FRAC_1_SQRT_2;
+    while h < n {
+        let mut base = 0;
+        while base < n {
+            for j in base..base + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = (a + b) * s;
+                x[j + h] = (a - b) * s;
+            }
+            base += h * 2;
+        }
+        h *= 2;
+    }
+}
+
+/// A reusable plan for real even/odd transforms built on one FFT of the
+/// same length (Makhoul 1980): fast orthonormal DCT-II / DST-II and the
+/// unitary Hartley transform.
+pub struct RealTransformPlan {
+    fft: FftPlan,
+    /// cos/sin of πk/(2N) for the DCT/DST post-rotation.
+    rot_re: Vec<f32>,
+    rot_im: Vec<f32>,
+    /// Orthonormal DCT scale factors s_k.
+    dct_scale: Vec<f32>,
+    /// Scratch buffers (reused across calls; not thread-safe by design —
+    /// each worker owns its plan).
+    scratch_re: Vec<f32>,
+    scratch_im: Vec<f32>,
+}
+
+impl RealTransformPlan {
+    pub fn new(n: usize) -> Self {
+        let mut rot_re = Vec::with_capacity(n);
+        let mut rot_im = Vec::with_capacity(n);
+        let mut dct_scale = Vec::with_capacity(n);
+        for k in 0..n {
+            let theta = -std::f64::consts::PI * (k as f64) / (2.0 * n as f64);
+            rot_re.push(theta.cos() as f32);
+            rot_im.push(theta.sin() as f32);
+            let s = if k == 0 {
+                (1.0 / n as f64).sqrt()
+            } else {
+                (2.0 / n as f64).sqrt()
+            };
+            dct_scale.push(s as f32);
+        }
+        RealTransformPlan {
+            fft: FftPlan::new(n),
+            rot_re,
+            rot_im,
+            dct_scale,
+            scratch_re: vec![0.0; n],
+            scratch_im: vec![0.0; n],
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.fft.n
+    }
+
+    /// Orthonormal DCT-II (Makhoul): permute x to v = [x₀,x₂,…,x₅,x₃,x₁]
+    /// (evens forward, odds reversed), take an N-point FFT, rotate by
+    /// e^{-iπk/2N}, keep 2·Re, apply orthonormal scaling.
+    pub fn dct2(&mut self, x: &[f32], out: &mut [f32]) {
+        let n = self.n();
+        assert_eq!(x.len(), n);
+        assert_eq!(out.len(), n);
+        let half = n / 2;
+        for i in 0..half {
+            self.scratch_re[i] = x[2 * i];
+            self.scratch_re[n - 1 - i] = x[2 * i + 1];
+        }
+        if n % 2 == 1 {
+            self.scratch_re[half] = x[n - 1];
+        }
+        self.scratch_im.fill(0.0);
+        self.fft.forward(&mut self.scratch_re, &mut self.scratch_im);
+        for k in 0..n {
+            // X_k = s_k · Re[e^{-iπk/2N} V_k]  (the "2·Re" of Makhoul's
+            // unnormalized form is folded into s_k = √(2/N)).
+            let vr = self.scratch_re[k];
+            let vi = self.scratch_im[k];
+            out[k] = self.dct_scale[k] * (self.rot_re[k] * vr - self.rot_im[k] * vi);
+        }
+    }
+
+    /// Orthonormal DST-II via the DCT identity
+    /// `DST-II(x)_k = DCT-II(y)_{N-1-k}` with `y_n = (−1)^n x_n`
+    /// (scales match: t_k = s_{N−1−k}).
+    pub fn dst2(&mut self, x: &[f32], out: &mut [f32]) {
+        let n = self.n();
+        assert_eq!(x.len(), n);
+        assert_eq!(out.len(), n);
+        let mut y = vec![0.0f32; n];
+        for (i, v) in y.iter_mut().enumerate() {
+            *v = if i % 2 == 0 { x[i] } else { -x[i] };
+        }
+        let mut tmp = vec![0.0f32; n];
+        self.dct2(&y, &mut tmp);
+        for k in 0..n {
+            out[k] = tmp[n - 1 - k];
+        }
+    }
+
+    /// Unitary discrete Hartley transform: H_k = (Re X_k − Im X_k)/√N
+    /// where X is the (unnormalized) DFT of the real signal.
+    pub fn hartley(&mut self, x: &[f32], out: &mut [f32]) {
+        let n = self.n();
+        assert_eq!(x.len(), n);
+        assert_eq!(out.len(), n);
+        self.scratch_re.copy_from_slice(x);
+        self.scratch_im.fill(0.0);
+        self.fft.forward(&mut self.scratch_re, &mut self.scratch_im);
+        let s = 1.0 / (n as f32).sqrt();
+        for k in 0..n {
+            out[k] = (self.scratch_re[k] - self.scratch_im[k]) * s;
+        }
+    }
+}
+
+/// A plan for applying a fixed circulant (convolution by h) via
+/// FFT → pointwise multiply → inverse FFT: `y = F⁻¹ (F h ⊙ F x)`.
+pub struct CirculantPlan {
+    fft: FftPlan,
+    /// Precomputed spectrum of the filter (unnormalized DFT of h).
+    h_re: Vec<f32>,
+    h_im: Vec<f32>,
+    scratch_re: Vec<f32>,
+    scratch_im: Vec<f32>,
+}
+
+impl CirculantPlan {
+    pub fn new(h: &[f32]) -> Self {
+        let n = h.len();
+        let fft = FftPlan::new(n);
+        let mut h_re = h.to_vec();
+        let mut h_im = vec![0.0f32; n];
+        fft.forward(&mut h_re, &mut h_im);
+        CirculantPlan {
+            fft,
+            h_re,
+            h_im,
+            scratch_re: vec![0.0; n],
+            scratch_im: vec![0.0; n],
+        }
+    }
+
+    /// y = (h ⊛ x), the circulant matrix of h applied to x.
+    pub fn apply(&mut self, x: &[f32], out: &mut [f32]) {
+        let n = self.fft.n;
+        assert_eq!(x.len(), n);
+        assert_eq!(out.len(), n);
+        self.scratch_re.copy_from_slice(x);
+        self.scratch_im.fill(0.0);
+        self.fft.forward(&mut self.scratch_re, &mut self.scratch_im);
+        for k in 0..n {
+            let xr = self.scratch_re[k];
+            let xi = self.scratch_im[k];
+            self.scratch_re[k] = xr * self.h_re[k] - xi * self.h_im[k];
+            self.scratch_im[k] = xr * self.h_im[k] + xi * self.h_re[k];
+        }
+        self.fft
+            .inverse_scaled(&mut self.scratch_re, &mut self.scratch_im);
+        out.copy_from_slice(&self.scratch_re);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{CMat, Cpx};
+    use crate::transforms::matrices::*;
+    use crate::util::quickcheck::{check_close, run_prop, PropConfig};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bitrev_small() {
+        assert_eq!(bit_reversal_table(8), vec![0, 4, 2, 6, 1, 5, 3, 7]);
+        assert_eq!(bit_reversal_table(2), vec![0, 1]);
+        assert_eq!(bit_reversal_table(1), vec![0]);
+    }
+
+    fn cmat_apply(m: &CMat, x: &[f32]) -> Vec<Cpx> {
+        let cx: Vec<Cpx> = x.iter().map(|&r| Cpx::real(r)).collect();
+        m.matvec(&cx)
+    }
+
+    #[test]
+    fn fft_matches_dense_dft() {
+        let mut rng = Rng::new(1);
+        for n in [2usize, 4, 8, 16, 64, 256] {
+            let x: Vec<Cpx> = (0..n)
+                .map(|_| Cpx::new(rng.normal_f32(0.0, 1.0), rng.normal_f32(0.0, 1.0)))
+                .collect();
+            let fast = fft_unitary(&x);
+            let dense = dft_matrix(n).matvec(&x);
+            for (a, b) in fast.iter().zip(dense.iter()) {
+                assert!((*a - *b).abs() < 2e-4 * (n as f32).sqrt(), "N={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn ifft_inverts_fft() {
+        let mut rng = Rng::new(2);
+        let n = 128;
+        let plan = FftPlan::new(n);
+        let mut re = vec![0.0f32; n];
+        let mut im = vec![0.0f32; n];
+        rng.fill_normal(&mut re, 0.0, 1.0);
+        rng.fill_normal(&mut im, 0.0, 1.0);
+        let (r0, i0) = (re.clone(), im.clone());
+        plan.forward(&mut re, &mut im);
+        plan.inverse_scaled(&mut re, &mut im);
+        check_close(&re, &r0, 1e-4, 1e-4).unwrap();
+        check_close(&im, &i0, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn fwht_matches_dense() {
+        let mut rng = Rng::new(3);
+        for n in [2usize, 8, 32, 128] {
+            let mut x = vec![0.0f32; n];
+            rng.fill_normal(&mut x, 0.0, 1.0);
+            let dense: Vec<f32> = hadamard_matrix(n).matvec(&x);
+            fwht(&mut x);
+            check_close(&x, &dense, 1e-4, 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn dct2_matches_dense() {
+        let mut rng = Rng::new(4);
+        for n in [2usize, 4, 8, 64, 256] {
+            let mut plan = RealTransformPlan::new(n);
+            let mut x = vec![0.0f32; n];
+            rng.fill_normal(&mut x, 0.0, 1.0);
+            let mut fast = vec![0.0f32; n];
+            plan.dct2(&x, &mut fast);
+            let dense = dct_matrix(n).matvec(&x);
+            check_close(&fast, &dense, 3e-4, 1e-3).unwrap();
+        }
+    }
+
+    #[test]
+    fn dst2_matches_dense() {
+        let mut rng = Rng::new(5);
+        for n in [2usize, 4, 8, 64, 256] {
+            let mut plan = RealTransformPlan::new(n);
+            let mut x = vec![0.0f32; n];
+            rng.fill_normal(&mut x, 0.0, 1.0);
+            let mut fast = vec![0.0f32; n];
+            plan.dst2(&x, &mut fast);
+            let dense = dst_matrix(n).matvec(&x);
+            check_close(&fast, &dense, 3e-4, 1e-3).unwrap();
+        }
+    }
+
+    #[test]
+    fn hartley_matches_dense() {
+        let mut rng = Rng::new(6);
+        for n in [2usize, 8, 64] {
+            let mut plan = RealTransformPlan::new(n);
+            let mut x = vec![0.0f32; n];
+            rng.fill_normal(&mut x, 0.0, 1.0);
+            let mut fast = vec![0.0f32; n];
+            plan.hartley(&x, &mut fast);
+            let dense = hartley_matrix(n).matvec(&x);
+            check_close(&fast, &dense, 3e-4, 1e-3).unwrap();
+        }
+    }
+
+    #[test]
+    fn circulant_matches_dense() {
+        let mut rng = Rng::new(7);
+        for n in [2usize, 8, 64, 256] {
+            let mut h = vec![0.0f32; n];
+            rng.fill_normal(&mut h, 0.0, (1.0 / n as f64).sqrt() as f32);
+            let mut plan = CirculantPlan::new(&h);
+            let mut x = vec![0.0f32; n];
+            rng.fill_normal(&mut x, 0.0, 1.0);
+            let mut fast = vec![0.0f32; n];
+            plan.apply(&x, &mut fast);
+            let dense = circulant_matrix(&h).matvec(&x);
+            check_close(&fast, &dense, 1e-4, 1e-3).unwrap();
+        }
+    }
+
+    #[test]
+    fn prop_fft_linearity_and_parseval() {
+        run_prop("fft_parseval", &PropConfig { cases: 32, ..Default::default() }, |g| {
+            let n = g.pow2(1, 9);
+            let x: Vec<Cpx> = g
+                .vec_normal(n)
+                .into_iter()
+                .zip(g.vec_normal(n))
+                .map(|(r, i)| Cpx::new(r, i))
+                .collect();
+            let fx = fft_unitary(&x);
+            // Unitary: energy preserved.
+            let ein: f64 = x.iter().map(|z| z.abs2() as f64).sum();
+            let eout: f64 = fx.iter().map(|z| z.abs2() as f64).sum();
+            if (ein - eout).abs() > 1e-3 * ein.max(1.0) {
+                return Err(format!("Parseval violated: {ein} vs {eout} (n={n})"));
+            }
+            Ok(())
+        });
+        let _ = cmat_apply; // silence unused in some cfgs
+    }
+
+    #[test]
+    fn prop_fwht_involution() {
+        // Normalized WHT is an involution: H(Hx) = x.
+        run_prop("fwht_involution", &PropConfig { cases: 32, ..Default::default() }, |g| {
+            let n = g.pow2(1, 9);
+            let x = g.vec_normal(n);
+            let mut y = x.clone();
+            fwht(&mut y);
+            fwht(&mut y);
+            check_close(&y, &x, 1e-4, 1e-3)
+        });
+    }
+}

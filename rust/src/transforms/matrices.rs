@@ -1,0 +1,279 @@
+//! Dense matrix representations of the target transforms (Table 3 of the
+//! paper). All matrices use unitary/orthonormal scaling so ‖T‖ ≈ 1, per
+//! Section 4.1 ("we consider the unitary or orthogonal scaling of these
+//! transforms"). These dense forms are the *specification* of each
+//! transform — factorization trials treat them as the N input-output pairs
+//! the paper assumes, and tests check the fast algorithms against them.
+
+use crate::linalg::{CMat, Cpx, Mat};
+use crate::transforms::spec::TransformKind;
+use crate::util::rng::Rng;
+
+/// Unitary DFT matrix: F_kn = ω^{-kn} / √N, ω = e^{2πi/N}.
+pub fn dft_matrix(n: usize) -> CMat {
+    let scale = 1.0 / (n as f64).sqrt();
+    CMat::from_fn(n, n, |k, j| {
+        let theta = -2.0 * std::f64::consts::PI * (k as f64) * (j as f64) / (n as f64);
+        Cpx::cis(theta).scale(scale as f32)
+    })
+}
+
+/// Unitary inverse DFT matrix: F⁻¹_kn = ω^{kn} / √N.
+pub fn idft_matrix(n: usize) -> CMat {
+    let scale = 1.0 / (n as f64).sqrt();
+    CMat::from_fn(n, n, |k, j| {
+        let theta = 2.0 * std::f64::consts::PI * (k as f64) * (j as f64) / (n as f64);
+        Cpx::cis(theta).scale(scale as f32)
+    })
+}
+
+/// Orthonormal DCT-II: C_kn = s_k cos(π(n+½)k/N), s_0=√(1/N), s_k=√(2/N).
+pub fn dct_matrix(n: usize) -> Mat {
+    Mat::from_fn(n, n, |k, j| {
+        let s = if k == 0 {
+            (1.0 / n as f64).sqrt()
+        } else {
+            (2.0 / n as f64).sqrt()
+        };
+        let theta = std::f64::consts::PI * (j as f64 + 0.5) * (k as f64) / (n as f64);
+        (s * theta.cos()) as f32
+    })
+}
+
+/// Orthonormal DST-II: S_kn = t_k sin(π(n+½)(k+1)/N), t_{N−1}=√(1/N),
+/// else √(2/N).
+pub fn dst_matrix(n: usize) -> Mat {
+    Mat::from_fn(n, n, |k, j| {
+        let t = if k == n - 1 {
+            (1.0 / n as f64).sqrt()
+        } else {
+            (2.0 / n as f64).sqrt()
+        };
+        let theta = std::f64::consts::PI * (j as f64 + 0.5) * (k as f64 + 1.0) / (n as f64);
+        (t * theta.sin()) as f32
+    })
+}
+
+/// Normalized Walsh–Hadamard: H_1 = [1], H_{2m} = (1/√2)[[H,H],[H,−H]].
+/// Entry form: H_kn = (−1)^{popcount(k & n)} / √N.
+pub fn hadamard_matrix(n: usize) -> Mat {
+    assert!(n.is_power_of_two(), "Hadamard needs power-of-two N");
+    let scale = 1.0 / (n as f64).sqrt();
+    Mat::from_fn(n, n, |k, j| {
+        let sign = if (k & j).count_ones() % 2 == 0 { 1.0 } else { -1.0 };
+        (sign * scale) as f32
+    })
+}
+
+/// Unitary discrete Hartley transform: H_kn = cas(2πnk/N)/√N,
+/// cas θ = cos θ + sin θ.
+pub fn hartley_matrix(n: usize) -> Mat {
+    let scale = 1.0 / (n as f64).sqrt();
+    Mat::from_fn(n, n, |k, j| {
+        let theta = 2.0 * std::f64::consts::PI * (k as f64) * (j as f64) / (n as f64);
+        ((theta.cos() + theta.sin()) * scale) as f32
+    })
+}
+
+/// Circulant matrix of the filter h: A_ij = h_{(i−j) mod N}. The filter is
+/// drawn 𝒩(0, 1/N) so ‖A‖ is O(1), matching the paper's normalization.
+pub fn circulant_matrix(h: &[f32]) -> Mat {
+    let n = h.len();
+    Mat::from_fn(n, n, |i, j| h[(n + i - j) % n])
+}
+
+/// Random convolution target used by recovery trials.
+pub fn convolution_matrix(n: usize, rng: &mut Rng) -> Mat {
+    let mut h = vec![0.0f32; n];
+    rng.fill_normal(&mut h, 0.0, (1.0 / n as f64).sqrt() as f32);
+    circulant_matrix(&h)
+}
+
+/// Legendre polynomial values L_0..L_{deg} at x via the three-term
+/// recurrence (Bonnet): k L_k = (2k−1) x L_{k−1} − (k−1) L_{k−2}.
+pub fn legendre_values(deg: usize, x: f64) -> Vec<f64> {
+    let mut vals = Vec::with_capacity(deg + 1);
+    vals.push(1.0);
+    if deg == 0 {
+        return vals;
+    }
+    vals.push(x);
+    for k in 2..=deg {
+        let kf = k as f64;
+        let next = ((2.0 * kf - 1.0) * x * vals[k - 1] - (kf - 1.0) * vals[k - 2]) / kf;
+        vals.push(next);
+    }
+    vals
+}
+
+/// Discrete Legendre transform: X_k = Σ_n x_n L_k(x_n) on the uniform grid
+/// x_n = 2n/(N−1) − 1 ∈ [−1, 1], with rows normalized to unit ℓ2 norm so
+/// the matrix has O(1) norm (the paper's "appropriately scaled" control).
+pub fn legendre_matrix(n: usize) -> Mat {
+    let mut m = Mat::zeros(n, n);
+    // Column j holds L_0..L_{N−1} evaluated at x_j.
+    for j in 0..n {
+        let x = if n == 1 {
+            0.0
+        } else {
+            2.0 * (j as f64) / ((n - 1) as f64) - 1.0
+        };
+        let vals = legendre_values(n - 1, x);
+        for k in 0..n {
+            m.data[k * n + j] = vals[k] as f32;
+        }
+    }
+    // Row-normalize.
+    for k in 0..n {
+        let norm: f64 = m.row(k).iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
+        if norm > 0.0 {
+            for j in 0..n {
+                m.data[k * n + j] /= norm as f32;
+            }
+        }
+    }
+    m
+}
+
+/// Gaussian control matrix: entries 𝒩(1, 1/N) (Table 3, "Randn" row).
+pub fn randn_matrix(n: usize, rng: &mut Rng) -> Mat {
+    let std = (1.0 / n as f64).sqrt() as f32;
+    Mat::from_fn(n, n, |_, _| rng.normal_f32(1.0, std))
+}
+
+/// Build the dense target for a transform kind, as a complex matrix (real
+/// transforms get a zero imaginary plane); `rng` seeds the stochastic
+/// targets (convolution filter, randn entries).
+pub fn target_matrix(kind: TransformKind, n: usize, rng: &mut Rng) -> CMat {
+    match kind {
+        TransformKind::Dft => dft_matrix(n),
+        TransformKind::Dct => dct_matrix(n).to_cmat(),
+        TransformKind::Dst => dst_matrix(n).to_cmat(),
+        TransformKind::Convolution => convolution_matrix(n, rng).to_cmat(),
+        TransformKind::Hadamard => hadamard_matrix(n).to_cmat(),
+        TransformKind::Hartley => hartley_matrix(n).to_cmat(),
+        TransformKind::Legendre => legendre_matrix(n).to_cmat(),
+        TransformKind::Randn => randn_matrix(n, rng).to_cmat(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transforms::spec::ALL_TRANSFORMS;
+
+    fn is_unitary(a: &CMat, tol: f32) -> bool {
+        let g = a.conj_transpose().matmul(a);
+        g.max_abs_diff(&CMat::eye(a.cols)) < tol
+    }
+
+    #[test]
+    fn dft_is_unitary() {
+        for n in [2usize, 4, 8, 16, 32] {
+            assert!(is_unitary(&dft_matrix(n), 1e-4), "N={n}");
+        }
+    }
+
+    #[test]
+    fn idft_inverts_dft() {
+        let n = 16;
+        let prod = idft_matrix(n).matmul(&dft_matrix(n));
+        assert!(prod.max_abs_diff(&CMat::eye(n)) < 1e-5);
+    }
+
+    #[test]
+    fn dct_dst_hadamard_hartley_orthogonal() {
+        for n in [4usize, 8, 16] {
+            for m in [
+                dct_matrix(n),
+                dst_matrix(n),
+                hadamard_matrix(n),
+                hartley_matrix(n),
+            ] {
+                let g = m.transpose().matmul(&m);
+                let d = g.sub(&Mat::eye(n)).frobenius_norm();
+                assert!(d < 1e-4, "N={n} offortho={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn hadamard_recursive_definition() {
+        // Check entry formula against the recursive construction for N=8.
+        let h8 = hadamard_matrix(8);
+        let h4 = hadamard_matrix(4);
+        let s = 1.0 / 2f32.sqrt();
+        for i in 0..8 {
+            for j in 0..8 {
+                let block = h4.at(i % 4, j % 4) * s;
+                let want = if i < 4 || j < 4 { block } else { -block };
+                assert!((h8.at(i, j) - want).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn circulant_structure() {
+        let h = vec![1.0, 2.0, 3.0, 4.0];
+        let a = circulant_matrix(&h);
+        // First column is h itself; diagonals constant.
+        for i in 0..4 {
+            assert_eq!(a.at(i, 0), h[i]);
+        }
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(a.at(i, j), a.at((i + 1) % 4, (j + 1) % 4));
+            }
+        }
+    }
+
+    #[test]
+    fn legendre_recurrence_values() {
+        // L_2(x) = (3x² − 1)/2 at x = 0.5 → −0.125
+        let v = legendre_values(2, 0.5);
+        assert!((v[2] - (-0.125)).abs() < 1e-12);
+        // L_3(1) = 1 (all Legendre polys are 1 at x=1).
+        let v = legendre_values(5, 1.0);
+        for x in v {
+            assert!((x - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn legendre_rows_unit_norm() {
+        let m = legendre_matrix(16);
+        for k in 0..16 {
+            let norm: f64 = m.row(k).iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-4, "row {k} norm {norm}");
+        }
+    }
+
+    #[test]
+    fn randn_moments() {
+        let mut rng = Rng::new(5);
+        let n = 64;
+        let m = randn_matrix(n, &mut rng);
+        let mean: f64 = m.data.iter().map(|&x| x as f64).sum::<f64>() / (n * n) as f64;
+        assert!((mean - 1.0).abs() < 0.01, "mean={mean}");
+        let var: f64 = m
+            .data
+            .iter()
+            .map(|&x| (x as f64 - mean).powi(2))
+            .sum::<f64>()
+            / (n * n) as f64;
+        assert!((var - 1.0 / n as f64).abs() < 0.005, "var={var}");
+    }
+
+    #[test]
+    fn target_matrix_all_kinds_finite() {
+        let mut rng = Rng::new(77);
+        for kind in ALL_TRANSFORMS {
+            let t = target_matrix(kind, 16, &mut rng);
+            assert_eq!(t.rows, 16);
+            assert!(t.re.iter().chain(t.im.iter()).all(|x| x.is_finite()), "{kind}");
+            if !kind.is_complex() {
+                assert!(t.im.iter().all(|&x| x == 0.0), "{kind} should be real");
+            }
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Target transforms: taxonomy, dense matrix specifications, and the
+//! hand-written fast algorithms the paper compares against.
+//!
+//! - [`spec`] — the eight transform families of Figure 3 / Table 4.
+//! - [`matrices`] — dense (unitary/orthonormal) matrix builders; these are
+//!   the *specifications* the factorization trials try to recover.
+//! - [`fast`] — FFT / FWHT / fast DCT / fast DST / Hartley / circulant
+//!   plans: the Figure 4 comparators and the oracles for the closed-form
+//!   butterfly constructions.
+
+pub mod fast;
+pub mod matrices;
+pub mod spec;
+
+pub use fast::{bit_reversal_table, fft_unitary, fwht, CirculantPlan, FftPlan, RealTransformPlan};
+pub use matrices::{
+    circulant_matrix, convolution_matrix, dct_matrix, dft_matrix, dst_matrix, hadamard_matrix,
+    hartley_matrix, idft_matrix, legendre_matrix, randn_matrix, target_matrix,
+};
+pub use spec::{TransformKind, ALL_TRANSFORMS};

@@ -1,0 +1,117 @@
+//! Transform taxonomy: the eight target families of the paper's Figure 3 /
+//! Table 4, with the metadata the coordinator needs to set up a recovery
+//! trial (field, recommended BP depth, whether an exact BP factorization
+//! is known).
+
+use std::fmt;
+
+/// The transforms evaluated in Section 4.1 of the paper (Table 3 formulas).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TransformKind {
+    /// Discrete Fourier transform, unitary scaling. Exactly in (BP)^1.
+    Dft,
+    /// DCT-II, orthonormal scaling. Exactly in (BP)^2.
+    Dct,
+    /// DST-II, orthonormal scaling. Exactly in (BP)^2.
+    Dst,
+    /// Circulant convolution with a random filter. Exactly in (BP)^2.
+    Convolution,
+    /// Walsh–Hadamard transform, 1/√2-normalized recursion. In (BP)^1.
+    Hadamard,
+    /// Discrete Hartley transform, unitary scaling. In (BP)^1 (it is a
+    /// linear combination of the real/imag planes of the DFT).
+    Hartley,
+    /// Discrete Legendre transform (orthogonal polynomial; *not* exactly
+    /// in the BP hierarchy — paper expects imperfect recovery).
+    Legendre,
+    /// i.i.d. Gaussian entries 𝒩(1, 1/N): the unstructured control row.
+    Randn,
+}
+
+pub const ALL_TRANSFORMS: [TransformKind; 8] = [
+    TransformKind::Dft,
+    TransformKind::Dct,
+    TransformKind::Dst,
+    TransformKind::Convolution,
+    TransformKind::Hadamard,
+    TransformKind::Hartley,
+    TransformKind::Legendre,
+    TransformKind::Randn,
+];
+
+impl TransformKind {
+    /// Paper's Section 4.1: "All transforms considered learn over BP
+    /// except for convolution which uses BPBP", and "For the DCT and
+    /// DST, we add another simple permutation for extra learnability" —
+    /// realized here as a second BP module (whose butterfly can stay
+    /// ≈identity, leaving exactly the extra permutation; Appendix A.1/A.2
+    /// show DCT/DST ∈ (BP)² with this structure).
+    pub fn recommended_depth(self) -> usize {
+        match self {
+            TransformKind::Convolution | TransformKind::Dct | TransformKind::Dst => 2,
+            _ => 1,
+        }
+    }
+
+    /// Whether the target matrix has a nonzero imaginary plane.
+    pub fn is_complex(self) -> bool {
+        matches!(self, TransformKind::Dft)
+    }
+
+    /// Whether Proposition 1 gives an *exact* closed-form BP/BP² capture.
+    pub fn exactly_representable(self) -> bool {
+        !matches!(self, TransformKind::Legendre | TransformKind::Randn)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransformKind::Dft => "dft",
+            TransformKind::Dct => "dct",
+            TransformKind::Dst => "dst",
+            TransformKind::Convolution => "convolution",
+            TransformKind::Hadamard => "hadamard",
+            TransformKind::Hartley => "hartley",
+            TransformKind::Legendre => "legendre",
+            TransformKind::Randn => "randn",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TransformKind> {
+        ALL_TRANSFORMS.iter().copied().find(|t| t.name() == s)
+    }
+}
+
+impl fmt::Display for TransformKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for t in ALL_TRANSFORMS {
+            assert_eq!(TransformKind::parse(t.name()), Some(t));
+        }
+        assert_eq!(TransformKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn depth_matches_paper() {
+        assert_eq!(TransformKind::Dft.recommended_depth(), 1);
+        assert_eq!(TransformKind::Hadamard.recommended_depth(), 1);
+        assert_eq!(TransformKind::Convolution.recommended_depth(), 2);
+        assert_eq!(TransformKind::Dct.recommended_depth(), 2);
+        assert_eq!(TransformKind::Dst.recommended_depth(), 2);
+    }
+
+    #[test]
+    fn only_dft_complex() {
+        for t in ALL_TRANSFORMS {
+            assert_eq!(t.is_complex(), t == TransformKind::Dft);
+        }
+    }
+}

@@ -1,0 +1,103 @@
+//! Minimal leveled logger (no `log`/`env_logger` facade in the vendored
+//! set is wired for our use; this keeps the dependency surface tiny).
+//!
+//! Level is controlled by `BUTTERFLY_LOG` ∈ {trace, debug, info, warn,
+//! error, off}; default `info`. Output goes to stderr so stdout stays
+//! clean for machine-readable results (bench tables, JSON reports).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Trace = 0,
+    Debug = 1,
+    Info = 2,
+    Warn = 3,
+    Error = 4,
+    Off = 5,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
+
+fn init_level() -> u8 {
+    let lvl = match std::env::var("BUTTERFLY_LOG").ok().as_deref() {
+        Some("trace") => Level::Trace,
+        Some("debug") => Level::Debug,
+        Some("warn") => Level::Warn,
+        Some("error") => Level::Error,
+        Some("off") => Level::Off,
+        _ => Level::Info,
+    } as u8;
+    LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+#[inline]
+fn level() -> u8 {
+    let l = LEVEL.load(Ordering::Relaxed);
+    if l == u8::MAX {
+        init_level()
+    } else {
+        l
+    }
+}
+
+/// Override the level programmatically (tests, CLI `--log-level`).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    (l as u8) >= level()
+}
+
+fn emit(tag: &str, msg: &str) {
+    eprintln!("[{tag}] {msg}");
+}
+
+pub fn trace(msg: &str) {
+    if enabled(Level::Trace) {
+        emit("TRACE", msg);
+    }
+}
+
+pub fn debug(msg: &str) {
+    if enabled(Level::Debug) {
+        emit("DEBUG", msg);
+    }
+}
+
+pub fn info(msg: &str) {
+    if enabled(Level::Info) {
+        emit("INFO ", msg);
+    }
+}
+
+pub fn warn(msg: &str) {
+    if enabled(Level::Warn) {
+        emit("WARN ", msg);
+    }
+}
+
+pub fn error(msg: &str) {
+    if enabled(Level::Error) {
+        emit("ERROR", msg);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Warn));
+        assert!(enabled(Level::Error));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Trace));
+        set_level(Level::Info);
+    }
+}

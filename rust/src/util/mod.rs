@@ -1,0 +1,8 @@
+//! Shared utilities: RNG, logging, JSON, timing, tables, property testing.
+
+pub mod json;
+pub mod log;
+pub mod quickcheck;
+pub mod rng;
+pub mod table;
+pub mod timer;

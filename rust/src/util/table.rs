@@ -1,0 +1,163 @@
+//! ASCII table rendering for experiment reports and bench output.
+//!
+//! The benches print tables shaped like the paper's (Figure 3 RMSE grid,
+//! Table 1 accuracy table, Figure 4 speedups). Keeping the renderer in one
+//! place means every binary reports results in the same format, and the
+//! EXPERIMENTS.md blocks can be pasted directly from program output.
+
+/// A simple column-aligned table with a header row.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: Option<String>,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            title: None,
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn with_title(mut self, title: impl Into<String>) -> Self {
+        self.title = Some(title.into());
+        self
+    }
+
+    pub fn add_row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+    }
+
+    /// Render with column alignment: first column left, rest right.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str("== ");
+            out.push_str(t);
+            out.push_str(" ==\n");
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(*w))
+            .collect::<Vec<_>>()
+            .join("-+-");
+        out.push_str(&render_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&render_row(row, &widths));
+            out.push('\n');
+        }
+        fn render_row(cells: &[String], widths: &[usize]) -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| {
+                    let pad = widths[i].saturating_sub(c.chars().count());
+                    if i == 0 {
+                        format!("{c}{}", " ".repeat(pad))
+                    } else {
+                        format!("{}{c}", " ".repeat(pad))
+                    }
+                })
+                .collect::<Vec<_>>()
+                .join(" | ")
+        }
+        let _ = ncols;
+        out
+    }
+
+    /// Render as GitHub-flavoured markdown (for EXPERIMENTS.md).
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(&format!("**{t}**\n\n"));
+        }
+        out.push_str("| ");
+        out.push_str(&self.header.join(" | "));
+        out.push_str(" |\n|");
+        for _ in &self.header {
+            out.push_str("---|");
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str("| ");
+            out.push_str(&row.join(" | "));
+            out.push_str(" |\n");
+        }
+        out
+    }
+}
+
+/// Scientific formatting matching the paper's Table 4 style (e.g. "3.1e-06").
+pub fn fmt_sci(x: f64) -> String {
+    if x == 0.0 {
+        return "0.0".to_string();
+    }
+    format!("{x:.1e}")
+}
+
+/// Fixed-point with n decimals.
+pub fn fmt_fixed(x: f64, decimals: usize) -> String {
+    format!("{x:.decimals$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["transform", "N=8", "N=16"]).with_title("RMSE");
+        t.add_row(vec!["dft".into(), "3.1e-6".into(), "4.6e-6".into()]);
+        t.add_row(vec!["hadamard".into(), "8.8e-7".into(), "7.8e-6".into()]);
+        let s = t.render();
+        assert!(s.contains("== RMSE =="));
+        assert!(s.contains("transform"));
+        let lines: Vec<&str> = s.lines().collect();
+        // header + sep + 2 rows + title
+        assert_eq!(lines.len(), 5);
+        // all data lines same display width
+        assert_eq!(lines[1].len(), lines[2].len());
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new(&["a", "b"]);
+        t.add_row(vec!["1".into(), "2".into()]);
+        let md = t.render_markdown();
+        assert!(md.starts_with("| a | b |"));
+        assert!(md.contains("|---|---|"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.add_row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn sci_format() {
+        assert_eq!(fmt_sci(3.14e-6), "3.1e-6");
+        assert_eq!(fmt_sci(0.0), "0.0");
+    }
+}

@@ -1,0 +1,213 @@
+//! Wall-clock timing and simple statistics for the bench harness.
+//!
+//! The vendored crate set has no `criterion`, so the benches under
+//! `rust/benches/` use this module: warmup + repeated timed runs, robust
+//! summary statistics (median / MAD), and throughput helpers.
+
+use std::time::{Duration, Instant};
+
+/// A single measured sample set for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Samples {
+    /// Nanoseconds per iteration, one entry per measured run.
+    pub nanos: Vec<f64>,
+}
+
+impl Samples {
+    pub fn median(&self) -> f64 {
+        percentile(&self.nanos, 50.0)
+    }
+
+    pub fn p10(&self) -> f64 {
+        percentile(&self.nanos, 10.0)
+    }
+
+    pub fn p90(&self) -> f64 {
+        percentile(&self.nanos, 90.0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.nanos.iter().sum::<f64>() / self.nanos.len().max(1) as f64
+    }
+
+    /// Median absolute deviation — robust spread estimate.
+    pub fn mad(&self) -> f64 {
+        let med = self.median();
+        let devs: Vec<f64> = self.nanos.iter().map(|x| (x - med).abs()).collect();
+        percentile(&devs, 50.0)
+    }
+}
+
+fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        let w = rank - lo as f64;
+        s[lo] * (1.0 - w) + s[hi] * w
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Minimum wall time spent warming up before measurement.
+    pub warmup: Duration,
+    /// Number of measured runs.
+    pub runs: usize,
+    /// Target wall time per measured run; the runner picks an iteration
+    /// count so each run is at least this long (amortizes timer overhead).
+    pub min_run_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            runs: 15,
+            min_run_time: Duration::from_millis(50),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// A faster profile for CI / smoke runs (set `BENCH_FAST=1`).
+    pub fn from_env() -> Self {
+        if std::env::var("BENCH_FAST").ok().as_deref() == Some("1") {
+            BenchConfig {
+                warmup: Duration::from_millis(20),
+                runs: 5,
+                min_run_time: Duration::from_millis(5),
+            }
+        } else {
+            BenchConfig::default()
+        }
+    }
+}
+
+/// Measure `f` (one logical iteration per call) under `cfg`.
+///
+/// Returns nanoseconds-per-iteration samples. A `black_box`-style sink is
+/// the caller's responsibility: have `f` return a value and accumulate it.
+pub fn bench<F: FnMut()>(cfg: &BenchConfig, mut f: F) -> Samples {
+    // Warmup, also used to estimate per-iteration cost.
+    let warm_start = Instant::now();
+    let mut warm_iters = 0u64;
+    while warm_start.elapsed() < cfg.warmup {
+        f();
+        warm_iters += 1;
+    }
+    let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+    let iters_per_run = ((cfg.min_run_time.as_secs_f64() / per_iter).ceil() as u64).max(1);
+
+    let mut nanos = Vec::with_capacity(cfg.runs);
+    for _ in 0..cfg.runs {
+        let t0 = Instant::now();
+        for _ in 0..iters_per_run {
+            f();
+        }
+        let dt = t0.elapsed();
+        nanos.push(dt.as_nanos() as f64 / iters_per_run as f64);
+    }
+    Samples { nanos }
+}
+
+/// Prevent the optimizer from removing a computation. Stable-Rust version
+/// of `std::hint::black_box` semantics via a volatile read.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_nanos(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// A scope timer for coarse phase logging.
+pub struct ScopeTimer {
+    label: String,
+    start: Instant,
+}
+
+impl ScopeTimer {
+    pub fn new(label: impl Into<String>) -> Self {
+        ScopeTimer {
+            label: label.into(),
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Log elapsed time and consume the timer.
+    pub fn finish(self) -> Duration {
+        let dt = self.start.elapsed();
+        crate::util::log::info(&format!("{}: {}", self.label, fmt_nanos(dt.as_nanos() as f64)));
+        dt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let xs = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert!((percentile(&xs, 50.0) - 3.0).abs() < 1e-12);
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn samples_stats() {
+        let s = Samples {
+            nanos: vec![10.0, 12.0, 11.0, 100.0, 11.5],
+        };
+        // Median robust to the outlier.
+        assert!((s.median() - 11.5).abs() < 1e-9);
+        assert!(s.mad() < 2.0);
+        assert!(s.mean() > s.median());
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(5),
+            runs: 3,
+            min_run_time: Duration::from_millis(2),
+        };
+        let mut acc = 0u64;
+        let s = bench(&cfg, || {
+            acc = acc.wrapping_add(black_box(17));
+        });
+        assert_eq!(s.nanos.len(), 3);
+        assert!(s.median() > 0.0);
+    }
+
+    #[test]
+    fn fmt_nanos_units() {
+        assert!(fmt_nanos(5.0).ends_with("ns"));
+        assert!(fmt_nanos(5_000.0).ends_with("µs"));
+        assert!(fmt_nanos(5_000_000.0).ends_with("ms"));
+        assert!(fmt_nanos(5e9).ends_with(" s"));
+    }
+}

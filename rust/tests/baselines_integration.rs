@@ -1,0 +1,81 @@
+//! Integration: Figure-3's comparison logic — butterfly vs sparse vs
+//! low-rank vs sparse+low-rank at EQUAL multiplication budget, on real
+//! transform targets. Checks the *shape* of the paper's result: the
+//! butterfly wins on recursive transforms and everything fails on the
+//! unstructured control.
+
+use butterfly::baselines::{butterfly_budget, lowrank_baseline, sparse_baseline, sparse_plus_lowrank_baseline};
+use butterfly::butterfly::params::PermTying;
+use butterfly::coordinator::trial::Trial;
+use butterfly::coordinator::{FactorizeJob, TrialConfig};
+use butterfly::transforms::matrices::target_matrix;
+use butterfly::transforms::spec::TransformKind;
+use butterfly::util::rng::Rng;
+
+fn butterfly_rmse(kind: TransformKind, n: usize) -> f64 {
+    let mut best = f64::INFINITY;
+    for seed in 1..=3 {
+        let job = FactorizeJob::paper(kind, n, 11, 900);
+        let cfg = TrialConfig { lr: 0.05, seed, perm_tying: PermTying::Untied };
+        let mut t = Trial::new(&job, cfg);
+        best = best.min(t.advance(900, 1e-5));
+        if best < 1e-4 {
+            break;
+        }
+    }
+    best
+}
+
+#[test]
+fn butterfly_beats_baselines_on_dft() {
+    let n = 16;
+    let mut rng = Rng::new(11);
+    let target = target_matrix(TransformKind::Dft, n, &mut rng);
+    let budget = butterfly_budget(n, 1);
+    let bf = butterfly_rmse(TransformKind::Dft, n);
+    let sp = sparse_baseline(&target, budget).rmse;
+    let lr = lowrank_baseline(&target, budget).rmse;
+    let both = sparse_plus_lowrank_baseline(&target, budget).rmse;
+    eprintln!("DFT n={n}: butterfly {bf:.2e}, sparse {sp:.2e}, lowrank {lr:.2e}, s+l {both:.2e}");
+    assert!(bf < sp / 5.0, "butterfly {bf} vs sparse {sp}");
+    assert!(bf < lr / 5.0, "butterfly {bf} vs lowrank {lr}");
+    assert!(bf < both / 5.0, "butterfly {bf} vs sparse+lowrank {both}");
+}
+
+#[test]
+fn baselines_cannot_fit_hadamard_at_budget() {
+    // |H_kn| = 1/√N everywhere: dense energy spread defeats both
+    // sparsity and low rank
+    let n = 64;
+    let mut rng = Rng::new(5);
+    let target = target_matrix(TransformKind::Hadamard, n, &mut rng);
+    let budget = butterfly_budget(n, 1);
+    assert!(sparse_baseline(&target, budget).rmse > 1e-2);
+    assert!(lowrank_baseline(&target, budget).rmse > 5e-2);
+}
+
+#[test]
+fn nobody_fits_randn() {
+    // the control row: every method should plateau at a large error
+    let n = 32;
+    let mut rng = Rng::new(9);
+    let target = target_matrix(TransformKind::Randn, n, &mut rng);
+    let budget = butterfly_budget(n, 1);
+    let sp = sparse_baseline(&target, budget).rmse;
+    let lr = lowrank_baseline(&target, budget).rmse;
+    assert!(sp > 1e-2, "sparse {sp}");
+    assert!(lr > 1e-2, "lowrank {lr}");
+}
+
+#[test]
+fn equal_budget_accounting() {
+    // all three baselines are held to the butterfly budget or less
+    let n = 32;
+    let mut rng = Rng::new(2);
+    let target = target_matrix(TransformKind::Dct, n, &mut rng);
+    let budget = butterfly_budget(n, 1);
+    assert!(sparse_baseline(&target, budget).used_budget <= budget);
+    assert!(lowrank_baseline(&target, budget).used_budget <= budget);
+    let b = sparse_plus_lowrank_baseline(&target, budget);
+    assert!(b.used_budget <= budget + 2 * n, "s+l used {}", b.used_budget);
+}

@@ -1,0 +1,71 @@
+//! Integration: the coordinator (scheduler + registry + metrics) across
+//! whole jobs, including parallel execution and early stopping.
+
+use butterfly::coordinator::{run_job, FactorizeJob, Metrics, Registry, SchedulerConfig, TrialStatus};
+use butterfly::transforms::spec::TransformKind;
+
+#[test]
+fn full_job_bookkeeping() {
+    let job = FactorizeJob::paper(TransformKind::Dft, 8, 42, 3000);
+    let cfg = SchedulerConfig { workers: 4, max_resource: 9, eta: 3, step_quantum: 25, seed: 11 };
+    let metrics = Metrics::new();
+    let registry = Registry::new();
+    let res = run_job(&job, &cfg, &metrics, &registry);
+    let snap = metrics.snapshot();
+    assert_eq!(snap.jobs_completed, 1);
+    assert_eq!(snap.trials_started, res.trials_run);
+    assert!(snap.steps_total > 0);
+    assert_eq!(snap.steps_total, res.total_steps);
+    // registry is consistent: every trial has a record, statuses partition
+    assert_eq!(registry.len(), res.trials_run);
+    let done = registry.count_status(TrialStatus::Completed);
+    let pruned = registry.count_status(TrialStatus::Pruned);
+    let running = registry.count_status(TrialStatus::Running);
+    assert_eq!(done + pruned + running, res.trials_run);
+    // leaderboard best matches result
+    let lb = registry.leaderboard();
+    assert!((lb[0].rmse - res.best_rmse).abs() < 1e-9 || res.best_rmse <= lb[0].rmse);
+}
+
+#[test]
+fn early_stop_saves_budget() {
+    // identity target is trivially representable: the job should stop
+    // long before exhausting the hyperband budget
+    let mut job = FactorizeJob::paper(TransformKind::Hadamard, 8, 1, 100_000);
+    job.target = butterfly::linalg::dense::CMat::eye(8);
+    job.target_rmse = 5e-2; // loose: near-orthogonal init + few steps
+    let cfg = SchedulerConfig { workers: 2, max_resource: 27, eta: 3, step_quantum: 50, seed: 3 };
+    let metrics = Metrics::new();
+    let registry = Registry::new();
+    let res = run_job(&job, &cfg, &metrics, &registry);
+    assert!(res.reached_target, "rmse {}", res.best_rmse);
+    assert_eq!(metrics.snapshot().targets_reached, 1);
+}
+
+#[test]
+fn workers_parameter_changes_nothing_about_results_shape() {
+    // determinism of the *sampled configs* (same seed) regardless of
+    // worker count; rmse may differ by execution order of fp ops only
+    for workers in [1usize, 4] {
+        let job = FactorizeJob::paper(TransformKind::Dct, 8, 9, 600);
+        let cfg = SchedulerConfig { workers, max_resource: 9, eta: 3, step_quantum: 10, seed: 5 };
+        let registry = Registry::new();
+        let res = run_job(&job, &cfg, &Metrics::new(), &registry);
+        assert!(res.best_rmse.is_finite());
+        assert!(res.best_theta.len() > 0);
+    }
+}
+
+#[test]
+fn multi_job_campaign_accumulates_metrics() {
+    let metrics = Metrics::new();
+    let cfg = SchedulerConfig { workers: 2, max_resource: 3, eta: 3, step_quantum: 10, seed: 2 };
+    for kind in [TransformKind::Dft, TransformKind::Hadamard, TransformKind::Dct] {
+        let job = FactorizeJob::paper(kind, 8, 7, 400);
+        let registry = Registry::new();
+        run_job(&job, &cfg, &metrics, &registry);
+    }
+    let snap = metrics.snapshot();
+    assert_eq!(snap.jobs_completed, 3);
+    assert!(snap.trials_started >= 9);
+}

@@ -1,0 +1,133 @@
+//! Integration: learn → harden → install → serve. The full lifecycle of
+//! the paper's system used as a serving stack.
+
+use butterfly::butterfly::closed_form::{convolution_stack, dft_stack, hadamard_stack};
+use butterfly::butterfly::params::PermTying;
+use butterfly::coordinator::trial::Trial;
+use butterfly::coordinator::{FactorizeJob, TrialConfig};
+use butterfly::runtime::engine::unpack_stack;
+use butterfly::serving::{BatcherConfig, Router};
+use butterfly::transforms::spec::TransformKind;
+use butterfly::util::rng::Rng;
+use std::time::Duration;
+
+#[test]
+fn learned_transform_served_end_to_end() {
+    // 1. learn a DFT factorization (native trial)
+    let n = 8;
+    let job = FactorizeJob::paper(TransformKind::Dft, n, 42, 2000);
+    let mut best: Option<Trial> = None;
+    for seed in 1..=5 {
+        let cfg = TrialConfig { lr: 0.05, seed, perm_tying: PermTying::Untied };
+        let mut t = Trial::new(&job, cfg);
+        let r = t.advance(1500, 1e-4);
+        if best.as_ref().map_or(true, |b| r < b.last_loss.sqrt()) {
+            best = Some(t);
+        }
+    }
+    let trial = best.unwrap();
+    let rmse = trial.rmse();
+    // 2. round-trip through the theta interchange (what the coordinator
+    //    hands to serving)
+    let theta = butterfly::runtime::engine::pack_stack(&trial.canonical_stack());
+    let stack = unpack_stack(n, 1, &theta);
+    // 3. install + serve
+    let mut router = Router::new();
+    router.install("learned-dft", &stack, 1, BatcherConfig::default());
+    let target = &job.target;
+    let mut worst = 0.0f32;
+    for j in 0..n {
+        let mut x = vec![0.0f32; n];
+        x[j] = 1.0;
+        let (re, im) = router.call("learned-dft", x, vec![0.0; n]).unwrap();
+        for i in 0..n {
+            worst = worst.max((re[i] - target.re[i * n + j]).abs());
+            worst = worst.max((im[i] - target.im[i * n + j]).abs());
+        }
+    }
+    // serving applies the HARDENED permutation; only meaningful when the
+    // trial converged to a peaked factorization
+    eprintln!("trial rmse {rmse:.2e}, served max err {worst:.2e}, confidence {:.3}", trial.perm_confidence());
+    if rmse < 1e-3 && trial.perm_confidence() > 0.95 {
+        assert!(worst < 0.05, "served error {worst}");
+    }
+    router.shutdown();
+}
+
+#[test]
+fn multi_transform_router_under_load() {
+    let n = 64;
+    let mut rng = Rng::new(3);
+    let mut h = vec![0.0f32; n];
+    rng.fill_normal(&mut h, 0.0, (1.0 / n as f64).sqrt() as f32);
+    let mut router = Router::new();
+    let cfg = BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(1), queue_cap: 4096 };
+    router.install("dft", &dft_stack(n), 2, cfg.clone());
+    router.install("hadamard", &hadamard_stack(n), 1, cfg.clone());
+    router.install("conv", &convolution_stack(&h), 1, cfg);
+    let names = ["dft", "hadamard", "conv"];
+    let threads: Vec<_> = (0..6)
+        .map(|t| {
+            let handle = router.handle(names[t % 3]).unwrap();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + t as u64);
+                for _ in 0..50 {
+                    let mut x = vec![0.0f32; 64];
+                    rng.fill_normal(&mut x, 0.0, 1.0);
+                    let (re, im) = handle.call(x, vec![0.0; 64]).unwrap();
+                    assert!(re.iter().chain(im.iter()).all(|v| v.is_finite()));
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    let stats = router.shutdown();
+    let total: usize = stats.values().map(|s| s.served).sum();
+    assert_eq!(total, 300);
+    assert_eq!(stats["dft"].served, 100);
+}
+
+#[test]
+fn backpressure_rejects_rather_than_grows() {
+    let n = 1024;
+    // a deliberately tiny queue + slow-ish service (large n)
+    let svc = butterfly::serving::TransformService::spawn(
+        "dft",
+        &dft_stack(n),
+        BatcherConfig { max_batch: 2, max_wait: Duration::from_micros(50), queue_cap: 4 },
+    );
+    let h = svc.handle();
+    let producers: Vec<_> = (0..8)
+        .map(|t| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                let mut rejected = 0usize;
+                let mut ok = 0usize;
+                let mut rng = Rng::new(t);
+                for _ in 0..40 {
+                    let mut x = vec![0.0f32; n];
+                    rng.fill_normal(&mut x, 0.0, 1.0);
+                    match h.call_real(x) {
+                        Ok(_) => ok += 1,
+                        Err(_) => rejected += 1,
+                    }
+                }
+                (ok, rejected)
+            })
+        })
+        .collect();
+    let mut total_ok = 0;
+    let mut total_rej = 0;
+    for p in producers {
+        let (ok, rej) = p.join().unwrap();
+        total_ok += ok;
+        total_rej += rej;
+    }
+    let stats = svc.shutdown();
+    assert_eq!(stats.served, total_ok);
+    assert_eq!(stats.rejected, total_rej);
+    assert_eq!(total_ok + total_rej, 320);
+    assert!(total_ok > 0);
+}

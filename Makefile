@@ -1,0 +1,30 @@
+# Convenience targets; CI runs the same commands (see .github/workflows/ci.yml).
+
+.PHONY: build test bench-smoke bench fmt clippy py-test artifacts all
+
+all: build test py-test
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+bench-smoke:
+	cd rust && cargo bench --no-run
+
+bench:
+	cd rust && BENCH_FAST=1 cargo bench
+
+fmt:
+	cd rust && cargo fmt
+
+clippy:
+	cd rust && cargo clippy --all-targets -- -D warnings -A unused -A dead_code -A clippy::style -A clippy::complexity
+
+py-test:
+	python -m pytest python/tests -q
+
+# Build the AOT artifacts the XLA engine consumes (needs jax installed).
+artifacts:
+	cd python && python -m compile.aot --out ../rust/artifacts

@@ -7,6 +7,7 @@
 //! ```
 
 use butterfly::butterfly::closed_form::{convolution_stack, dft_stack, hadamard_stack};
+use butterfly::butterfly::fast::{BatchWorkspace, FastBp};
 use butterfly::cli::Args;
 use butterfly::serving::{BatcherConfig, Router};
 use butterfly::util::rng::Rng;
@@ -22,6 +23,27 @@ fn main() {
     println!("== serve_transforms: router + dynamic batcher over learned fast multiplies ==");
     let mut h = vec![0.0f32; n];
     Rng::new(3).fill_normal(&mut h, 0.0, (1.0 / n as f64).sqrt() as f32);
+
+    // Direct batched-apply capacity: what one worker gets from coalescing
+    // a batch into a single column-major apply_batch call (the same path
+    // the service worker below uses).
+    let fast = FastBp::from_stack(&dft_stack(n));
+    let mut bws = BatchWorkspace::new();
+    let mut cap = Table::new(&["B", "vectors/s (1 worker)"])
+        .with_title(format!("direct apply_batch capacity, dft N={n}"));
+    for bsize in [1usize, 8, 64, 256] {
+        let mut re = vec![0.0f32; bsize * n];
+        let mut im = vec![0.0f32; bsize * n];
+        Rng::new(9).fill_normal(&mut re, 0.0, 1.0);
+        let reps = (2048 / bsize).max(4);
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            fast.apply_complex_batch_col(&mut re, &mut im, bsize, &mut bws);
+        }
+        let per_vec = t0.elapsed().as_secs_f64() / (reps * bsize) as f64;
+        cap.add_row(vec![bsize.to_string(), format!("{:.0}", 1.0 / per_vec)]);
+    }
+    println!("{}", cap.render());
 
     let mut table = Table::new(&["max_batch", "max_wait", "req/s", "mean batch", "p-mean latency µs"])
         .with_title(format!("serving sweep (N={n}, {clients} clients, {requests} requests, 2 replicas)"));

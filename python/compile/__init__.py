@@ -1,0 +1,3 @@
+"""AOT compilation layer: Pallas butterfly kernels (L1), the JAX BP
+model (L2), and the HLO/manifest exporter consumed by the Rust runtime
+(L3). See rust/src/runtime/engine.rs for the shared entry contracts."""

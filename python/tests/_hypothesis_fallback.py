@@ -1,0 +1,141 @@
+"""A tiny, deterministic stand-in for the `hypothesis` API surface these
+tests use (`given`, `settings`, `strategies.integers`, `strategies.data`).
+
+It is NOT a property-testing engine — no shrinking, no database, no
+health checks. Each `@given` test is simply run `max_examples` times with
+values drawn from a seeded PRNG, so failures are reproducible and the
+suite stays runnable in environments where hypothesis cannot be
+installed. When the real package is importable, `conftest.py` never
+loads this module.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+_BASE_SEED = 0xB77E4F1  # arbitrary fixed seed: runs are reproducible
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    """A strategy is just a draw function over random.Random."""
+
+    def __init__(self, draw_fn, is_data=False):
+        self._draw_fn = draw_fn
+        self.is_data = is_data
+
+    def do_draw(self, rnd):
+        return self._draw_fn(rnd)
+
+
+def integers(min_value=None, max_value=None):
+    lo = -(2**31) if min_value is None else min_value
+    hi = 2**31 - 1 if max_value is None else max_value
+    return _Strategy(lambda rnd: rnd.randint(lo, hi))
+
+
+def booleans():
+    return _Strategy(lambda rnd: rnd.random() < 0.5)
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+
+def sampled_from(elements):
+    items = list(elements)
+    return _Strategy(lambda rnd: rnd.choice(items))
+
+
+def lists(element, min_size=0, max_size=10, **_kw):
+    def draw(rnd):
+        size = rnd.randint(min_size, max_size)
+        return [element.do_draw(rnd) for _ in range(size)]
+
+    return _Strategy(draw)
+
+
+class _DataObject:
+    """Mirror of hypothesis' `data()` draw handle."""
+
+    def __init__(self, rnd):
+        self._rnd = rnd
+
+    def draw(self, strategy, label=None):
+        return strategy.do_draw(self._rnd)
+
+
+def data():
+    return _Strategy(None, is_data=True)
+
+
+def given(*args, **kwargs):
+    if args:
+        raise TypeError("fallback @given supports keyword strategies only")
+    strategies = kwargs
+
+    def decorator(fn):
+        @functools.wraps(fn)
+        def wrapper(*wargs, **wkwargs):
+            max_examples = getattr(wrapper, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES)
+            for example in range(max_examples):
+                rnd = random.Random(_BASE_SEED + example)
+                drawn = {}
+                for name, strat in strategies.items():
+                    drawn[name] = _DataObject(rnd) if strat.is_data else strat.do_draw(rnd)
+                try:
+                    fn(*wargs, **wkwargs, **drawn)
+                except BaseException:
+                    # leave the original exception intact (pytest skips,
+                    # assertion rewriting); just point at the example
+                    print(f"falsifying example #{example}: {drawn!r}", file=sys.stderr)
+                    raise
+
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        # pytest follows __wrapped__ when collecting fixture names and
+        # would demand the strategy kwargs as fixtures; present the
+        # wrapper as a zero-argument test instead.
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return decorator
+
+
+def settings(max_examples=None, deadline=None, **_kw):
+    def decorator(fn):
+        if max_examples is not None:
+            fn._fallback_max_examples = max_examples
+        return fn
+
+    return decorator
+
+
+def assume(condition):
+    # No filtering engine: treat a failed assumption as a passed example.
+    return bool(condition)
+
+
+def install():
+    """Register the shim as `hypothesis` / `hypothesis.strategies`."""
+    h = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    for mod in (st,):
+        mod.integers = integers
+        mod.booleans = booleans
+        mod.floats = floats
+        mod.sampled_from = sampled_from
+        mod.lists = lists
+        mod.data = data
+    h.given = given
+    h.settings = settings
+    h.assume = assume
+    h.strategies = st
+    h.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None)
+    h.__version__ = "0.0-fallback"
+    sys.modules["hypothesis"] = h
+    sys.modules["hypothesis.strategies"] = st

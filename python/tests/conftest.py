@@ -1,0 +1,20 @@
+"""Test bootstrap: put `python/` on sys.path so `from compile import …`
+resolves regardless of pytest's rootdir, and fall back to a minimal
+deterministic `hypothesis` shim when the real package is absent (the
+hermetic image has no pip access; CI installs the real one)."""
+
+import os
+import sys
+
+_TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+_PYTHON_DIR = os.path.dirname(_TESTS_DIR)
+for p in (_TESTS_DIR, _PYTHON_DIR):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+try:
+    import hypothesis  # noqa: F401  (prefer the real thing when present)
+except ModuleNotFoundError:
+    import _hypothesis_fallback
+
+    _hypothesis_fallback.install()

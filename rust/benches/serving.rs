@@ -1,9 +1,15 @@
 //! E8: serving throughput/latency vs batching window, plus the raw
 //! single-thread capacity of the hardened fast multiply (the router's
 //! upper bound).
+//!
+//! The first table is the batching claim in isolation: vectors/sec of
+//! `FastBp::apply_complex_batch_col` at B ∈ {1, 8, 64, 256} (B = 1 is
+//! the per-item scalar path the serving worker used before batching).
+//! Amortizing gather tables and twiddle loads across lanes must make
+//! B = 64 strictly faster per vector than B = 1 for N ≥ 256.
 
 use butterfly::butterfly::closed_form::dft_stack;
-use butterfly::butterfly::fast::{FastBp, Workspace};
+use butterfly::butterfly::fast::{BatchWorkspace, FastBp, Workspace};
 use butterfly::serving::{BatcherConfig, Router};
 use butterfly::util::rng::Rng;
 use butterfly::util::table::Table;
@@ -17,15 +23,53 @@ fn main() {
     let requests: usize = if fast_mode { 400 } else { 4000 };
     let clients = 8usize;
 
+    // batched fast-multiply capacity: vectors/sec vs batch size
+    let mut btable = Table::new(&["N", "B", "ns/vector", "vectors/s", "speedup vs B=1"])
+        .with_title("batched apply capacity (column-major apply_complex_batch_col; B=1 is the per-item path)");
+    for nn in [256usize, 1024] {
+        let fast = FastBp::from_stack(&dft_stack(nn));
+        let mut ws = Workspace::new(nn);
+        let mut bws = BatchWorkspace::new();
+        let mut per_item_ns = 0.0f64;
+        for bsize in [1usize, 8, 64, 256] {
+            let mut re = vec![0.0f32; bsize * nn];
+            let mut im = vec![0.0f32; bsize * nn];
+            Rng::new(nn as u64).fill_normal(&mut re, 0.0, 1.0);
+            let per_vec = if bsize == 1 {
+                bench(&cfg, || {
+                    fast.apply_complex(black_box(&mut re), black_box(&mut im), &mut ws);
+                })
+                .median()
+            } else {
+                bench(&cfg, || {
+                    fast.apply_complex_batch_col(black_box(&mut re), black_box(&mut im), bsize, &mut bws);
+                })
+                .median()
+                    / bsize as f64
+            };
+            if bsize == 1 {
+                per_item_ns = per_vec;
+            }
+            btable.add_row(vec![
+                nn.to_string(),
+                bsize.to_string(),
+                format!("{per_vec:.0}"),
+                format!("{:.0}", 1e9 / per_vec),
+                format!("{:.2}x", per_item_ns / per_vec),
+            ]);
+        }
+    }
+    println!("{}", btable.render());
+
     // raw capacity: one worker, batch-32 applies
     let stack = dft_stack(n);
     let fast = FastBp::from_stack(&stack);
-    let mut ws = Workspace::new(n);
+    let mut bws = BatchWorkspace::with_capacity(32, n);
     let mut re = vec![0.0f32; 32 * n];
     let mut im = vec![0.0f32; 32 * n];
     Rng::new(1).fill_normal(&mut re, 0.0, 1.0);
     let per_batch = bench(&cfg, || {
-        fast.apply_complex_batch(black_box(&mut re), black_box(&mut im), 32, &mut ws);
+        fast.apply_complex_batch_col(black_box(&mut re), black_box(&mut im), 32, &mut bws);
     })
     .median();
     let raw_rps = 32.0 / (per_batch / 1e9);

@@ -9,6 +9,28 @@
 //!
 //! This is the serving hot path benchmarked in Figure 4 (right): butterfly
 //! vs GEMV vs FFT/DCT/DST.
+//!
+//! ## Batched execution
+//!
+//! [`FastBp::apply_real_batch`] / [`FastBp::apply_complex_batch`] process a
+//! `B × N` block through each hardened stage in one pass. Internally the
+//! block is held **column-major** (`buf[i * B + b]` = element `i` of lane
+//! `b`), so the `B` lanes of any position are contiguous:
+//!
+//! - a permutation stage becomes `N` contiguous `B`-element row copies
+//!   (one read of the gather table per position, not per lane);
+//! - a butterfly level loads each unit's four (real) or eight (complex)
+//!   twiddle scalars **once** and streams them across all `B` lanes with
+//!   unit stride — the batch loop is innermost precisely so the twiddle
+//!   values stay in registers while the data streams through, turning the
+//!   single-vector path's (load twiddle, load x, fma) pattern into
+//!   (load twiddle) × 1 + (load x, fma) × B.
+//!
+//! The row-major `[batch, n]` entry points transpose in and out of a
+//! [`BatchWorkspace`]; callers that can produce column-major blocks
+//! directly (the serving worker coalescing requests, for instance) use
+//! the `*_col` variants and skip both transposes. All workspace buffers
+//! are resizable and reused, keeping the serving loop allocation-free.
 
 use crate::butterfly::module::BpStack;
 use crate::butterfly::params::Field;
@@ -45,6 +67,66 @@ pub struct Workspace {
 impl Workspace {
     pub fn new(n: usize) -> Self {
         Workspace { buf_re: vec![0.0; n], buf_im: vec![0.0; n] }
+    }
+}
+
+/// Resizable scratch for the batched entry points. One instance serves
+/// any `(batch, n)` combination: buffers grow on demand and are reused
+/// across calls, so a serving loop that holds one of these performs no
+/// per-batch allocation.
+#[derive(Default)]
+pub struct BatchWorkspace {
+    /// Column-major staging planes used by the row-major entry points.
+    col_re: Vec<f32>,
+    col_im: Vec<f32>,
+    /// Gather scratch for permutation stages.
+    buf_re: Vec<f32>,
+    buf_im: Vec<f32>,
+}
+
+impl BatchWorkspace {
+    /// An empty workspace; buffers are grown on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pre-size the gather planes for a `batch × n` block (avoids growth
+    /// in the hot loop; the transpose planes of the row-major entry
+    /// points still grow lazily on first use).
+    pub fn with_capacity(batch: usize, n: usize) -> Self {
+        let mut ws = Self::default();
+        grow(&mut ws.buf_re, batch * n);
+        grow(&mut ws.buf_im, batch * n);
+        ws
+    }
+}
+
+/// Grow one workspace plane to at least `len` (never shrinks). Each
+/// entry point grows only the planes it actually touches, so e.g. the
+/// column-major serving path never allocates the transpose planes.
+fn grow(v: &mut Vec<f32>, len: usize) {
+    if v.len() < len {
+        v.resize(len, 0.0);
+    }
+}
+
+/// Transpose a row-major `[batch, n]` block into column-major `[n, batch]`.
+fn rows_to_cols(src: &[f32], dst: &mut [f32], batch: usize, n: usize) {
+    for b in 0..batch {
+        let row = &src[b * n..(b + 1) * n];
+        for (i, &v) in row.iter().enumerate() {
+            dst[i * batch + b] = v;
+        }
+    }
+}
+
+/// Transpose a column-major `[n, batch]` block back to row-major `[batch, n]`.
+fn cols_to_rows(src: &[f32], dst: &mut [f32], batch: usize, n: usize) {
+    for b in 0..batch {
+        let row = &mut dst[b * n..(b + 1) * n];
+        for (i, v) in row.iter_mut().enumerate() {
+            *v = src[i * batch + b];
+        }
     }
 }
 
@@ -206,18 +288,213 @@ impl FastBp {
         }
     }
 
-    /// Batched real apply over row-major `[batch, n]`.
-    pub fn apply_real_batch(&self, x: &mut [f32], batch: usize, ws: &mut Workspace) {
-        for bi in 0..batch {
-            self.apply_real(&mut x[bi * self.n..(bi + 1) * self.n], ws);
+    /// Batched real apply over row-major `[batch, n]` (each row one
+    /// vector). Transposes through the workspace into column-major form,
+    /// runs the batch-innermost kernel, transposes back. Panics if the
+    /// stack is complex.
+    pub fn apply_real_batch(&self, x: &mut [f32], batch: usize, ws: &mut BatchWorkspace) {
+        assert!(!self.complex, "complex FastBp: use apply_complex_batch");
+        debug_assert_eq!(x.len(), batch * self.n);
+        if batch == 0 {
+            return;
         }
+        if batch == 1 {
+            // A [1, n] row-major block *is* its column-major transpose.
+            grow(&mut ws.buf_re, self.n);
+            self.batch_stages_real(x, 1, &mut ws.buf_re);
+            return;
+        }
+        let len = batch * self.n;
+        grow(&mut ws.col_re, len);
+        grow(&mut ws.buf_re, len);
+        rows_to_cols(x, &mut ws.col_re[..len], batch, self.n);
+        let BatchWorkspace { col_re, buf_re, .. } = ws;
+        self.batch_stages_real(&mut col_re[..len], batch, &mut buf_re[..len]);
+        cols_to_rows(&ws.col_re[..len], x, batch, self.n);
     }
 
     /// Batched complex apply over row-major `[batch, n]` planes.
-    pub fn apply_complex_batch(&self, re: &mut [f32], im: &mut [f32], batch: usize, ws: &mut Workspace) {
-        for bi in 0..batch {
-            let r = bi * self.n..(bi + 1) * self.n;
-            self.apply_complex(&mut re[r.clone()], &mut im[r], ws);
+    pub fn apply_complex_batch(&self, re: &mut [f32], im: &mut [f32], batch: usize, ws: &mut BatchWorkspace) {
+        debug_assert_eq!(re.len(), batch * self.n);
+        debug_assert_eq!(im.len(), batch * self.n);
+        if batch == 0 {
+            return;
+        }
+        if batch == 1 {
+            grow(&mut ws.buf_re, self.n);
+            grow(&mut ws.buf_im, self.n);
+            let BatchWorkspace { buf_re, buf_im, .. } = ws;
+            self.batch_stages_complex(re, im, 1, buf_re, buf_im);
+            return;
+        }
+        let len = batch * self.n;
+        grow(&mut ws.col_re, len);
+        grow(&mut ws.col_im, len);
+        grow(&mut ws.buf_re, len);
+        grow(&mut ws.buf_im, len);
+        rows_to_cols(re, &mut ws.col_re[..len], batch, self.n);
+        rows_to_cols(im, &mut ws.col_im[..len], batch, self.n);
+        {
+            let BatchWorkspace { col_re, col_im, buf_re, buf_im } = ws;
+            self.batch_stages_complex(
+                &mut col_re[..len],
+                &mut col_im[..len],
+                batch,
+                &mut buf_re[..len],
+                &mut buf_im[..len],
+            );
+        }
+        cols_to_rows(&ws.col_re[..len], re, batch, self.n);
+        cols_to_rows(&ws.col_im[..len], im, batch, self.n);
+    }
+
+    /// Batched real apply on an already **column-major** `[n, batch]`
+    /// block (`x[i * batch + b]`). No transposes — the fastest entry when
+    /// the caller controls the layout (see the module docs).
+    pub fn apply_real_batch_col(&self, x: &mut [f32], batch: usize, ws: &mut BatchWorkspace) {
+        assert!(!self.complex, "complex FastBp: use apply_complex_batch_col");
+        debug_assert_eq!(x.len(), batch * self.n);
+        if batch == 0 {
+            return;
+        }
+        grow(&mut ws.buf_re, batch * self.n);
+        self.batch_stages_real(x, batch, &mut ws.buf_re[..batch * self.n]);
+    }
+
+    /// Batched complex apply on column-major `[n, batch]` planes.
+    pub fn apply_complex_batch_col(&self, re: &mut [f32], im: &mut [f32], batch: usize, ws: &mut BatchWorkspace) {
+        debug_assert_eq!(re.len(), batch * self.n);
+        debug_assert_eq!(im.len(), batch * self.n);
+        if batch == 0 {
+            return;
+        }
+        let len = batch * self.n;
+        grow(&mut ws.buf_re, len);
+        grow(&mut ws.buf_im, len);
+        let BatchWorkspace { buf_re, buf_im, .. } = ws;
+        self.batch_stages_complex(re, im, batch, &mut buf_re[..len], &mut buf_im[..len]);
+    }
+
+    /// The real batched stage walk: `x` is column-major `[n, batch]`,
+    /// `gather` is scratch of at least `n * batch`. Twiddles are loaded
+    /// once per unit; the innermost loop streams the `batch` lanes.
+    fn batch_stages_real(&self, x: &mut [f32], batch: usize, gather: &mut [f32]) {
+        let n = self.n;
+        for s in &self.stages {
+            if let Some(t) = &s.perm {
+                let g = &mut gather[..n * batch];
+                for (i, &src) in t.iter().enumerate() {
+                    g[i * batch..(i + 1) * batch].copy_from_slice(&x[src * batch..(src + 1) * batch]);
+                }
+                x.copy_from_slice(g);
+            }
+            for (l, tw) in s.tw_re.iter().enumerate() {
+                let half = 1usize << l;
+                let m = half << 1;
+                let blocks = n / m;
+                for b in 0..blocks {
+                    let base = b * m * batch;
+                    let toff = b * half * 4;
+                    let (lo, hi) = x[base..base + m * batch].split_at_mut(half * batch);
+                    let twb = &tw[toff..toff + half * 4];
+                    for j in 0..half {
+                        let t = j * 4;
+                        let (g00, g01, g10, g11) = (twb[t], twb[t + 1], twb[t + 2], twb[t + 3]);
+                        let lo_j = &mut lo[j * batch..(j + 1) * batch];
+                        let hi_j = &mut hi[j * batch..(j + 1) * batch];
+                        for (lo_v, hi_v) in lo_j.iter_mut().zip(hi_j.iter_mut()) {
+                            let x0 = *lo_v;
+                            let x1 = *hi_v;
+                            *lo_v = g00 * x0 + g01 * x1;
+                            *hi_v = g10 * x0 + g11 * x1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The complex batched stage walk (planar, column-major). Falls back
+    /// to real-twiddle arithmetic on both planes when the stack hardened
+    /// to real (mirrors [`apply_complex`](FastBp::apply_complex)).
+    fn batch_stages_complex(
+        &self,
+        re: &mut [f32],
+        im: &mut [f32],
+        batch: usize,
+        gather_re: &mut [f32],
+        gather_im: &mut [f32],
+    ) {
+        let n = self.n;
+        for s in &self.stages {
+            if let Some(t) = &s.perm {
+                let gr = &mut gather_re[..n * batch];
+                let gi = &mut gather_im[..n * batch];
+                for (i, &src) in t.iter().enumerate() {
+                    gr[i * batch..(i + 1) * batch].copy_from_slice(&re[src * batch..(src + 1) * batch]);
+                    gi[i * batch..(i + 1) * batch].copy_from_slice(&im[src * batch..(src + 1) * batch]);
+                }
+                re.copy_from_slice(gr);
+                im.copy_from_slice(gi);
+            }
+            for l in 0..self.levels {
+                let twr = &s.tw_re[l];
+                let half = 1usize << l;
+                let m = half << 1;
+                let blocks = n / m;
+                if self.complex {
+                    let twi = &s.tw_im[l];
+                    for b in 0..blocks {
+                        let base = b * m * batch;
+                        let toff = b * half * 4;
+                        let (re_lo, re_hi) = re[base..base + m * batch].split_at_mut(half * batch);
+                        let (im_lo, im_hi) = im[base..base + m * batch].split_at_mut(half * batch);
+                        let tw_r = &twr[toff..toff + half * 4];
+                        let tw_i = &twi[toff..toff + half * 4];
+                        for j in 0..half {
+                            let t = j * 4;
+                            let (g00r, g01r, g10r, g11r) = (tw_r[t], tw_r[t + 1], tw_r[t + 2], tw_r[t + 3]);
+                            let (g00i, g01i, g10i, g11i) = (tw_i[t], tw_i[t + 1], tw_i[t + 2], tw_i[t + 3]);
+                            let rlo = &mut re_lo[j * batch..(j + 1) * batch];
+                            let ilo = &mut im_lo[j * batch..(j + 1) * batch];
+                            let rhi = &mut re_hi[j * batch..(j + 1) * batch];
+                            let ihi = &mut im_hi[j * batch..(j + 1) * batch];
+                            for k in 0..batch {
+                                let (x0r, x0i) = (rlo[k], ilo[k]);
+                                let (x1r, x1i) = (rhi[k], ihi[k]);
+                                rlo[k] = g00r * x0r - g00i * x0i + g01r * x1r - g01i * x1i;
+                                ilo[k] = g00r * x0i + g00i * x0r + g01r * x1i + g01i * x1r;
+                                rhi[k] = g10r * x0r - g10i * x0i + g11r * x1r - g11i * x1i;
+                                ihi[k] = g10r * x0i + g10i * x0r + g11r * x1i + g11i * x1r;
+                            }
+                        }
+                    }
+                } else {
+                    for b in 0..blocks {
+                        let base = b * m * batch;
+                        let toff = b * half * 4;
+                        let (re_lo, re_hi) = re[base..base + m * batch].split_at_mut(half * batch);
+                        let (im_lo, im_hi) = im[base..base + m * batch].split_at_mut(half * batch);
+                        let twb = &twr[toff..toff + half * 4];
+                        for j in 0..half {
+                            let t = j * 4;
+                            let (g00, g01, g10, g11) = (twb[t], twb[t + 1], twb[t + 2], twb[t + 3]);
+                            let rlo = &mut re_lo[j * batch..(j + 1) * batch];
+                            let ilo = &mut im_lo[j * batch..(j + 1) * batch];
+                            let rhi = &mut re_hi[j * batch..(j + 1) * batch];
+                            let ihi = &mut im_hi[j * batch..(j + 1) * batch];
+                            for k in 0..batch {
+                                let (x0r, x0i) = (rlo[k], ilo[k]);
+                                let (x1r, x1i) = (rhi[k], ihi[k]);
+                                rlo[k] = g00 * x0r + g01 * x1r;
+                                ilo[k] = g00 * x0i + g01 * x1i;
+                                rhi[k] = g10 * x0r + g11 * x1r;
+                                ihi[k] = g10 * x0i + g11 * x1i;
+                            }
+                        }
+                    }
+                }
+            }
         }
     }
 
@@ -317,22 +594,140 @@ mod tests {
         }
     }
 
+    /// Batch sizes exercised everywhere below: 1 (degenerate), 3 (odd,
+    /// non-power-of-2 remainder), 64 (a full serving batch).
+    const BATCHES: [usize; 3] = [1, 3, 64];
+
     #[test]
-    fn batch_apply_matches_loop() {
+    fn batch_apply_matches_per_item_real() {
+        let n = 32;
+        for batch in BATCHES {
+            let stack = hardened_stack(n, 2, Field::Real, 13 + batch as u64);
+            let fast = FastBp::from_stack(&stack);
+            assert!(!fast.complex);
+            let mut rng = Rng::new(14);
+            let mut x = vec![0.0f32; batch * n];
+            rng.fill_normal(&mut x, 0.0, 1.0);
+            let mut ws = Workspace::new(n);
+            let mut bws = BatchWorkspace::new();
+            let mut batched = x.clone();
+            fast.apply_real_batch(&mut batched, batch, &mut bws);
+            for bi in 0..batch {
+                let mut row = x[bi * n..(bi + 1) * n].to_vec();
+                fast.apply_real(&mut row, &mut ws);
+                for i in 0..n {
+                    let got = batched[bi * n + i];
+                    assert!((row[i] - got).abs() < 1e-6, "B={batch} row {bi} [{i}]: {} vs {got}", row[i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_apply_matches_per_item_complex() {
+        let n = 32;
+        for batch in BATCHES {
+            let stack = hardened_stack(n, 2, Field::Complex, 31 + batch as u64);
+            let fast = FastBp::from_stack(&stack);
+            assert!(fast.complex);
+            let mut rng = Rng::new(32);
+            let mut re = vec![0.0f32; batch * n];
+            let mut im = vec![0.0f32; batch * n];
+            rng.fill_normal(&mut re, 0.0, 1.0);
+            rng.fill_normal(&mut im, 0.0, 1.0);
+            let mut ws = Workspace::new(n);
+            let mut bws = BatchWorkspace::with_capacity(batch, n);
+            let (mut bre, mut bim) = (re.clone(), im.clone());
+            fast.apply_complex_batch(&mut bre, &mut bim, batch, &mut bws);
+            for bi in 0..batch {
+                let mut rr = re[bi * n..(bi + 1) * n].to_vec();
+                let mut ri = im[bi * n..(bi + 1) * n].to_vec();
+                fast.apply_complex(&mut rr, &mut ri, &mut ws);
+                for i in 0..n {
+                    assert!((rr[i] - bre[bi * n + i]).abs() < 1e-6, "B={batch} row {bi} re[{i}]");
+                    assert!((ri[i] - bim[bi * n + i]).abs() < 1e-6, "B={batch} row {bi} im[{i}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_col_major_matches_row_major() {
         let n = 16;
-        let batch = 4;
-        let stack = hardened_stack(n, 2, Field::Real, 13);
+        for batch in BATCHES {
+            let stack = hardened_stack(n, 1, Field::Complex, 57 + batch as u64);
+            let fast = FastBp::from_stack(&stack);
+            let mut rng = Rng::new(58);
+            let mut re = vec![0.0f32; batch * n];
+            let mut im = vec![0.0f32; batch * n];
+            rng.fill_normal(&mut re, 0.0, 1.0);
+            rng.fill_normal(&mut im, 0.0, 1.0);
+            // column-major copy of the same block
+            let mut cre = vec![0.0f32; batch * n];
+            let mut cim = vec![0.0f32; batch * n];
+            rows_to_cols(&re, &mut cre, batch, n);
+            rows_to_cols(&im, &mut cim, batch, n);
+            let mut bws = BatchWorkspace::new();
+            fast.apply_complex_batch(&mut re, &mut im, batch, &mut bws);
+            fast.apply_complex_batch_col(&mut cre, &mut cim, batch, &mut bws);
+            for bi in 0..batch {
+                for i in 0..n {
+                    assert!((re[bi * n + i] - cre[i * batch + bi]).abs() < 1e-6, "B={batch} re ({bi},{i})");
+                    assert!((im[bi * n + i] - cim[i * batch + bi]).abs() < 1e-6, "B={batch} im ({bi},{i})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_apply_matches_dense_reference() {
+        use crate::linalg::complex::Cpx;
+        let n = 16;
+        let batch = 3;
+        let stack = hardened_stack(n, 2, Field::Complex, 21);
         let fast = FastBp::from_stack(&stack);
-        let mut rng = Rng::new(14);
-        let mut x = vec![0.0f32; batch * n];
-        rng.fill_normal(&mut x, 0.0, 1.0);
-        let mut ws = Workspace::new(n);
-        let mut batched = x.clone();
-        fast.apply_real_batch(&mut batched, batch, &mut ws);
+        let dense = stack.to_matrix();
+        let mut rng = Rng::new(22);
+        let mut re = vec![0.0f32; batch * n];
+        let mut im = vec![0.0f32; batch * n];
+        rng.fill_normal(&mut re, 0.0, 1.0);
+        rng.fill_normal(&mut im, 0.0, 1.0);
+        let (re0, im0) = (re.clone(), im.clone());
+        let mut bws = BatchWorkspace::new();
+        fast.apply_complex_batch(&mut re, &mut im, batch, &mut bws);
         for bi in 0..batch {
-            let mut row = x[bi * n..(bi + 1) * n].to_vec();
-            fast.apply_real(&mut row, &mut ws);
-            assert_eq!(row, batched[bi * n..(bi + 1) * n]);
+            let x: Vec<Cpx> = (0..n).map(|i| Cpx::new(re0[bi * n + i], im0[bi * n + i])).collect();
+            let want = dense.matvec(&x);
+            for i in 0..n {
+                assert!((re[bi * n + i] - want[i].re).abs() < 1e-4, "row {bi} re[{i}]");
+                assert!((im[bi * n + i] - want[i].im).abs() < 1e-4, "row {bi} im[{i}]");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_zero_and_workspace_reuse() {
+        let n = 8;
+        let stack = hardened_stack(n, 1, Field::Real, 71);
+        let fast = FastBp::from_stack(&stack);
+        let mut bws = BatchWorkspace::new();
+        // batch = 0 is a no-op, not a panic
+        fast.apply_real_batch(&mut [], 0, &mut bws);
+        // one workspace serves growing then shrinking batches
+        let mut rng = Rng::new(72);
+        for batch in [2usize, 64, 5] {
+            let mut x = vec![0.0f32; batch * n];
+            rng.fill_normal(&mut x, 0.0, 1.0);
+            let before = x.clone();
+            fast.apply_real_batch(&mut x, batch, &mut bws);
+            let mut ws = Workspace::new(n);
+            for bi in 0..batch {
+                let mut row = before[bi * n..(bi + 1) * n].to_vec();
+                fast.apply_real(&mut row, &mut ws);
+                for i in 0..n {
+                    assert!((row[i] - x[bi * n + i]).abs() < 1e-6);
+                }
+            }
         }
     }
 

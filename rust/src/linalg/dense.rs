@@ -226,6 +226,30 @@ impl CMat {
         self.im[k] = z.im;
     }
 
+    /// Batched `Y = A X` over planar row-major `[batch, cols]` inputs,
+    /// returning `[batch, rows]` planes. The dense O(N²) reference for
+    /// the batched fast-multiply equivalence tests.
+    pub fn matvec_batch_planar(&self, xre: &[f32], xim: &[f32], batch: usize) -> (Vec<f32>, Vec<f32>) {
+        assert_eq!(xre.len(), batch * self.cols);
+        assert_eq!(xim.len(), batch * self.cols);
+        let mut yre = vec![0.0f32; batch * self.rows];
+        let mut yim = vec![0.0f32; batch * self.rows];
+        for b in 0..batch {
+            let xoff = b * self.cols;
+            for i in 0..self.rows {
+                let base = i * self.cols;
+                let mut acc = Cpx::ZERO;
+                for j in 0..self.cols {
+                    acc += Cpx::new(self.re[base + j], self.im[base + j])
+                        * Cpx::new(xre[xoff + j], xim[xoff + j]);
+                }
+                yre[b * self.rows + i] = acc.re;
+                yim[b * self.rows + i] = acc.im;
+            }
+        }
+        (yre, yim)
+    }
+
     /// y = A x over complex scalars.
     pub fn matvec(&self, x: &[Cpx]) -> Vec<Cpx> {
         assert_eq!(x.len(), self.cols);

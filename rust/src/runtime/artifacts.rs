@@ -3,8 +3,9 @@
 //! XLA computation (HLO text) plus its input/output tensor specs so the
 //! Rust side can marshal literals without re-deriving shapes.
 
+use crate::util::error::{Context, Result};
 use crate::util::json::{self, Json};
-use anyhow::{anyhow, bail, Context, Result};
+use crate::{anyhow, bail};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 

@@ -27,7 +27,9 @@ use crate::butterfly::params::{BpParams, Field, PermTying, TwiddleTying};
 use crate::linalg::dense::CMat;
 use crate::runtime::artifacts::Manifest;
 use crate::runtime::tensor::Tensor;
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::Result;
+use crate::{anyhow, bail};
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
 
 /// Abstract executor: the coordinator and serving layers only see this.
@@ -209,12 +211,49 @@ impl Engine for NativeEngine {
 
 /// PJRT CPU executor over AOT artifacts. Compiles each entry once and
 /// caches the loaded executable.
+///
+/// Requires the external `xla` (xla-rs) bindings, which the hermetic
+/// build does not ship; without the `xla` cargo feature this type is a
+/// stub whose [`open`](XlaEngine::open) always fails, so
+/// [`auto_engine`] falls through to the [`NativeEngine`].
+#[cfg(feature = "xla")]
 pub struct XlaEngine {
     manifest: Manifest,
     client: xla::PjRtClient,
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+/// Stub standing in for the PJRT executor when the crate is built
+/// without the `xla` feature (the default; see the module docs). It can
+/// never be constructed — [`open`](XlaEngine::open) always fails, which
+/// is what routes [`auto_engine`] to the native engine.
+#[cfg(not(feature = "xla"))]
+pub struct XlaEngine {}
+
+#[cfg(not(feature = "xla"))]
+impl XlaEngine {
+    /// Always fails: the PJRT bindings are not compiled in.
+    pub fn open(_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        bail!("butterfly was built without the `xla` feature; PJRT engine unavailable")
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+impl Engine for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn has_entry(&self, _entry: &str) -> bool {
+        false
+    }
+
+    fn run(&mut self, entry: &str, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        bail!("xla engine stub cannot run '{entry}' (built without the `xla` feature)")
+    }
+}
+
+#[cfg(feature = "xla")]
 impl XlaEngine {
     /// Open the artifact directory (must contain `manifest.json`).
     pub fn open(dir: impl AsRef<std::path::Path>) -> Result<Self> {
@@ -242,6 +281,7 @@ impl XlaEngine {
     }
 }
 
+#[cfg(feature = "xla")]
 impl Engine for XlaEngine {
     fn name(&self) -> &'static str {
         "xla"

@@ -1,9 +1,15 @@
 //! One transform service: a worker thread owning a hardened [`FastBp`]
 //! multiply, draining a [`BatchQueue`] and answering per-request
-//! channels. Requests are single vectors; the worker coalesces them into
-//! batches and applies the fast multiply batch-wise.
+//! channels. Requests are single vectors; the worker coalesces the whole
+//! drained batch into one **column-major** `B × N` block and issues a
+//! single [`FastBp::apply_complex_batch_col`] call, so every stage's
+//! gather table and twiddle loads are amortized across the batch (see
+//! the layout discussion in [`crate::butterfly::fast`]). The coalesce
+//! buffers and [`BatchWorkspace`] persist across batches — the steady
+//! state serving loop performs no allocation beyond the reply vectors it
+//! hands back to clients (which reuse the request's own buffers).
 
-use crate::butterfly::fast::{FastBp, Workspace};
+use crate::butterfly::fast::{BatchWorkspace, FastBp};
 use crate::butterfly::module::BpStack;
 use crate::serving::batcher::{BatchQueue, BatcherConfig, PushError};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -113,25 +119,34 @@ impl TransformService {
         let worker = std::thread::Builder::new()
             .name(format!("serve-{name}"))
             .spawn(move || {
-                let mut ws = Workspace::new(n);
+                let mut ws = BatchWorkspace::new();
+                // Column-major coalesce planes, reused across batches.
+                let mut re: Vec<f32> = Vec::new();
+                let mut im: Vec<f32> = Vec::new();
                 while let Some(batch) = wq.next_batch() {
                     let b = batch.len();
-                    // coalesce into one planar [b, n] buffer
-                    let mut re = vec![0.0f32; b * n];
-                    let mut im = vec![0.0f32; b * n];
+                    re.resize(b * n, 0.0);
+                    im.resize(b * n, 0.0);
+                    // Coalesce request i into lane i of the column-major
+                    // [n, b] block: element j lands at j*b + i.
                     for (i, r) in batch.iter().enumerate() {
-                        re[i * n..(i + 1) * n].copy_from_slice(&r.re);
-                        im[i * n..(i + 1) * n].copy_from_slice(&r.im);
+                        for (j, (&vr, &vi)) in r.re.iter().zip(r.im.iter()).enumerate() {
+                            re[j * b + i] = vr;
+                            im[j * b + i] = vi;
+                        }
                     }
-                    fast.apply_complex_batch(&mut re, &mut im, b, &mut ws);
+                    // One batched fast multiply for the whole batch.
+                    fast.apply_complex_batch_col(&mut re, &mut im, b, &mut ws);
                     let now = Instant::now();
                     for (i, r) in batch.into_iter().enumerate() {
-                        let lat = now.duration_since(r.enqueued).as_micros() as u64;
+                        let Request { re: mut out_re, im: mut out_im, reply, enqueued } = r;
+                        for j in 0..n {
+                            out_re[j] = re[j * b + i];
+                            out_im[j] = im[j * b + i];
+                        }
+                        let lat = now.duration_since(enqueued).as_micros() as u64;
                         wstats.latency_micros.fetch_add(lat, Ordering::Relaxed);
-                        let _ = r.reply.send((
-                            re[i * n..(i + 1) * n].to_vec(),
-                            im[i * n..(i + 1) * n].to_vec(),
-                        ));
+                        let _ = reply.send((out_re, out_im));
                     }
                     wstats.served.fetch_add(b, Ordering::Relaxed);
                     wstats.batches.fetch_add(1, Ordering::Relaxed);

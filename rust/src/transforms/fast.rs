@@ -90,6 +90,29 @@ impl FftPlan {
         }
     }
 
+    /// Batched forward DFT over row-major `[batch, n]` planes. Reference
+    /// semantics (row-at-a-time): this is the specialized-transform
+    /// counterpart of `FastBp::apply_batch`, used as an oracle in the
+    /// batched equivalence tests and the batched Figure-4 benches.
+    pub fn forward_batch(&self, re: &mut [f32], im: &mut [f32], batch: usize) {
+        assert_eq!(re.len(), batch * self.n);
+        assert_eq!(im.len(), batch * self.n);
+        for b in 0..batch {
+            let r = b * self.n..(b + 1) * self.n;
+            self.run(&mut re[r.clone()], &mut im[r], false);
+        }
+    }
+
+    /// Batched scaled inverse DFT over row-major `[batch, n]` planes.
+    pub fn inverse_scaled_batch(&self, re: &mut [f32], im: &mut [f32], batch: usize) {
+        assert_eq!(re.len(), batch * self.n);
+        assert_eq!(im.len(), batch * self.n);
+        for b in 0..batch {
+            let r = b * self.n..(b + 1) * self.n;
+            self.inverse_scaled(&mut re[r.clone()], &mut im[r]);
+        }
+    }
+
     fn run(&self, re: &mut [f32], im: &mut [f32], inverse: bool) {
         let n = self.n;
         assert_eq!(re.len(), n);
@@ -163,6 +186,20 @@ pub fn fwht(x: &mut [f32]) {
             base += h * 2;
         }
         h *= 2;
+    }
+}
+
+/// Batched fast Walsh–Hadamard over row-major `[batch, n]` (normalized,
+/// in place, row-at-a-time reference semantics).
+pub fn fwht_batch(x: &mut [f32], batch: usize) {
+    if batch == 0 {
+        assert!(x.is_empty());
+        return;
+    }
+    let n = x.len() / batch;
+    assert_eq!(x.len(), batch * n);
+    for b in 0..batch {
+        fwht(&mut x[b * n..(b + 1) * n]);
     }
 }
 
@@ -460,6 +497,47 @@ mod tests {
             Ok(())
         });
         let _ = cmat_apply; // silence unused in some cfgs
+    }
+
+    #[test]
+    fn forward_batch_matches_per_row() {
+        let mut rng = Rng::new(9);
+        let n = 64;
+        let plan = FftPlan::new(n);
+        for batch in [1usize, 3, 8] {
+            let mut re = vec![0.0f32; batch * n];
+            let mut im = vec![0.0f32; batch * n];
+            rng.fill_normal(&mut re, 0.0, 1.0);
+            rng.fill_normal(&mut im, 0.0, 1.0);
+            let (orig_re, orig_im) = (re.clone(), im.clone());
+            let (mut bre, mut bim) = (re.clone(), im.clone());
+            plan.forward_batch(&mut bre, &mut bim, batch);
+            for b in 0..batch {
+                let r = b * n..(b + 1) * n;
+                plan.forward(&mut re[r.clone()], &mut im[r.clone()]);
+                assert_eq!(re[r.clone()], bre[r.clone()], "B={batch} row {b} re");
+                assert_eq!(im[r.clone()], bim[r], "B={batch} row {b} im");
+            }
+            // and the batched inverse restores the original block
+            plan.inverse_scaled_batch(&mut bre, &mut bim, batch);
+            check_close(&bre, &orig_re, 1e-4, 1e-4).unwrap();
+            check_close(&bim, &orig_im, 1e-4, 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn fwht_batch_matches_per_row() {
+        let mut rng = Rng::new(10);
+        let n = 32;
+        let batch = 5;
+        let mut x = vec![0.0f32; batch * n];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let mut b = x.clone();
+        fwht_batch(&mut b, batch);
+        for i in 0..batch {
+            fwht(&mut x[i * n..(i + 1) * n]);
+        }
+        check_close(&b, &x, 1e-6, 1e-6).unwrap();
     }
 
     #[test]

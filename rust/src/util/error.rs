@@ -1,0 +1,117 @@
+//! Minimal error plumbing with an `anyhow`-compatible surface.
+//!
+//! The hermetic build has no external crates, so the runtime layer's
+//! original `anyhow` usage is satisfied by this shim instead: a boxed
+//! string-message [`Error`], the [`anyhow!`]/[`bail!`] macros, and a
+//! [`Context`] extension trait. Only the subset this crate actually uses
+//! is implemented — swap back to the real `anyhow` if a crate registry
+//! ever becomes available.
+//!
+//! [`anyhow!`]: crate::anyhow
+//! [`bail!`]: crate::bail
+
+use std::fmt;
+
+/// A message-carrying error (optionally wrapping a source's rendered
+/// text, as produced by [`Context`]).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Self {
+        Error::msg(msg)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Self {
+        Error::msg(msg)
+    }
+}
+
+/// `Result` defaulting to [`Error`], like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`](crate::util::error::Error) from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`](crate::util::error::Error).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Attach lazy context to an error, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("broke at {}", 7)
+    }
+
+    #[test]
+    fn macros_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "broke at 7");
+        let e2: Error = anyhow!("x={}", 1);
+        assert_eq!(format!("{e2:?}"), "x=1");
+    }
+
+    #[test]
+    fn context_wraps() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let e = r.with_context(|| "reading manifest").unwrap_err();
+        assert!(e.to_string().starts_with("reading manifest: "));
+    }
+}

@@ -1,5 +1,7 @@
-//! Shared utilities: RNG, logging, JSON, timing, tables, property testing.
+//! Shared utilities: RNG, logging, JSON, timing, tables, property
+//! testing, and the `anyhow`-compatible error shim.
 
+pub mod error;
 pub mod json;
 pub mod log;
 pub mod quickcheck;

@@ -1,0 +1,117 @@
+//! Integration: the batched execution path end to end. The batched
+//! hardened apply must agree with (i) the per-item scalar path, (ii) the
+//! closed-form dense reference (`CMat::matvec_batch_planar`), (iii) the
+//! specialized batched FFT, and (iv) the full serving stack under a
+//! batch-forcing load — including non-power-of-2 batch remainders.
+
+use butterfly::butterfly::closed_form::{dft_stack, hadamard_stack};
+use butterfly::butterfly::fast::{BatchWorkspace, FastBp, Workspace};
+use butterfly::serving::{BatcherConfig, Router};
+use butterfly::transforms::fast::FftPlan;
+use butterfly::util::rng::Rng;
+use std::time::Duration;
+
+/// Batch sizes covering the degenerate, odd-remainder, and serving cases.
+const BATCHES: [usize; 3] = [1, 3, 64];
+
+#[test]
+fn batched_dft_matches_dense_reference() {
+    let n = 32;
+    let stack = dft_stack(n);
+    let fast = FastBp::from_stack(&stack);
+    let dense = stack.to_matrix();
+    let mut rng = Rng::new(1);
+    for batch in BATCHES {
+        let mut re = vec![0.0f32; batch * n];
+        let mut im = vec![0.0f32; batch * n];
+        rng.fill_normal(&mut re, 0.0, 1.0);
+        rng.fill_normal(&mut im, 0.0, 1.0);
+        let (want_re, want_im) = dense.matvec_batch_planar(&re, &im, batch);
+        let mut ws = BatchWorkspace::new();
+        fast.apply_complex_batch(&mut re, &mut im, batch, &mut ws);
+        for k in 0..batch * n {
+            assert!((re[k] - want_re[k]).abs() < 1e-4, "B={batch} re[{k}]");
+            assert!((im[k] - want_im[k]).abs() < 1e-4, "B={batch} im[{k}]");
+        }
+    }
+}
+
+#[test]
+fn batched_dft_matches_batched_fft() {
+    let n = 64;
+    let fast = FastBp::from_stack(&dft_stack(n));
+    let plan = FftPlan::new(n);
+    let batch = 5;
+    let mut rng = Rng::new(2);
+    let mut re = vec![0.0f32; batch * n];
+    let mut im = vec![0.0f32; batch * n];
+    rng.fill_normal(&mut re, 0.0, 1.0);
+    rng.fill_normal(&mut im, 0.0, 1.0);
+    let (mut fre, mut fim) = (re.clone(), im.clone());
+    let mut ws = BatchWorkspace::new();
+    fast.apply_complex_batch(&mut re, &mut im, batch, &mut ws);
+    // the closed-form stack is the *unitary* DFT; scale the raw FFT
+    plan.forward_batch(&mut fre, &mut fim, batch);
+    let s = 1.0 / (n as f32).sqrt();
+    for k in 0..batch * n {
+        assert!((re[k] - fre[k] * s).abs() < 1e-4, "re[{k}]");
+        assert!((im[k] - fim[k] * s).abs() < 1e-4, "im[{k}]");
+    }
+}
+
+#[test]
+fn batched_real_hadamard_matches_per_item() {
+    let n = 128;
+    let fast = FastBp::from_stack(&hadamard_stack(n));
+    assert!(!fast.complex);
+    let mut rng = Rng::new(3);
+    for batch in BATCHES {
+        let mut x = vec![0.0f32; batch * n];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let before = x.clone();
+        let mut bws = BatchWorkspace::with_capacity(batch, n);
+        fast.apply_real_batch(&mut x, batch, &mut bws);
+        let mut ws = Workspace::new(n);
+        for bi in 0..batch {
+            let mut row = before[bi * n..(bi + 1) * n].to_vec();
+            fast.apply_real(&mut row, &mut ws);
+            for i in 0..n {
+                assert!((row[i] - x[bi * n + i]).abs() < 1e-6, "B={batch} row {bi} [{i}]");
+            }
+        }
+    }
+}
+
+#[test]
+fn serving_stack_batches_and_answers_correctly() {
+    // Force real coalesced batches: 16 concurrent clients, a generous
+    // window, and max_batch below the client count so at least one
+    // drained batch has a non-power-of-2 size.
+    let n = 16;
+    let svc_cfg = BatcherConfig { max_batch: 6, max_wait: Duration::from_millis(20), queue_cap: 256 };
+    let mut router = Router::new();
+    router.install("dft", &dft_stack(n), 1, svc_cfg);
+    let f = butterfly::transforms::matrices::dft_matrix(n);
+    let handles: Vec<_> = (0..16)
+        .map(|k| {
+            let h = router.handle("dft").unwrap();
+            std::thread::spawn(move || {
+                let mut x = vec![0.0f32; 16];
+                x[k] = 1.0;
+                let (re, im) = h.call(x, vec![0.0; 16]).unwrap();
+                (k, re, im)
+            })
+        })
+        .collect();
+    for h in handles {
+        let (k, re, im) = h.join().unwrap();
+        for i in 0..n {
+            assert!((re[i] - f.re[i * n + k]).abs() < 1e-4, "col {k} re[{i}]");
+            assert!((im[i] - f.im[i * n + k]).abs() < 1e-4, "col {k} im[{i}]");
+        }
+    }
+    let stats = router.shutdown();
+    let s = &stats["dft"];
+    assert_eq!(s.served, 16);
+    eprintln!("served {} requests in {} batches (mean batch {:.2})", s.served, s.batches, s.mean_batch);
+}

@@ -7,6 +7,11 @@
 //! the per-item scalar path the serving worker used before batching).
 //! Amortizing gather tables and twiddle loads across lanes must make
 //! B = 64 strictly faster per vector than B = 1 for N ≥ 256.
+//!
+//! The last table is the shared-queue pool's scaling claim: vectors/sec
+//! at W ∈ {1, 2, 4, 8} workers draining ONE queue under a fixed offered
+//! load (same clients, same request count) — adding workers must not
+//! fragment batches the way per-replica queues did.
 
 use butterfly::butterfly::closed_form::dft_stack;
 use butterfly::butterfly::fast::{BatchWorkspace, FastBp, Workspace};
@@ -75,47 +80,86 @@ fn main() {
     let raw_rps = 32.0 / (per_batch / 1e9);
     println!("raw fast-multiply capacity (1 worker, batch 32): {raw_rps:.0} req/s\n");
 
-    let mut table = Table::new(&["max_batch", "window µs", "replicas", "req/s", "mean batch", "mean latency µs"])
+    // batching-window sweep at a fixed worker count
+    let mut table = Table::new(&["max_batch", "window µs", "workers", "req/s", "mean batch", "mean latency µs"])
         .with_title(format!("serving bench: N={n}, {clients} clients, {requests} requests"));
-    for (max_batch, wait_us, replicas) in
+    for (max_batch, wait_us, workers) in
         [(1usize, 0u64, 1usize), (8, 200, 1), (32, 500, 1), (32, 500, 2), (64, 1000, 2)]
     {
-        let mut router = Router::new();
-        router.install(
-            "dft",
-            &stack,
-            replicas,
-            BatcherConfig { max_batch, max_wait: Duration::from_micros(wait_us), queue_cap: 65536 },
-        );
-        let t0 = Instant::now();
-        let threads: Vec<_> = (0..clients)
-            .map(|t| {
-                let h = router.handle("dft").unwrap();
-                let per = requests / clients;
-                std::thread::spawn(move || {
-                    let mut rng = Rng::new(t as u64);
-                    for _ in 0..per {
-                        let mut x = vec![0.0f32; 1024];
-                        rng.fill_normal(&mut x, 0.0, 1.0);
-                        h.call_real(x).expect("serve");
-                    }
-                })
-            })
-            .collect();
-        for th in threads {
-            th.join().unwrap();
-        }
-        let wall = t0.elapsed().as_secs_f64();
-        let stats = router.shutdown();
-        let s = &stats["dft"];
+        let (rps, mean_batch, mean_lat) = run_load(&stack, workers, max_batch, wait_us, clients, requests);
         table.add_row(vec![
             max_batch.to_string(),
             wait_us.to_string(),
-            replicas.to_string(),
-            format!("{:.0}", s.served as f64 / wall),
-            format!("{:.2}", s.served as f64 / s.batches.max(1) as f64),
-            format!("{:.0}", s.mean_latency_micros),
+            workers.to_string(),
+            format!("{rps:.0}"),
+            format!("{mean_batch:.2}"),
+            format!("{mean_lat:.0}"),
         ]);
     }
     println!("{}", table.render());
+
+    // worker-count sweep at FIXED offered load: the shared-queue pool's
+    // scaling claim — vectors/sec as W grows, same clients and requests
+    let mut wtable = Table::new(&["workers", "vectors/s", "mean batch", "mean latency µs", "scaling vs W=1"])
+        .with_title(format!(
+            "shared-queue pool scaling: N={n}, {clients} clients, {requests} requests, max_batch=32, window 500µs"
+        ));
+    let mut base_rps = 0.0f64;
+    for workers in [1usize, 2, 4, 8] {
+        let (rps, mean_batch, mean_lat) = run_load(&stack, workers, 32, 500, clients, requests);
+        if workers == 1 {
+            base_rps = rps;
+        }
+        wtable.add_row(vec![
+            workers.to_string(),
+            format!("{rps:.0}"),
+            format!("{mean_batch:.2}"),
+            format!("{mean_lat:.0}"),
+            format!("{:.2}x", rps / base_rps),
+        ]);
+    }
+    println!("{}", wtable.render());
+}
+
+/// Drive `requests` total requests from `clients` threads through one
+/// route served by a `workers`-wide shared-queue pool; returns
+/// (vectors/sec, mean batch, mean latency µs).
+fn run_load(
+    stack: &butterfly::butterfly::module::BpStack,
+    workers: usize,
+    max_batch: usize,
+    wait_us: u64,
+    clients: usize,
+    requests: usize,
+) -> (f64, f64, f64) {
+    let n = stack.n();
+    let mut router = Router::new();
+    router.install(
+        "dft",
+        stack,
+        workers,
+        BatcherConfig { max_batch, max_wait: Duration::from_micros(wait_us), queue_cap: 65536 },
+    );
+    let t0 = Instant::now();
+    let threads: Vec<_> = (0..clients)
+        .map(|t| {
+            let h = router.handle("dft").unwrap();
+            let per = requests / clients;
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(t as u64);
+                for _ in 0..per {
+                    let mut x = vec![0.0f32; n];
+                    rng.fill_normal(&mut x, 0.0, 1.0);
+                    h.call_real(x).expect("serve");
+                }
+            })
+        })
+        .collect();
+    for th in threads {
+        th.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = router.shutdown();
+    let s = &stats["dft"];
+    (s.served as f64 / wall, s.served as f64 / s.batches.max(1) as f64, s.mean_latency_micros)
 }

@@ -31,6 +31,19 @@
 //! directly (the serving worker coalescing requests, for instance) use
 //! the `*_col` variants and skip both transposes. All workspace buffers
 //! are resizable and reused, keeping the serving loop allocation-free.
+//!
+//! ## Sharing across worker threads
+//!
+//! A [`FastBp`] is immutable after [`from_stack`]: the hardened gather
+//! tables and expanded twiddles are plain owned buffers with no interior
+//! mutability, so the type is `Send + Sync` (asserted at compile time
+//! below) and one `Arc<FastBp>` is shared by every worker of a
+//! [`ServicePool`]. All *mutable* state of an apply lives in the
+//! caller-owned [`Workspace`] / [`BatchWorkspace`], which each worker
+//! owns privately — concurrent applies never contend.
+//!
+//! [`from_stack`]: FastBp::from_stack
+//! [`ServicePool`]: crate::serving::service::ServicePool
 
 use crate::butterfly::module::BpStack;
 use crate::butterfly::params::Field;
@@ -55,6 +68,15 @@ pub struct FastBp {
     /// Whether any twiddle has a nonzero imaginary part.
     pub complex: bool,
     stages: Vec<FastStage>,
+}
+
+// The serving pool shares one `Arc<FastBp>` across its drainer threads;
+// keep the type thread-shareable (it would silently stop being so if a
+// cache cell or raw pointer ever crept into a stage).
+#[allow(dead_code)]
+fn assert_fastbp_is_send_sync() {
+    fn check<T: Send + Sync>() {}
+    check::<FastBp>();
 }
 
 /// Reusable scratch for gather stages (avoids per-call allocation in the
@@ -728,6 +750,45 @@ mod tests {
                     assert!((row[i] - x[bi * n + i]).abs() < 1e-6);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn one_fastbp_shared_by_many_threads_stays_consistent() {
+        // The ServicePool pattern in miniature: one Arc'd FastBp, N
+        // threads applying concurrently with private workspaces — every
+        // thread must get the single-threaded answer.
+        use std::sync::Arc;
+        let n = 32;
+        let stack = hardened_stack(n, 2, Field::Complex, 101);
+        let fast = Arc::new(FastBp::from_stack(&stack));
+        let mut rng = Rng::new(102);
+        let mut re = vec![0.0f32; n];
+        let mut im = vec![0.0f32; n];
+        rng.fill_normal(&mut re, 0.0, 1.0);
+        rng.fill_normal(&mut im, 0.0, 1.0);
+        let (mut want_re, mut want_im) = (re.clone(), im.clone());
+        fast.apply_complex(&mut want_re, &mut want_im, &mut Workspace::new(n));
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let fast = Arc::clone(&fast);
+                let (re, im) = (re.clone(), im.clone());
+                let (want_re, want_im) = (want_re.clone(), want_im.clone());
+                std::thread::spawn(move || {
+                    let mut ws = Workspace::new(fast.n);
+                    for _ in 0..50 {
+                        let (mut r, mut i) = (re.clone(), im.clone());
+                        fast.apply_complex(&mut r, &mut i, &mut ws);
+                        for k in 0..fast.n {
+                            assert!((r[k] - want_re[k]).abs() < 1e-6, "re[{k}]");
+                            assert!((i[k] - want_im[k]).abs() < 1e-6, "im[{k}]");
+                        }
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
         }
     }
 

@@ -57,6 +57,22 @@ struct WorkDone {
     id: usize,
     trial: Trial,
     rmse: f64,
+    /// Adam steps executed in THIS rung only. `trial.steps_done` is
+    /// cumulative across rungs, so summing it per rung over-counts every
+    /// surviving trial once per rung it passes through.
+    delta_steps: usize,
+}
+
+/// FNV-1a of the transform kind name. Distinct transforms must draw
+/// distinct trial configurations even when their names have equal length
+/// (`dft`/`dct`) — the previous seed used `name().len()`, which collided.
+fn fnv1a_64(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
 }
 
 /// Run a full Hyperband search for one job on a worker pool; returns the
@@ -68,7 +84,7 @@ pub fn run_job(job: &FactorizeJob, cfg: &SchedulerConfig, metrics: &Metrics, reg
         eta: cfg.eta,
         target_loss: Some(job.target_rmse * job.target_rmse),
     });
-    let mut rng = Rng::new(cfg.seed ^ job.n as u64 ^ (job.kind.name().len() as u64) << 32);
+    let mut rng = Rng::new(cfg.seed ^ job.n as u64 ^ fnv1a_64(job.kind.name()));
     let stop = AtomicBool::new(false);
     let mut next_id = 0usize;
     let mut best: Option<(f64, TrialConfig, Vec<f32>, f32)> = None;
@@ -106,7 +122,8 @@ pub fn run_job(job: &FactorizeJob, cfg: &SchedulerConfig, metrics: &Metrics, reg
                     scope.spawn(move || loop {
                         let item = queue.lock().unwrap().pop_front();
                         let Some(mut item) = item else { break };
-                        let k = item.to_steps.saturating_sub(item.trial.steps_done);
+                        let before = item.trial.steps_done;
+                        let k = item.to_steps.saturating_sub(before);
                         let rmse = if k > 0 && !stop.load(Ordering::Relaxed) {
                             let r = item.trial.advance(k, job.target_rmse);
                             if r <= job.target_rmse {
@@ -116,7 +133,8 @@ pub fn run_job(job: &FactorizeJob, cfg: &SchedulerConfig, metrics: &Metrics, reg
                         } else {
                             item.trial.last_loss.sqrt()
                         };
-                        let _ = tx.send(WorkDone { id: item.id, trial: item.trial, rmse });
+                        let delta_steps = item.trial.steps_done - before;
+                        let _ = tx.send(WorkDone { id: item.id, trial: item.trial, rmse, delta_steps });
                     });
                 }
                 drop(tx);
@@ -124,7 +142,7 @@ pub fn run_job(job: &FactorizeJob, cfg: &SchedulerConfig, metrics: &Metrics, reg
             let mut done: Vec<WorkDone> = rx.into_iter().collect();
             for d in &done {
                 registry.update(d.id, d.trial.steps_done, d.rmse, ri);
-                total_steps += d.trial.steps_done;
+                total_steps += d.delta_steps;
             }
             done.sort_by(|a, b| a.rmse.partial_cmp(&b.rmse).unwrap());
             // track global best
@@ -209,6 +227,41 @@ mod tests {
         assert!(res.trials_run >= 9);
         assert!(registry.len() >= res.trials_run.min(9));
         assert!(metrics.snapshot().steps_total > 0);
+    }
+
+    #[test]
+    fn total_steps_is_sum_of_per_trial_deltas() {
+        // Σ per-rung deltas == Σ final cumulative steps over all trials.
+        // The old accounting added the *cumulative* steps_done once per
+        // rung, so any trial surviving k rungs was counted k times.
+        let job = FactorizeJob::paper(TransformKind::Hadamard, 8, 5, 10_000);
+        // max_resource 9 ⇒ brackets with up to 3 rungs: survivors exist
+        let cfg = SchedulerConfig { workers: 3, max_resource: 9, eta: 3, step_quantum: 5, seed: 21 };
+        let metrics = Metrics::new();
+        let registry = Registry::new();
+        let res = run_job(&job, &cfg, &metrics, &registry);
+        let per_trial_total: usize = registry.leaderboard().iter().map(|r| r.steps).sum();
+        assert_eq!(
+            res.total_steps, per_trial_total,
+            "total_steps must equal the sum of per-trial step counts"
+        );
+        assert_eq!(metrics.snapshot().steps_total, res.total_steps);
+        assert!(res.total_steps > 0);
+    }
+
+    #[test]
+    fn equal_length_kind_names_sample_distinct_configs() {
+        // dft and dct have names of equal length; with the old
+        // `name().len()` seed both jobs drew identical trial configs.
+        let cfg = SchedulerConfig { workers: 1, max_resource: 1, eta: 3, step_quantum: 1, seed: 11 };
+        let mut first_configs = Vec::new();
+        for kind in [TransformKind::Dft, TransformKind::Dct] {
+            let job = FactorizeJob::paper(kind, 4, 9, 2);
+            let registry = Registry::new();
+            run_job(&job, &cfg, &Metrics::new(), &registry);
+            first_configs.push(registry.get(0).expect("trial 0 registered").config);
+        }
+        assert_ne!(first_configs[0], first_configs[1], "dft/dct drew identical trial configs");
     }
 
     #[test]

@@ -64,7 +64,9 @@ COMMANDS:
   zoo         run the Figure-3 recovery grid
               --max-n 64 --transforms dft,dct,... --max-resource 27
   serve       learn a transform then serve it with dynamic batching
-              --transform dft --n 256 --requests 1000 --replicas 2
+              --transform dft --n 256 --requests 1000 --pool-workers 2
+              (pool workers drain ONE shared queue; --replicas is an
+              accepted alias from the old per-replica-queue design)
   engines     report available execution engines / artifacts
   help        this text
 
@@ -176,7 +178,7 @@ fn cmd_serve(args: &Args) -> i32 {
         let kind = parse_kind(args)?;
         let n = args.usize_or("n", 256)?;
         let requests = args.usize_or("requests", 1000)?;
-        let replicas = args.usize_or("replicas", 2)?;
+        let workers = args.usize_or("pool-workers", args.usize_or("replicas", 2)?)?;
         // learn (or construct) the transform, then install it
         let mut rng = butterfly::util::rng::Rng::new(7);
         let stack = match butterfly::butterfly::closed_form::closed_form_stack(kind, n, &mut rng) {
@@ -190,7 +192,7 @@ fn cmd_serve(args: &Args) -> i32 {
             }
         };
         let mut router = Router::new();
-        router.install(kind.name(), &stack, replicas, BatcherConfig::default());
+        router.install(kind.name(), &stack, workers, BatcherConfig::default());
         let t0 = Instant::now();
         let handle = router.handle(kind.name()).unwrap();
         let client_threads: Vec<_> = (0..4)
@@ -213,7 +215,7 @@ fn cmd_serve(args: &Args) -> i32 {
         let wall = t0.elapsed().as_secs_f64();
         let stats = router.shutdown();
         let s = &stats[kind.name()];
-        println!("served {} requests over {replicas} replicas in {wall:.2}s", s.served);
+        println!("served {} requests via a {workers}-worker shared-queue pool in {wall:.2}s", s.served);
         println!("throughput : {:.0} req/s", s.served as f64 / wall);
         println!("mean batch : {:.2}", s.served as f64 / s.batches.max(1) as f64);
         Ok(())

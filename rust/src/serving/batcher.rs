@@ -3,6 +3,15 @@
 //! the standard latency/throughput knob of serving systems. The queue is
 //! bounded; producers get backpressure errors instead of unbounded
 //! memory growth.
+//!
+//! The queue is MPMC: any number of producers push, and any number of
+//! drainer threads (a [`ServicePool`]'s workers) call [`next_batch`]
+//! concurrently. Each pending request is handed to exactly one drainer,
+//! and a drainer that leaves requests behind wakes a sibling, so the
+//! pool is work-conserving: no request waits while a worker idles.
+//!
+//! [`ServicePool`]: crate::serving::service::ServicePool
+//! [`next_batch`]: BatchQueue::next_batch
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -26,7 +35,7 @@ struct Inner<T> {
     closed: bool,
 }
 
-/// MPSC bounded queue with batch-window draining.
+/// MPMC bounded queue with batch-window draining.
 pub struct BatchQueue<T> {
     cfg: BatcherConfig,
     inner: Mutex<Inner<T>>,
@@ -60,37 +69,54 @@ impl<T> BatchQueue<T> {
         Ok(())
     }
 
-    /// Drain the next batch (consumer side). Blocks until at least one
-    /// request is available, then waits up to `max_wait` (measured from
-    /// the oldest request) for the batch to fill. Returns `None` once
-    /// closed and empty.
+    /// Drain the next batch (consumer side). Safe for any number of
+    /// concurrent drainers: each pending request goes to exactly one of
+    /// them. Blocks until at least one request is available, then waits
+    /// up to `max_wait` (measured from the oldest pending request) for
+    /// the batch to fill. Returns `None` once closed and empty.
     pub fn next_batch(&self) -> Option<Vec<T>> {
         let mut g = self.inner.lock().unwrap();
         loop {
+            while g.queue.is_empty() {
+                if g.closed {
+                    return None;
+                }
+                g = self.cv.wait(g).unwrap();
+            }
+            // Batch window: wait for more arrivals up to max_wait from
+            // the oldest pending request. The front is re-read on every
+            // iteration — a sibling drainer may have taken the request we
+            // measured from while we were parked in wait_timeout.
+            while g.queue.len() < self.cfg.max_batch && !g.closed {
+                let oldest = g.queue.front().unwrap().1;
+                let elapsed = oldest.elapsed();
+                if elapsed >= self.cfg.max_wait {
+                    break;
+                }
+                let (g2, timeout) = self.cv.wait_timeout(g, self.cfg.max_wait - elapsed).unwrap();
+                g = g2;
+                if g.queue.is_empty() {
+                    break;
+                }
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+            if g.queue.is_empty() {
+                // A sibling drained everything during our window; park
+                // again (or exit, if the queue closed meanwhile).
+                continue;
+            }
+            let take = g.queue.len().min(self.cfg.max_batch);
+            let batch: Vec<T> = g.queue.drain(..take).map(|(t, _)| t).collect();
             if !g.queue.is_empty() {
-                break;
+                // Work remains beyond what fit in this batch: hand it to
+                // an idle sibling now instead of leaving it until the
+                // next push's notify (which may never come).
+                self.cv.notify_one();
             }
-            if g.closed {
-                return None;
-            }
-            g = self.cv.wait(g).unwrap();
+            return Some(batch);
         }
-        // batch window: wait for more arrivals up to max_wait from the
-        // oldest pending request
-        let oldest = g.queue.front().unwrap().1;
-        while g.queue.len() < self.cfg.max_batch && !g.closed {
-            let elapsed = oldest.elapsed();
-            if elapsed >= self.cfg.max_wait {
-                break;
-            }
-            let (g2, timeout) = self.cv.wait_timeout(g, self.cfg.max_wait - elapsed).unwrap();
-            g = g2;
-            if timeout.timed_out() {
-                break;
-            }
-        }
-        let take = g.queue.len().min(self.cfg.max_batch);
-        Some(g.queue.drain(..take).map(|(t, _)| t).collect())
     }
 
     /// Close the queue: producers fail, the consumer drains what's left.
@@ -157,6 +183,86 @@ mod tests {
         q.push(42).unwrap();
         let got = h.join().unwrap().unwrap();
         assert_eq!(got, vec![42]);
+    }
+
+    #[test]
+    fn concurrent_drainers_partition_the_queue() {
+        // 4 drainers against one queue: every item must be delivered to
+        // exactly one drainer, and everyone must terminate after close().
+        let q = Arc::new(BatchQueue::new(BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 8192,
+        }));
+        let drainers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(batch) = q.next_batch() {
+                        got.extend(batch);
+                    }
+                    got
+                })
+            })
+            .collect();
+        let total = 5000usize;
+        for i in 0..total {
+            loop {
+                match q.push(i) {
+                    Ok(()) => break,
+                    Err(PushError::Full) => std::thread::yield_now(),
+                    Err(PushError::Closed) => panic!("closed while producing"),
+                }
+            }
+        }
+        q.close();
+        let mut all: Vec<usize> = Vec::new();
+        for d in drainers {
+            all.extend(d.join().unwrap());
+        }
+        all.sort_unstable();
+        assert_eq!(all.len(), total, "every item delivered exactly once");
+        for (i, &v) in all.iter().enumerate() {
+            assert_eq!(v, i, "item {i} lost or duplicated");
+        }
+    }
+
+    #[test]
+    fn leftover_work_is_handed_to_a_sibling() {
+        // One burst larger than max_batch while two drainers are idle:
+        // the first drainer takes max_batch and must wake the second for
+        // the remainder (no push arrives afterwards to do it).
+        let q = Arc::new(BatchQueue::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(100),
+            queue_cap: 64,
+        }));
+        let drainers: Vec<_> = (0..2)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(batch) = q.next_batch() {
+                        got.extend(batch);
+                    }
+                    got.len()
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(10)); // let both park
+        for i in 0..20 {
+            q.push(i).unwrap();
+        }
+        // all 20 must drain even though only 20 notifications were sent
+        // and batches cap at 8
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while !q.is_empty() && std::time::Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        q.close();
+        let total: usize = drainers.into_iter().map(|d| d.join().unwrap()).sum();
+        assert_eq!(total, 20);
     }
 
     #[test]

@@ -7,12 +7,22 @@
 //! for hand-tuned transform kernels, and (unlike FFTW/cuFFT) one serving
 //! stack covers *every* transform the parameterization can learn.
 //!
-//! - [`batcher`] — the dynamic batching queue (max batch / max wait).
-//! - [`service`] — a worker thread owning one [`FastBp`] and draining
-//!   the queue.
-//! - [`router`] — name → service dispatch with round-robin replicas.
+//! Architecture: each route is **one shared queue drained by a pool of
+//! workers** ([`ServicePool`]). The old one-queue-per-replica,
+//! round-robin design suffered head-of-line blocking (a deep replica
+//! stalled its assigned requests while siblings idled) and fragmented
+//! batches across replicas; the shared queue is work-conserving and
+//! lets batches fill from the whole offered load.
+//!
+//! - [`batcher`] — the MPMC dynamic batching queue (max batch / max wait).
+//! - [`service`] — [`ServicePool`]: `W` workers sharing one
+//!   `Arc<FastBp>`, each with private scratch; sync [`call`] and
+//!   pipelined [`submit`]/[`Ticket`] client APIs.
+//! - [`router`] — name → pool dispatch.
 //!
 //! [`FastBp`]: crate::butterfly::fast::FastBp
+//! [`call`]: ServiceHandle::call
+//! [`submit`]: ServiceHandle::submit
 
 pub mod batcher;
 pub mod router;
@@ -20,4 +30,4 @@ pub mod service;
 
 pub use batcher::{BatchQueue, BatcherConfig};
 pub use router::Router;
-pub use service::{ServiceHandle, ServiceStats, TransformService};
+pub use service::{ServiceHandle, ServicePool, ServiceStats, Ticket};

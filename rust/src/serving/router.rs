@@ -1,22 +1,20 @@
-//! Request router: transform name → service, with round-robin across
-//! replicas (multiple worker threads serving the same learned transform,
-//! useful because one `FastBp` worker is single-threaded by design).
+//! Request router: transform name → a [`ServicePool`] (one shared
+//! [`BatchQueue`] drained by `W` workers). There is no round-robin and
+//! no per-replica queue any more: a route **is** `{queue, pool}`, so a
+//! slow or deep moment in one worker never strands requests while
+//! sibling workers idle — any idle worker drains the next pending batch.
+//!
+//! [`BatchQueue`]: crate::serving::batcher::BatchQueue
 
 use crate::butterfly::module::BpStack;
 use crate::serving::batcher::BatcherConfig;
-use crate::serving::service::{ServiceHandle, ServiceStats, TransformService};
+use crate::serving::service::{ServiceHandle, ServicePool, ServiceStats, Ticket};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
 
-struct Route {
-    services: Vec<TransformService>,
-    next: AtomicUsize,
-}
-
-/// Name-based dispatch over installed transform services.
+/// Name-based dispatch over installed transform service pools.
 #[derive(Default)]
 pub struct Router {
-    routes: HashMap<String, Route>,
+    routes: HashMap<String, ServicePool>,
 }
 
 impl Router {
@@ -24,23 +22,20 @@ impl Router {
         Self::default()
     }
 
-    /// Install a learned stack under `name` with `replicas` workers.
-    pub fn install(&mut self, name: &str, stack: &BpStack, replicas: usize, cfg: BatcherConfig) {
-        let services = (0..replicas.max(1))
-            .map(|i| TransformService::spawn(format!("{name}#{i}"), stack, cfg.clone()))
-            .collect();
-        self.routes.insert(name.to_string(), Route { services, next: AtomicUsize::new(0) });
+    /// Install a learned stack under `name`, served by a pool of
+    /// `workers` threads sharing one queue.
+    pub fn install(&mut self, name: &str, stack: &BpStack, workers: usize, cfg: BatcherConfig) {
+        self.routes.insert(name.to_string(), ServicePool::spawn(name, stack, workers, cfg));
     }
 
     pub fn names(&self) -> Vec<&str> {
         self.routes.keys().map(|s| s.as_str()).collect()
     }
 
-    /// Round-robin handle for `name`.
+    /// Handle for `name`'s pool (every handle feeds the same shared
+    /// queue, so any clone is as good as any other).
     pub fn handle(&self, name: &str) -> Option<ServiceHandle> {
-        let route = self.routes.get(name)?;
-        let i = route.next.fetch_add(1, Ordering::Relaxed) % route.services.len();
-        Some(route.services[i].handle())
+        self.routes.get(name).map(|p| p.handle())
     }
 
     /// Synchronous routed call.
@@ -48,57 +43,31 @@ impl Router {
         self.handle(name).ok_or_else(|| format!("no route '{name}'"))?.call(re, im)
     }
 
-    /// Aggregate stats per route.
-    pub fn stats(&self) -> HashMap<String, ServiceStats> {
-        self.routes
-            .iter()
-            .map(|(name, route)| {
-                let mut agg = ServiceStats {
-                    served: 0,
-                    batches: 0,
-                    rejected: 0,
-                    mean_latency_micros: 0.0,
-                    mean_batch: 0.0,
-                };
-                let mut lat_sum = 0.0f64;
-                for s in &route.services {
-                    let st = s.handle().stats();
-                    lat_sum += st.mean_latency_micros * st.served as f64;
-                    agg.served += st.served;
-                    agg.batches += st.batches;
-                    agg.rejected += st.rejected;
-                }
-                if agg.served > 0 {
-                    agg.mean_latency_micros = lat_sum / agg.served as f64;
-                }
-                if agg.batches > 0 {
-                    agg.mean_batch = agg.served as f64 / agg.batches as f64;
-                }
-                (name.clone(), agg)
-            })
-            .collect()
+    /// Non-blocking routed submit: enqueue and return a [`Ticket`].
+    pub fn submit(&self, name: &str, re: Vec<f32>, im: Vec<f32>) -> Result<Ticket, String> {
+        self.handle(name).ok_or_else(|| format!("no route '{name}'"))?.submit(re, im)
     }
 
-    /// Shut everything down, returning final per-route stats.
+    /// Per-route stats. Each pool keeps ONE shared counter set, so this
+    /// is a plain snapshot — the same snapshot [`shutdown`] returns,
+    /// which is what keeps the live and final numbers consistent.
+    ///
+    /// [`shutdown`]: Router::shutdown
+    pub fn stats(&self) -> HashMap<String, ServiceStats> {
+        self.routes.iter().map(|(name, pool)| (name.clone(), pool.stats())).collect()
+    }
+
+    /// Everything the router served, aggregated across routes with
+    /// served-weighted means (see [`ServiceStats::merge`]).
+    pub fn overall(&self) -> ServiceStats {
+        ServiceStats::merge(self.routes.values().map(|p| p.stats()))
+    }
+
+    /// Shut every pool down (drain, join workers), returning final
+    /// per-route stats — identical in method to [`Router::stats`]: both
+    /// read the pool's single shared counter set.
     pub fn shutdown(self) -> HashMap<String, ServiceStats> {
-        let mut out = HashMap::new();
-        for (name, route) in self.routes {
-            let mut agg: Option<ServiceStats> = None;
-            for s in route.services {
-                let st = s.shutdown();
-                agg = Some(match agg {
-                    None => st,
-                    Some(mut a) => {
-                        a.served += st.served;
-                        a.batches += st.batches;
-                        a.rejected += st.rejected;
-                        a
-                    }
-                });
-            }
-            out.insert(name, agg.unwrap());
-        }
-        out
+        self.routes.into_iter().map(|(name, pool)| (name, pool.shutdown())).collect()
     }
 }
 
@@ -126,14 +95,48 @@ mod tests {
     }
 
     #[test]
-    fn round_robin_spreads_over_replicas() {
+    fn pool_workers_drain_one_shared_queue() {
         let mut r = Router::new();
         r.install("dft", &dft_stack(8), 3, BatcherConfig::default());
         for _ in 0..9 {
             r.call("dft", vec![1.0; 8], vec![0.0; 8]).unwrap();
         }
         let stats = r.shutdown();
-        // all served, across replicas
         assert_eq!(stats["dft"].served, 9);
+    }
+
+    #[test]
+    fn shutdown_stats_match_live_stats() {
+        let mut r = Router::new();
+        r.install("dft", &dft_stack(16), 2, BatcherConfig::default());
+        r.install("hadamard", &hadamard_stack(16), 2, BatcherConfig::default());
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let name = if t % 2 == 0 { "dft" } else { "hadamard" };
+                let h = r.handle(name).unwrap();
+                std::thread::spawn(move || {
+                    for _ in 0..25 {
+                        h.call(vec![1.0; 16], vec![0.0; 16]).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        // all traffic quiesced: the live snapshot and the post-shutdown
+        // aggregate must agree exactly, means included (regression for
+        // the old per-replica shutdown that kept the first replica's
+        // means while summing the counters)
+        let live = r.stats();
+        let overall = r.overall();
+        let fin = r.shutdown();
+        for name in ["dft", "hadamard"] {
+            assert_eq!(live[name], fin[name], "route {name}");
+            assert_eq!(fin[name].served, 50);
+        }
+        assert_eq!(overall.served, 100);
+        let lat = (fin["dft"].mean_latency_micros * 50.0 + fin["hadamard"].mean_latency_micros * 50.0) / 100.0;
+        assert!((overall.mean_latency_micros - lat).abs() < 1e-9);
     }
 }

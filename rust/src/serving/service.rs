@@ -1,13 +1,30 @@
-//! One transform service: a worker thread owning a hardened [`FastBp`]
-//! multiply, draining a [`BatchQueue`] and answering per-request
-//! channels. Requests are single vectors; the worker coalesces the whole
-//! drained batch into one **column-major** `B × N` block and issues a
-//! single [`FastBp::apply_complex_batch_col`] call, so every stage's
-//! gather table and twiddle loads are amortized across the batch (see
-//! the layout discussion in [`crate::butterfly::fast`]). The coalesce
+//! A transform service is a **pool**: one shared [`BatchQueue`] drained
+//! by `W` worker threads, every worker owning its own coalesce planes and
+//! [`BatchWorkspace`] while sharing a single immutable [`Arc<FastBp>`].
+//! The shared queue is what kills head-of-line blocking: with one queue
+//! per replica (the old design) a deep or slow replica stalled the
+//! requests round-robined onto it while sibling workers sat idle; with
+//! one queue per route, any idle worker picks up the next pending batch,
+//! so the pool is work-conserving by construction.
+//!
+//! Requests are single vectors; a worker coalesces each drained batch
+//! into one **column-major** `B × N` block and issues a single
+//! [`FastBp::apply_complex_batch_col`] call, so every stage's gather
+//! table and twiddle loads are amortized across the batch (see the
+//! layout discussion in [`crate::butterfly::fast`]). The coalesce
 //! buffers and [`BatchWorkspace`] persist across batches — the steady
 //! state serving loop performs no allocation beyond the reply vectors it
 //! hands back to clients (which reuse the request's own buffers).
+//!
+//! Clients talk to the pool through a [`ServiceHandle`]: synchronous
+//! [`call`], or non-blocking [`submit`] returning a [`Ticket`] so a
+//! client can pipeline many requests before waiting on any reply.
+//! Malformed requests (wrong plane lengths) are rejected with `Err` and
+//! counted in the `bad_request` stat — a serving system must never
+//! panic on client input.
+//!
+//! [`call`]: ServiceHandle::call
+//! [`submit`]: ServiceHandle::submit
 
 use crate::butterfly::fast::{BatchWorkspace, FastBp};
 use crate::butterfly::module::BpStack;
@@ -24,23 +41,81 @@ struct Request {
     enqueued: Instant,
 }
 
+/// Pool-wide counters, shared by every worker and every handle.
 #[derive(Default)]
 struct Stats {
     served: AtomicUsize,
     batches: AtomicUsize,
     rejected: AtomicUsize,
+    bad_request: AtomicUsize,
     /// Sum of request latencies, microseconds.
     latency_micros: AtomicU64,
 }
 
-/// Snapshot of a service's counters.
+/// Snapshot of a pool's counters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServiceStats {
     pub served: usize,
     pub batches: usize,
     pub rejected: usize,
+    /// Requests refused before enqueueing (wrong plane lengths).
+    pub bad_request: usize,
     pub mean_latency_micros: f64,
     pub mean_batch: f64,
+}
+
+impl ServiceStats {
+    /// Aggregate several snapshots into one, recomputing the means
+    /// **served-weighted** (a plain sum of means is wrong whenever the
+    /// parts served different volumes). This is the single aggregation
+    /// helper shared by every path that combines stats — e.g.
+    /// [`Router::overall`](crate::serving::Router::overall) across
+    /// routes — so live and final numbers can never disagree on method.
+    pub fn merge(parts: impl IntoIterator<Item = ServiceStats>) -> ServiceStats {
+        let mut out = ServiceStats {
+            served: 0,
+            batches: 0,
+            rejected: 0,
+            bad_request: 0,
+            mean_latency_micros: 0.0,
+            mean_batch: 0.0,
+        };
+        let mut lat_sum = 0.0f64;
+        for s in parts {
+            lat_sum += s.mean_latency_micros * s.served as f64;
+            out.served += s.served;
+            out.batches += s.batches;
+            out.rejected += s.rejected;
+            out.bad_request += s.bad_request;
+        }
+        if out.served > 0 {
+            out.mean_latency_micros = lat_sum / out.served as f64;
+        }
+        if out.batches > 0 {
+            out.mean_batch = out.served as f64 / out.batches as f64;
+        }
+        out
+    }
+}
+
+/// An in-flight request: redeem with [`wait`](Ticket::wait) for the
+/// transformed planes. Obtained from [`ServiceHandle::submit`]; lets a
+/// client pipeline many requests into the shared queue before blocking
+/// on any reply.
+pub struct Ticket {
+    rx: mpsc::Receiver<(Vec<f32>, Vec<f32>)>,
+}
+
+impl Ticket {
+    /// Block until the pool answers (or was torn down).
+    pub fn wait(self) -> Result<(Vec<f32>, Vec<f32>), String> {
+        self.rx.recv().map_err(|_| "service dropped request".to_string())
+    }
+
+    /// Non-blocking poll: `Some` once the reply has landed.
+    pub fn try_wait(&self) -> Option<(Vec<f32>, Vec<f32>)> {
+        self.rx.try_recv().ok()
+    }
 }
 
 /// Client handle (cheap to clone, thread-safe).
@@ -52,21 +127,34 @@ pub struct ServiceHandle {
 }
 
 impl ServiceHandle {
-    /// Synchronous call: submit one vector, wait for the transform.
-    pub fn call(&self, re: Vec<f32>, im: Vec<f32>) -> Result<(Vec<f32>, Vec<f32>), String> {
-        assert_eq!(re.len(), self.n);
-        assert_eq!(im.len(), self.n);
+    /// Non-blocking submit: validate, enqueue, and return a [`Ticket`]
+    /// immediately. Malformed input is an `Err` (counted in
+    /// `bad_request`), never a panic.
+    pub fn submit(&self, re: Vec<f32>, im: Vec<f32>) -> Result<Ticket, String> {
+        if re.len() != self.n || im.len() != self.n {
+            self.stats.bad_request.fetch_add(1, Ordering::Relaxed);
+            return Err(format!(
+                "bad request: expected planes of length {}, got re={} im={}",
+                self.n,
+                re.len(),
+                im.len()
+            ));
+        }
         let (tx, rx) = mpsc::channel();
         let req = Request { re, im, reply: tx, enqueued: Instant::now() };
         match self.queue.push(req) {
-            Ok(()) => {}
+            Ok(()) => Ok(Ticket { rx }),
             Err(PushError::Full) => {
                 self.stats.rejected.fetch_add(1, Ordering::Relaxed);
-                return Err("queue full (backpressure)".into());
+                Err("queue full (backpressure)".into())
             }
-            Err(PushError::Closed) => return Err("service shut down".into()),
+            Err(PushError::Closed) => Err("service shut down".into()),
         }
-        rx.recv().map_err(|_| "service dropped request".to_string())
+    }
+
+    /// Synchronous call: submit one vector, wait for the transform.
+    pub fn call(&self, re: Vec<f32>, im: Vec<f32>) -> Result<(Vec<f32>, Vec<f32>), String> {
+        self.submit(re, im)?.wait()
     }
 
     /// Real-input convenience (imaginary plane zero).
@@ -82,6 +170,7 @@ impl ServiceHandle {
             served,
             batches,
             rejected: self.stats.rejected.load(Ordering::Relaxed),
+            bad_request: self.stats.bad_request.load(Ordering::Relaxed),
             mean_latency_micros: if served > 0 {
                 self.stats.latency_micros.load(Ordering::Relaxed) as f64 / served as f64
             } else {
@@ -96,64 +185,84 @@ impl ServiceHandle {
     }
 }
 
-/// A running transform service (worker thread + queue).
-pub struct TransformService {
+/// A running transform service: one shared queue, `W` worker threads.
+pub struct ServicePool {
     pub name: String,
     handle: ServiceHandle,
     queue: Arc<BatchQueue<Request>>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    /// Batches drained per worker (observability: proves siblings
+    /// participate instead of one lane serializing everything).
+    worker_batches: Arc<Vec<AtomicUsize>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
 }
 
-impl TransformService {
-    /// Install a trained stack as a service. The stack is hardened into
-    /// its fast-multiply form on the worker thread.
-    pub fn spawn(name: impl Into<String>, stack: &BpStack, cfg: BatcherConfig) -> Self {
+impl ServicePool {
+    /// Install a trained stack as a pool of `workers` drainer threads
+    /// over one shared queue. The stack is hardened once into its
+    /// fast-multiply form and shared immutably (`Arc<FastBp>` — see the
+    /// Sync note in [`crate::butterfly::fast`]); each worker owns its
+    /// own scratch.
+    pub fn spawn(name: impl Into<String>, stack: &BpStack, workers: usize, cfg: BatcherConfig) -> Self {
         let name = name.into();
         let n = stack.n();
-        let fast = FastBp::from_stack(stack);
+        let fast = Arc::new(FastBp::from_stack(stack));
         let queue = Arc::new(BatchQueue::new(cfg));
         let stats = Arc::new(Stats::default());
         let handle = ServiceHandle { n, queue: Arc::clone(&queue), stats: Arc::clone(&stats) };
-        let wq = Arc::clone(&queue);
-        let wstats = Arc::clone(&stats);
-        let worker = std::thread::Builder::new()
-            .name(format!("serve-{name}"))
-            .spawn(move || {
-                let mut ws = BatchWorkspace::new();
-                // Column-major coalesce planes, reused across batches.
-                let mut re: Vec<f32> = Vec::new();
-                let mut im: Vec<f32> = Vec::new();
-                while let Some(batch) = wq.next_batch() {
-                    let b = batch.len();
-                    re.resize(b * n, 0.0);
-                    im.resize(b * n, 0.0);
-                    // Coalesce request i into lane i of the column-major
-                    // [n, b] block: element j lands at j*b + i.
-                    for (i, r) in batch.iter().enumerate() {
-                        for (j, (&vr, &vi)) in r.re.iter().zip(r.im.iter()).enumerate() {
-                            re[j * b + i] = vr;
-                            im[j * b + i] = vi;
+        let w = workers.max(1);
+        let worker_batches: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..w).map(|_| AtomicUsize::new(0)).collect());
+        let workers = (0..w)
+            .map(|wi| {
+                let fast = Arc::clone(&fast);
+                let wq = Arc::clone(&queue);
+                let wstats = Arc::clone(&stats);
+                let wloads = Arc::clone(&worker_batches);
+                std::thread::Builder::new()
+                    .name(format!("serve-{name}#{wi}"))
+                    .spawn(move || {
+                        let mut ws = BatchWorkspace::new();
+                        // Column-major coalesce planes, reused across batches.
+                        let mut re: Vec<f32> = Vec::new();
+                        let mut im: Vec<f32> = Vec::new();
+                        while let Some(batch) = wq.next_batch() {
+                            let b = batch.len();
+                            re.resize(b * n, 0.0);
+                            im.resize(b * n, 0.0);
+                            // Coalesce request i into lane i of the column-major
+                            // [n, b] block: element j lands at j*b + i.
+                            for (i, r) in batch.iter().enumerate() {
+                                for (j, (&vr, &vi)) in r.re.iter().zip(r.im.iter()).enumerate() {
+                                    re[j * b + i] = vr;
+                                    im[j * b + i] = vi;
+                                }
+                            }
+                            // One batched fast multiply for the whole batch.
+                            fast.apply_complex_batch_col(&mut re, &mut im, b, &mut ws);
+                            // Counters first, replies second: a client
+                            // unblocks the moment its reply lands, and any
+                            // stats it reads then must already include the
+                            // batch it was part of.
+                            wstats.served.fetch_add(b, Ordering::Relaxed);
+                            wstats.batches.fetch_add(1, Ordering::Relaxed);
+                            wloads[wi].fetch_add(1, Ordering::Relaxed);
+                            let now = Instant::now();
+                            for (i, r) in batch.into_iter().enumerate() {
+                                let Request { re: mut out_re, im: mut out_im, reply, enqueued } = r;
+                                for j in 0..n {
+                                    out_re[j] = re[j * b + i];
+                                    out_im[j] = im[j * b + i];
+                                }
+                                let lat = now.duration_since(enqueued).as_micros() as u64;
+                                wstats.latency_micros.fetch_add(lat, Ordering::Relaxed);
+                                let _ = reply.send((out_re, out_im));
+                            }
                         }
-                    }
-                    // One batched fast multiply for the whole batch.
-                    fast.apply_complex_batch_col(&mut re, &mut im, b, &mut ws);
-                    let now = Instant::now();
-                    for (i, r) in batch.into_iter().enumerate() {
-                        let Request { re: mut out_re, im: mut out_im, reply, enqueued } = r;
-                        for j in 0..n {
-                            out_re[j] = re[j * b + i];
-                            out_im[j] = im[j * b + i];
-                        }
-                        let lat = now.duration_since(enqueued).as_micros() as u64;
-                        wstats.latency_micros.fetch_add(lat, Ordering::Relaxed);
-                        let _ = reply.send((out_re, out_im));
-                    }
-                    wstats.served.fetch_add(b, Ordering::Relaxed);
-                    wstats.batches.fetch_add(1, Ordering::Relaxed);
-                }
+                    })
+                    .expect("spawn pool worker")
             })
-            .expect("spawn service worker");
-        TransformService { name, handle, queue, worker: Some(worker) }
+            .collect();
+        ServicePool { name, handle, queue, worker_batches, workers }
     }
 
     pub fn handle(&self) -> ServiceHandle {
@@ -164,20 +273,40 @@ impl TransformService {
         self.handle.n
     }
 
-    /// Graceful shutdown: drain, then join the worker.
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Batches drained by each worker so far.
+    pub fn worker_loads(&self) -> Vec<usize> {
+        self.worker_batches.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Live counters (identical snapshot to what [`shutdown`] returns —
+    /// one `Stats` is shared by every worker, so there is no aggregation
+    /// step that could diverge between the two paths).
+    ///
+    /// [`shutdown`]: ServicePool::shutdown
+    pub fn stats(&self) -> ServiceStats {
+        self.handle.stats()
+    }
+
+    /// Graceful shutdown: close the queue (producers start failing), let
+    /// the workers drain every already-accepted request, join them all,
+    /// and return the final counters.
     pub fn shutdown(mut self) -> ServiceStats {
         self.queue.close();
-        if let Some(w) = self.worker.take() {
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
         self.handle.stats()
     }
 }
 
-impl Drop for TransformService {
+impl Drop for ServicePool {
     fn drop(&mut self) {
         self.queue.close();
-        if let Some(w) = self.worker.take() {
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -187,15 +316,15 @@ impl Drop for TransformService {
 mod tests {
     use super::*;
     use crate::butterfly::closed_form::dft_stack;
-    use crate::transforms::fast::fft_unitary;
     use crate::linalg::complex::Cpx;
+    use crate::transforms::fast::fft_unitary;
     use crate::util::rng::Rng;
     use std::time::Duration;
 
     #[test]
     fn serves_the_fft() {
         let n = 64;
-        let svc = TransformService::spawn("dft", &dft_stack(n), BatcherConfig::default());
+        let svc = ServicePool::spawn("dft", &dft_stack(n), 1, BatcherConfig::default());
         let h = svc.handle();
         let mut rng = Rng::new(1);
         let mut re = vec![0.0f32; n];
@@ -214,9 +343,10 @@ mod tests {
     #[test]
     fn concurrent_clients_get_their_own_answers() {
         let n = 16;
-        let svc = TransformService::spawn(
+        let svc = ServicePool::spawn(
             "dft",
             &dft_stack(n),
+            4,
             BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(3), queue_cap: 256 },
         );
         let handles: Vec<_> = (0..16)
@@ -247,9 +377,10 @@ mod tests {
     #[test]
     fn stats_track_batching() {
         let n = 8;
-        let svc = TransformService::spawn(
+        let svc = ServicePool::spawn(
             "dft",
             &dft_stack(n),
+            2,
             BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(10), queue_cap: 64 },
         );
         let h = svc.handle();
@@ -266,5 +397,82 @@ mod tests {
         assert_eq!(stats.served, 8);
         assert!(stats.mean_batch >= 1.0);
         assert!(stats.mean_latency_micros > 0.0);
+    }
+
+    #[test]
+    fn malformed_request_is_an_error_not_a_panic() {
+        let n = 8;
+        let svc = ServicePool::spawn("dft", &dft_stack(n), 1, BatcherConfig::default());
+        let h = svc.handle();
+        assert!(h.call(vec![0.0; 4], vec![0.0; 8]).is_err(), "short re plane");
+        assert!(h.call(vec![0.0; 8], vec![0.0; 16]).is_err(), "long im plane");
+        // the pool is still healthy afterwards
+        let (re, _) = h.call(vec![1.0; 8], vec![0.0; 8]).unwrap();
+        assert!(re.iter().all(|v| v.is_finite()));
+        let stats = svc.shutdown();
+        assert_eq!(stats.bad_request, 2);
+        assert_eq!(stats.served, 1);
+        assert_eq!(stats.rejected, 0, "bad requests are not backpressure rejections");
+    }
+
+    #[test]
+    fn submit_pipelines_without_blocking() {
+        let n = 16;
+        let svc = ServicePool::spawn(
+            "dft",
+            &dft_stack(n),
+            2,
+            BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(200), queue_cap: 1024 },
+        );
+        let h = svc.handle();
+        let f = crate::transforms::matrices::dft_matrix(n);
+        // enqueue all 16 columns before waiting on any reply
+        let tickets: Vec<_> = (0..n)
+            .map(|k| {
+                let mut x = vec![0.0f32; n];
+                x[k] = 1.0;
+                h.submit(x, vec![0.0; n]).unwrap()
+            })
+            .collect();
+        for (k, t) in tickets.into_iter().enumerate() {
+            let (re, im) = t.wait().unwrap();
+            for i in 0..n {
+                assert!((re[i] - f.re[i * n + k]).abs() < 1e-4, "col {k} re[{i}]");
+                assert!((im[i] - f.im[i * n + k]).abs() < 1e-4, "col {k} im[{i}]");
+            }
+        }
+        assert_eq!(svc.shutdown().served, n);
+    }
+
+    #[test]
+    fn merge_weights_means_by_served() {
+        let a = ServiceStats {
+            served: 30,
+            batches: 3,
+            rejected: 1,
+            bad_request: 0,
+            mean_latency_micros: 100.0,
+            mean_batch: 10.0,
+        };
+        let b = ServiceStats {
+            served: 10,
+            batches: 2,
+            rejected: 0,
+            bad_request: 2,
+            mean_latency_micros: 500.0,
+            mean_batch: 5.0,
+        };
+        let m = ServiceStats::merge([a, b]);
+        assert_eq!(m.served, 40);
+        assert_eq!(m.batches, 5);
+        assert_eq!(m.rejected, 1);
+        assert_eq!(m.bad_request, 2);
+        // (30·100 + 10·500) / 40 = 200, not the first part's 100
+        assert!((m.mean_latency_micros - 200.0).abs() < 1e-9);
+        assert!((m.mean_batch - 8.0).abs() < 1e-9);
+        // empty merge is all zeros, no NaNs
+        let z = ServiceStats::merge(std::iter::empty());
+        assert_eq!(z.served, 0);
+        assert_eq!(z.mean_latency_micros, 0.0);
     }
 }

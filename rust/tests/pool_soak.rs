@@ -1,0 +1,244 @@
+//! Soak tests for the shared-queue [`ServicePool`]: correctness under
+//! many concurrent clients, work-conservation with a deliberately slow
+//! lane (a deep backlog of heavyweight requests), backpressure
+//! accounting, and shutdown-while-pending draining every accepted
+//! request exactly once.
+//!
+//! These run in CI under `--release` as well — the races the shared
+//! queue must survive hide in debug-build timing.
+//!
+//! [`ServicePool`]: butterfly::serving::ServicePool
+
+use butterfly::butterfly::closed_form::dft_stack;
+use butterfly::linalg::complex::Cpx;
+use butterfly::serving::{BatcherConfig, ServicePool};
+use butterfly::transforms::matrices::dft_matrix;
+use butterfly::util::rng::Rng;
+use std::time::Duration;
+
+fn parallel_cores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Dense reference for one complex input.
+fn dense_dft(n: usize, re: &[f32], im: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let f = dft_matrix(n);
+    let x: Vec<Cpx> = (0..n).map(|i| Cpx::new(re[i], im[i])).collect();
+    let y = f.matvec(&x);
+    (y.iter().map(|c| c.re).collect(), y.iter().map(|c| c.im).collect())
+}
+
+#[test]
+fn soak_every_reply_matches_dense_reference() {
+    let n = 64;
+    let pool = ServicePool::spawn(
+        "dft",
+        &dft_stack(n),
+        4,
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(300), queue_cap: 8192 },
+    );
+    let clients = 12usize;
+    let per_client = 40usize;
+    let threads: Vec<_> = (0..clients)
+        .map(|t| {
+            let h = pool.handle();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(1000 + t as u64);
+                // pipeline the whole load first (builds a real backlog),
+                // then redeem and verify every ticket
+                let mut inflight = Vec::with_capacity(per_client);
+                for _ in 0..per_client {
+                    let mut re = vec![0.0f32; n];
+                    let mut im = vec![0.0f32; n];
+                    rng.fill_normal(&mut re, 0.0, 1.0);
+                    rng.fill_normal(&mut im, 0.0, 1.0);
+                    let ticket = h.submit(re.clone(), im.clone()).expect("submit");
+                    inflight.push((re, im, ticket));
+                }
+                for (re, im, ticket) in inflight {
+                    let (gr, gi) = ticket.wait().expect("reply");
+                    let (wr, wi) = dense_dft(n, &re, &im);
+                    for i in 0..n {
+                        assert!((gr[i] - wr[i]).abs() < 1e-3, "re[{i}]: {} vs {}", gr[i], wr[i]);
+                        assert!((gi[i] - wi[i]).abs() < 1e-3, "im[{i}]: {} vs {}", gi[i], wi[i]);
+                    }
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    // every answered batch bumped its worker's load counter before the
+    // reply was sent, so with all clients joined this snapshot is exact
+    let loads = pool.worker_loads();
+    let active = loads.iter().filter(|&&b| b > 0).count();
+    let stats = pool.shutdown();
+    assert_eq!(stats.served, clients * per_client);
+    assert_eq!(stats.rejected, 0);
+    assert_eq!(stats.bad_request, 0);
+    // on a single-core machine the OS may legitimately let one worker
+    // drain everything; with real parallelism the shared queue must not
+    if parallel_cores() >= 2 {
+        assert!(
+            active >= 2,
+            "a {clients}-client pipelined soak must engage >1 worker of the shared queue, got loads {loads:?}"
+        );
+    }
+}
+
+#[test]
+fn slow_lane_backlog_is_drained_by_idle_siblings() {
+    // The head-of-line regression scenario: a deep backlog of heavyweight
+    // requests (n = 1024, max_batch = 1 ⇒ every request is its own slow
+    // batch). Under the old one-queue-per-replica router, the requests
+    // round-robined onto the flooded replica waited behind the whole
+    // backlog while other replicas idled. The shared queue must instead
+    // spread the backlog over every worker (work conservation) and keep
+    // serving probe clients correctly throughout.
+    let n = 1024;
+    let pool = ServicePool::spawn(
+        "dft",
+        &dft_stack(n),
+        4,
+        BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(0), queue_cap: 4096 },
+    );
+
+    // the slow lane: one client floods 96 pipelined heavyweight requests
+    let flood = {
+        let h = pool.handle();
+        std::thread::spawn(move || {
+            let mut rng = Rng::new(7);
+            let tickets: Vec<_> = (0..96)
+                .map(|_| {
+                    let mut re = vec![0.0f32; n];
+                    rng.fill_normal(&mut re, 0.0, 1.0);
+                    h.submit(re, vec![0.0; n]).expect("flood submit")
+                })
+                .collect();
+            let mut got = 0usize;
+            for t in tickets {
+                let (re, im) = t.wait().expect("flood reply");
+                assert!(re.iter().chain(im.iter()).all(|v| v.is_finite()));
+                got += 1;
+            }
+            got
+        })
+    };
+
+    // probe clients make synchronous calls while the backlog is deep;
+    // each answer is checked against the dense reference
+    let probes: Vec<_> = (0..3)
+        .map(|t| {
+            let h = pool.handle();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(40 + t as u64);
+                for _ in 0..6 {
+                    let mut re = vec![0.0f32; n];
+                    rng.fill_normal(&mut re, 0.0, 1.0);
+                    let im = vec![0.0f32; n];
+                    let (gr, gi) = h.call(re.clone(), im.clone()).expect("probe call");
+                    let (wr, wi) = dense_dft(n, &re, &im);
+                    for i in 0..n {
+                        assert!((gr[i] - wr[i]).abs() < 1e-2, "probe re[{i}]");
+                        assert!((gi[i] - wi[i]).abs() < 1e-2, "probe im[{i}]");
+                    }
+                }
+            })
+        })
+        .collect();
+
+    assert_eq!(flood.join().unwrap(), 96, "every flood request answered exactly once");
+    for p in probes {
+        p.join().unwrap();
+    }
+    let loads = pool.worker_loads();
+    let active = loads.iter().filter(|&&b| b > 0).count();
+    let stats = pool.shutdown();
+    assert_eq!(stats.served, 96 + 3 * 6);
+    assert_eq!(stats.rejected, 0);
+    if parallel_cores() >= 2 {
+        assert!(
+            active >= 2,
+            "a 96-deep slow lane must be drained by multiple workers, not serialize on one: {loads:?}"
+        );
+    }
+}
+
+#[test]
+fn backpressure_full_is_counted_and_never_deadlocks() {
+    let n = 256;
+    let pool = ServicePool::spawn(
+        "dft",
+        &dft_stack(n),
+        2,
+        BatcherConfig { max_batch: 2, max_wait: Duration::from_micros(50), queue_cap: 4 },
+    );
+    let producers: Vec<_> = (0..8)
+        .map(|t| {
+            let h = pool.handle();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(t as u64);
+                let mut ok = 0usize;
+                let mut rejected = 0usize;
+                for _ in 0..40 {
+                    let mut x = vec![0.0f32; n];
+                    rng.fill_normal(&mut x, 0.0, 1.0);
+                    match h.submit(x, vec![0.0; n]) {
+                        Ok(ticket) => {
+                            ticket.wait().expect("accepted request must be answered");
+                            ok += 1;
+                        }
+                        Err(_) => rejected += 1,
+                    }
+                }
+                (ok, rejected)
+            })
+        })
+        .collect();
+    let mut total_ok = 0usize;
+    let mut total_rej = 0usize;
+    for p in producers {
+        let (ok, rej) = p.join().unwrap();
+        total_ok += ok;
+        total_rej += rej;
+    }
+    let stats = pool.shutdown();
+    assert_eq!(total_ok + total_rej, 320);
+    assert_eq!(stats.served, total_ok, "served must equal accepted");
+    assert_eq!(stats.rejected, total_rej, "every Full must be counted");
+    assert!(total_ok > 0);
+}
+
+#[test]
+fn shutdown_while_pending_drains_every_accepted_request_exactly_once() {
+    let n = 256;
+    let pool = ServicePool::spawn(
+        "dft",
+        &dft_stack(n),
+        4,
+        // a huge window: without shutdown cutting it short, the backlog
+        // would sit in the queue for seconds
+        BatcherConfig { max_batch: 4, max_wait: Duration::from_secs(5), queue_cap: 8192 },
+    );
+    let h = pool.handle();
+    let mut rng = Rng::new(9);
+    let total = 200usize;
+    let tickets: Vec<_> = (0..total)
+        .map(|_| {
+            let mut x = vec![0.0f32; n];
+            rng.fill_normal(&mut x, 0.0, 1.0);
+            h.submit(x, vec![0.0; n]).expect("submit")
+        })
+        .collect();
+    // close with (almost) everything still pending: workers must drain
+    // the whole backlog before joining
+    let stats = pool.shutdown();
+    assert_eq!(stats.served, total, "shutdown must drain every accepted request");
+    for (i, t) in tickets.into_iter().enumerate() {
+        let (re, im) = t.wait().unwrap_or_else(|e| panic!("ticket {i} dropped: {e}"));
+        assert!(re.iter().chain(im.iter()).all(|v| v.is_finite()));
+    }
+    // post-shutdown, new requests are refused, not queued forever
+    assert!(h.submit(vec![0.0; n], vec![0.0; n]).is_err());
+}

@@ -93,9 +93,10 @@ fn multi_transform_router_under_load() {
 fn backpressure_rejects_rather_than_grows() {
     let n = 1024;
     // a deliberately tiny queue + slow-ish service (large n)
-    let svc = butterfly::serving::TransformService::spawn(
+    let svc = butterfly::serving::ServicePool::spawn(
         "dft",
         &dft_stack(n),
+        2,
         BatcherConfig { max_batch: 2, max_wait: Duration::from_micros(50), queue_cap: 4 },
     );
     let h = svc.handle();

@@ -13,6 +13,22 @@
 //! Backward (treating complex multiply as its ℝ-bilinear 2×2 form, which
 //! is what "optimize over complex entries" means for a real-valued loss):
 //! `dx = conj(G)ᵀ applied pairwise`, `dG += dy ⊗ conj(x)`.
+//!
+//! ## Loop order: batch innermost
+//!
+//! Both kernels walk `(block, pair)` in the outer loops and the batch in
+//! the innermost loop, mirroring `fast.rs`'s batched serving kernels: the
+//! 8 twiddle scalars of a unit are loaded **once** per `(block, pair)`
+//! and stay in registers while the batch rows stream past (stride `n`
+//! between rows), instead of being re-read `batch` times. The backward
+//! pass additionally accumulates each unit's `dG` in registers across the
+//! batch and commits it to `grad` once per `(block, pair)`, so a training
+//! chunk touches each twiddle-gradient slot `blocks` times (factor tying)
+//! or once (block tying) rather than `batch × blocks` times. Per-element
+//! arithmetic is unchanged; under factor tying the `dG` accumulation
+//! order becomes (block, batch-row) instead of (batch-row, block), which
+//! only reorders a floating-point sum (covered by the finite-difference
+//! tests below).
 
 use crate::butterfly::params::BpParams;
 use crate::linalg::complex::Cpx;
@@ -26,18 +42,16 @@ pub fn level_forward(p: &BpParams, level: usize, re: &mut [f32], im: &mut [f32],
     let half = 1usize << level; // in-block pair distance
     let m = half << 1; // block size
     let blocks = n / m;
-    for bi in 0..batch {
-        let row = bi * n;
-        for b in 0..blocks {
-            let base = row + b * m;
-            for j in 0..half {
-                let u = p.unit_index(level, b, j);
-                let g00 = Cpx::new(p.data[p.tw_idx(level, 0, u, 0, 0)], p.data[p.tw_idx(level, 1, u, 0, 0)]);
-                let g01 = Cpx::new(p.data[p.tw_idx(level, 0, u, 0, 1)], p.data[p.tw_idx(level, 1, u, 0, 1)]);
-                let g10 = Cpx::new(p.data[p.tw_idx(level, 0, u, 1, 0)], p.data[p.tw_idx(level, 1, u, 1, 0)]);
-                let g11 = Cpx::new(p.data[p.tw_idx(level, 0, u, 1, 1)], p.data[p.tw_idx(level, 1, u, 1, 1)]);
-                let i0 = base + j;
-                let i1 = i0 + half;
+    for b in 0..blocks {
+        for j in 0..half {
+            let u = p.unit_index(level, b, j);
+            let g00 = Cpx::new(p.data[p.tw_idx(level, 0, u, 0, 0)], p.data[p.tw_idx(level, 1, u, 0, 0)]);
+            let g01 = Cpx::new(p.data[p.tw_idx(level, 0, u, 0, 1)], p.data[p.tw_idx(level, 1, u, 0, 1)]);
+            let g10 = Cpx::new(p.data[p.tw_idx(level, 0, u, 1, 0)], p.data[p.tw_idx(level, 1, u, 1, 0)]);
+            let g11 = Cpx::new(p.data[p.tw_idx(level, 0, u, 1, 1)], p.data[p.tw_idx(level, 1, u, 1, 1)]);
+            let mut i0 = b * m + j;
+            let mut i1 = i0 + half;
+            for _ in 0..batch {
                 let x0 = Cpx::new(re[i0], im[i0]);
                 let x1 = Cpx::new(re[i1], im[i1]);
                 let y0 = g00 * x0 + g01 * x1;
@@ -46,6 +60,8 @@ pub fn level_forward(p: &BpParams, level: usize, re: &mut [f32], im: &mut [f32],
                 im[i0] = y0.im;
                 re[i1] = y1.re;
                 im[i1] = y1.im;
+                i0 += n;
+                i1 += n;
             }
         }
     }
@@ -74,36 +90,32 @@ pub fn level_backward(
     let half = 1usize << level;
     let m = half << 1;
     let blocks = n / m;
-    for bi in 0..batch {
-        let row = bi * n;
-        for b in 0..blocks {
-            let base = row + b * m;
-            for j in 0..half {
-                let u = p.unit_index(level, b, j);
-                let g00 = Cpx::new(p.data[p.tw_idx(level, 0, u, 0, 0)], p.data[p.tw_idx(level, 1, u, 0, 0)]);
-                let g01 = Cpx::new(p.data[p.tw_idx(level, 0, u, 0, 1)], p.data[p.tw_idx(level, 1, u, 0, 1)]);
-                let g10 = Cpx::new(p.data[p.tw_idx(level, 0, u, 1, 0)], p.data[p.tw_idx(level, 1, u, 1, 0)]);
-                let g11 = Cpx::new(p.data[p.tw_idx(level, 0, u, 1, 1)], p.data[p.tw_idx(level, 1, u, 1, 1)]);
-                let i0 = base + j;
-                let i1 = i0 + half;
+    for b in 0..blocks {
+        for j in 0..half {
+            let u = p.unit_index(level, b, j);
+            let g00 = Cpx::new(p.data[p.tw_idx(level, 0, u, 0, 0)], p.data[p.tw_idx(level, 1, u, 0, 0)]);
+            let g01 = Cpx::new(p.data[p.tw_idx(level, 0, u, 0, 1)], p.data[p.tw_idx(level, 1, u, 0, 1)]);
+            let g10 = Cpx::new(p.data[p.tw_idx(level, 0, u, 1, 0)], p.data[p.tw_idx(level, 1, u, 1, 0)]);
+            let g11 = Cpx::new(p.data[p.tw_idx(level, 0, u, 1, 1)], p.data[p.tw_idx(level, 1, u, 1, 1)]);
+            // per-unit dG accumulated in registers across the batch,
+            // committed to `grad` once per (block, pair)
+            let mut dg00 = Cpx::ZERO;
+            let mut dg01 = Cpx::ZERO;
+            let mut dg10 = Cpx::ZERO;
+            let mut dg11 = Cpx::ZERO;
+            let mut i0 = b * m + j;
+            let mut i1 = i0 + half;
+            for _ in 0..batch {
                 let x0 = Cpx::new(x_re[i0], x_im[i0]);
                 let x1 = Cpx::new(x_re[i1], x_im[i1]);
                 let d0 = Cpx::new(dy_re[i0], dy_im[i0]);
                 let d1 = Cpx::new(dy_re[i1], dy_im[i1]);
 
                 // dG += dy ⊗ conj(x)
-                let dg00 = d0 * x0.conj();
-                let dg01 = d0 * x1.conj();
-                let dg10 = d1 * x0.conj();
-                let dg11 = d1 * x1.conj();
-                grad[p.tw_idx(level, 0, u, 0, 0)] += dg00.re;
-                grad[p.tw_idx(level, 1, u, 0, 0)] += dg00.im;
-                grad[p.tw_idx(level, 0, u, 0, 1)] += dg01.re;
-                grad[p.tw_idx(level, 1, u, 0, 1)] += dg01.im;
-                grad[p.tw_idx(level, 0, u, 1, 0)] += dg10.re;
-                grad[p.tw_idx(level, 1, u, 1, 0)] += dg10.im;
-                grad[p.tw_idx(level, 0, u, 1, 1)] += dg11.re;
-                grad[p.tw_idx(level, 1, u, 1, 1)] += dg11.im;
+                dg00 += d0 * x0.conj();
+                dg01 += d0 * x1.conj();
+                dg10 += d1 * x0.conj();
+                dg11 += d1 * x1.conj();
 
                 // dx = conj(G)ᵀ dy  (pairwise)
                 let dx0 = g00.conj() * d0 + g10.conj() * d1;
@@ -112,7 +124,17 @@ pub fn level_backward(
                 dy_im[i0] = dx0.im;
                 dy_re[i1] = dx1.re;
                 dy_im[i1] = dx1.im;
+                i0 += n;
+                i1 += n;
             }
+            grad[p.tw_idx(level, 0, u, 0, 0)] += dg00.re;
+            grad[p.tw_idx(level, 1, u, 0, 0)] += dg00.im;
+            grad[p.tw_idx(level, 0, u, 0, 1)] += dg01.re;
+            grad[p.tw_idx(level, 1, u, 0, 1)] += dg01.im;
+            grad[p.tw_idx(level, 0, u, 1, 0)] += dg10.re;
+            grad[p.tw_idx(level, 1, u, 1, 0)] += dg10.im;
+            grad[p.tw_idx(level, 0, u, 1, 1)] += dg11.re;
+            grad[p.tw_idx(level, 1, u, 1, 1)] += dg11.im;
         }
     }
 }

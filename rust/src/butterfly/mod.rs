@@ -17,6 +17,9 @@
 //!    backward, hardening, hard tables.
 //!  - [`module`] — BP stacks: batched apply, dense reconstruction,
 //!    Frobenius factorization loss + gradient (the training objective).
+//!  - [`workspace`] — the allocation-free training engine: persistent
+//!    save/scratch planes ([`TrainWorkspace`]) and the chunk-parallel
+//!    driver ([`ParallelTrainer`]) with its fixed-order reduction rule.
 //!  - [`fast`] — the optimized O(N log N) inference path on hardened
 //!    parameters (the serving hot loop).
 //!  - [`closed_form`] — Proposition 1 constructions: exact BP (DFT, iDFT,
@@ -28,8 +31,10 @@ pub mod level;
 pub mod module;
 pub mod params;
 pub mod permutation;
+pub mod workspace;
 
 pub use fast::{FastBp, Workspace};
 pub use module::{BpModule, BpStack, FactorizeLoss, StackGrad};
 pub use params::{BpParams, Field, InitScheme, PermTying, TwiddleTying};
-pub use permutation::{hard_perm_table, PermChoice, RelaxedPerm};
+pub use permutation::{hard_perm_table, PermChoice, PermTables, RelaxedPerm};
+pub use workspace::{ParallelTrainer, TrainWorkspace};

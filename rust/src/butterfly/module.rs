@@ -10,10 +10,32 @@
 //! planes. Applying a module to the identity batch yields the transpose
 //! of its dense matrix (row `j` of the output is `M e_j`, i.e. column `j`
 //! of `M`).
+//!
+//! ## Two execution paths, one set of kernels
+//!
+//! Every entry point runs the same batch-innermost kernels
+//! ([`level_forward`]/[`level_backward`] and the `RelaxedPerm` stages) —
+//! what differs is who owns the memory:
+//!
+//! - the **allocating path** (`forward_saving`, `backward`,
+//!   [`FactorizeLoss::loss_and_grad`]) builds saves, scratch, and gather
+//!   tables per call. It is the self-contained reference used by tests
+//!   and cold paths.
+//! - the **workspace path** (`*_with` methods here, driven by
+//!   [`TrainWorkspace`](crate::butterfly::workspace::TrainWorkspace))
+//!   reuses caller-owned save planes, scratch, and tables across steps —
+//!   allocation-free in steady state, and bit-identical to the allocating
+//!   path because the kernel call sequence and chunking are the same.
+//!
+//! Training memory model: saved activations are per-module slot buffers
+//! (`3L` permutation-stage inputs + `L` level inputs, each a `[batch, n]`
+//! re/im pair) that are overwritten in place every chunk; see
+//! `butterfly::workspace` for the chunk-parallel driver and its
+//! fixed-order reduction rule.
 
 use crate::butterfly::level::{level_backward, level_forward};
 use crate::butterfly::params::BpParams;
-use crate::butterfly::permutation::{PermSaves, RelaxedPerm};
+use crate::butterfly::permutation::{PermSaves, PermTables, RelaxedPerm};
 use crate::linalg::dense::CMat;
 
 /// One BP module.
@@ -22,11 +44,29 @@ pub struct BpModule {
     pub params: BpParams,
 }
 
-/// Saved activations for one module's backward pass.
+/// Saved activations for one module's backward pass. Slot buffers are
+/// reused across calls when driven through the workspace path.
 pub struct ModuleSaves {
     perm: PermSaves,
     /// Input to butterfly level ℓ (level 0's input = permutation output).
     level_inputs: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+impl ModuleSaves {
+    pub fn new() -> Self {
+        ModuleSaves { perm: PermSaves::new(), level_inputs: Vec::new() }
+    }
+
+    /// Record level `idx`'s input, reusing the slot's buffers.
+    fn record_level(&mut self, idx: usize, re: &[f32], im: &[f32]) {
+        crate::butterfly::permutation::record_slot(&mut self.level_inputs, idx, re, im);
+    }
+}
+
+impl Default for ModuleSaves {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl BpModule {
@@ -46,16 +86,54 @@ impl BpModule {
         }
     }
 
-    /// Forward in place, recording every stage input for backward.
-    pub fn forward_saving(&self, re: &mut [f32], im: &mut [f32], batch: usize) -> ModuleSaves {
-        let mut perm = PermSaves { stages: Vec::with_capacity(3 * self.params.levels) };
-        RelaxedPerm::forward(&self.params, re, im, batch, Some(&mut perm));
-        let mut level_inputs = Vec::with_capacity(self.params.levels);
+    /// Forward in place, no saves, with caller-owned tables and scratch
+    /// (allocation-free; the workspace loss-only path).
+    pub fn apply_batch_with(
+        &self,
+        re: &mut [f32],
+        im: &mut [f32],
+        batch: usize,
+        tables: &PermTables,
+        scratch_re: &mut [f32],
+        scratch_im: &mut [f32],
+    ) {
+        RelaxedPerm::forward_with(&self.params, re, im, batch, None, tables, scratch_re, scratch_im);
         for l in 0..self.params.levels {
-            level_inputs.push((re.to_vec(), im.to_vec()));
             level_forward(&self.params, l, re, im, batch);
         }
-        ModuleSaves { perm, level_inputs }
+    }
+
+    /// Forward in place, recording every stage input for backward.
+    /// Allocates fresh save buffers per call; the workspace path uses
+    /// [`forward_saving_with`](BpModule::forward_saving_with).
+    pub fn forward_saving(&self, re: &mut [f32], im: &mut [f32], batch: usize) -> ModuleSaves {
+        let mut saves = ModuleSaves::new();
+        let tables = PermTables::new(self.params.n);
+        let mut sr = vec![0.0f32; batch * self.params.n];
+        let mut si = vec![0.0f32; batch * self.params.n];
+        self.forward_saving_with(re, im, batch, &mut saves, &tables, &mut sr, &mut si);
+        saves
+    }
+
+    /// Forward in place, recording every stage input into reusable slot
+    /// buffers in `saves`. Tables and blend scratch (`≥ batch·n` each)
+    /// are caller-owned — no allocation in steady state.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_saving_with(
+        &self,
+        re: &mut [f32],
+        im: &mut [f32],
+        batch: usize,
+        saves: &mut ModuleSaves,
+        tables: &PermTables,
+        scratch_re: &mut [f32],
+        scratch_im: &mut [f32],
+    ) {
+        RelaxedPerm::forward_with(&self.params, re, im, batch, Some(&mut saves.perm), tables, scratch_re, scratch_im);
+        for l in 0..self.params.levels {
+            saves.record_level(l, re, im);
+            level_forward(&self.params, l, re, im, batch);
+        }
     }
 
     /// Backward: `dy` (in place → `dx`), parameter gradients accumulated
@@ -68,11 +146,31 @@ impl BpModule {
         grad: &mut [f32],
         batch: usize,
     ) {
+        let tables = PermTables::new(self.params.n);
+        let mut dxr = vec![0.0f32; batch * self.params.n];
+        let mut dxi = vec![0.0f32; batch * self.params.n];
+        self.backward_with(saves, dy_re, dy_im, grad, batch, &tables, &mut dxr, &mut dxi);
+    }
+
+    /// Backward with caller-owned tables and `dx` scratch planes
+    /// (`≥ batch·n` each) — the allocation-free workspace entry point.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_with(
+        &self,
+        saves: &ModuleSaves,
+        dy_re: &mut [f32],
+        dy_im: &mut [f32],
+        grad: &mut [f32],
+        batch: usize,
+        tables: &PermTables,
+        dx_re: &mut [f32],
+        dx_im: &mut [f32],
+    ) {
         for l in (0..self.params.levels).rev() {
             let (xr, xi) = &saves.level_inputs[l];
             level_backward(&self.params, l, xr, xi, dy_re, dy_im, grad, batch);
         }
-        RelaxedPerm::backward(&self.params, &saves.perm, dy_re, dy_im, grad, batch);
+        RelaxedPerm::backward_with(&self.params, &saves.perm, dy_re, dy_im, grad, batch, tables, dx_re, dx_im);
     }
 
     /// Single-vector apply (planar complex).
@@ -227,13 +325,21 @@ impl FactorizeLoss {
     }
 
     /// Compute loss and accumulate parameter gradients into `grad`.
+    ///
+    /// This is the self-contained allocating path (fresh saves and
+    /// scratch per chunk). `FactorizeLoss::loss_and_grad_ws` (in
+    /// `butterfly::workspace`) runs the identical kernel sequence over
+    /// the identical chunking with reused buffers, so the two agree
+    /// bit-for-bit.
     pub fn loss_and_grad(&self, stack: &BpStack, grad: &mut StackGrad) -> f64 {
         let n = self.n();
-        let inv_n2 = 1.0 / (n as f64 * n as f64);
+        // same clamp as the workspace/parallel engines: keeps the
+        // chunking identical across paths and a zero chunk from stalling
+        let chunk = self.chunk.min(n).max(1);
         let mut total = 0.0f64;
         let mut j0 = 0usize;
         while j0 < n {
-            let b = self.chunk.min(n - j0);
+            let b = chunk.min(n - j0);
             // rows = identity columns e_{j0..j0+b}
             let mut re = vec![0.0f32; b * n];
             let mut im = vec![0.0f32; b * n];
@@ -241,20 +347,39 @@ impl FactorizeLoss {
                 re[bi * n + j] = 1.0;
             }
             let saves = stack.forward_saving(&mut re, &mut im, b);
-            // dy = (2/N²)(y − T[:, j]); loss += (1/N²)‖y − T[:, j]‖²
             let mut dyr = vec![0.0f32; b * n];
             let mut dyi = vec![0.0f32; b * n];
-            for (bi, j) in (j0..j0 + b).enumerate() {
-                for i in 0..n {
-                    let er = re[bi * n + i] - self.target.re[i * n + j];
-                    let ei = im[bi * n + i] - self.target.im[i * n + j];
-                    total += (er as f64 * er as f64 + ei as f64 * ei as f64) * inv_n2;
-                    dyr[bi * n + i] = (2.0 * inv_n2) as f32 * er;
-                    dyi[bi * n + i] = (2.0 * inv_n2) as f32 * ei;
-                }
-            }
+            total += self.chunk_residual(&re, &im, j0, b, &mut dyr, &mut dyi);
             stack.backward(&saves, &mut dyr, &mut dyi, grad, b);
             j0 += b;
+        }
+        total
+    }
+
+    /// Residual pass shared by every engine: given a chunk's forward
+    /// output `re`/`im` (rows = identity columns `j0..j0+b`), write
+    /// `dy = (2/N²)(y − T[:, j])` and return the chunk's loss
+    /// contribution `(1/N²)·Σ‖y − T[:, j]‖²`.
+    pub(crate) fn chunk_residual(
+        &self,
+        re: &[f32],
+        im: &[f32],
+        j0: usize,
+        b: usize,
+        dyr: &mut [f32],
+        dyi: &mut [f32],
+    ) -> f64 {
+        let n = self.n();
+        let inv_n2 = 1.0 / (n as f64 * n as f64);
+        let mut total = 0.0f64;
+        for (bi, j) in (j0..j0 + b).enumerate() {
+            for i in 0..n {
+                let er = re[bi * n + i] - self.target.re[i * n + j];
+                let ei = im[bi * n + i] - self.target.im[i * n + j];
+                total += (er as f64 * er as f64 + ei as f64 * ei as f64) * inv_n2;
+                dyr[bi * n + i] = (2.0 * inv_n2) as f32 * er;
+                dyi[bi * n + i] = (2.0 * inv_n2) as f32 * ei;
+            }
         }
         total
     }

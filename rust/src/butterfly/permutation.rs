@@ -17,6 +17,14 @@
 //!
 //! Choosing `P^a` at every step composes to the FFT's **bit-reversal**
 //! permutation — recovered by the learned logits in the paper's §4.1.
+//!
+//! Training hot path: the `*_with` entry points take a [`PermTables`]
+//! (gather tables built once per workspace, never per call) plus caller-
+//! owned scratch planes, and run each gate stage batch-innermost — the
+//! gather index and gate weight are read once per position and streamed
+//! across the batch, mirroring the level kernels. The plain
+//! `forward`/`backward` wrappers allocate per call and exist for tests
+//! and cold paths.
 
 use crate::butterfly::params::BpParams;
 
@@ -97,10 +105,73 @@ fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
 }
 
+/// Precomputed generator tables for every `(step, gate)` stage of one
+/// module size `n`. Tables depend only on `n`, so one instance is shared
+/// by every module of a stack and reused across training steps — the
+/// hot path never rebuilds a gather table (the per-call entry points
+/// below construct one on the fly for convenience).
+pub struct PermTables {
+    pub n: usize,
+    /// `3·L` tables in application order, index `step*3 + gate`, each for
+    /// block size `m = n >> step`.
+    by_stage: Vec<Vec<usize>>,
+}
+
+impl PermTables {
+    pub fn new(n: usize) -> Self {
+        let levels = crate::butterfly::params::log2_exact(n);
+        let mut by_stage = Vec::with_capacity(3 * levels);
+        for k in 0..levels {
+            let m = n >> k;
+            for gate in 0..3 {
+                by_stage.push(generator_table(m, gate));
+            }
+        }
+        PermTables { n, by_stage }
+    }
+
+    #[inline(always)]
+    pub fn table(&self, step: usize, gate: usize) -> &[usize] {
+        &self.by_stage[step * 3 + gate]
+    }
+}
+
+/// Record an activation pair into slot `idx` of a save list, reusing the
+/// slot's buffers — no allocation once every slot has reached its
+/// steady-state capacity. Shared by [`PermSaves`] and the module-level
+/// saves in `module.rs` so the reuse invariant lives in one place.
+pub(crate) fn record_slot(slots: &mut Vec<(Vec<f32>, Vec<f32>)>, idx: usize, re: &[f32], im: &[f32]) {
+    while slots.len() <= idx {
+        slots.push((Vec::new(), Vec::new()));
+    }
+    let (r, i) = &mut slots[idx];
+    r.clear();
+    r.extend_from_slice(re);
+    i.clear();
+    i.extend_from_slice(im);
+}
+
 /// Saved activations for backward: the input to each of the `3L` gate
 /// stages, in application order.
 pub struct PermSaves {
     pub stages: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+impl PermSaves {
+    pub fn new() -> Self {
+        PermSaves { stages: Vec::new() }
+    }
+
+    /// Record stage `idx`'s input, reusing the slot's buffers.
+    fn record(&mut self, idx: usize, re: &[f32], im: &[f32]) {
+        record_slot(&mut self.stages, idx, re, im);
+    }
+}
+
+impl Default for PermSaves {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 /// The relaxed permutation of one BP module. Stateless — all parameters
@@ -109,12 +180,15 @@ pub struct RelaxedPerm;
 
 impl RelaxedPerm {
     /// Apply one gate stage in place: `y = p·(P^g x) + (1−p)·x`,
-    /// block-diagonally at block size `m`.
+    /// block-diagonally at block size `m`. Batch-innermost: each gather
+    /// index `table[i]` and the gate weight `p` are read once per
+    /// position and streamed across all batch rows (stride `n`) into the
+    /// `out` planes, which are then copied back wholesale.
     fn gate_stage(
         re: &mut [f32],
         im: &mut [f32],
-        scratch_re: &mut [f32],
-        scratch_im: &mut [f32],
+        out_re: &mut [f32],
+        out_im: &mut [f32],
         n: usize,
         batch: usize,
         m: usize,
@@ -128,62 +202,93 @@ impl RelaxedPerm {
             return; // off gate: exact identity
         }
         let q = 1.0 - p;
-        for bi in 0..batch {
-            let row = bi * n;
-            for blk in 0..(n / m) {
-                let base = row + blk * m;
-                let src_re = &re[base..base + m];
-                let src_im = &im[base..base + m];
-                for i in 0..m {
-                    scratch_re[i] = p * src_re[table[i]] + q * src_re[i];
-                    scratch_im[i] = p * src_im[table[i]] + q * src_im[i];
+        let len = batch * n;
+        for blk in 0..(n / m) {
+            let base = blk * m;
+            for (i, &ti) in table.iter().enumerate() {
+                let mut s = base + ti;
+                let mut d = base + i;
+                for _ in 0..batch {
+                    out_re[d] = p * re[s] + q * re[d];
+                    out_im[d] = p * im[s] + q * im[d];
+                    s += n;
+                    d += n;
                 }
-                re[base..base + m].copy_from_slice(&scratch_re[..m]);
-                im[base..base + m].copy_from_slice(&scratch_im[..m]);
             }
         }
+        re[..len].copy_from_slice(&out_re[..len]);
+        im[..len].copy_from_slice(&out_im[..len]);
     }
 
-    /// Forward through all `L` steps × 3 gates, in place. If `saves` is
-    /// provided, the input to every stage is recorded (needed for
-    /// backward).
-    pub fn forward(
+    /// Forward through all `L` steps × 3 gates, in place, with caller-
+    /// supplied gather tables and blend scratch (`≥ batch·n` each) — the
+    /// allocation-free workspace entry point. If `saves` is provided, the
+    /// input to every stage is recorded into reusable slot buffers.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_with(
         params: &BpParams,
         re: &mut [f32],
         im: &mut [f32],
         batch: usize,
         mut saves: Option<&mut PermSaves>,
+        tables: &PermTables,
+        scratch_re: &mut [f32],
+        scratch_im: &mut [f32],
     ) {
         let n = params.n;
-        let mut sr = vec![0.0f32; n];
-        let mut si = vec![0.0f32; n];
+        debug_assert_eq!(tables.n, n);
+        debug_assert!(scratch_re.len() >= batch * n && scratch_im.len() >= batch * n);
         for k in 0..params.levels {
             let m = n >> k;
             for gate in 0..3 {
                 let p = sigmoid(params.logit(k, gate));
                 if let Some(s) = saves.as_deref_mut() {
-                    s.stages.push((re.to_vec(), im.to_vec()));
+                    s.record(k * 3 + gate, re, im);
                 }
-                let table = generator_table(m, gate);
-                Self::gate_stage(re, im, &mut sr, &mut si, n, batch, m, &table, p);
+                Self::gate_stage(re, im, scratch_re, scratch_im, n, batch, m, tables.table(k, gate), p);
             }
         }
     }
 
-    /// Backward through the permutation. `dy` (in place → `dx`), gate
-    /// gradients accumulated into `grad` at the logit slots.
-    pub fn backward(
+    /// Forward through all `L` steps × 3 gates, in place. Convenience
+    /// wrapper that builds tables and scratch per call; hot paths hold a
+    /// [`PermTables`] + scratch planes and use [`forward_with`].
+    ///
+    /// [`forward_with`]: RelaxedPerm::forward_with
+    pub fn forward(
+        params: &BpParams,
+        re: &mut [f32],
+        im: &mut [f32],
+        batch: usize,
+        saves: Option<&mut PermSaves>,
+    ) {
+        let n = params.n;
+        let tables = PermTables::new(n);
+        let mut sr = vec![0.0f32; batch * n];
+        let mut si = vec![0.0f32; batch * n];
+        Self::forward_with(params, re, im, batch, saves, &tables, &mut sr, &mut si);
+    }
+
+    /// Backward through the permutation with caller-supplied tables and
+    /// `dx` scratch planes (`≥ batch·n` each). `dy` (in place → `dx`),
+    /// gate gradients accumulated into `grad` at the logit slots.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_with(
         params: &BpParams,
         saves: &PermSaves,
         dy_re: &mut [f32],
         dy_im: &mut [f32],
         grad: &mut [f32],
         batch: usize,
+        tables: &PermTables,
+        dx_re: &mut [f32],
+        dx_im: &mut [f32],
     ) {
         let n = params.n;
         debug_assert_eq!(saves.stages.len(), 3 * params.levels);
-        let mut dxr = vec![0.0f32; batch * n];
-        let mut dxi = vec![0.0f32; batch * n];
+        debug_assert_eq!(tables.n, n);
+        let len = batch * n;
+        debug_assert!(dx_re.len() >= len && dx_im.len() >= len);
         // walk stages in reverse order
         for k in (0..params.levels).rev() {
             let m = n >> k;
@@ -193,26 +298,27 @@ impl RelaxedPerm {
                 let logit = params.logit(k, gate);
                 let p = sigmoid(logit);
                 let q = 1.0 - p;
-                let table = generator_table(m, gate);
-                dxr.iter_mut().for_each(|v| *v = 0.0);
-                dxi.iter_mut().for_each(|v| *v = 0.0);
+                let table = tables.table(k, gate);
+                dx_re[..len].iter_mut().for_each(|v| *v = 0.0);
+                dx_im[..len].iter_mut().for_each(|v| *v = 0.0);
                 let mut dp = 0.0f64;
-                for bi in 0..batch {
-                    let row = bi * n;
-                    for blk in 0..(n / m) {
-                        let base = row + blk * m;
-                        for i in 0..m {
-                            let gi = base + table[i];
-                            let oi = base + i;
+                for blk in 0..(n / m) {
+                    let base = blk * m;
+                    for (i, &ti) in table.iter().enumerate() {
+                        let mut gi = base + ti;
+                        let mut oi = base + i;
+                        for _ in 0..batch {
                             let dr = dy_re[oi];
                             let di = dy_im[oi];
                             // y_i = p·x_{g(i)} + (1−p)·x_i
-                            dxr[gi] += p * dr;
-                            dxi[gi] += p * di;
-                            dxr[oi] += q * dr;
-                            dxi[oi] += q * di;
+                            dx_re[gi] += p * dr;
+                            dx_im[gi] += p * di;
+                            dx_re[oi] += q * dr;
+                            dx_im[oi] += q * di;
                             dp += (dr * (x_re[gi] - x_re[oi])) as f64;
                             dp += (di * (x_im[gi] - x_im[oi])) as f64;
+                            gi += n;
+                            oi += n;
                         }
                     }
                 }
@@ -221,10 +327,28 @@ impl RelaxedPerm {
                 if params.perm_tying != crate::butterfly::params::PermTying::Fixed {
                     grad[params.logit_index(k, gate)] += (dp as f32) * p * q;
                 }
-                dy_re.copy_from_slice(&dxr);
-                dy_im.copy_from_slice(&dxi);
+                dy_re[..len].copy_from_slice(&dx_re[..len]);
+                dy_im[..len].copy_from_slice(&dx_im[..len]);
             }
         }
+    }
+
+    /// Backward through the permutation. Convenience wrapper around
+    /// [`backward_with`] that builds tables and scratch per call.
+    ///
+    /// [`backward_with`]: RelaxedPerm::backward_with
+    pub fn backward(
+        params: &BpParams,
+        saves: &PermSaves,
+        dy_re: &mut [f32],
+        dy_im: &mut [f32],
+        grad: &mut [f32],
+        batch: usize,
+    ) {
+        let tables = PermTables::new(params.n);
+        let mut dxr = vec![0.0f32; batch * params.n];
+        let mut dxi = vec![0.0f32; batch * params.n];
+        Self::backward_with(params, saves, dy_re, dy_im, grad, batch, &tables, &mut dxr, &mut dxi);
     }
 
     /// Harden the learned gates to their most likely binary choice.

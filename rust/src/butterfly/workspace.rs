@@ -1,0 +1,394 @@
+//! The allocation-free training engine: persistent workspaces for the
+//! factorization objective, and a chunk-parallel driver over a scoped
+//! thread pool.
+//!
+//! ## Why a workspace
+//!
+//! One Adam step on `FactorizeLoss` streams `N` identity columns through
+//! the stack in chunks, saving every stage input for backward. Done
+//! naively (the allocating path in `module.rs`) that is `(3L + L)·2`
+//! fresh `[chunk, n]` planes *per chunk per module*, plus `dy` planes,
+//! gather tables, and blend scratch — multi-megabyte allocation traffic
+//! per step that dwarfs the O(N² log N) arithmetic at the sizes the
+//! paper trains (§4.1). A [`TrainWorkspace`] owns all of it once:
+//!
+//! - per-module [`ModuleSaves`] whose slot buffers are overwritten in
+//!   place every chunk,
+//! - identity/activation, upstream-gradient, and blend/`dx` scratch
+//!   planes, grown on first use and reused forever after,
+//! - one [`PermTables`] (gather tables depend only on `n`), shared by
+//!   every module and every step.
+//!
+//! The kernels themselves (`level.rs`, `permutation.rs`) are shared with
+//! the allocating path and are batch-innermost: twiddle scalars and
+//! gather indices are hoisted out of the batch loop exactly as in
+//! `fast.rs::apply_batch`. `loss_and_grad_ws` therefore agrees with
+//! `loss_and_grad` **bit-for-bit** — same kernel sequence, same
+//! chunking, different memory ownership.
+//!
+//! ## Determinism rule for the parallel driver
+//!
+//! [`ParallelTrainer`] assigns chunks to threads round-robin by chunk
+//! index (`chunk i → thread i mod T`), each thread accumulates loss and
+//! gradients into its own buffers in ascending chunk order, and the
+//! per-thread buffers are reduced in **thread-index order** after the
+//! scoped join. The floating-point summation order is thus a pure
+//! function of `(n, chunk, T)` — never of scheduling — so a fixed thread
+//! count reproduces bit-identical results run to run, and `T = 1`
+//! degenerates to the serial workspace path (bit-identical to the
+//! allocating path). Different `T` regroup the same chunk sums, which
+//! moves results by rounding only (≲1e-6; see `tests/train_engine.rs`).
+
+use crate::butterfly::module::{BpStack, FactorizeLoss, ModuleSaves, StackGrad};
+use crate::butterfly::permutation::PermTables;
+
+fn grow(v: &mut Vec<f32>, len: usize) {
+    if v.len() < len {
+        v.resize(len, 0.0);
+    }
+}
+
+/// Caller-owned scratch for the training hot path of one stack size `n`.
+/// Reused across chunks, steps, and rungs; allocation-free once warm.
+pub struct TrainWorkspace {
+    n: usize,
+    tables: PermTables,
+    /// Per-module saved activations, slot buffers reused across chunks.
+    saves: Vec<ModuleSaves>,
+    /// Identity-chunk activation planes (forward output in place).
+    xr: Vec<f32>,
+    xi: Vec<f32>,
+    /// Upstream-gradient planes.
+    dyr: Vec<f32>,
+    dyi: Vec<f32>,
+    /// Blend (forward) / `dx` (backward) scratch planes.
+    sr: Vec<f32>,
+    si: Vec<f32>,
+}
+
+impl TrainWorkspace {
+    pub fn new(n: usize) -> Self {
+        TrainWorkspace {
+            n,
+            tables: PermTables::new(n),
+            saves: Vec::new(),
+            xr: Vec::new(),
+            xi: Vec::new(),
+            dyr: Vec::new(),
+            dyi: Vec::new(),
+            sr: Vec::new(),
+            si: Vec::new(),
+        }
+    }
+
+    pub fn for_stack(stack: &BpStack) -> Self {
+        Self::new(stack.n())
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Size every plane for `depth` modules × `len = batch·n` scalars.
+    fn ensure(&mut self, depth: usize, len: usize) {
+        while self.saves.len() < depth {
+            self.saves.push(ModuleSaves::new());
+        }
+        grow(&mut self.xr, len);
+        grow(&mut self.xi, len);
+        grow(&mut self.dyr, len);
+        grow(&mut self.dyi, len);
+        grow(&mut self.sr, len);
+        grow(&mut self.si, len);
+    }
+}
+
+impl FactorizeLoss {
+    /// Loss + gradient through `ws` — allocation-free in steady state and
+    /// bit-identical to [`FactorizeLoss::loss_and_grad`] (same kernels,
+    /// same chunking, same accumulation order). Gradients are
+    /// *accumulated* into `grad`, matching the allocating path.
+    pub fn loss_and_grad_ws(&self, stack: &BpStack, grad: &mut StackGrad, ws: &mut TrainWorkspace) -> f64 {
+        let n = self.n();
+        assert_eq!(ws.n, n, "workspace built for n = {}, loss has n = {}", ws.n, n);
+        // clamp exactly like the parallel driver so chunk == 0 cannot
+        // stall the loop and T = 1 chunking always matches
+        let chunk = self.chunk.min(n).max(1);
+        ws.ensure(stack.depth(), chunk * n);
+        let mut total = 0.0f64;
+        let mut j0 = 0usize;
+        while j0 < n {
+            let b = chunk.min(n - j0);
+            total += self.chunk_loss_and_grad_ws(stack, j0, b, grad, ws);
+            j0 += b;
+        }
+        total
+    }
+
+    /// One chunk of the workspace path: identity columns `j0..j0+b`
+    /// forward (saving), residual, backward. `ws` must be `ensure`d.
+    fn chunk_loss_and_grad_ws(
+        &self,
+        stack: &BpStack,
+        j0: usize,
+        b: usize,
+        grad: &mut StackGrad,
+        ws: &mut TrainWorkspace,
+    ) -> f64 {
+        let n = self.n();
+        let len = b * n;
+        let TrainWorkspace { tables, saves, xr, xi, dyr, dyi, sr, si, .. } = ws;
+        let xr = &mut xr[..len];
+        let xi = &mut xi[..len];
+        xr.fill(0.0);
+        xi.fill(0.0);
+        for (bi, j) in (j0..j0 + b).enumerate() {
+            xr[bi * n + j] = 1.0;
+        }
+        for (mi, m) in stack.modules.iter().enumerate() {
+            m.forward_saving_with(xr, xi, b, &mut saves[mi], tables, sr, si);
+        }
+        let dyr = &mut dyr[..len];
+        let dyi = &mut dyi[..len];
+        let total = self.chunk_residual(xr, xi, j0, b, dyr, dyi);
+        for (mi, m) in stack.modules.iter().enumerate().rev() {
+            m.backward_with(&saves[mi], dyr, dyi, &mut grad[mi], b, tables, sr, si);
+        }
+        total
+    }
+
+    /// Loss only (no saves, no gradient) through `ws` — the cheap
+    /// final-θ evaluation `Trial::advance` runs so the RMSE it reports
+    /// describes the parameters actually kept.
+    pub fn loss_ws(&self, stack: &BpStack, ws: &mut TrainWorkspace) -> f64 {
+        let n = self.n();
+        assert_eq!(ws.n, n, "workspace built for n = {}, loss has n = {}", ws.n, n);
+        let chunk = self.chunk.min(n).max(1);
+        ws.ensure(stack.depth(), chunk * n);
+        let mut total = 0.0f64;
+        let mut j0 = 0usize;
+        while j0 < n {
+            let b = chunk.min(n - j0);
+            let len = b * n;
+            let TrainWorkspace { tables, xr, xi, dyr, dyi, sr, si, .. } = ws;
+            let xr = &mut xr[..len];
+            let xi = &mut xi[..len];
+            xr.fill(0.0);
+            xi.fill(0.0);
+            for (bi, j) in (j0..j0 + b).enumerate() {
+                xr[bi * n + j] = 1.0;
+            }
+            for m in &stack.modules {
+                m.apply_batch_with(xr, xi, b, tables, sr, si);
+            }
+            // dy is computed into scratch and discarded
+            total += self.chunk_residual(xr, xi, j0, b, &mut dyr[..len], &mut dyi[..len]);
+            j0 += b;
+        }
+        total
+    }
+
+    /// Chunk-parallel loss + gradient across a scoped thread pool.
+    ///
+    /// Chunks go to threads round-robin by index; each thread owns a
+    /// workspace and a gradient buffer, and buffers are reduced in
+    /// thread-index order (see the module docs' determinism rule).
+    /// `T = 1` delegates to the serial workspace path, so it is
+    /// bit-identical to [`FactorizeLoss::loss_and_grad`].
+    pub fn loss_and_grad_parallel(&self, stack: &BpStack, grad: &mut StackGrad, pool: &mut ParallelTrainer) -> f64 {
+        let t = pool.threads;
+        if t == 1 {
+            return self.loss_and_grad_ws(stack, grad, &mut pool.workspaces[0]);
+        }
+        let n = self.n();
+        assert!(
+            pool.workspaces.iter().all(|w| w.n == n),
+            "trainer pool built for n = {}, loss has n = {}",
+            pool.workspaces[0].n,
+            n
+        );
+        let chunk = self.chunk.min(n).max(1);
+        let num_chunks = (n + chunk - 1) / chunk;
+        pool.ensure_grads(stack);
+        let depth = stack.depth();
+        let ParallelTrainer { workspaces, grads, .. } = pool;
+        let losses: Vec<f64> = std::thread::scope(|scope| {
+            let handles: Vec<_> = workspaces
+                .iter_mut()
+                .zip(grads.iter_mut())
+                .enumerate()
+                .map(|(ti, (ws, g))| {
+                    scope.spawn(move || {
+                        for gm in g.iter_mut() {
+                            gm.fill(0.0);
+                        }
+                        ws.ensure(depth, chunk * n);
+                        let mut loss = 0.0f64;
+                        let mut ci = ti;
+                        while ci < num_chunks {
+                            let j0 = ci * chunk;
+                            let b = chunk.min(n - j0);
+                            loss += self.chunk_loss_and_grad_ws(stack, j0, b, g, ws);
+                            ci += t;
+                        }
+                        loss
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // fixed-order reduction: thread 0, 1, …, T−1
+        let mut total = 0.0f64;
+        for l in &losses {
+            total += *l;
+        }
+        for g in grads.iter() {
+            for (gm, acc) in g.iter().zip(grad.iter_mut()) {
+                for (v, a) in gm.iter().zip(acc.iter_mut()) {
+                    *a += *v;
+                }
+            }
+        }
+        total
+    }
+}
+
+/// A reusable pool of per-thread workspaces + gradient buffers for
+/// [`FactorizeLoss::loss_and_grad_parallel`]. The thread count is fixed
+/// at construction — it is part of the floating-point summation order,
+/// so changing it changes results at the rounding level.
+///
+/// What persists is the *memory* (workspaces, grad buffers), not the
+/// OS threads: each call runs a fresh `std::thread::scope`, the only
+/// std-only way to lend `&stack` to workers without `Arc`-ifying the
+/// training state. The ~tens-of-µs spawn+join cost per step is noise
+/// against a step at n ≥ 256 but visible at small n — which is why
+/// `Trial` (whose scheduler already parallelizes across trials) uses
+/// the serial path, and the fig3 bench reports small-n thread scaling
+/// with that overhead included.
+pub struct ParallelTrainer {
+    threads: usize,
+    workspaces: Vec<TrainWorkspace>,
+    grads: Vec<StackGrad>,
+}
+
+impl ParallelTrainer {
+    pub fn new(n: usize, threads: usize) -> Self {
+        let threads = threads.max(1);
+        ParallelTrainer {
+            threads,
+            workspaces: (0..threads).map(|_| TrainWorkspace::new(n)).collect(),
+            grads: Vec::new(),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Make the per-thread gradient buffers match `stack`'s shape.
+    fn ensure_grads(&mut self, stack: &BpStack) {
+        let ok = self.grads.len() == self.threads
+            && self.grads.iter().all(|g| {
+                g.len() == stack.depth()
+                    && g.iter().zip(&stack.modules).all(|(gv, m)| gv.len() == m.params.data.len())
+            });
+        if !ok {
+            self.grads = (0..self.threads).map(|_| stack.zero_grad()).collect();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::butterfly::module::{BpModule, FactorizeLoss};
+    use crate::butterfly::params::{BpParams, Field, InitScheme, PermTying, TwiddleTying};
+    use crate::util::rng::Rng;
+
+    fn rand_stack(n: usize, depth: usize, seed: u64) -> BpStack {
+        let mut rng = Rng::new(seed);
+        let mods = (0..depth)
+            .map(|_| {
+                let mut p = BpParams::init(
+                    n,
+                    Field::Complex,
+                    TwiddleTying::Factor,
+                    PermTying::Untied,
+                    InitScheme::OrthogonalLike,
+                    &mut rng,
+                );
+                for k in 0..p.levels {
+                    for g in 0..3 {
+                        p.set_logit(k, g, rng.normal_f32(0.0, 1.0));
+                    }
+                }
+                BpModule::new(p)
+            })
+            .collect();
+        BpStack::new(mods)
+    }
+
+    #[test]
+    fn workspace_reuse_is_invisible() {
+        let stack = rand_stack(16, 2, 3);
+        let target = rand_stack(16, 2, 4).to_matrix();
+        let loss = FactorizeLoss::new(target);
+        let mut ws = TrainWorkspace::for_stack(&stack);
+        let mut g1 = stack.zero_grad();
+        let l1 = loss.loss_and_grad_ws(&stack, &mut g1, &mut ws);
+        // second call through the same (now warm) workspace
+        let mut g2 = stack.zero_grad();
+        let l2 = loss.loss_and_grad_ws(&stack, &mut g2, &mut ws);
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        for (a, b) in g1.iter().flatten().zip(g2.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn loss_ws_matches_loss_and_grad() {
+        let stack = rand_stack(16, 1, 7);
+        let target = rand_stack(16, 1, 8).to_matrix();
+        let loss = FactorizeLoss::new(target);
+        let mut ws = TrainWorkspace::for_stack(&stack);
+        let mut g = stack.zero_grad();
+        let with_grad = loss.loss_and_grad_ws(&stack, &mut g, &mut ws);
+        let without = loss.loss_ws(&stack, &mut ws);
+        assert_eq!(with_grad.to_bits(), without.to_bits());
+    }
+
+    #[test]
+    fn one_thread_pool_delegates_to_serial() {
+        let stack = rand_stack(8, 1, 11);
+        let target = rand_stack(8, 1, 12).to_matrix();
+        let loss = FactorizeLoss::new(target);
+        let mut ws = TrainWorkspace::for_stack(&stack);
+        let mut g_ser = stack.zero_grad();
+        let l_ser = loss.loss_and_grad_ws(&stack, &mut g_ser, &mut ws);
+        let mut pool = ParallelTrainer::new(8, 1);
+        let mut g_par = stack.zero_grad();
+        let l_par = loss.loss_and_grad_parallel(&stack, &mut g_par, &mut pool);
+        assert_eq!(l_ser.to_bits(), l_par.to_bits());
+        for (a, b) in g_ser.iter().flatten().zip(g_par.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn parallel_is_deterministic_for_fixed_thread_count() {
+        let stack = rand_stack(16, 2, 21);
+        let target = rand_stack(16, 2, 22).to_matrix();
+        let mut loss = FactorizeLoss::new(target);
+        loss.chunk = 3; // ragged chunking across threads
+        let mut pool = ParallelTrainer::new(16, 3);
+        let mut g1 = stack.zero_grad();
+        let l1 = loss.loss_and_grad_parallel(&stack, &mut g1, &mut pool);
+        let mut g2 = stack.zero_grad();
+        let l2 = loss.loss_and_grad_parallel(&stack, &mut g2, &mut pool);
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        for (a, b) in g1.iter().flatten().zip(g2.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

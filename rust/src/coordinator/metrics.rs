@@ -11,8 +11,14 @@ pub struct Metrics {
     pub steps_total: AtomicUsize,
     pub jobs_completed: AtomicUsize,
     pub targets_reached: AtomicUsize,
-    /// Cumulative optimizer wall time, microseconds.
+    /// Cumulative optimizer wall time, microseconds: time spent inside
+    /// `Trial::advance`, summed across workers. Parallel workers overlap,
+    /// so this can legitimately exceed `job_micros`.
     pub train_micros: AtomicU64,
+    /// Cumulative whole-job wall clock, microseconds — includes config
+    /// sampling, scheduling, and registry bookkeeping (what the old
+    /// `train_micros` mistakenly recorded).
+    pub job_micros: AtomicU64,
 }
 
 impl Metrics {
@@ -29,6 +35,7 @@ impl Metrics {
             jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
             targets_reached: self.targets_reached.load(Ordering::Relaxed),
             train_micros: self.train_micros.load(Ordering::Relaxed),
+            job_micros: self.job_micros.load(Ordering::Relaxed),
         }
     }
 }
@@ -42,20 +49,22 @@ pub struct MetricsSnapshot {
     pub jobs_completed: usize,
     pub targets_reached: usize,
     pub train_micros: u64,
+    pub job_micros: u64,
 }
 
 impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "trials {}/{} (pruned {}), steps {}, jobs {} (hit target {}), train {:.2}s",
+            "trials {}/{} (pruned {}), steps {}, jobs {} (hit target {}), train {:.2}s, wall {:.2}s",
             self.trials_completed,
             self.trials_started,
             self.trials_pruned,
             self.steps_total,
             self.jobs_completed,
             self.targets_reached,
-            self.train_micros as f64 / 1e6
+            self.train_micros as f64 / 1e6,
+            self.job_micros as f64 / 1e6
         )
     }
 }

@@ -2,14 +2,32 @@
 //! inspect while (and after) a job runs.
 
 use crate::coordinator::job::TrialConfig;
+use std::cmp::Ordering;
 use std::collections::HashMap;
 use std::sync::Mutex;
+
+/// The coordinator-wide RMSE ranking rule, shared by rung ranking and
+/// the leaderboard: ascending RMSE under a *total* order — any NaN (a
+/// diverged trial, either sign) sorts last, after +∞, instead of
+/// panicking a `partial_cmp().unwrap()` — with trial id as the
+/// tie-break so equal losses rank deterministically.
+pub(crate) fn rmse_rank(a_rmse: f64, a_id: usize, b_rmse: f64, b_id: usize) -> Ordering {
+    a_rmse
+        .is_nan()
+        .cmp(&b_rmse.is_nan())
+        .then(a_rmse.total_cmp(&b_rmse))
+        .then(a_id.cmp(&b_id))
+}
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TrialStatus {
     Running,
     Pruned,
     Completed,
+    /// Scheduled for a rung but skipped because the job early-stopped
+    /// before a worker picked it up — never measured in that rung, so
+    /// its record keeps the last real measurement (or none at all).
+    Cancelled,
 }
 
 #[derive(Debug, Clone)]
@@ -66,10 +84,10 @@ impl Registry {
         self.len() == 0
     }
 
-    /// All records, best RMSE first.
+    /// All records, best RMSE first (the [`rmse_rank`] total order).
     pub fn leaderboard(&self) -> Vec<TrialRecord> {
         let mut v: Vec<TrialRecord> = self.inner.lock().unwrap().values().cloned().collect();
-        v.sort_by(|a, b| a.rmse.partial_cmp(&b.rmse).unwrap());
+        v.sort_by(|a, b| rmse_rank(a.rmse, a.id, b.rmse, b.id));
         v
     }
 
@@ -100,6 +118,20 @@ mod tests {
         r.set_status(0, TrialStatus::Pruned);
         assert_eq!(r.count_status(TrialStatus::Pruned), 1);
         assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn leaderboard_orders_nan_last_and_breaks_ties_by_id() {
+        let r = Registry::new();
+        for i in 0..4 {
+            r.insert(i, cfg());
+        }
+        r.update(0, 1, f64::NAN, 0);
+        r.update(1, 1, 0.5, 0);
+        r.update(2, 1, 0.5, 0);
+        r.update(3, 1, f64::INFINITY, 0);
+        let ids: Vec<usize> = r.leaderboard().iter().map(|x| x.id).collect();
+        assert_eq!(ids, vec![1, 2, 3, 0]);
     }
 
     #[test]

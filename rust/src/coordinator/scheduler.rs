@@ -61,6 +61,20 @@ struct WorkDone {
     /// cumulative across rungs, so summing it per rung over-counts every
     /// surviving trial once per rung it passes through.
     delta_steps: usize,
+    /// The trial owed steps this rung but a worker skipped it because
+    /// the job's early stop had already fired — `rmse` is its previous
+    /// measurement (or ∞ if it never ran), not a rung result.
+    skipped: bool,
+}
+
+/// Rank a rung's results for successive halving with the shared
+/// [`rmse_rank`] total order (NaN-safe, id tie-break), so ranking is
+/// identical every run regardless of worker finish order and matches
+/// the registry leaderboard's ordering rule.
+///
+/// [`rmse_rank`]: crate::coordinator::registry::rmse_rank
+fn sort_rung(done: &mut [WorkDone]) {
+    done.sort_by(|a, b| crate::coordinator::registry::rmse_rank(a.rmse, a.id, b.rmse, b.id));
 }
 
 /// FNV-1a of the transform kind name. Distinct transforms must draw
@@ -119,32 +133,50 @@ pub fn run_job(job: &FactorizeJob, cfg: &SchedulerConfig, metrics: &Metrics, reg
                     let queue = &queue;
                     let stop = &stop;
                     let job = &job;
+                    let metrics = &metrics;
                     scope.spawn(move || loop {
                         let item = queue.lock().unwrap().pop_front();
                         let Some(mut item) = item else { break };
                         let before = item.trial.steps_done;
                         let k = item.to_steps.saturating_sub(before);
+                        let mut skipped = false;
                         let rmse = if k > 0 && !stop.load(Ordering::Relaxed) {
+                            let t_adv = Instant::now();
                             let r = item.trial.advance(k, job.target_rmse);
+                            // train time = time inside the optimizer only,
+                            // not sampling/scheduling/bookkeeping
+                            metrics
+                                .train_micros
+                                .fetch_add(t_adv.elapsed().as_micros() as u64, Ordering::Relaxed);
                             if r <= job.target_rmse {
                                 stop.store(true, Ordering::Relaxed);
                             }
                             r
                         } else {
+                            skipped = k > 0;
                             item.trial.last_loss.sqrt()
                         };
                         let delta_steps = item.trial.steps_done - before;
-                        let _ = tx.send(WorkDone { id: item.id, trial: item.trial, rmse, delta_steps });
+                        let _ = tx.send(WorkDone { id: item.id, trial: item.trial, rmse, delta_steps, skipped });
                     });
                 }
                 drop(tx);
             });
             let mut done: Vec<WorkDone> = rx.into_iter().collect();
+            // channel order depends on worker finish order; sort_rung's
+            // total order makes ranking (and everything downstream of it)
+            // independent of that.
+            sort_rung(&mut done);
             for d in &done {
-                registry.update(d.id, d.trial.steps_done, d.rmse, ri);
+                // a skipped trial produced no measurement this rung:
+                // leave its previous registry record (possibly the
+                // "never measured" default) untouched instead of writing
+                // its stale or infinite RMSE as if it were one.
+                if !d.skipped {
+                    registry.update(d.id, d.trial.steps_done, d.rmse, ri);
+                }
                 total_steps += d.delta_steps;
             }
-            done.sort_by(|a, b| a.rmse.partial_cmp(&b.rmse).unwrap());
             // track global best
             if let Some(top) = done.first() {
                 if best.as_ref().map_or(true, |(r, ..)| top.rmse < *r) {
@@ -157,8 +189,17 @@ pub fn run_job(job: &FactorizeJob, cfg: &SchedulerConfig, metrics: &Metrics, reg
                 }
             }
             if stop.load(Ordering::Relaxed) {
+                // Early stop: only trials with a real measurement this
+                // rung completed; ones the workers skipped were never
+                // measured here — cancel them rather than recording a
+                // phantom completion.
                 for d in &done {
-                    registry.set_status(d.id, TrialStatus::Completed);
+                    if d.skipped {
+                        registry.set_status(d.id, TrialStatus::Cancelled);
+                    } else {
+                        registry.set_status(d.id, TrialStatus::Completed);
+                        metrics.trials_completed.fetch_add(1, Ordering::Relaxed);
+                    }
                 }
                 log::info(&format!(
                     "job {}: target rmse {:.1e} reached after {} steps",
@@ -197,7 +238,7 @@ pub fn run_job(job: &FactorizeJob, cfg: &SchedulerConfig, metrics: &Metrics, reg
         metrics.targets_reached.fetch_add(1, Ordering::Relaxed);
     }
     let wall = t0.elapsed().as_secs_f64();
-    metrics.train_micros.fetch_add((wall * 1e6) as u64, Ordering::Relaxed);
+    metrics.job_micros.fetch_add((wall * 1e6) as u64, Ordering::Relaxed);
     JobResult {
         job_id: job.id(),
         best_rmse,
@@ -214,6 +255,7 @@ pub fn run_job(job: &FactorizeJob, cfg: &SchedulerConfig, metrics: &Metrics, reg
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::butterfly::params::PermTying;
     use crate::transforms::spec::TransformKind;
 
     #[test]
@@ -226,7 +268,61 @@ mod tests {
         assert!(res.best_rmse < 2e-3, "best rmse {}", res.best_rmse);
         assert!(res.trials_run >= 9);
         assert!(registry.len() >= res.trials_run.min(9));
-        assert!(metrics.snapshot().steps_total > 0);
+        let snap = metrics.snapshot();
+        assert!(snap.steps_total > 0);
+        // train time is measured inside Trial::advance only, job time is
+        // whole-job wall clock — both must have accumulated
+        assert!(snap.train_micros > 0);
+        assert!(snap.job_micros > 0);
+    }
+
+    #[test]
+    fn rung_ranking_is_total_deterministic_and_nan_safe() {
+        let job = FactorizeJob::paper(TransformKind::Dft, 4, 1, 10);
+        let cfg = TrialConfig { lr: 0.01, seed: 1, perm_tying: PermTying::Untied };
+        let mk = |id: usize, rmse: f64| WorkDone {
+            id,
+            trial: Trial::new(&job, cfg),
+            rmse,
+            delta_steps: 0,
+            skipped: false,
+        };
+        // ties (ids 2, 3), a NaN, and an ∞ — the old
+        // `partial_cmp().unwrap()` panicked on the NaN and broke ties by
+        // worker finish order
+        let mut done = vec![mk(3, 0.5), mk(1, f64::NAN), mk(2, 0.5), mk(0, 0.1), mk(4, f64::INFINITY)];
+        sort_rung(&mut done);
+        let ids: Vec<usize> = done.iter().map(|d| d.id).collect();
+        assert_eq!(ids, vec![0, 2, 3, 4, 1], "ties by id, ∞ before NaN, NaN last");
+        // negative NaN must also rank last, not first
+        let mut done = vec![mk(1, -f64::NAN), mk(0, 0.1)];
+        sort_rung(&mut done);
+        assert_eq!(done[0].id, 0);
+        assert_eq!(done[1].id, 1);
+    }
+
+    #[test]
+    fn early_stop_cancels_skipped_trials() {
+        // target_rmse so loose that the very first evaluation satisfies
+        // it: with one worker, trial 0 completes and fires the stop, and
+        // every other trial in the rung is skipped. Those must be
+        // Cancelled (not Completed), with no ∞ "measurement" recorded.
+        let mut job = FactorizeJob::paper(TransformKind::Hadamard, 8, 3, 1000);
+        job.target_rmse = 1e9;
+        let cfg = SchedulerConfig { workers: 1, max_resource: 9, eta: 3, step_quantum: 10, seed: 13 };
+        let registry = Registry::new();
+        let res = run_job(&job, &cfg, &Metrics::new(), &registry);
+        assert!(res.reached_target);
+        assert_eq!(registry.count_status(TrialStatus::Completed), 1);
+        assert!(registry.len() > 1, "bracket should have sampled several trials");
+        assert_eq!(registry.count_status(TrialStatus::Cancelled), registry.len() - 1);
+        for r in registry.leaderboard() {
+            match r.status {
+                TrialStatus::Completed => assert!(r.rmse.is_finite(), "completed trial has rmse {}", r.rmse),
+                TrialStatus::Cancelled => assert_eq!(r.steps, 0, "skipped trial must not claim steps"),
+                s => panic!("unexpected status {s:?}"),
+            }
+        }
     }
 
     #[test]

@@ -2,10 +2,24 @@
 //! unit successive halving promotes: it can be advanced by any number of
 //! steps, paused, and resumed, and its parameters can be extracted for
 //! serving once it wins.
+//!
+//! A trial owns one [`TrainWorkspace`] plus persistent gradient and
+//! flattened θ/∇/mask buffers, created once at [`Trial::new`] and reused
+//! by every [`Trial::advance`] call across every rung — the steady-state
+//! step loop performs no allocation.
+//!
+//! Memory trade-off: workspace planes are lazily grown on a trial's
+//! first `advance`, so a freshly sampled bracket costs nothing, but
+//! every trial that has run holds its warm planes (O(chunk·n·L) per
+//! module, ~10 MB at n = 1024) until it is pruned. Peak memory therefore
+//! scales with the rung-0 population rather than the worker count —
+//! fine at the paper's sizes; a per-worker workspace threaded into
+//! `advance` would be the next step if brackets ever outgrow RAM.
 
-use crate::butterfly::module::{BpModule, BpStack, FactorizeLoss};
+use crate::butterfly::module::{BpModule, BpStack, FactorizeLoss, StackGrad};
 use crate::butterfly::params::{BpParams, InitScheme, TwiddleTying};
 use crate::butterfly::permutation::RelaxedPerm;
+use crate::butterfly::workspace::TrainWorkspace;
 use crate::coordinator::job::{FactorizeJob, TrialConfig};
 use crate::opt::adam::Adam;
 use crate::util::rng::Rng;
@@ -18,8 +32,15 @@ pub struct Trial {
     pub steps_done: usize,
     pub last_loss: f64,
     pub best_rmse: f64,
-    masks: Vec<Vec<f32>>,
     loss_fn: FactorizeLoss,
+    /// Reusable training workspace (persists across rungs).
+    ws: TrainWorkspace,
+    /// Persistent per-module gradient buffers.
+    grad: StackGrad,
+    /// Flattened θ/∇/mask views for the optimizer.
+    flat_theta: Vec<f32>,
+    flat_grad: Vec<f32>,
+    flat_mask: Vec<f32>,
 }
 
 impl Trial {
@@ -39,7 +60,17 @@ impl Trial {
             .collect();
         let stack = BpStack::new(modules);
         let total_len: usize = stack.modules.iter().map(|m| m.params.data.len()).sum();
-        let masks = stack.modules.iter().map(|m| m.params.trainable_mask()).collect();
+        let mut flat_mask = vec![0.0f32; total_len];
+        {
+            let mut off = 0;
+            for m in &stack.modules {
+                let len = m.params.data.len();
+                flat_mask[off..off + len].copy_from_slice(&m.params.trainable_mask());
+                off += len;
+            }
+        }
+        let grad = stack.zero_grad();
+        let ws = TrainWorkspace::for_stack(&stack);
         Trial {
             config,
             opt: Adam::new(total_len, config.lr),
@@ -47,28 +78,31 @@ impl Trial {
             steps_done: 0,
             last_loss: f64::INFINITY,
             best_rmse: f64::INFINITY,
-            masks,
             loss_fn: FactorizeLoss::new(job.target.clone()),
+            ws,
+            grad,
+            flat_theta: vec![0.0f32; total_len],
+            flat_grad: vec![0.0f32; total_len],
+            flat_mask,
         }
     }
 
     /// Advance by `k` Adam steps (or until `target_rmse`); returns the
-    /// current RMSE.
+    /// RMSE of the parameters the trial actually holds on return.
+    ///
+    /// The step loop measures loss at θ_t before stepping to θ_{t+1}, so
+    /// after the final step the freshest measurement would describe
+    /// parameters one step stale. A loss-only re-evaluation of the final
+    /// θ keeps the `(rmse, θ)` pair consistent — the RMSE used for rung
+    /// ranking and recorded beside the packed stack is the RMSE of the
+    /// parameters that are kept and served. (The early-stop return fires
+    /// *before* stepping, so that pair is consistent by construction.)
     pub fn advance(&mut self, k: usize, target_rmse: f64) -> f64 {
-        let mut flat_grad = vec![0.0f32; self.opt.m.len()];
-        let mut flat_theta = vec![0.0f32; self.opt.m.len()];
-        let mut flat_mask = vec![0.0f32; self.opt.m.len()];
-        {
-            let mut off = 0;
-            for (mi, m) in self.stack.modules.iter().enumerate() {
-                let len = m.params.data.len();
-                flat_mask[off..off + len].copy_from_slice(&self.masks[mi]);
-                off += len;
-            }
-        }
         for _ in 0..k {
-            let mut grad = self.stack.zero_grad();
-            let loss = self.loss_fn.loss_and_grad(&self.stack, &mut grad);
+            for g in self.grad.iter_mut() {
+                g.fill(0.0);
+            }
+            let loss = self.loss_fn.loss_and_grad_ws(&self.stack, &mut self.grad, &mut self.ws);
             self.last_loss = loss;
             self.best_rmse = self.best_rmse.min(loss.sqrt());
             self.steps_done += 1;
@@ -79,17 +113,22 @@ impl Trial {
             let mut off = 0;
             for (mi, m) in self.stack.modules.iter().enumerate() {
                 let len = m.params.data.len();
-                flat_theta[off..off + len].copy_from_slice(&m.params.data);
-                flat_grad[off..off + len].copy_from_slice(&grad[mi]);
+                self.flat_theta[off..off + len].copy_from_slice(&m.params.data);
+                self.flat_grad[off..off + len].copy_from_slice(&self.grad[mi]);
                 off += len;
             }
-            self.opt.step(&mut flat_theta, &flat_grad, Some(&flat_mask));
+            self.opt.step(&mut self.flat_theta, &self.flat_grad, Some(&self.flat_mask));
             let mut off = 0;
             for m in self.stack.modules.iter_mut() {
                 let len = m.params.data.len();
-                m.params.data.copy_from_slice(&flat_theta[off..off + len]);
+                m.params.data.copy_from_slice(&self.flat_theta[off..off + len]);
                 off += len;
             }
+        }
+        if k > 0 {
+            let loss = self.loss_fn.loss_ws(&self.stack, &mut self.ws);
+            self.last_loss = loss;
+            self.best_rmse = self.best_rmse.min(loss.sqrt());
         }
         self.last_loss.sqrt()
     }
@@ -149,6 +188,30 @@ mod tests {
         let r = t.advance(50, 1e-6);
         assert!(r < 1e-6);
         assert_eq!(t.steps_done, 1);
+    }
+
+    #[test]
+    fn reported_rmse_describes_kept_parameters() {
+        // Regression (stale-RMSE bug): advance used to return the loss
+        // measured at θ_t while the stack already held θ_{t+1}, so the
+        // rung-ranking RMSE described parameters one Adam step older than
+        // the ones kept/served. The returned value must now match an
+        // independent recomputation from the stack the trial holds.
+        let job = FactorizeJob::paper(TransformKind::Dft, 8, 7, 1000);
+        let cfg = TrialConfig { lr: 0.03, seed: 11, perm_tying: PermTying::Untied };
+        let mut t = Trial::new(&job, cfg);
+        let reported = t.advance(40, 0.0);
+        let recomputed = t.rmse();
+        assert!(
+            (reported - recomputed).abs() <= 1e-7 * (1.0 + recomputed),
+            "reported {reported} vs recomputed {recomputed}"
+        );
+        // and the canonical (served) parameter layout reproduces it too
+        let served = FactorizeLoss::new(job.target.clone()).rmse(&t.canonical_stack());
+        assert!(
+            (reported - served).abs() <= 1e-7 * (1.0 + served),
+            "reported {reported} vs served {served}"
+        );
     }
 
     #[test]

@@ -16,12 +16,17 @@ fn full_job_bookkeeping() {
     assert_eq!(snap.trials_started, res.trials_run);
     assert!(snap.steps_total > 0);
     assert_eq!(snap.steps_total, res.total_steps);
+    // train time accumulates from inside Trial::advance; job time is the
+    // whole-job wall clock (the two are distinct counters now)
+    assert!(snap.train_micros > 0);
+    assert!(snap.job_micros > 0);
     // registry is consistent: every trial has a record, statuses partition
     assert_eq!(registry.len(), res.trials_run);
     let done = registry.count_status(TrialStatus::Completed);
     let pruned = registry.count_status(TrialStatus::Pruned);
     let running = registry.count_status(TrialStatus::Running);
-    assert_eq!(done + pruned + running, res.trials_run);
+    let cancelled = registry.count_status(TrialStatus::Cancelled);
+    assert_eq!(done + pruned + running + cancelled, res.trials_run);
     // leaderboard best matches result
     let lb = registry.leaderboard();
     assert!((lb[0].rmse - res.best_rmse).abs() < 1e-9 || res.best_rmse <= lb[0].rmse);

@@ -1,0 +1,160 @@
+//! Grad-parity and determinism suite for the workspace training engine.
+//!
+//! Contract under test (see `butterfly::workspace`):
+//! - the workspace path and the per-call-allocating path run the same
+//!   kernels over the same chunking, so they agree **bit-for-bit**;
+//! - the chunk-parallel driver at `T = 1` is the serial path exactly;
+//! - at `T ∈ {2, 8}` only the floating-point regrouping of chunk sums
+//!   changes, so gradients agree to ≤ 1e-6 and results for a fixed `T`
+//!   are bit-reproducible;
+//! - the Hyperband scheduler built on top of it is deterministic across
+//!   runs *and* worker counts (per-trial work and rung ranking no longer
+//!   depend on worker finish order).
+
+use butterfly::butterfly::module::{BpModule, BpStack, FactorizeLoss};
+use butterfly::butterfly::params::{BpParams, Field, InitScheme, PermTying, TwiddleTying};
+use butterfly::butterfly::workspace::{ParallelTrainer, TrainWorkspace};
+use butterfly::coordinator::{run_job, FactorizeJob, Metrics, Registry, SchedulerConfig};
+use butterfly::transforms::spec::TransformKind;
+use butterfly::util::rng::Rng;
+
+fn rand_stack(n: usize, depth: usize, field: Field, tying: TwiddleTying, seed: u64) -> BpStack {
+    let mut rng = Rng::new(seed);
+    let mods = (0..depth)
+        .map(|_| {
+            let mut p = BpParams::init(n, field, tying, PermTying::Untied, InitScheme::OrthogonalLike, &mut rng);
+            for k in 0..p.levels {
+                for g in 0..3 {
+                    p.set_logit(k, g, rng.normal_f32(0.0, 1.0));
+                }
+            }
+            BpModule::new(p)
+        })
+        .collect();
+    BpStack::new(mods)
+}
+
+/// Every (field × twiddle-tying × chunk) cell: workspace serial path and
+/// 1-thread parallel path must match the allocating path bit-for-bit.
+#[test]
+fn workspace_paths_match_allocating_path_bitwise() {
+    let n = 16;
+    for field in [Field::Real, Field::Complex] {
+        for tying in [TwiddleTying::Factor, TwiddleTying::Block] {
+            let seed = 100 + field as u64 * 10 + tying as u64;
+            let stack = rand_stack(n, 2, field, tying, seed);
+            let target = rand_stack(n, 2, Field::Complex, TwiddleTying::Factor, seed + 1).to_matrix();
+            for chunk in [3usize, 7, n] {
+                let mut loss_fn = FactorizeLoss::new(target.clone());
+                loss_fn.chunk = chunk;
+                let ctx = format!("{field:?}/{tying:?}/chunk {chunk}");
+
+                let mut g_ref = stack.zero_grad();
+                let l_ref = loss_fn.loss_and_grad(&stack, &mut g_ref);
+
+                let mut ws = TrainWorkspace::for_stack(&stack);
+                let mut g_ws = stack.zero_grad();
+                let l_ws = loss_fn.loss_and_grad_ws(&stack, &mut g_ws, &mut ws);
+                assert_eq!(l_ref.to_bits(), l_ws.to_bits(), "loss diverged ({ctx})");
+                for (a, b) in g_ref.iter().flatten().zip(g_ws.iter().flatten()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "serial ws grad diverged ({ctx})");
+                }
+
+                let mut pool = ParallelTrainer::new(n, 1);
+                let mut g_p1 = stack.zero_grad();
+                let l_p1 = loss_fn.loss_and_grad_parallel(&stack, &mut g_p1, &mut pool);
+                assert_eq!(l_ref.to_bits(), l_p1.to_bits(), "1-thread loss diverged ({ctx})");
+                for (a, b) in g_ref.iter().flatten().zip(g_p1.iter().flatten()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "1-thread grad diverged ({ctx})");
+                }
+            }
+        }
+    }
+}
+
+/// Thread counts 2 and 8 regroup chunk sums only: ≤ 1e-6 from serial,
+/// and bit-reproducible for a fixed thread count.
+#[test]
+fn parallel_grads_match_serial_across_thread_counts() {
+    let n = 16;
+    for field in [Field::Real, Field::Complex] {
+        for tying in [TwiddleTying::Factor, TwiddleTying::Block] {
+            let seed = 200 + field as u64 * 10 + tying as u64;
+            let stack = rand_stack(n, 2, field, tying, seed);
+            let target = rand_stack(n, 2, Field::Complex, TwiddleTying::Factor, seed + 1).to_matrix();
+            for chunk in [3usize, 7, n] {
+                let mut loss_fn = FactorizeLoss::new(target.clone());
+                loss_fn.chunk = chunk;
+                let ctx = format!("{field:?}/{tying:?}/chunk {chunk}");
+
+                let mut ws = TrainWorkspace::for_stack(&stack);
+                let mut g_ser = stack.zero_grad();
+                let l_ser = loss_fn.loss_and_grad_ws(&stack, &mut g_ser, &mut ws);
+
+                for threads in [2usize, 8] {
+                    let mut pool = ParallelTrainer::new(n, threads);
+                    let mut g_par = stack.zero_grad();
+                    let l_par = loss_fn.loss_and_grad_parallel(&stack, &mut g_par, &mut pool);
+                    assert!(
+                        (l_par - l_ser).abs() <= 1e-9 * (1.0 + l_ser.abs()),
+                        "T={threads} loss {l_par} vs {l_ser} ({ctx})"
+                    );
+                    for (a, b) in g_par.iter().flatten().zip(g_ser.iter().flatten()) {
+                        assert!(
+                            (a - b).abs() <= 1e-6 * (1.0 + b.abs()),
+                            "T={threads} grad {a} vs {b} ({ctx})"
+                        );
+                    }
+                    // rerun with the same pool: bit-identical
+                    let mut g_rep = stack.zero_grad();
+                    let l_rep = loss_fn.loss_and_grad_parallel(&stack, &mut g_rep, &mut pool);
+                    assert_eq!(l_par.to_bits(), l_rep.to_bits(), "T={threads} rerun loss ({ctx})");
+                    for (a, b) in g_par.iter().flatten().zip(g_rep.iter().flatten()) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "T={threads} rerun grad ({ctx})");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `resumable_equals_straight_run`, scheduler edition: with a target the
+/// step budget cannot reach, the whole Hyperband search — sampled
+/// configs, per-trial training, rung ranking, survivor selection, final
+/// θ — must be identical run-to-run and across worker counts.
+#[test]
+fn scheduler_is_deterministic_across_runs_and_worker_counts() {
+    let mk_job = || {
+        let mut job = FactorizeJob::paper(TransformKind::Hadamard, 8, 5, 10_000);
+        job.target_rmse = 1e-12; // unreachable: early stop never fires
+        job
+    };
+    let mk_cfg =
+        |workers| SchedulerConfig { workers, max_resource: 9, eta: 3, step_quantum: 5, seed: 21 };
+    let base = run_job(&mk_job(), &mk_cfg(1), &Metrics::new(), &Registry::new());
+    for workers in [1usize, 4] {
+        let res = run_job(&mk_job(), &mk_cfg(workers), &Metrics::new(), &Registry::new());
+        assert_eq!(res.best_rmse.to_bits(), base.best_rmse.to_bits(), "workers = {workers}");
+        assert_eq!(res.best_theta, base.best_theta, "workers = {workers}");
+        assert_eq!(res.total_steps, base.total_steps, "workers = {workers}");
+        assert_eq!(res.best_config, base.best_config, "workers = {workers}");
+        assert_eq!(res.trials_run, base.trials_run, "workers = {workers}");
+    }
+}
+
+/// End-to-end stale-RMSE regression: the parameters a job hands to
+/// serving must reproduce the RMSE the job reported for them.
+#[test]
+fn job_best_theta_reproduces_reported_rmse() {
+    let job = FactorizeJob::paper(TransformKind::Dft, 8, 42, 2000);
+    let cfg = SchedulerConfig { workers: 2, max_resource: 9, eta: 3, step_quantum: 25, seed: 11 };
+    let res = run_job(&job, &cfg, &Metrics::new(), &Registry::new());
+    let stack = butterfly::runtime::engine::unpack_stack(job.n, job.depth, &res.best_theta);
+    let served = FactorizeLoss::new(job.target.clone()).rmse(&stack);
+    assert!(
+        (res.best_rmse - served).abs() <= 1e-7 * (1.0 + served),
+        "job reported rmse {} but its theta reconstructs to {}",
+        res.best_rmse,
+        served
+    );
+}

@@ -1,18 +1,22 @@
 //! Serving demo (systems extension of Figure 4): install several
-//! transforms behind the router — each route one shared queue drained by
-//! a pool of workers — and measure latency/throughput as a function of
+//! transforms behind the router through the unified `LinearOp` API —
+//! exact closed-form ops from the `plan()` factory and hardened BP
+//! stacks through `stack_op()`, side by side on the identical
+//! pool/batcher path — and measure latency/throughput as a function of
 //! the batching window, plus a pipelined `submit()` burst.
 //!
 //! ```text
 //! cargo run --release --example serve_transforms -- --n 1024 --requests 4000
 //! ```
 
-use butterfly::butterfly::closed_form::{convolution_stack, dft_stack, hadamard_stack};
-use butterfly::butterfly::fast::{BatchWorkspace, FastBp};
+use butterfly::butterfly::closed_form::dft_stack;
 use butterfly::cli::Args;
 use butterfly::serving::{BatcherConfig, Router};
+use butterfly::transforms::op::{plan, stack_op, LinearOp, OpWorkspace};
+use butterfly::transforms::spec::TransformKind;
 use butterfly::util::rng::Rng;
 use butterfly::util::table::Table;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 fn main() {
@@ -21,28 +25,38 @@ fn main() {
     let requests = args.usize_or("requests", 4000).unwrap();
     let clients = args.usize_or("clients", 8).unwrap();
 
-    println!("== serve_transforms: router + dynamic batcher over learned fast multiplies ==");
-    let mut h = vec![0.0f32; n];
-    Rng::new(3).fill_normal(&mut h, 0.0, (1.0 / n as f64).sqrt() as f32);
+    println!("== serve_transforms: one LinearOp API from plans to the serving pool ==");
 
     // Direct batched-apply capacity: what one worker gets from coalescing
-    // a batch into a single column-major apply_batch call (the same path
-    // the service worker below uses).
-    let fast = FastBp::from_stack(&dft_stack(n));
-    let mut bws = BatchWorkspace::new();
-    let mut cap = Table::new(&["B", "vectors/s (1 worker)"])
-        .with_title(format!("direct apply_batch capacity, dft N={n}"));
-    for bsize in [1usize, 8, 64, 256] {
-        let mut re = vec![0.0f32; bsize * n];
-        let mut im = vec![0.0f32; bsize * n];
-        Rng::new(9).fill_normal(&mut re, 0.0, 1.0);
-        let reps = (2048 / bsize).max(4);
-        let t0 = Instant::now();
-        for _ in 0..reps {
-            fast.apply_complex_batch_col(&mut re, &mut im, bsize, &mut bws);
+    // a batch into a single column-major apply_batch call (the same
+    // trait entry point the service worker below uses), for an exact op
+    // and a hardened stack of the same transform.
+    let ops: Vec<(&str, Arc<dyn LinearOp>)> = vec![
+        ("dft (exact FFT)", plan(TransformKind::Dft, n)),
+        ("dft (BP stack)", stack_op("bp-dft", &dft_stack(n))),
+        ("dct (exact fast DCT)", plan(TransformKind::Dct, n)),
+    ];
+    let mut ws = OpWorkspace::new();
+    let mut cap = Table::new(&["op", "B", "vectors/s (1 worker)"])
+        .with_title(format!("direct LinearOp::apply_batch capacity, N={n}"));
+    for (label, op) in &ops {
+        for bsize in [1usize, 8, 64, 256] {
+            let mut re = vec![0.0f32; bsize * n];
+            let mut im = vec![0.0f32; bsize * n];
+            Rng::new(9).fill_normal(&mut re, 0.0, 1.0);
+            let reps = (2048 / bsize).max(4);
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                if op.is_complex() {
+                    op.apply_batch(&mut re, &mut im, bsize, &mut ws);
+                } else {
+                    // real ops carry a single plane, as on a real route
+                    op.apply_batch(&mut re, &mut [], bsize, &mut ws);
+                }
+            }
+            let per_vec = t0.elapsed().as_secs_f64() / (reps * bsize) as f64;
+            cap.add_row(vec![label.to_string(), bsize.to_string(), format!("{:.0}", 1.0 / per_vec)]);
         }
-        let per_vec = t0.elapsed().as_secs_f64() / (reps * bsize) as f64;
-        cap.add_row(vec![bsize.to_string(), format!("{:.0}", 1.0 / per_vec)]);
     }
     println!("{}", cap.render());
 
@@ -57,9 +71,10 @@ fn main() {
             max_wait: Duration::from_micros(wait_us),
             queue_cap: 16384,
         };
-        router.install("dft", &dft_stack(n), 2, cfg.clone());
-        router.install("hadamard", &hadamard_stack(n), 1, cfg.clone());
-        router.install("conv", &convolution_stack(&h), 1, cfg);
+        // learned-stack route and exact-op routes behind one router
+        router.install("dft", stack_op("dft", &dft_stack(n)), 2, cfg.clone());
+        router.install("dct", plan(TransformKind::Dct, n), 1, cfg.clone());
+        router.install("conv", plan(TransformKind::Convolution, n), 1, cfg);
         let t0 = Instant::now();
         let threads: Vec<_> = (0..clients)
             .map(|t| {
@@ -93,12 +108,35 @@ fn main() {
     println!("{}", table.render());
     println!("(larger windows trade latency for batching efficiency — the standard serving knob)");
 
+    // Real routes carry ONE plane: a call_real against the exact DCT op
+    // never allocates or queues an imaginary vector.
+    let mut router = Router::new();
+    router.install("dct", plan(TransformKind::Dct, n), 2, BatcherConfig::default());
+    let h = router.handle("dct").unwrap();
+    assert!(!h.is_complex());
+    let t0 = Instant::now();
+    let mut rng = Rng::new(13);
+    for _ in 0..512 {
+        let mut x = vec![0.0f32; n];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        h.call_real(x).expect("dct");
+    }
+    println!(
+        "real route (dct, single plane end to end): 512 calls in {:.1} ms\n",
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    router.shutdown();
+
     // Pipelined clients: submit() enqueues without blocking, so one
     // client can keep a whole batch window full by itself — the tickets
     // are then redeemed in order.
     let mut router = Router::new();
-    router
-        .install("dft", &dft_stack(n), 4, BatcherConfig { max_batch: 64, max_wait: Duration::from_micros(500), queue_cap: 16384 });
+    router.install(
+        "dft",
+        plan(TransformKind::Dft, n),
+        4,
+        BatcherConfig { max_batch: 64, max_wait: Duration::from_micros(500), queue_cap: 16384 },
+    );
     let handle = router.handle("dft").unwrap();
     let burst = 256usize;
     let mut rng = Rng::new(77);

@@ -12,6 +12,7 @@ use butterfly::baselines::{butterfly_budget, lowrank_baseline, sparse_baseline, 
 use butterfly::cli::Args;
 use butterfly::coordinator::{run_job, FactorizeJob, Metrics, Registry, SchedulerConfig};
 use butterfly::transforms::matrices::target_matrix;
+use butterfly::transforms::op::{plan_with_rng, OpWorkspace};
 use butterfly::transforms::spec::ALL_TRANSFORMS;
 use butterfly::util::rng::Rng;
 use butterfly::util::table::{fmt_sci, Table};
@@ -81,4 +82,52 @@ fn main() {
     }
     println!("{}", grid.render());
     println!("{}", base_table.render());
+
+    // The unified factory: every kind in the zoo resolves to one
+    // Arc<dyn LinearOp> — the closed-form fast algorithm where the paper
+    // gives one, the dense reference otherwise — and each op is checked
+    // here against its dense specification on random probes (the same
+    // conformance the serving pool relies on).
+    let n = *ns.last().unwrap();
+    let batch = 8usize;
+    let mut ws = OpWorkspace::new();
+    let mut op_table = Table::new(&["transform", "op", "planes", "flops/apply", "probe rmse vs dense"])
+        .with_title(format!("unified LinearOp factory (plan(kind, {n})) vs dense specs"));
+    for kind in ALL_TRANSFORMS {
+        let op = plan_with_rng(kind, n, &mut Rng::new(cfg.seed));
+        let dense = target_matrix(kind, n, &mut Rng::new(cfg.seed));
+        let mut rng = Rng::new(99);
+        let mut re = vec![0.0f32; batch * n];
+        let mut im = vec![0.0f32; batch * n];
+        rng.fill_normal(&mut re, 0.0, 1.0);
+        rng.fill_normal(&mut im, 0.0, 1.0);
+        let (want_re, want_im) = dense.matvec_batch_planar(&re, &im, batch);
+        // column-major copy, one batched apply, rmse against the spec
+        let mut cre = vec![0.0f32; batch * n];
+        let mut cim = vec![0.0f32; batch * n];
+        for b in 0..batch {
+            for i in 0..n {
+                cre[i * batch + b] = re[b * n + i];
+                cim[i * batch + b] = im[b * n + i];
+            }
+        }
+        op.apply_batch(&mut cre, &mut cim, batch, &mut ws);
+        let mut acc = 0.0f64;
+        for b in 0..batch {
+            for i in 0..n {
+                let dr = (cre[i * batch + b] - want_re[b * n + i]) as f64;
+                let di = (cim[i * batch + b] - want_im[b * n + i]) as f64;
+                acc += dr * dr + di * di;
+            }
+        }
+        let rmse = (acc / (batch * n) as f64).sqrt();
+        op_table.add_row(vec![
+            kind.name().to_string(),
+            op.name().to_string(),
+            if op.is_complex() { "2".into() } else { "1".into() },
+            op.flops_per_apply().to_string(),
+            fmt_sci(rmse),
+        ]);
+    }
+    println!("{}", op_table.render());
 }

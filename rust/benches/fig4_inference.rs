@@ -65,10 +65,11 @@ fn main() {
             plan.forward(black_box(&mut fr), black_box(&mut fi));
         })
         .median();
-        let mut rplan = RealTransformPlan::new(n);
+        let rplan = RealTransformPlan::new(n);
         let mut out = vec![0.0f32; n];
-        let dct = bench(&cfg, || rplan.dct2(black_box(&x), &mut out)).median();
-        let dst = bench(&cfg, || rplan.dst2(black_box(&x), &mut out)).median();
+        let (mut sre, mut sim) = (Vec::new(), Vec::new());
+        let dct = bench(&cfg, || rplan.dct2(black_box(&x), &mut out, &mut sre, &mut sim)).median();
+        let dst = bench(&cfg, || rplan.dst2(black_box(&x), &mut out, &mut sre, &mut sim)).median();
 
         table.add_row(vec![
             n.to_string(),

@@ -13,12 +13,15 @@
 //! load (same clients, same request count) — adding workers must not
 //! fragment batches the way per-replica queues did.
 
-use butterfly::butterfly::closed_form::dft_stack;
+use butterfly::butterfly::closed_form::{dft_stack, hadamard_stack};
 use butterfly::butterfly::fast::{BatchWorkspace, FastBp, Workspace};
 use butterfly::serving::{BatcherConfig, Router};
+use butterfly::transforms::op::{plan, stack_op, LinearOp, OpWorkspace};
+use butterfly::transforms::spec::TransformKind;
 use butterfly::util::rng::Rng;
 use butterfly::util::table::Table;
 use butterfly::util::timer::{bench, black_box, BenchConfig};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 fn main() {
@@ -65,6 +68,60 @@ fn main() {
         }
     }
     println!("{}", btable.render());
+
+    // exact closed-form ops vs learned/hardened BP stacks, through the
+    // IDENTICAL harness: every op is an Arc<dyn LinearOp> driven by the
+    // same column-major apply_batch + OpWorkspace loop the serving
+    // worker uses. Real ops run their natural single-plane path (what a
+    // real route carries); complex ops run both planes.
+    let opn = 1024usize;
+    let ops: Vec<(&str, Arc<dyn LinearOp>)> = vec![
+        ("dft: exact FFT", plan(TransformKind::Dft, opn)),
+        ("dft: BP stack", stack_op("bp-dft", &dft_stack(opn))),
+        ("hadamard: exact FWHT", plan(TransformKind::Hadamard, opn)),
+        ("hadamard: BP stack", stack_op("bp-hadamard", &hadamard_stack(opn))),
+        ("dct: exact fast DCT", plan(TransformKind::Dct, opn)),
+        ("convolution: exact circulant", plan(TransformKind::Convolution, opn)),
+    ];
+    let mut otable = Table::new(&["op", "planes", "flops/apply", "B=1 ns/vec", "B=8 ns/vec", "B=64 ns/vec"])
+        .with_title(format!("exact ops vs learned stacks, unified LinearOp harness (N={opn})"));
+    let mut ws = OpWorkspace::new();
+    for (label, op) in &ops {
+        let mut row = vec![
+            label.to_string(),
+            if op.is_complex() { "2 (complex)".into() } else { "1 (real)".into() },
+            op.flops_per_apply().to_string(),
+        ];
+        for bsize in [1usize, 8, 64] {
+            // every row re-copies pristine input each iteration: applying
+            // a non-unitary op (the circulant) to its own output for the
+            // whole measurement would overflow to inf/NaN and time
+            // garbage data, so the memcpy is part of the harness for all
+            let mut re0 = vec![0.0f32; bsize * opn];
+            Rng::new(bsize as u64).fill_normal(&mut re0, 0.0, 1.0);
+            let mut re = re0.clone();
+            let mut im = vec![0.0f32; bsize * opn];
+            let per_vec = if op.is_complex() {
+                bench(&cfg, || {
+                    re.copy_from_slice(&re0);
+                    im.fill(0.0);
+                    op.apply_batch(black_box(&mut re), black_box(&mut im), bsize, &mut ws);
+                })
+                .median()
+                    / bsize as f64
+            } else {
+                bench(&cfg, || {
+                    re.copy_from_slice(&re0);
+                    op.apply_batch(black_box(&mut re), &mut [], bsize, &mut ws);
+                })
+                .median()
+                    / bsize as f64
+            };
+            row.push(format!("{per_vec:.0}"));
+        }
+        otable.add_row(row);
+    }
+    println!("{}", otable.render());
 
     // raw capacity: one worker, batch-32 applies
     let stack = dft_stack(n);
@@ -136,7 +193,7 @@ fn run_load(
     let mut router = Router::new();
     router.install(
         "dft",
-        stack,
+        stack_op("dft", stack),
         workers,
         BatcherConfig { max_batch, max_wait: Duration::from_micros(wait_us), queue_cap: 65536 },
     );

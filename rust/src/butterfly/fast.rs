@@ -42,6 +42,12 @@
 //! caller-owned [`Workspace`] / [`BatchWorkspace`], which each worker
 //! owns privately — concurrent applies never contend.
 //!
+//! Serving never touches this type directly any more: a stack enters the
+//! pool as an `Arc<dyn LinearOp>` via
+//! [`stack_op`](crate::transforms::op::stack_op), which hardens it
+//! through [`FastBp`] and adapts the batched column-major entry points
+//! to the one [`LinearOp`](crate::transforms::op::LinearOp) contract.
+//!
 //! [`from_stack`]: FastBp::from_stack
 //! [`ServicePool`]: crate::serving::service::ServicePool
 

@@ -110,6 +110,21 @@ mod tests {
     }
 
     #[test]
+    fn serve_exact_invocation() {
+        // the closed-form serving entry point: a trailing boolean flag
+        // after `--key value` options must not swallow anything
+        let a = parse("serve --transform dct --n 256 --exact");
+        assert_eq!(a.command, "serve");
+        assert_eq!(a.get("transform"), Some("dct"));
+        assert_eq!(a.usize_or("n", 8).unwrap(), 256);
+        assert!(a.flag("exact"));
+        // ... and in the middle, followed by another option
+        let b = parse("serve --exact --transform dct");
+        assert!(b.flag("exact"));
+        assert_eq!(b.get("transform"), Some("dct"));
+    }
+
+    #[test]
     fn defaults_and_errors() {
         let a = parse("zoo");
         assert_eq!(a.usize_or("n", 8).unwrap(), 8);

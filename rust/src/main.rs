@@ -13,8 +13,9 @@
 use butterfly::butterfly::fast::{FastBp, Workspace};
 use butterfly::cli::Args;
 use butterfly::coordinator::{run_job, FactorizeJob, Metrics, Registry, SchedulerConfig};
-use butterfly::runtime::engine::{auto_engine, unpack_stack};
+use butterfly::runtime::engine::{auto_engine, unpack_op};
 use butterfly::serving::{BatcherConfig, Router};
+use butterfly::transforms::op::{stack_op, LinearOp};
 use butterfly::transforms::spec::TransformKind;
 use butterfly::util::log;
 use butterfly::util::table::{fmt_sci, Table};
@@ -65,6 +66,8 @@ COMMANDS:
               --max-n 64 --transforms dft,dct,... --max-resource 27
   serve       learn a transform then serve it with dynamic batching
               --transform dft --n 256 --requests 1000 --pool-workers 2
+              --exact     serve the closed-form fast op (FFT / fast DCT /
+                          FWHT / ...) through the same pool — no training
               (pool workers drain ONE shared queue; --replicas is an
               accepted alias from the old per-replica-queue design)
   engines     report available execution engines / artifacts
@@ -179,20 +182,38 @@ fn cmd_serve(args: &Args) -> i32 {
         let n = args.usize_or("n", 256)?;
         let requests = args.usize_or("requests", 1000)?;
         let workers = args.usize_or("pool-workers", args.usize_or("replicas", 2)?)?;
-        // learn (or construct) the transform, then install it
+        // One serving path for everything: resolve the transform to an
+        // Arc<dyn LinearOp>. --exact takes the closed-form fast op from
+        // the factory (no training job at all); otherwise a closed-form
+        // or learned BP stack is hardened through the stack adapter.
+        // Both paths draw stochastic targets (the convolution filter)
+        // from the same rng, so toggling --exact serves the same matrix.
         let mut rng = butterfly::util::rng::Rng::new(7);
-        let stack = match butterfly::butterfly::closed_form::closed_form_stack(kind, n, &mut rng) {
-            Some((s, _)) => s,
-            None => {
-                let job = FactorizeJob::paper(kind, n, 42, 4000);
-                let cfg = SchedulerConfig::default();
-                let res = run_job(&job, &cfg, &Metrics::new(), &Registry::new());
-                log::info(&format!("learned {} to rmse {}", kind.name(), fmt_sci(res.best_rmse)));
-                unpack_stack(n, job.depth, &res.best_theta)
+        let op: std::sync::Arc<dyn LinearOp> = if args.flag("exact") {
+            let op = butterfly::transforms::op::plan_with_rng(kind, n, &mut rng);
+            log::info(&format!("serving closed-form op '{}' (no training)", op.name()));
+            op
+        } else {
+            match butterfly::butterfly::closed_form::closed_form_stack(kind, n, &mut rng) {
+                Some((s, _)) => stack_op(kind.name(), &s),
+                None => {
+                    let job = FactorizeJob::paper(kind, n, 42, 4000);
+                    let cfg = SchedulerConfig::default();
+                    let res = run_job(&job, &cfg, &Metrics::new(), &Registry::new());
+                    log::info(&format!("learned {} to rmse {}", kind.name(), fmt_sci(res.best_rmse)));
+                    unpack_op(kind.name(), n, job.depth, &res.best_theta)
+                }
             }
         };
+        println!(
+            "op '{}': n = {}, {} plane(s), ~{} flops/apply",
+            op.name(),
+            op.n(),
+            if op.is_complex() { "complex, 2" } else { "real, 1" },
+            op.flops_per_apply()
+        );
         let mut router = Router::new();
-        router.install(kind.name(), &stack, workers, BatcherConfig::default());
+        router.install(kind.name(), op, workers, BatcherConfig::default());
         let t0 = Instant::now();
         let handle = router.handle(kind.name()).unwrap();
         let client_threads: Vec<_> = (0..4)

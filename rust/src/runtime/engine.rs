@@ -88,6 +88,19 @@ pub fn unpack_stack(n: usize, depth: usize, theta: &[f32]) -> BpStack {
     BpStack::new(modules)
 }
 
+/// Unpack a flat theta straight into a serveable op: the adapter the
+/// coordinator→serving handoff uses (θ interchange → hardened
+/// [`FastBp`](crate::butterfly::fast::FastBp) →
+/// [`LinearOp`](crate::transforms::op::LinearOp)).
+pub fn unpack_op(
+    name: impl Into<String>,
+    n: usize,
+    depth: usize,
+    theta: &[f32],
+) -> std::sync::Arc<dyn crate::transforms::op::LinearOp> {
+    crate::transforms::op::stack_op(name, &unpack_stack(n, depth, theta))
+}
+
 /// Parse `..._n{N}_d{D}` suffixes.
 fn parse_nd(entry: &str) -> Option<(usize, usize)> {
     let n_pos = entry.rfind("_n")?;

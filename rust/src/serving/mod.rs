@@ -1,26 +1,33 @@
-//! Batched transform serving (vLLM-router-style): once a transform is
-//! learned, its hardened O(N log N) fast multiply is installed behind a
-//! router + dynamic batcher — bounded queue, batch window, backpressure.
+//! Batched transform serving (vLLM-router-style): any
+//! [`LinearOp`](crate::transforms::op::LinearOp) — a learned butterfly
+//! stack hardened to its O(N log N) fast multiply, a closed-form
+//! FFT/DCT/FWHT plan, a circulant, or the dense reference — is installed
+//! behind a router + dynamic batcher: bounded queue, batch window,
+//! backpressure.
 //!
 //! This is the systems face of the paper's Figure 4 (right) claim: the
 //! learned BP multiply is fast enough to serve as a drop-in replacement
 //! for hand-tuned transform kernels, and (unlike FFTW/cuFFT) one serving
-//! stack covers *every* transform the parameterization can learn.
+//! stack covers *every* transform — exact or learned — because the pool
+//! is written against the one trait instead of one type per family.
 //!
 //! Architecture: each route is **one shared queue drained by a pool of
 //! workers** ([`ServicePool`]). The old one-queue-per-replica,
 //! round-robin design suffered head-of-line blocking (a deep replica
 //! stalled its assigned requests while siblings idled) and fragmented
 //! batches across replicas; the shared queue is work-conserving and
-//! lets batches fill from the whole offered load.
+//! lets batches fill from the whole offered load. Routes whose op is
+//! real (`is_complex() == false`) carry a **single plane** end to end —
+//! no zeroed imaginary vector is allocated, queued, transformed, or
+//! returned.
 //!
 //! - [`batcher`] — the MPMC dynamic batching queue (max batch / max wait).
 //! - [`service`] — [`ServicePool`]: `W` workers sharing one
-//!   `Arc<FastBp>`, each with private scratch; sync [`call`] and
-//!   pipelined [`submit`]/[`Ticket`] client APIs.
+//!   `Arc<dyn LinearOp>`, each with a private
+//!   [`OpWorkspace`](crate::transforms::op::OpWorkspace); sync [`call`]
+//!   and pipelined [`submit`]/[`Ticket`] client APIs.
 //! - [`router`] — name → pool dispatch.
 //!
-//! [`FastBp`]: crate::butterfly::fast::FastBp
 //! [`call`]: ServiceHandle::call
 //! [`submit`]: ServiceHandle::submit
 

@@ -1,15 +1,18 @@
 //! Request router: transform name → a [`ServicePool`] (one shared
-//! [`BatchQueue`] drained by `W` workers). There is no round-robin and
-//! no per-replica queue any more: a route **is** `{queue, pool}`, so a
-//! slow or deep moment in one worker never strands requests while
-//! sibling workers idle — any idle worker drains the next pending batch.
+//! [`BatchQueue`] drained by `W` workers). A route serves any
+//! [`LinearOp`] — learned stacks and closed-form exact transforms go
+//! through the identical pool/batcher path. There is no round-robin and
+//! no per-replica queue: a route **is** `{queue, pool}`, so a slow or
+//! deep moment in one worker never strands requests while sibling
+//! workers idle — any idle worker drains the next pending batch.
 //!
 //! [`BatchQueue`]: crate::serving::batcher::BatchQueue
 
-use crate::butterfly::module::BpStack;
 use crate::serving::batcher::BatcherConfig;
 use crate::serving::service::{ServiceHandle, ServicePool, ServiceStats, Ticket};
+use crate::transforms::op::LinearOp;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Name-based dispatch over installed transform service pools.
 #[derive(Default)]
@@ -22,10 +25,13 @@ impl Router {
         Self::default()
     }
 
-    /// Install a learned stack under `name`, served by a pool of
-    /// `workers` threads sharing one queue.
-    pub fn install(&mut self, name: &str, stack: &BpStack, workers: usize, cfg: BatcherConfig) {
-        self.routes.insert(name.to_string(), ServicePool::spawn(name, stack, workers, cfg));
+    /// Install any transform op under `name`, served by a pool of
+    /// `workers` threads sharing one queue. Learned stacks go through
+    /// [`stack_op`](crate::transforms::op::stack_op), closed-form
+    /// transforms through [`op::plan`](crate::transforms::op::plan) or
+    /// the individual constructors — the router only sees the trait.
+    pub fn install(&mut self, name: &str, op: Arc<dyn LinearOp>, workers: usize, cfg: BatcherConfig) {
+        self.routes.insert(name.to_string(), ServicePool::spawn(name, op, workers, cfg));
     }
 
     pub fn names(&self) -> Vec<&str> {
@@ -41,6 +47,12 @@ impl Router {
     /// Synchronous routed call.
     pub fn call(&self, name: &str, re: Vec<f32>, im: Vec<f32>) -> Result<(Vec<f32>, Vec<f32>), String> {
         self.handle(name).ok_or_else(|| format!("no route '{name}'"))?.call(re, im)
+    }
+
+    /// Synchronous routed single-plane call (see
+    /// [`ServiceHandle::call_real`]).
+    pub fn call_real(&self, name: &str, x: Vec<f32>) -> Result<Vec<f32>, String> {
+        self.handle(name).ok_or_else(|| format!("no route '{name}'"))?.call_real(x)
     }
 
     /// Non-blocking routed submit: enqueue and return a [`Ticket`].
@@ -75,12 +87,14 @@ impl Router {
 mod tests {
     use super::*;
     use crate::butterfly::closed_form::{dft_stack, hadamard_stack};
+    use crate::transforms::op::{plan, stack_op};
+    use crate::transforms::spec::TransformKind;
 
     #[test]
     fn routes_by_name() {
         let mut r = Router::new();
-        r.install("dft", &dft_stack(8), 1, BatcherConfig::default());
-        r.install("hadamard", &hadamard_stack(8), 2, BatcherConfig::default());
+        r.install("dft", stack_op("dft", &dft_stack(8)), 1, BatcherConfig::default());
+        r.install("hadamard", stack_op("hadamard", &hadamard_stack(8)), 2, BatcherConfig::default());
         assert_eq!(r.names().len(), 2);
         let x = vec![1.0f32, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
         let (re, _) = r.call("hadamard", x.clone(), vec![0.0; 8]).unwrap();
@@ -89,15 +103,47 @@ mod tests {
             assert!((v - 1.0 / (8.0f32).sqrt()).abs() < 1e-5);
         }
         assert!(r.call("nope", x, vec![0.0; 8]).is_err());
+        assert!(r.call_real("nope", vec![0.0; 8]).is_err());
         let stats = r.shutdown();
         assert_eq!(stats["hadamard"].served, 1);
         assert_eq!(stats["dft"].served, 0);
     }
 
     #[test]
+    fn exact_and_learned_ops_share_one_router() {
+        // The acceptance story of the unified API: a closed-form DCT op
+        // and a learned-stack DFT installed side by side, served through
+        // the identical pool path.
+        let n = 16;
+        let mut r = Router::new();
+        r.install("dct", plan(TransformKind::Dct, n), 2, BatcherConfig::default());
+        r.install("dft", stack_op("dft", &dft_stack(n)), 2, BatcherConfig::default());
+        assert!(!r.handle("dct").unwrap().is_complex());
+        assert!(r.handle("dft").unwrap().is_complex());
+        let c = crate::transforms::matrices::dct_matrix(n);
+        for k in 0..n {
+            let mut x = vec![0.0f32; n];
+            x[k] = 1.0;
+            let got = r.call_real("dct", x).unwrap();
+            for i in 0..n {
+                assert!((got[i] - c.data[i * n + k]).abs() < 1e-4, "dct col {k} [{i}]");
+            }
+        }
+        let f = crate::transforms::matrices::dft_matrix(n);
+        let (re, im) = r.call("dft", { let mut x = vec![0.0f32; n]; x[1] = 1.0; x }, vec![0.0; n]).unwrap();
+        for i in 0..n {
+            assert!((re[i] - f.re[i * n + 1]).abs() < 1e-4);
+            assert!((im[i] - f.im[i * n + 1]).abs() < 1e-4);
+        }
+        let stats = r.shutdown();
+        assert_eq!(stats["dct"].served, n);
+        assert_eq!(stats["dft"].served, 1);
+    }
+
+    #[test]
     fn pool_workers_drain_one_shared_queue() {
         let mut r = Router::new();
-        r.install("dft", &dft_stack(8), 3, BatcherConfig::default());
+        r.install("dft", stack_op("dft", &dft_stack(8)), 3, BatcherConfig::default());
         for _ in 0..9 {
             r.call("dft", vec![1.0; 8], vec![0.0; 8]).unwrap();
         }
@@ -108,8 +154,8 @@ mod tests {
     #[test]
     fn shutdown_stats_match_live_stats() {
         let mut r = Router::new();
-        r.install("dft", &dft_stack(16), 2, BatcherConfig::default());
-        r.install("hadamard", &hadamard_stack(16), 2, BatcherConfig::default());
+        r.install("dft", stack_op("dft", &dft_stack(16)), 2, BatcherConfig::default());
+        r.install("hadamard", stack_op("hadamard", &hadamard_stack(16)), 2, BatcherConfig::default());
         let threads: Vec<_> = (0..4)
             .map(|t| {
                 let name = if t % 2 == 0 { "dft" } else { "hadamard" };

@@ -1,6 +1,11 @@
 //! A transform service is a **pool**: one shared [`BatchQueue`] drained
 //! by `W` worker threads, every worker owning its own coalesce planes and
-//! [`BatchWorkspace`] while sharing a single immutable [`Arc<FastBp>`].
+//! [`OpWorkspace`] while sharing a single immutable
+//! [`Arc<dyn LinearOp>`](LinearOp). The pool serves *any* transform —
+//! a learned butterfly stack, a closed-form FFT/DCT/FWHT plan, a
+//! circulant, or the dense reference — through the one batched entry
+//! point of the [`LinearOp`] trait; nothing in this module knows which.
+//!
 //! The shared queue is what kills head-of-line blocking: with one queue
 //! per replica (the old design) a deep or slow replica stalled the
 //! requests round-robined onto it while sibling workers sat idle; with
@@ -9,31 +14,42 @@
 //!
 //! Requests are single vectors; a worker coalesces each drained batch
 //! into one **column-major** `B × N` block and issues a single
-//! [`FastBp::apply_complex_batch_col`] call, so every stage's gather
-//! table and twiddle loads are amortized across the batch (see the
-//! layout discussion in [`crate::butterfly::fast`]). The coalesce
-//! buffers and [`BatchWorkspace`] persist across batches — the steady
-//! state serving loop performs no allocation beyond the reply vectors it
-//! hands back to clients (which reuse the request's own buffers).
+//! [`LinearOp::apply_batch`] call, so every stage's gather table and
+//! twiddle loads are amortized across the batch (see the layout
+//! discussion in [`crate::butterfly::fast`]). The coalesce buffers and
+//! [`OpWorkspace`] persist across batches — the steady-state serving
+//! loop performs no allocation beyond the reply vectors it hands back to
+//! clients (which reuse the request's own buffers).
+//!
+//! **Real routes carry one plane.** When the installed op reports
+//! `is_complex() == false`, [`call_real`]/[`submit_real`] enqueue only
+//! the real plane (no zeroed imaginary vector is allocated, coalesced,
+//! transformed, or sent back) and the worker takes the op's single-plane
+//! path. Complex-shaped clients (`call`/`submit` with both planes) still
+//! work against real routes — a real op transforms the planes
+//! independently.
 //!
 //! Clients talk to the pool through a [`ServiceHandle`]: synchronous
 //! [`call`], or non-blocking [`submit`] returning a [`Ticket`] so a
 //! client can pipeline many requests before waiting on any reply.
-//! Malformed requests (wrong plane lengths) are rejected with `Err` and
-//! counted in the `bad_request` stat — a serving system must never
-//! panic on client input.
+//! Malformed requests (wrong plane lengths, or a missing imaginary plane
+//! on a complex route) are rejected with `Err` and counted in the
+//! `bad_request` stat — a serving system must never panic on client
+//! input.
 //!
 //! [`call`]: ServiceHandle::call
 //! [`submit`]: ServiceHandle::submit
+//! [`call_real`]: ServiceHandle::call_real
+//! [`submit_real`]: ServiceHandle::submit_real
 
-use crate::butterfly::fast::{BatchWorkspace, FastBp};
-use crate::butterfly::module::BpStack;
 use crate::serving::batcher::{BatchQueue, BatcherConfig, PushError};
+use crate::transforms::op::{LinearOp, OpWorkspace};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-/// A request: planar complex input + reply channel.
+/// A request: planar input + reply channel. `im` is empty for
+/// single-plane requests on real routes.
 struct Request {
     re: Vec<f32>,
     im: Vec<f32>,
@@ -101,7 +117,8 @@ impl ServiceStats {
 /// An in-flight request: redeem with [`wait`](Ticket::wait) for the
 /// transformed planes. Obtained from [`ServiceHandle::submit`]; lets a
 /// client pipeline many requests into the shared queue before blocking
-/// on any reply.
+/// on any reply. For a single-plane request on a real route, the
+/// returned imaginary plane is the empty vector.
 pub struct Ticket {
     rx: mpsc::Receiver<(Vec<f32>, Vec<f32>)>,
 }
@@ -122,19 +139,29 @@ impl Ticket {
 #[derive(Clone)]
 pub struct ServiceHandle {
     n: usize,
+    complex: bool,
     queue: Arc<BatchQueue<Request>>,
     stats: Arc<Stats>,
 }
 
 impl ServiceHandle {
+    /// Whether this route's op has a nonzero imaginary plane (fixes the
+    /// plane contract: real routes accept single-plane requests).
+    pub fn is_complex(&self) -> bool {
+        self.complex
+    }
+
     /// Non-blocking submit: validate, enqueue, and return a [`Ticket`]
-    /// immediately. Malformed input is an `Err` (counted in
-    /// `bad_request`), never a panic.
+    /// immediately. `im` must be a full plane, or empty on a real route
+    /// (use [`submit_real`](ServiceHandle::submit_real) for that).
+    /// Malformed input is an `Err` (counted in `bad_request`), never a
+    /// panic.
     pub fn submit(&self, re: Vec<f32>, im: Vec<f32>) -> Result<Ticket, String> {
-        if re.len() != self.n || im.len() != self.n {
+        let im_ok = im.len() == self.n || (im.is_empty() && !self.complex);
+        if re.len() != self.n || !im_ok {
             self.stats.bad_request.fetch_add(1, Ordering::Relaxed);
             return Err(format!(
-                "bad request: expected planes of length {}, got re={} im={}",
+                "bad request: expected planes of length {} (im may be empty on real routes), got re={} im={}",
                 self.n,
                 re.len(),
                 im.len()
@@ -152,15 +179,24 @@ impl ServiceHandle {
         }
     }
 
+    /// Non-blocking real-input submit. On a real route this enqueues the
+    /// single plane as-is — no imaginary vector is allocated or carried
+    /// through the queue; on a complex route it attaches the zero plane
+    /// the transform needs.
+    pub fn submit_real(&self, x: Vec<f32>) -> Result<Ticket, String> {
+        let im = if self.complex { vec![0.0; self.n] } else { Vec::new() };
+        self.submit(x, im)
+    }
+
     /// Synchronous call: submit one vector, wait for the transform.
     pub fn call(&self, re: Vec<f32>, im: Vec<f32>) -> Result<(Vec<f32>, Vec<f32>), String> {
         self.submit(re, im)?.wait()
     }
 
-    /// Real-input convenience (imaginary plane zero).
+    /// Real-input convenience: returns only the real output plane (the
+    /// full story on real routes, Re of the transform on complex ones).
     pub fn call_real(&self, x: Vec<f32>) -> Result<Vec<f32>, String> {
-        let n = x.len();
-        self.call(x, vec![0.0; n]).map(|(re, _)| re)
+        self.submit_real(x)?.wait().map(|(re, _)| re)
     }
 
     pub fn stats(&self) -> ServiceStats {
@@ -185,7 +221,8 @@ impl ServiceHandle {
     }
 }
 
-/// A running transform service: one shared queue, `W` worker threads.
+/// A running transform service: one shared queue, `W` worker threads
+/// draining it into batched applies of one shared [`LinearOp`].
 pub struct ServicePool {
     pub name: String,
     handle: ServiceHandle,
@@ -197,48 +234,71 @@ pub struct ServicePool {
 }
 
 impl ServicePool {
-    /// Install a trained stack as a pool of `workers` drainer threads
-    /// over one shared queue. The stack is hardened once into its
-    /// fast-multiply form and shared immutably (`Arc<FastBp>` — see the
-    /// Sync note in [`crate::butterfly::fast`]); each worker owns its
-    /// own scratch.
-    pub fn spawn(name: impl Into<String>, stack: &BpStack, workers: usize, cfg: BatcherConfig) -> Self {
+    /// Install any [`LinearOp`] as a pool of `workers` drainer threads
+    /// over one shared queue. The op is shared immutably
+    /// (`Arc<dyn LinearOp>` — ops hold only tables, by trait contract);
+    /// each worker owns its own coalesce planes and [`OpWorkspace`].
+    pub fn spawn(
+        name: impl Into<String>,
+        op: Arc<dyn LinearOp>,
+        workers: usize,
+        cfg: BatcherConfig,
+    ) -> Self {
         let name = name.into();
-        let n = stack.n();
-        let fast = Arc::new(FastBp::from_stack(stack));
+        let n = op.n();
+        let complex = op.is_complex();
         let queue = Arc::new(BatchQueue::new(cfg));
         let stats = Arc::new(Stats::default());
-        let handle = ServiceHandle { n, queue: Arc::clone(&queue), stats: Arc::clone(&stats) };
+        let handle =
+            ServiceHandle { n, complex, queue: Arc::clone(&queue), stats: Arc::clone(&stats) };
         let w = workers.max(1);
         let worker_batches: Arc<Vec<AtomicUsize>> =
             Arc::new((0..w).map(|_| AtomicUsize::new(0)).collect());
         let workers = (0..w)
             .map(|wi| {
-                let fast = Arc::clone(&fast);
+                let op = Arc::clone(&op);
                 let wq = Arc::clone(&queue);
                 let wstats = Arc::clone(&stats);
                 let wloads = Arc::clone(&worker_batches);
                 std::thread::Builder::new()
                     .name(format!("serve-{name}#{wi}"))
                     .spawn(move || {
-                        let mut ws = BatchWorkspace::new();
+                        let mut ws = OpWorkspace::new();
                         // Column-major coalesce planes, reused across batches.
                         let mut re: Vec<f32> = Vec::new();
                         let mut im: Vec<f32> = Vec::new();
                         while let Some(batch) = wq.next_batch() {
                             let b = batch.len();
-                            re.resize(b * n, 0.0);
-                            im.resize(b * n, 0.0);
+                            let len = b * n;
+                            re.resize(len, 0.0);
                             // Coalesce request i into lane i of the column-major
                             // [n, b] block: element j lands at j*b + i.
                             for (i, r) in batch.iter().enumerate() {
-                                for (j, (&vr, &vi)) in r.re.iter().zip(r.im.iter()).enumerate() {
-                                    re[j * b + i] = vr;
-                                    im[j * b + i] = vi;
+                                for (j, &v) in r.re.iter().enumerate() {
+                                    re[j * b + i] = v;
                                 }
                             }
-                            // One batched fast multiply for the whole batch.
-                            fast.apply_complex_batch_col(&mut re, &mut im, b, &mut ws);
+                            // Real routes only pay for the imaginary plane
+                            // when some request in the batch actually sent
+                            // one (complex-route requests always do — the
+                            // handle validated that on submit).
+                            let with_im = complex || batch.iter().any(|r| !r.im.is_empty());
+                            if with_im {
+                                im.resize(len, 0.0);
+                                if !complex {
+                                    // lanes of single-plane requests are zeros
+                                    im[..len].fill(0.0);
+                                }
+                                for (i, r) in batch.iter().enumerate() {
+                                    for (j, &v) in r.im.iter().enumerate() {
+                                        im[j * b + i] = v;
+                                    }
+                                }
+                                // One batched apply for the whole batch.
+                                op.apply_batch(&mut re[..len], &mut im[..len], b, &mut ws);
+                            } else {
+                                op.apply_batch(&mut re[..len], &mut [], b, &mut ws);
+                            }
                             // Counters first, replies second: a client
                             // unblocks the moment its reply lands, and any
                             // stats it reads then must already include the
@@ -251,7 +311,11 @@ impl ServicePool {
                                 let Request { re: mut out_re, im: mut out_im, reply, enqueued } = r;
                                 for j in 0..n {
                                     out_re[j] = re[j * b + i];
-                                    out_im[j] = im[j * b + i];
+                                }
+                                if !out_im.is_empty() {
+                                    for j in 0..n {
+                                        out_im[j] = im[j * b + i];
+                                    }
                                 }
                                 let lat = now.duration_since(enqueued).as_micros() as u64;
                                 wstats.latency_micros.fetch_add(lat, Ordering::Relaxed);
@@ -271,6 +335,12 @@ impl ServicePool {
 
     pub fn n(&self) -> usize {
         self.handle.n
+    }
+
+    /// Whether the installed op is complex (see
+    /// [`ServiceHandle::is_complex`]).
+    pub fn is_complex(&self) -> bool {
+        self.handle.complex
     }
 
     pub fn worker_count(&self) -> usize {
@@ -318,14 +388,18 @@ mod tests {
     use crate::butterfly::closed_form::dft_stack;
     use crate::linalg::complex::Cpx;
     use crate::transforms::fast::fft_unitary;
+    use crate::transforms::op::{plan, stack_op};
+    use crate::transforms::spec::TransformKind;
     use crate::util::rng::Rng;
     use std::time::Duration;
 
     #[test]
     fn serves_the_fft() {
         let n = 64;
-        let svc = ServicePool::spawn("dft", &dft_stack(n), 1, BatcherConfig::default());
+        let svc =
+            ServicePool::spawn("dft", stack_op("dft", &dft_stack(n)), 1, BatcherConfig::default());
         let h = svc.handle();
+        assert!(h.is_complex());
         let mut rng = Rng::new(1);
         let mut re = vec![0.0f32; n];
         rng.fill_normal(&mut re, 0.0, 1.0);
@@ -341,11 +415,60 @@ mod tests {
     }
 
     #[test]
+    fn real_route_serves_single_plane() {
+        // A closed-form exact op (DCT-II) behind the same pool/batcher
+        // path as learned stacks: call_real carries ONE plane through the
+        // queue and back.
+        let n = 16;
+        let svc = ServicePool::spawn(
+            "dct",
+            plan(TransformKind::Dct, n),
+            2,
+            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2), queue_cap: 256 },
+        );
+        let h = svc.handle();
+        assert!(!h.is_complex());
+        let f = crate::transforms::matrices::dct_matrix(n);
+        let threads: Vec<_> = (0..n)
+            .map(|k| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    let mut x = vec![0.0f32; n];
+                    x[k] = 1.0;
+                    (k, h.call_real(x).unwrap())
+                })
+            })
+            .collect();
+        for t in threads {
+            let (k, got) = t.join().unwrap();
+            for i in 0..n {
+                assert!((got[i] - f.data[i * n + k]).abs() < 1e-4, "col {k} [{i}]");
+            }
+        }
+        // complex-shaped clients still work on the real route: the
+        // imaginary plane is transformed independently
+        let mut rng = Rng::new(4);
+        let mut a = vec![0.0f32; n];
+        let mut b = vec![0.0f32; n];
+        rng.fill_normal(&mut a, 0.0, 1.0);
+        rng.fill_normal(&mut b, 0.0, 1.0);
+        let (re, im) = h.call(a.clone(), b.clone()).unwrap();
+        let (wa, wb) = (f.matvec(&a), f.matvec(&b));
+        for i in 0..n {
+            assert!((re[i] - wa[i]).abs() < 1e-4, "re[{i}]");
+            assert!((im[i] - wb[i]).abs() < 1e-4, "im[{i}]");
+        }
+        let stats = svc.shutdown();
+        assert_eq!(stats.served, n + 1);
+        assert_eq!(stats.bad_request, 0);
+    }
+
+    #[test]
     fn concurrent_clients_get_their_own_answers() {
         let n = 16;
         let svc = ServicePool::spawn(
             "dft",
-            &dft_stack(n),
+            stack_op("dft", &dft_stack(n)),
             4,
             BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(3), queue_cap: 256 },
         );
@@ -379,7 +502,7 @@ mod tests {
         let n = 8;
         let svc = ServicePool::spawn(
             "dft",
-            &dft_stack(n),
+            stack_op("dft", &dft_stack(n)),
             2,
             BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(10), queue_cap: 64 },
         );
@@ -402,15 +525,18 @@ mod tests {
     #[test]
     fn malformed_request_is_an_error_not_a_panic() {
         let n = 8;
-        let svc = ServicePool::spawn("dft", &dft_stack(n), 1, BatcherConfig::default());
+        let svc =
+            ServicePool::spawn("dft", stack_op("dft", &dft_stack(n)), 1, BatcherConfig::default());
         let h = svc.handle();
         assert!(h.call(vec![0.0; 4], vec![0.0; 8]).is_err(), "short re plane");
         assert!(h.call(vec![0.0; 8], vec![0.0; 16]).is_err(), "long im plane");
+        // the DFT route is complex: a single-plane submit is malformed too
+        assert!(h.submit(vec![0.0; 8], Vec::new()).is_err(), "empty im on a complex route");
         // the pool is still healthy afterwards
         let (re, _) = h.call(vec![1.0; 8], vec![0.0; 8]).unwrap();
         assert!(re.iter().all(|v| v.is_finite()));
         let stats = svc.shutdown();
-        assert_eq!(stats.bad_request, 2);
+        assert_eq!(stats.bad_request, 3);
         assert_eq!(stats.served, 1);
         assert_eq!(stats.rejected, 0, "bad requests are not backpressure rejections");
     }
@@ -420,7 +546,7 @@ mod tests {
         let n = 16;
         let svc = ServicePool::spawn(
             "dft",
-            &dft_stack(n),
+            stack_op("dft", &dft_stack(n)),
             2,
             BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(200), queue_cap: 1024 },
         );

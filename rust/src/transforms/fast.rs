@@ -9,8 +9,35 @@
 //! (convolution) application. Every routine matches the corresponding
 //! dense matrix in [`crate::transforms::matrices`] to fp32 precision and
 //! doubles as the test oracle for the closed-form butterfly constructions.
+//!
+//! ## Plans are immutable; scratch is caller-owned
+//!
+//! Every plan here ([`FftPlan`], [`RealTransformPlan`], [`CirculantPlan`])
+//! holds only precomputed tables and applies through `&self`: all mutable
+//! state of an execution lives in buffers the *caller* owns and passes in.
+//! That makes one plan `Arc`-shareable across the worker threads of a
+//! serving pool with zero contention — the same discipline as
+//! [`crate::butterfly::fast::FastBp`] — and it is what lets these
+//! transforms implement [`crate::transforms::op::LinearOp`].
+//!
+//! ## Batched execution
+//!
+//! The `*_batch_col` entry points process a `B × N` block held
+//! **column-major** (`buf[i * B + b]` = element `i` of lane `b`), batch
+//! loop innermost, so each stage's twiddles (or gather rows, or filter
+//! spectrum taps) are loaded once and streamed across all `B` lanes —
+//! the layout contract shared with `butterfly::fast::apply_batch` and
+//! the serving coalescer. Row-major `[batch, n]` wrappers keep the old
+//! reference semantics for callers that don't control layout.
 
 use crate::linalg::Cpx;
+
+/// Grow a caller-owned scratch plane to at least `len` (never shrinks).
+fn grow(v: &mut Vec<f32>, len: usize) {
+    if v.len() < len {
+        v.resize(len, 0.0);
+    }
+}
 
 /// Bit-reversal permutation table for n = 2^log2n: `table[i]` = reverse of
 /// the log2n-bit representation of i (the permutation P^(N) of the FFT,
@@ -113,6 +140,85 @@ impl FftPlan {
         }
     }
 
+    /// Batched forward DFT on **column-major** `[n, batch]` planes
+    /// (`buf[i * batch + b]`), batch loop innermost: the bit-reversal is
+    /// `N` contiguous `B`-element row swaps and each stage's twiddle pair
+    /// is loaded once per unit and streamed across all `B` lanes. At
+    /// `batch == 1` this is arithmetic-identical to [`forward`].
+    ///
+    /// [`forward`]: FftPlan::forward
+    pub fn forward_batch_col(&self, re: &mut [f32], im: &mut [f32], batch: usize) {
+        self.run_batch_col(re, im, batch, false);
+    }
+
+    /// Batched unnormalized inverse DFT on column-major `[n, batch]`
+    /// planes (divide by N yourself or use
+    /// [`inverse_scaled_batch_col`](FftPlan::inverse_scaled_batch_col)).
+    pub fn inverse_batch_col(&self, re: &mut [f32], im: &mut [f32], batch: usize) {
+        self.run_batch_col(re, im, batch, true);
+    }
+
+    /// Batched inverse DFT on column-major planes including the 1/N scale.
+    pub fn inverse_scaled_batch_col(&self, re: &mut [f32], im: &mut [f32], batch: usize) {
+        self.run_batch_col(re, im, batch, true);
+        let inv = 1.0 / self.n as f32;
+        for v in re.iter_mut() {
+            *v *= inv;
+        }
+        for v in im.iter_mut() {
+            *v *= inv;
+        }
+    }
+
+    /// The column-major batched kernel behind the `*_batch_col` entries.
+    fn run_batch_col(&self, re: &mut [f32], im: &mut [f32], batch: usize, inverse: bool) {
+        let n = self.n;
+        assert_eq!(re.len(), n * batch);
+        assert_eq!(im.len(), n * batch);
+        if batch == 0 {
+            return;
+        }
+        // Bit-reversal reordering: rows are contiguous B-element chunks.
+        for i in 0..n {
+            let j = self.bitrev[i];
+            if i < j {
+                let (lo, hi) = re.split_at_mut(j * batch);
+                lo[i * batch..(i + 1) * batch].swap_with_slice(&mut hi[..batch]);
+                let (lo, hi) = im.split_at_mut(j * batch);
+                lo[i * batch..(i + 1) * batch].swap_with_slice(&mut hi[..batch]);
+            }
+        }
+        // Iterative butterflies; twiddles hoisted out of the lane loop.
+        for s in 0..self.tw_re.len() {
+            let half = 1usize << s;
+            let m = half * 2;
+            let twr = &self.tw_re[s];
+            let twi = &self.tw_im[s];
+            let mut base = 0;
+            while base < n {
+                let (re_lo, re_hi) = re[base * batch..(base + m) * batch].split_at_mut(half * batch);
+                let (im_lo, im_hi) = im[base * batch..(base + m) * batch].split_at_mut(half * batch);
+                for j in 0..half {
+                    let wr = twr[j];
+                    let wi = if inverse { -twi[j] } else { twi[j] };
+                    let rl = &mut re_lo[j * batch..(j + 1) * batch];
+                    let il = &mut im_lo[j * batch..(j + 1) * batch];
+                    let rh = &mut re_hi[j * batch..(j + 1) * batch];
+                    let ih = &mut im_hi[j * batch..(j + 1) * batch];
+                    for k in 0..batch {
+                        let tr = wr * rh[k] - wi * ih[k];
+                        let ti = wr * ih[k] + wi * rh[k];
+                        rh[k] = rl[k] - tr;
+                        ih[k] = il[k] - ti;
+                        rl[k] += tr;
+                        il[k] += ti;
+                    }
+                }
+                base += m;
+            }
+        }
+    }
+
     fn run(&self, re: &mut [f32], im: &mut [f32], inverse: bool) {
         let n = self.n;
         assert_eq!(re.len(), n);
@@ -189,8 +295,48 @@ pub fn fwht(x: &mut [f32]) {
     }
 }
 
+/// Batched fast Walsh–Hadamard on a **column-major** `[n, batch]` block
+/// (`x[i * batch + b]`), in place, batch loop innermost: each level walks
+/// `(block, position)` in the outer loops so the `B` lanes of every
+/// butterfly stream with unit stride — the same discipline as
+/// `butterfly::fast::apply_batch`. At `batch == 1` this is
+/// arithmetic-identical to [`fwht`].
+pub fn fwht_batch_col(x: &mut [f32], batch: usize) {
+    if batch == 0 {
+        assert!(x.is_empty());
+        return;
+    }
+    let n = x.len() / batch;
+    assert_eq!(x.len(), batch * n);
+    assert!(n.is_power_of_two());
+    let s = std::f32::consts::FRAC_1_SQRT_2;
+    let mut h = 1usize;
+    while h < n {
+        let m = h * 2;
+        let mut base = 0;
+        while base < n {
+            let (lo, hi) = x[base * batch..(base + m) * batch].split_at_mut(h * batch);
+            for j in 0..h {
+                let lj = &mut lo[j * batch..(j + 1) * batch];
+                let hj = &mut hi[j * batch..(j + 1) * batch];
+                for k in 0..batch {
+                    let a = lj[k];
+                    let b = hj[k];
+                    lj[k] = (a + b) * s;
+                    hj[k] = (a - b) * s;
+                }
+            }
+            base += m;
+        }
+        h = m;
+    }
+}
+
 /// Batched fast Walsh–Hadamard over row-major `[batch, n]` (normalized,
-/// in place, row-at-a-time reference semantics).
+/// in place). Transposes through a local column-major block and runs the
+/// batch-innermost [`fwht_batch_col`] kernel — callers that can produce
+/// column-major blocks directly (the serving path) should call
+/// [`fwht_batch_col`] and skip both transposes.
 pub fn fwht_batch(x: &mut [f32], batch: usize) {
     if batch == 0 {
         assert!(x.is_empty());
@@ -198,14 +344,33 @@ pub fn fwht_batch(x: &mut [f32], batch: usize) {
     }
     let n = x.len() / batch;
     assert_eq!(x.len(), batch * n);
+    if batch == 1 {
+        // A [1, n] row-major block *is* its column-major transpose.
+        fwht_batch_col(x, 1);
+        return;
+    }
+    let mut col = vec![0.0f32; x.len()];
     for b in 0..batch {
-        fwht(&mut x[b * n..(b + 1) * n]);
+        for i in 0..n {
+            col[i * batch + b] = x[b * n + i];
+        }
+    }
+    fwht_batch_col(&mut col, batch);
+    for b in 0..batch {
+        for i in 0..n {
+            x[b * n + i] = col[i * batch + b];
+        }
     }
 }
 
 /// A reusable plan for real even/odd transforms built on one FFT of the
 /// same length (Makhoul 1980): fast orthonormal DCT-II / DST-II and the
 /// unitary Hartley transform.
+///
+/// The plan holds only precomputed tables and is applied through `&self`;
+/// FFT scratch is caller-owned (two growable planes passed per call), so
+/// one plan is safely shared by any number of worker threads, each with
+/// private scratch.
 pub struct RealTransformPlan {
     fft: FftPlan,
     /// cos/sin of πk/(2N) for the DCT/DST post-rotation.
@@ -213,10 +378,6 @@ pub struct RealTransformPlan {
     rot_im: Vec<f32>,
     /// Orthonormal DCT scale factors s_k.
     dct_scale: Vec<f32>,
-    /// Scratch buffers (reused across calls; not thread-safe by design —
-    /// each worker owns its plan).
-    scratch_re: Vec<f32>,
-    scratch_im: Vec<f32>,
 }
 
 impl RealTransformPlan {
@@ -235,14 +396,7 @@ impl RealTransformPlan {
             };
             dct_scale.push(s as f32);
         }
-        RealTransformPlan {
-            fft: FftPlan::new(n),
-            rot_re,
-            rot_im,
-            dct_scale,
-            scratch_re: vec![0.0; n],
-            scratch_im: vec![0.0; n],
-        }
+        RealTransformPlan { fft: FftPlan::new(n), rot_re, rot_im, dct_scale }
     }
 
     pub fn n(&self) -> usize {
@@ -251,73 +405,173 @@ impl RealTransformPlan {
 
     /// Orthonormal DCT-II (Makhoul): permute x to v = [x₀,x₂,…,x₅,x₃,x₁]
     /// (evens forward, odds reversed), take an N-point FFT, rotate by
-    /// e^{-iπk/2N}, keep 2·Re, apply orthonormal scaling.
-    pub fn dct2(&mut self, x: &[f32], out: &mut [f32]) {
-        let n = self.n();
-        assert_eq!(x.len(), n);
-        assert_eq!(out.len(), n);
-        let half = n / 2;
-        for i in 0..half {
-            self.scratch_re[i] = x[2 * i];
-            self.scratch_re[n - 1 - i] = x[2 * i + 1];
-        }
-        if n % 2 == 1 {
-            self.scratch_re[half] = x[n - 1];
-        }
-        self.scratch_im.fill(0.0);
-        self.fft.forward(&mut self.scratch_re, &mut self.scratch_im);
-        for k in 0..n {
-            // X_k = s_k · Re[e^{-iπk/2N} V_k]  (the "2·Re" of Makhoul's
-            // unnormalized form is folded into s_k = √(2/N)).
-            let vr = self.scratch_re[k];
-            let vi = self.scratch_im[k];
-            out[k] = self.dct_scale[k] * (self.rot_re[k] * vr - self.rot_im[k] * vi);
-        }
+    /// e^{-iπk/2N}, keep 2·Re, apply orthonormal scaling. `scratch_re`/
+    /// `scratch_im` are caller-owned growable FFT planes.
+    pub fn dct2(&self, x: &[f32], out: &mut [f32], scratch_re: &mut Vec<f32>, scratch_im: &mut Vec<f32>) {
+        out.copy_from_slice(x);
+        self.dct2_batch_col(out, 1, scratch_re, scratch_im);
     }
 
     /// Orthonormal DST-II via the DCT identity
     /// `DST-II(x)_k = DCT-II(y)_{N-1-k}` with `y_n = (−1)^n x_n`
     /// (scales match: t_k = s_{N−1−k}).
-    pub fn dst2(&mut self, x: &[f32], out: &mut [f32]) {
-        let n = self.n();
-        assert_eq!(x.len(), n);
-        assert_eq!(out.len(), n);
-        let mut y = vec![0.0f32; n];
-        for (i, v) in y.iter_mut().enumerate() {
-            *v = if i % 2 == 0 { x[i] } else { -x[i] };
-        }
-        let mut tmp = vec![0.0f32; n];
-        self.dct2(&y, &mut tmp);
-        for k in 0..n {
-            out[k] = tmp[n - 1 - k];
-        }
+    pub fn dst2(&self, x: &[f32], out: &mut [f32], scratch_re: &mut Vec<f32>, scratch_im: &mut Vec<f32>) {
+        out.copy_from_slice(x);
+        self.dst2_batch_col(out, 1, scratch_re, scratch_im);
     }
 
     /// Unitary discrete Hartley transform: H_k = (Re X_k − Im X_k)/√N
     /// where X is the (unnormalized) DFT of the real signal.
-    pub fn hartley(&mut self, x: &[f32], out: &mut [f32]) {
+    pub fn hartley(&self, x: &[f32], out: &mut [f32], scratch_re: &mut Vec<f32>, scratch_im: &mut Vec<f32>) {
+        out.copy_from_slice(x);
+        self.hartley_batch_col(out, 1, scratch_re, scratch_im);
+    }
+
+    /// In-place batched DCT-II on a column-major `[n, batch]` block
+    /// (batch loop innermost; rotation/scale scalars hoisted per row).
+    /// The input is fully consumed by the Makhoul permute before any
+    /// output row is written, so in-place is safe.
+    pub fn dct2_batch_col(
+        &self,
+        io: &mut [f32],
+        batch: usize,
+        scratch_re: &mut Vec<f32>,
+        scratch_im: &mut Vec<f32>,
+    ) {
         let n = self.n();
-        assert_eq!(x.len(), n);
-        assert_eq!(out.len(), n);
-        self.scratch_re.copy_from_slice(x);
-        self.scratch_im.fill(0.0);
-        self.fft.forward(&mut self.scratch_re, &mut self.scratch_im);
+        assert_eq!(io.len(), n * batch);
+        if batch == 0 {
+            return;
+        }
+        let len = n * batch;
+        grow(scratch_re, len);
+        grow(scratch_im, len);
+        let vre = &mut scratch_re[..len];
+        let vim = &mut scratch_im[..len];
+        self.makhoul_permute(io, vre, batch, false);
+        vim.fill(0.0);
+        self.fft.forward_batch_col(vre, vim, batch);
+        for k in 0..n {
+            // X_k = s_k · Re[e^{-iπk/2N} V_k]  (the "2·Re" of Makhoul's
+            // unnormalized form is folded into s_k = √(2/N)).
+            let (c, s, sc) = (self.rot_re[k], self.rot_im[k], self.dct_scale[k]);
+            let out = &mut io[k * batch..(k + 1) * batch];
+            let vr = &vre[k * batch..(k + 1) * batch];
+            let vi = &vim[k * batch..(k + 1) * batch];
+            for b in 0..batch {
+                out[b] = sc * (c * vr[b] - s * vi[b]);
+            }
+        }
+    }
+
+    /// In-place batched DST-II on a column-major `[n, batch]` block: the
+    /// sign flip `y_n = (−1)^n x_n` is fused into the Makhoul permute and
+    /// the row reversal into the output rotation.
+    pub fn dst2_batch_col(
+        &self,
+        io: &mut [f32],
+        batch: usize,
+        scratch_re: &mut Vec<f32>,
+        scratch_im: &mut Vec<f32>,
+    ) {
+        let n = self.n();
+        assert_eq!(io.len(), n * batch);
+        if batch == 0 {
+            return;
+        }
+        let len = n * batch;
+        grow(scratch_re, len);
+        grow(scratch_im, len);
+        let vre = &mut scratch_re[..len];
+        let vim = &mut scratch_im[..len];
+        self.makhoul_permute(io, vre, batch, true);
+        vim.fill(0.0);
+        self.fft.forward_batch_col(vre, vim, batch);
+        for k in 0..n {
+            let (c, s, sc) = (self.rot_re[k], self.rot_im[k], self.dct_scale[k]);
+            // DST-II(x)_{n-1-k} = DCT-II(y)_k
+            let out = &mut io[(n - 1 - k) * batch..(n - k) * batch];
+            let vr = &vre[k * batch..(k + 1) * batch];
+            let vi = &vim[k * batch..(k + 1) * batch];
+            for b in 0..batch {
+                out[b] = sc * (c * vr[b] - s * vi[b]);
+            }
+        }
+    }
+
+    /// In-place batched unitary Hartley on a column-major `[n, batch]`
+    /// block.
+    pub fn hartley_batch_col(
+        &self,
+        io: &mut [f32],
+        batch: usize,
+        scratch_re: &mut Vec<f32>,
+        scratch_im: &mut Vec<f32>,
+    ) {
+        let n = self.n();
+        assert_eq!(io.len(), n * batch);
+        if batch == 0 {
+            return;
+        }
+        let len = n * batch;
+        grow(scratch_re, len);
+        grow(scratch_im, len);
+        let vre = &mut scratch_re[..len];
+        let vim = &mut scratch_im[..len];
+        vre.copy_from_slice(io);
+        vim.fill(0.0);
+        self.fft.forward_batch_col(vre, vim, batch);
         let s = 1.0 / (n as f32).sqrt();
         for k in 0..n {
-            out[k] = (self.scratch_re[k] - self.scratch_im[k]) * s;
+            let out = &mut io[k * batch..(k + 1) * batch];
+            let vr = &vre[k * batch..(k + 1) * batch];
+            let vi = &vim[k * batch..(k + 1) * batch];
+            for b in 0..batch {
+                out[b] = (vr[b] - vi[b]) * s;
+            }
+        }
+    }
+
+    /// Makhoul's even/odd permute on column-major rows: `v_i = x_{2i}`,
+    /// `v_{n-1-i} = ±x_{2i+1}` (sign flipped for the DST's `(−1)^n`
+    /// modulation, which only touches odd indices).
+    fn makhoul_permute(&self, x: &[f32], v: &mut [f32], batch: usize, negate_odd: bool) {
+        let n = self.n();
+        let half = n / 2;
+        for i in 0..half {
+            v[i * batch..(i + 1) * batch]
+                .copy_from_slice(&x[(2 * i) * batch..(2 * i + 1) * batch]);
+            let d = n - 1 - i;
+            let src = &x[(2 * i + 1) * batch..(2 * i + 2) * batch];
+            let dst = &mut v[d * batch..(d + 1) * batch];
+            if negate_odd {
+                for (o, &s) in dst.iter_mut().zip(src.iter()) {
+                    *o = -s;
+                }
+            } else {
+                dst.copy_from_slice(src);
+            }
+        }
+        if n % 2 == 1 {
+            // only n = 1 here (the FFT plan requires a power of two):
+            // index n−1 is even, so no sign flip.
+            v[half * batch..(half + 1) * batch]
+                .copy_from_slice(&x[(n - 1) * batch..n * batch]);
         }
     }
 }
 
 /// A plan for applying a fixed circulant (convolution by h) via
 /// FFT → pointwise multiply → inverse FFT: `y = F⁻¹ (F h ⊙ F x)`.
+///
+/// Holds only the FFT tables and the filter spectrum; applies through
+/// `&self` on caller-owned planes, so one plan is shareable across
+/// serving workers.
 pub struct CirculantPlan {
     fft: FftPlan,
     /// Precomputed spectrum of the filter (unnormalized DFT of h).
     h_re: Vec<f32>,
     h_im: Vec<f32>,
-    scratch_re: Vec<f32>,
-    scratch_im: Vec<f32>,
 }
 
 impl CirculantPlan {
@@ -327,32 +581,47 @@ impl CirculantPlan {
         let mut h_re = h.to_vec();
         let mut h_im = vec![0.0f32; n];
         fft.forward(&mut h_re, &mut h_im);
-        CirculantPlan {
-            fft,
-            h_re,
-            h_im,
-            scratch_re: vec![0.0; n],
-            scratch_im: vec![0.0; n],
-        }
+        CirculantPlan { fft, h_re, h_im }
     }
 
-    /// y = (h ⊛ x), the circulant matrix of h applied to x.
-    pub fn apply(&mut self, x: &[f32], out: &mut [f32]) {
+    pub fn n(&self) -> usize {
+        self.fft.n
+    }
+
+    /// In-place batched circulant apply on column-major `[n, batch]`
+    /// planar planes. The whole chain (FFT, pointwise spectrum multiply,
+    /// inverse FFT, 1/N) is ℂ-linear, so a complex input block is handled
+    /// in one pass; real callers pass a zeroed imaginary plane.
+    pub fn apply_batch_col(&self, re: &mut [f32], im: &mut [f32], batch: usize) {
+        let n = self.fft.n;
+        assert_eq!(re.len(), n * batch);
+        assert_eq!(im.len(), n * batch);
+        if batch == 0 {
+            return;
+        }
+        self.fft.forward_batch_col(re, im, batch);
+        for k in 0..n {
+            let (hr, hi) = (self.h_re[k], self.h_im[k]);
+            let rrow = &mut re[k * batch..(k + 1) * batch];
+            let irow = &mut im[k * batch..(k + 1) * batch];
+            for b in 0..batch {
+                let (xr, xi) = (rrow[b], irow[b]);
+                rrow[b] = xr * hr - xi * hi;
+                irow[b] = xr * hi + xi * hr;
+            }
+        }
+        self.fft.inverse_scaled_batch_col(re, im, batch);
+    }
+
+    /// y = (h ⊛ x), the circulant matrix of h applied to one real vector.
+    /// `scratch_im` is the caller-owned imaginary plane for the FFT chain.
+    pub fn apply(&self, x: &[f32], out: &mut [f32], scratch_im: &mut Vec<f32>) {
         let n = self.fft.n;
         assert_eq!(x.len(), n);
-        assert_eq!(out.len(), n);
-        self.scratch_re.copy_from_slice(x);
-        self.scratch_im.fill(0.0);
-        self.fft.forward(&mut self.scratch_re, &mut self.scratch_im);
-        for k in 0..n {
-            let xr = self.scratch_re[k];
-            let xi = self.scratch_im[k];
-            self.scratch_re[k] = xr * self.h_re[k] - xi * self.h_im[k];
-            self.scratch_im[k] = xr * self.h_im[k] + xi * self.h_re[k];
-        }
-        self.fft
-            .inverse_scaled(&mut self.scratch_re, &mut self.scratch_im);
-        out.copy_from_slice(&self.scratch_re);
+        out.copy_from_slice(x);
+        grow(scratch_im, n);
+        scratch_im[..n].fill(0.0);
+        self.apply_batch_col(out, &mut scratch_im[..n], 1);
     }
 }
 
@@ -422,12 +691,13 @@ mod tests {
     #[test]
     fn dct2_matches_dense() {
         let mut rng = Rng::new(4);
+        let (mut sre, mut sim) = (Vec::new(), Vec::new());
         for n in [2usize, 4, 8, 64, 256] {
-            let mut plan = RealTransformPlan::new(n);
+            let plan = RealTransformPlan::new(n);
             let mut x = vec![0.0f32; n];
             rng.fill_normal(&mut x, 0.0, 1.0);
             let mut fast = vec![0.0f32; n];
-            plan.dct2(&x, &mut fast);
+            plan.dct2(&x, &mut fast, &mut sre, &mut sim);
             let dense = dct_matrix(n).matvec(&x);
             check_close(&fast, &dense, 3e-4, 1e-3).unwrap();
         }
@@ -436,12 +706,13 @@ mod tests {
     #[test]
     fn dst2_matches_dense() {
         let mut rng = Rng::new(5);
+        let (mut sre, mut sim) = (Vec::new(), Vec::new());
         for n in [2usize, 4, 8, 64, 256] {
-            let mut plan = RealTransformPlan::new(n);
+            let plan = RealTransformPlan::new(n);
             let mut x = vec![0.0f32; n];
             rng.fill_normal(&mut x, 0.0, 1.0);
             let mut fast = vec![0.0f32; n];
-            plan.dst2(&x, &mut fast);
+            plan.dst2(&x, &mut fast, &mut sre, &mut sim);
             let dense = dst_matrix(n).matvec(&x);
             check_close(&fast, &dense, 3e-4, 1e-3).unwrap();
         }
@@ -450,12 +721,13 @@ mod tests {
     #[test]
     fn hartley_matches_dense() {
         let mut rng = Rng::new(6);
+        let (mut sre, mut sim) = (Vec::new(), Vec::new());
         for n in [2usize, 8, 64] {
-            let mut plan = RealTransformPlan::new(n);
+            let plan = RealTransformPlan::new(n);
             let mut x = vec![0.0f32; n];
             rng.fill_normal(&mut x, 0.0, 1.0);
             let mut fast = vec![0.0f32; n];
-            plan.hartley(&x, &mut fast);
+            plan.hartley(&x, &mut fast, &mut sre, &mut sim);
             let dense = hartley_matrix(n).matvec(&x);
             check_close(&fast, &dense, 3e-4, 1e-3).unwrap();
         }
@@ -464,14 +736,15 @@ mod tests {
     #[test]
     fn circulant_matches_dense() {
         let mut rng = Rng::new(7);
+        let mut sim = Vec::new();
         for n in [2usize, 8, 64, 256] {
             let mut h = vec![0.0f32; n];
             rng.fill_normal(&mut h, 0.0, (1.0 / n as f64).sqrt() as f32);
-            let mut plan = CirculantPlan::new(&h);
+            let plan = CirculantPlan::new(&h);
             let mut x = vec![0.0f32; n];
             rng.fill_normal(&mut x, 0.0, 1.0);
             let mut fast = vec![0.0f32; n];
-            plan.apply(&x, &mut fast);
+            plan.apply(&x, &mut fast, &mut sim);
             let dense = circulant_matrix(&h).matvec(&x);
             check_close(&fast, &dense, 1e-4, 1e-3).unwrap();
         }
@@ -551,5 +824,129 @@ mod tests {
             fwht(&mut y);
             check_close(&y, &x, 1e-4, 1e-3)
         });
+    }
+
+    /// Transpose a row-major `[batch, n]` block to column-major `[n, batch]`.
+    fn to_col(x: &[f32], batch: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; x.len()];
+        for b in 0..batch {
+            for i in 0..n {
+                c[i * batch + b] = x[b * n + i];
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn fft_batch_col_matches_per_row_bitwise() {
+        let mut rng = Rng::new(21);
+        let n = 64;
+        let plan = FftPlan::new(n);
+        for batch in [1usize, 3, 8] {
+            let mut re = vec![0.0f32; batch * n];
+            let mut im = vec![0.0f32; batch * n];
+            rng.fill_normal(&mut re, 0.0, 1.0);
+            rng.fill_normal(&mut im, 0.0, 1.0);
+            let mut cre = to_col(&re, batch, n);
+            let mut cim = to_col(&im, batch, n);
+            plan.forward_batch_col(&mut cre, &mut cim, batch);
+            for b in 0..batch {
+                let r = b * n..(b + 1) * n;
+                plan.forward(&mut re[r.clone()], &mut im[r]);
+                for i in 0..n {
+                    // same arithmetic, same order ⇒ exactly equal
+                    assert_eq!(re[b * n + i], cre[i * batch + b], "B={batch} ({b},{i}) re");
+                    assert_eq!(im[b * n + i], cim[i * batch + b], "B={batch} ({b},{i}) im");
+                }
+            }
+            // and the column-major inverse round-trips
+            plan.inverse_scaled_batch_col(&mut cre, &mut cim, batch);
+        }
+    }
+
+    #[test]
+    fn fwht_batch_col_matches_per_row() {
+        let mut rng = Rng::new(22);
+        let n = 32;
+        for batch in [1usize, 3, 5, 64] {
+            let mut x = vec![0.0f32; batch * n];
+            rng.fill_normal(&mut x, 0.0, 1.0);
+            let mut c = to_col(&x, batch, n);
+            fwht_batch_col(&mut c, batch);
+            for b in 0..batch {
+                fwht(&mut x[b * n..(b + 1) * n]);
+                for i in 0..n {
+                    assert_eq!(x[b * n + i], c[i * batch + b], "B={batch} ({b},{i})");
+                }
+            }
+        }
+        // batch 0 is a no-op, not a panic
+        fwht_batch_col(&mut [], 0);
+    }
+
+    #[test]
+    fn real_transform_batch_col_matches_single_vector() {
+        let mut rng = Rng::new(23);
+        let n = 64;
+        let plan = RealTransformPlan::new(n);
+        let (mut sre, mut sim) = (Vec::new(), Vec::new());
+        for batch in [1usize, 3, 64] {
+            let mut x = vec![0.0f32; batch * n];
+            rng.fill_normal(&mut x, 0.0, 1.0);
+            for which in ["dct2", "dst2", "hartley"] {
+                let mut col = to_col(&x, batch, n);
+                match which {
+                    "dct2" => plan.dct2_batch_col(&mut col, batch, &mut sre, &mut sim),
+                    "dst2" => plan.dst2_batch_col(&mut col, batch, &mut sre, &mut sim),
+                    _ => plan.hartley_batch_col(&mut col, batch, &mut sre, &mut sim),
+                }
+                for b in 0..batch {
+                    let mut want = vec![0.0f32; n];
+                    let row = &x[b * n..(b + 1) * n];
+                    match which {
+                        "dct2" => plan.dct2(row, &mut want, &mut sre, &mut sim),
+                        "dst2" => plan.dst2(row, &mut want, &mut sre, &mut sim),
+                        _ => plan.hartley(row, &mut want, &mut sre, &mut sim),
+                    }
+                    for i in 0..n {
+                        assert!(
+                            (want[i] - col[i * batch + b]).abs() < 1e-5,
+                            "{which} B={batch} ({b},{i}): {} vs {}",
+                            want[i],
+                            col[i * batch + b]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn circulant_batch_col_complex_matches_dense() {
+        let mut rng = Rng::new(24);
+        let n = 32;
+        let mut h = vec![0.0f32; n];
+        rng.fill_normal(&mut h, 0.0, (1.0 / n as f64).sqrt() as f32);
+        let plan = CirculantPlan::new(&h);
+        let dense = circulant_matrix(&h).to_cmat();
+        for batch in [1usize, 3, 8] {
+            let mut re = vec![0.0f32; batch * n];
+            let mut im = vec![0.0f32; batch * n];
+            rng.fill_normal(&mut re, 0.0, 1.0);
+            rng.fill_normal(&mut im, 0.0, 1.0);
+            let mut cre = to_col(&re, batch, n);
+            let mut cim = to_col(&im, batch, n);
+            plan.apply_batch_col(&mut cre, &mut cim, batch);
+            for b in 0..batch {
+                // real matrix on a complex vector: planes transform independently
+                let x: Vec<Cpx> =
+                    (0..n).map(|i| Cpx::new(re[b * n + i], im[b * n + i])).collect();
+                let want = dense.matvec(&x);
+                for i in 0..n {
+                    assert!((cre[i * batch + b] - want[i].re).abs() < 1e-3, "B={batch} re ({b},{i})");
+                    assert!((cim[i * batch + b] - want[i].im).abs() < 1e-3, "B={batch} im ({b},{i})");
+                }
+            }
+        }
     }
 }

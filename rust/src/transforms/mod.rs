@@ -1,5 +1,6 @@
-//! Target transforms: taxonomy, dense matrix specifications, and the
-//! hand-written fast algorithms the paper compares against.
+//! Target transforms: taxonomy, dense matrix specifications, the
+//! hand-written fast algorithms the paper compares against, and the
+//! unified [`LinearOp`] API everything is served through.
 //!
 //! - [`spec`] — the eight transform families of Figure 3 / Table 4.
 //! - [`matrices`] — dense (unitary/orthonormal) matrix builders; these are
@@ -7,14 +8,22 @@
 //! - [`fast`] — FFT / FWHT / fast DCT / fast DST / Hartley / circulant
 //!   plans: the Figure 4 comparators and the oracles for the closed-form
 //!   butterfly constructions.
+//! - [`op`] — the object-safe [`LinearOp`] trait, its implementations
+//!   for every family above (plus hardened BP stacks and the dense
+//!   reference), and the [`op::plan`] factory.
 
 pub mod fast;
 pub mod matrices;
+pub mod op;
 pub mod spec;
 
-pub use fast::{bit_reversal_table, fft_unitary, fwht, CirculantPlan, FftPlan, RealTransformPlan};
+pub use fast::{
+    bit_reversal_table, fft_unitary, fwht, fwht_batch, fwht_batch_col, CirculantPlan, FftPlan,
+    RealTransformPlan,
+};
 pub use matrices::{
     circulant_matrix, convolution_matrix, dct_matrix, dft_matrix, dst_matrix, hadamard_matrix,
     hartley_matrix, idft_matrix, legendre_matrix, randn_matrix, target_matrix,
 };
+pub use op::{stack_op, LinearOp, OpWorkspace};
 pub use spec::{TransformKind, ALL_TRANSFORMS};

@@ -1,0 +1,629 @@
+//! One transform API for everything this crate can multiply by: the
+//! object-safe [`LinearOp`] trait.
+//!
+//! The paper's thesis is that the DFT, DCT, DST, Hartley, Hadamard,
+//! convolutions, and learned butterfly stacks are all instances of one
+//! structure — products of sparse factors. This module gives the codebase
+//! the API to match: every transform, exact or learned, fast or dense,
+//! is an `Arc<dyn LinearOp>` with a single batched entry point, so the
+//! serving pool, the router, the benches, and the conformance tests are
+//! written once against the trait instead of once per family.
+//!
+//! ## The contract
+//!
+//! [`LinearOp::apply_batch`] operates in place on **column-major** planar
+//! planes (`buf[i * batch + b]` = element `i` of lane `b` — the batched
+//! layout of `butterfly::fast` and the serving coalescer):
+//!
+//! - `re.len() == batch * n()` always;
+//! - `im.len() == batch * n()`, or `im` may be **empty** when
+//!   `is_complex()` is `false` (the single-plane path real routes use);
+//! - a real op (`is_complex() == false`) given both planes transforms
+//!   them independently — `A(x + i·y) = A·x + i·A·y` for real `A` — so
+//!   complex-shaped clients keep working against real routes;
+//! - all scratch lives in the caller-owned [`OpWorkspace`]: ops hold only
+//!   immutable tables, apply through `&self`, and are `Send + Sync`, so
+//!   one `Arc<dyn LinearOp>` is shared by every worker of a pool while
+//!   each worker owns a private workspace. Concurrent applies never
+//!   contend, and results are bit-identical to serial execution.
+//!
+//! ## Getting an op
+//!
+//! - [`plan`] / [`plan_with_rng`] — the factory: closed-form fast
+//!   algorithm for a [`TransformKind`] (FFT, fast DCT/DST/Hartley, FWHT,
+//!   circulant-by-FFT; dense fallback for Legendre/Randn, which have no
+//!   fast form).
+//! - [`stack_op`] — adapter from a (learned or closed-form) [`BpStack`],
+//!   hardened through [`FastBp`].
+//! - [`fft_op`] / [`ifft_op`] / [`dct_op`] / [`dst_op`] / [`hartley_op`]
+//!   / [`fwht_op`] / [`circulant_op`] / [`dense_op`] — the individual
+//!   constructors.
+
+use crate::butterfly::fast::{BatchWorkspace, FastBp};
+use crate::butterfly::module::BpStack;
+use crate::linalg::CMat;
+use crate::transforms::fast::{fwht_batch_col, CirculantPlan, FftPlan, RealTransformPlan};
+use crate::transforms::matrices;
+use crate::transforms::spec::TransformKind;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// An N×N linear map with one batched, workspace-externalized entry
+/// point. Object-safe (`Arc<dyn LinearOp>` is the unit of installation
+/// everywhere) and `Send + Sync` by bound: implementations must keep all
+/// per-apply mutable state in the [`OpWorkspace`].
+pub trait LinearOp: Send + Sync {
+    /// Transform size (the op is N×N).
+    fn n(&self) -> usize;
+
+    /// Whether the op's matrix has a nonzero imaginary plane. Real ops
+    /// accept the single-plane (`im` empty) calling convention and
+    /// transform a complex input's planes independently.
+    fn is_complex(&self) -> bool;
+
+    /// Short diagnostic name (`"dft"`, `"dct"`, `"circulant"`, a stack
+    /// label, …).
+    fn name(&self) -> &str;
+
+    /// Estimated real-arithmetic FLOPs for one single-vector apply — the
+    /// O(N log N) vs O(N²) story, used by benches and capacity planning.
+    fn flops_per_apply(&self) -> usize;
+
+    /// In-place batched apply on column-major `[n, batch]` planar planes
+    /// (see the module docs for the exact plane contract).
+    fn apply_batch(&self, re: &mut [f32], im: &mut [f32], batch: usize, ws: &mut OpWorkspace);
+}
+
+/// Caller-owned scratch for [`LinearOp::apply_batch`]: resizable planes
+/// that grow on demand and are reused across calls, so a serving worker
+/// holding one performs no steady-state allocation. One workspace serves
+/// any op and any `(batch, n)`; it carries no results between calls.
+#[derive(Default)]
+pub struct OpWorkspace {
+    bp: BatchWorkspace,
+    sre: Vec<f32>,
+    sim: Vec<f32>,
+    stage: Vec<f32>,
+}
+
+impl OpWorkspace {
+    /// An empty workspace; buffers grow on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The hardened-stack scratch ([`FastBp`] batched entry points).
+    pub fn bp(&mut self) -> &mut BatchWorkspace {
+        &mut self.bp
+    }
+
+    /// Two growable planes for FFT-chain intermediates (handed to the
+    /// [`RealTransformPlan`] batched entry points, reused as dense
+    /// matvec outputs).
+    pub fn planes(&mut self) -> (&mut Vec<f32>, &mut Vec<f32>) {
+        (&mut self.sre, &mut self.sim)
+    }
+
+    /// A third staging plane of at least `len`, zero-initialized on
+    /// growth only — callers that need zeros must fill it.
+    pub fn stage(&mut self, len: usize) -> &mut [f32] {
+        if self.stage.len() < len {
+            self.stage.resize(len, 0.0);
+        }
+        &mut self.stage[..len]
+    }
+}
+
+/// Assert the plane contract shared by every implementation.
+fn check_planes(n: usize, complex: bool, re: &[f32], im: &[f32], batch: usize) {
+    assert_eq!(re.len(), n * batch, "re plane must be batch*n");
+    if im.is_empty() {
+        assert!(!complex, "complex ops require a full imaginary plane");
+    } else {
+        assert_eq!(im.len(), n * batch, "im plane must be batch*n (or empty for real ops)");
+    }
+}
+
+/// Real-op FLOP count of one radix-2 FFT (the usual 5·N·log₂N).
+fn fft_flops(n: usize) -> usize {
+    5 * n * n.trailing_zeros() as usize
+}
+
+// ---------------------------------------------------------------------------
+// Hardened BP stacks (learned or closed-form)
+// ---------------------------------------------------------------------------
+
+/// A hardened butterfly stack behind the unified API.
+struct BpOp {
+    fast: FastBp,
+    name: String,
+}
+
+impl LinearOp for BpOp {
+    fn n(&self) -> usize {
+        self.fast.n
+    }
+
+    fn is_complex(&self) -> bool {
+        self.fast.complex
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn flops_per_apply(&self) -> usize {
+        self.fast.flops_per_apply()
+    }
+
+    fn apply_batch(&self, re: &mut [f32], im: &mut [f32], batch: usize, ws: &mut OpWorkspace) {
+        check_planes(self.fast.n, self.fast.complex, re, im, batch);
+        if im.is_empty() {
+            self.fast.apply_real_batch_col(re, batch, ws.bp());
+        } else {
+            self.fast.apply_complex_batch_col(re, im, batch, ws.bp());
+        }
+    }
+}
+
+/// Harden a (learned or closed-form) [`BpStack`] into a serveable op.
+pub fn stack_op(name: impl Into<String>, stack: &BpStack) -> Arc<dyn LinearOp> {
+    Arc::new(BpOp { fast: FastBp::from_stack(stack), name: name.into() })
+}
+
+// ---------------------------------------------------------------------------
+// FFT (forward and inverse, unitary scaling)
+// ---------------------------------------------------------------------------
+
+/// Unitary DFT / inverse DFT via a radix-2 plan.
+struct FftOp {
+    plan: FftPlan,
+    inverse: bool,
+}
+
+impl LinearOp for FftOp {
+    fn n(&self) -> usize {
+        self.plan.n
+    }
+
+    fn is_complex(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> &str {
+        if self.inverse {
+            "idft"
+        } else {
+            "dft"
+        }
+    }
+
+    fn flops_per_apply(&self) -> usize {
+        fft_flops(self.plan.n) + 2 * self.plan.n
+    }
+
+    fn apply_batch(&self, re: &mut [f32], im: &mut [f32], batch: usize, _ws: &mut OpWorkspace) {
+        check_planes(self.plan.n, true, re, im, batch);
+        if self.inverse {
+            self.plan.inverse_batch_col(re, im, batch);
+        } else {
+            self.plan.forward_batch_col(re, im, batch);
+        }
+        let s = 1.0 / (self.plan.n as f32).sqrt();
+        for v in re.iter_mut() {
+            *v *= s;
+        }
+        for v in im.iter_mut() {
+            *v *= s;
+        }
+    }
+}
+
+/// The unitary DFT (matches [`matrices::dft_matrix`]).
+pub fn fft_op(n: usize) -> Arc<dyn LinearOp> {
+    Arc::new(FftOp { plan: FftPlan::new(n), inverse: false })
+}
+
+/// The unitary inverse DFT (matches [`matrices::idft_matrix`]).
+pub fn ifft_op(n: usize) -> Arc<dyn LinearOp> {
+    Arc::new(FftOp { plan: FftPlan::new(n), inverse: true })
+}
+
+// ---------------------------------------------------------------------------
+// DCT-II / DST-II / Hartley (real even/odd transforms over one FFT)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+enum RealEvenKind {
+    Dct2,
+    Dst2,
+    Hartley,
+}
+
+/// Fast orthonormal DCT-II / DST-II / unitary Hartley (Makhoul's FFT
+/// reductions); real ops, so each plane is transformed independently.
+struct RealEvenOp {
+    plan: RealTransformPlan,
+    kind: RealEvenKind,
+}
+
+impl RealEvenOp {
+    fn run_plane(&self, io: &mut [f32], batch: usize, ws: &mut OpWorkspace) {
+        let (sre, sim) = ws.planes();
+        match self.kind {
+            RealEvenKind::Dct2 => self.plan.dct2_batch_col(io, batch, sre, sim),
+            RealEvenKind::Dst2 => self.plan.dst2_batch_col(io, batch, sre, sim),
+            RealEvenKind::Hartley => self.plan.hartley_batch_col(io, batch, sre, sim),
+        }
+    }
+}
+
+impl LinearOp for RealEvenOp {
+    fn n(&self) -> usize {
+        self.plan.n()
+    }
+
+    fn is_complex(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &str {
+        match self.kind {
+            RealEvenKind::Dct2 => "dct",
+            RealEvenKind::Dst2 => "dst",
+            RealEvenKind::Hartley => "hartley",
+        }
+    }
+
+    fn flops_per_apply(&self) -> usize {
+        fft_flops(self.plan.n()) + 4 * self.plan.n()
+    }
+
+    fn apply_batch(&self, re: &mut [f32], im: &mut [f32], batch: usize, ws: &mut OpWorkspace) {
+        check_planes(self.plan.n(), false, re, im, batch);
+        self.run_plane(re, batch, ws);
+        if !im.is_empty() {
+            self.run_plane(im, batch, ws);
+        }
+    }
+}
+
+/// The orthonormal DCT-II (matches [`matrices::dct_matrix`]).
+pub fn dct_op(n: usize) -> Arc<dyn LinearOp> {
+    Arc::new(RealEvenOp { plan: RealTransformPlan::new(n), kind: RealEvenKind::Dct2 })
+}
+
+/// The orthonormal DST-II (matches [`matrices::dst_matrix`]).
+pub fn dst_op(n: usize) -> Arc<dyn LinearOp> {
+    Arc::new(RealEvenOp { plan: RealTransformPlan::new(n), kind: RealEvenKind::Dst2 })
+}
+
+/// The unitary Hartley transform (matches [`matrices::hartley_matrix`]).
+pub fn hartley_op(n: usize) -> Arc<dyn LinearOp> {
+    Arc::new(RealEvenOp { plan: RealTransformPlan::new(n), kind: RealEvenKind::Hartley })
+}
+
+// ---------------------------------------------------------------------------
+// Circulant (convolution) via FFT
+// ---------------------------------------------------------------------------
+
+/// Circulant convolution `y = F⁻¹ (F h ⊙ F x)`. The chain is ℂ-linear,
+/// so both planes of a complex input ride one FFT pass; the single-plane
+/// path borrows a zeroed workspace plane as the imaginary half.
+struct CirculantOp {
+    plan: CirculantPlan,
+}
+
+impl LinearOp for CirculantOp {
+    fn n(&self) -> usize {
+        self.plan.n()
+    }
+
+    fn is_complex(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &str {
+        "circulant"
+    }
+
+    fn flops_per_apply(&self) -> usize {
+        2 * fft_flops(self.plan.n()) + 8 * self.plan.n()
+    }
+
+    fn apply_batch(&self, re: &mut [f32], im: &mut [f32], batch: usize, ws: &mut OpWorkspace) {
+        check_planes(self.plan.n(), false, re, im, batch);
+        if im.is_empty() {
+            let len = self.plan.n() * batch;
+            let sim = ws.stage(len);
+            sim.fill(0.0);
+            self.plan.apply_batch_col(re, sim, batch);
+        } else {
+            self.plan.apply_batch_col(re, im, batch);
+        }
+    }
+}
+
+/// The circulant matrix of filter `h` (matches
+/// [`matrices::circulant_matrix`]).
+pub fn circulant_op(h: &[f32]) -> Arc<dyn LinearOp> {
+    Arc::new(CirculantOp { plan: CirculantPlan::new(h) })
+}
+
+// ---------------------------------------------------------------------------
+// Walsh–Hadamard
+// ---------------------------------------------------------------------------
+
+/// The normalized fast Walsh–Hadamard transform — table-free, fully
+/// in place.
+struct FwhtOp {
+    n: usize,
+}
+
+impl LinearOp for FwhtOp {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn is_complex(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &str {
+        "hadamard"
+    }
+
+    fn flops_per_apply(&self) -> usize {
+        // per level: n/2 butterflies × (2 add + 2 mul)
+        2 * self.n * self.n.trailing_zeros() as usize
+    }
+
+    fn apply_batch(&self, re: &mut [f32], im: &mut [f32], batch: usize, _ws: &mut OpWorkspace) {
+        check_planes(self.n, false, re, im, batch);
+        fwht_batch_col(re, batch);
+        if !im.is_empty() {
+            fwht_batch_col(im, batch);
+        }
+    }
+}
+
+/// The normalized Walsh–Hadamard transform (matches
+/// [`matrices::hadamard_matrix`]).
+pub fn fwht_op(n: usize) -> Arc<dyn LinearOp> {
+    assert!(n.is_power_of_two());
+    Arc::new(FwhtOp { n })
+}
+
+// ---------------------------------------------------------------------------
+// Dense reference (and the transforms with no fast form)
+// ---------------------------------------------------------------------------
+
+/// An arbitrary dense matrix behind the unified API: the O(N²) reference
+/// the conformance tests compare every fast op against, and the only
+/// exact form for Legendre/Randn.
+struct DenseOp {
+    m: CMat,
+    name: String,
+    complex: bool,
+}
+
+impl LinearOp for DenseOp {
+    fn n(&self) -> usize {
+        self.m.rows
+    }
+
+    fn is_complex(&self) -> bool {
+        self.complex
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn flops_per_apply(&self) -> usize {
+        let n2 = self.m.rows * self.m.cols;
+        if self.complex {
+            8 * n2
+        } else {
+            2 * n2
+        }
+    }
+
+    fn apply_batch(&self, re: &mut [f32], im: &mut [f32], batch: usize, ws: &mut OpWorkspace) {
+        let n = self.m.rows;
+        check_planes(n, self.complex, re, im, batch);
+        if batch == 0 {
+            return;
+        }
+        let len = n * batch;
+        let (yre, yim) = ws.planes();
+        if yre.len() < len {
+            yre.resize(len, 0.0);
+        }
+        if self.complex {
+            if yim.len() < len {
+                yim.resize(len, 0.0);
+            }
+            complex_matvec_col(&self.m, re, im, &mut yre[..len], &mut yim[..len], batch);
+            re.copy_from_slice(&yre[..len]);
+            im.copy_from_slice(&yim[..len]);
+        } else {
+            real_matvec_col(&self.m.re, n, re, &mut yre[..len], batch);
+            re.copy_from_slice(&yre[..len]);
+            if !im.is_empty() {
+                real_matvec_col(&self.m.re, n, im, &mut yre[..len], batch);
+                im.copy_from_slice(&yre[..len]);
+            }
+        }
+    }
+}
+
+/// `y[i,b] = Σ_j a[i,j] · x[j,b]` on column-major lanes, batch innermost.
+fn real_matvec_col(a: &[f32], n: usize, x: &[f32], y: &mut [f32], batch: usize) {
+    for i in 0..n {
+        let yrow = &mut y[i * batch..(i + 1) * batch];
+        yrow.fill(0.0);
+        for (j, &aij) in a[i * n..(i + 1) * n].iter().enumerate() {
+            if aij == 0.0 {
+                continue;
+            }
+            let xrow = &x[j * batch..(j + 1) * batch];
+            for b in 0..batch {
+                yrow[b] += aij * xrow[b];
+            }
+        }
+    }
+}
+
+/// Complex counterpart of [`real_matvec_col`] over planar planes.
+fn complex_matvec_col(
+    m: &CMat,
+    xre: &[f32],
+    xim: &[f32],
+    yre: &mut [f32],
+    yim: &mut [f32],
+    batch: usize,
+) {
+    let n = m.rows;
+    for i in 0..n {
+        let yr = &mut yre[i * batch..(i + 1) * batch];
+        let yi = &mut yim[i * batch..(i + 1) * batch];
+        yr.fill(0.0);
+        yi.fill(0.0);
+        for j in 0..n {
+            let ar = m.re[i * n + j];
+            let ai = m.im[i * n + j];
+            if ar == 0.0 && ai == 0.0 {
+                continue;
+            }
+            let xr = &xre[j * batch..(j + 1) * batch];
+            let xi = &xim[j * batch..(j + 1) * batch];
+            for b in 0..batch {
+                yr[b] += ar * xr[b] - ai * xi[b];
+                yi[b] += ar * xi[b] + ai * xr[b];
+            }
+        }
+    }
+}
+
+/// Wrap a dense matrix (the `complex` flag is detected from its
+/// imaginary plane).
+pub fn dense_op(name: impl Into<String>, m: CMat) -> Arc<dyn LinearOp> {
+    assert_eq!(m.rows, m.cols, "LinearOp is square");
+    let complex = m.im.iter().any(|&v| v != 0.0);
+    Arc::new(DenseOp { m, name: name.into(), complex })
+}
+
+// ---------------------------------------------------------------------------
+// Factory
+// ---------------------------------------------------------------------------
+
+/// Seed used by [`plan`] for the stochastic targets (the convolution
+/// filter and the randn entries) — the same default the CLI uses for
+/// recovery jobs.
+pub const DEFAULT_PLAN_SEED: u64 = 42;
+
+/// Closed-form fast op for a transform kind, drawing any stochastic
+/// target from `rng` with exactly the same calls as
+/// [`matrices::target_matrix`] — so `plan_with_rng(kind, n, Rng::new(s))`
+/// is the fast algorithm for the matrix
+/// `target_matrix(kind, n, Rng::new(s))`.
+pub fn plan_with_rng(kind: TransformKind, n: usize, rng: &mut Rng) -> Arc<dyn LinearOp> {
+    match kind {
+        TransformKind::Dft => fft_op(n),
+        TransformKind::Dct => dct_op(n),
+        TransformKind::Dst => dst_op(n),
+        TransformKind::Hartley => hartley_op(n),
+        TransformKind::Hadamard => fwht_op(n),
+        TransformKind::Convolution => {
+            // reproduce matrices::convolution_matrix's filter draw exactly
+            let mut h = vec![0.0f32; n];
+            rng.fill_normal(&mut h, 0.0, (1.0 / n as f64).sqrt() as f32);
+            circulant_op(&h)
+        }
+        TransformKind::Legendre => dense_op("legendre", matrices::legendre_matrix(n).to_cmat()),
+        TransformKind::Randn => dense_op("randn", matrices::randn_matrix(n, rng).to_cmat()),
+    }
+}
+
+/// The factory: one call from a [`TransformKind`] to a serveable
+/// `Arc<dyn LinearOp>` — `O(N log N)` closed forms where the paper gives
+/// one, the dense reference otherwise. Stochastic targets use
+/// [`DEFAULT_PLAN_SEED`]; use [`plan_with_rng`] to control the draw.
+pub fn plan(kind: TransformKind, n: usize) -> Arc<dyn LinearOp> {
+    plan_with_rng(kind, n, &mut Rng::new(DEFAULT_PLAN_SEED))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transforms::spec::ALL_TRANSFORMS;
+
+    #[test]
+    fn factory_metadata_is_consistent() {
+        for kind in ALL_TRANSFORMS {
+            let n = 16;
+            let op = plan(kind, n);
+            assert_eq!(op.n(), n, "{kind}");
+            assert_eq!(op.is_complex(), kind.is_complex(), "{kind}");
+            assert!(op.flops_per_apply() > 0, "{kind}");
+            assert!(!op.name().is_empty(), "{kind}");
+        }
+        assert_eq!(plan(TransformKind::Dft, 8).name(), "dft");
+        assert_eq!(ifft_op(8).name(), "idft");
+    }
+
+    #[test]
+    fn real_op_planes_transform_independently() {
+        // A real op on (x, y) must equal (A x, A y) computed one plane at
+        // a time — the property that lets real routes carry one plane.
+        let mut rng = Rng::new(5);
+        let n = 32;
+        let batch = 3;
+        for op in [dct_op(n), dst_op(n), hartley_op(n), fwht_op(n), plan(TransformKind::Convolution, n)] {
+            let mut re = vec![0.0f32; batch * n];
+            let mut im = vec![0.0f32; batch * n];
+            rng.fill_normal(&mut re, 0.0, 1.0);
+            rng.fill_normal(&mut im, 0.0, 1.0);
+            let mut ws = OpWorkspace::new();
+            let (mut sre, mut sim) = (re.clone(), im.clone());
+            op.apply_batch(&mut sre, &mut sim, batch, &mut ws);
+            // plane-at-a-time via the empty-im path
+            op.apply_batch(&mut re, &mut [], batch, &mut ws);
+            op.apply_batch(&mut im, &mut [], batch, &mut ws);
+            // The FFT-based circulant computes the single-plane and
+            // two-plane paths through different cancellation patterns,
+            // so this is a tolerance (not bitwise) comparison.
+            for k in 0..batch * n {
+                assert!((re[k] - sre[k]).abs() < 1e-4, "{} re[{k}]", op.name());
+                assert!((im[k] - sim[k]).abs() < 1e-4, "{} im[{k}]", op.name());
+            }
+        }
+    }
+
+    #[test]
+    fn one_workspace_serves_every_op_and_any_batch() {
+        let mut rng = Rng::new(6);
+        let n = 16;
+        let mut ws = OpWorkspace::new();
+        for batch in [4usize, 64, 1] {
+            for kind in ALL_TRANSFORMS {
+                let op = plan(kind, n);
+                let mut re = vec![0.0f32; batch * n];
+                let mut im = vec![0.0f32; batch * n];
+                rng.fill_normal(&mut re, 0.0, 1.0);
+                rng.fill_normal(&mut im, 0.0, 1.0);
+                op.apply_batch(&mut re, &mut im, batch, &mut ws);
+                assert!(re.iter().chain(im.iter()).all(|v| v.is_finite()), "{kind} B={batch}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "imaginary plane")]
+    fn complex_op_rejects_single_plane() {
+        let op = fft_op(8);
+        let mut re = vec![0.0f32; 8];
+        op.apply_batch(&mut re, &mut [], 1, &mut OpWorkspace::new());
+    }
+}

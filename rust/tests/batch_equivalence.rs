@@ -8,6 +8,7 @@ use butterfly::butterfly::closed_form::{dft_stack, hadamard_stack};
 use butterfly::butterfly::fast::{BatchWorkspace, FastBp, Workspace};
 use butterfly::serving::{BatcherConfig, Router};
 use butterfly::transforms::fast::FftPlan;
+use butterfly::transforms::op::stack_op;
 use butterfly::util::rng::Rng;
 use std::time::Duration;
 
@@ -90,7 +91,7 @@ fn serving_stack_batches_and_answers_correctly() {
     let n = 16;
     let svc_cfg = BatcherConfig { max_batch: 6, max_wait: Duration::from_millis(20), queue_cap: 256 };
     let mut router = Router::new();
-    router.install("dft", &dft_stack(n), 1, svc_cfg);
+    router.install("dft", stack_op("dft", &dft_stack(n)), 1, svc_cfg);
     let f = butterfly::transforms::matrices::dft_matrix(n);
     let handles: Vec<_> = (0..16)
         .map(|k| {

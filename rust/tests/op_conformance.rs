@@ -1,0 +1,243 @@
+//! Conformance suite for the unified `LinearOp` API: every
+//! implementation — the eight factory kinds, the forward/inverse FFT
+//! pair, the BP-stack adapter, and the dense reference — is checked
+//! against its dense matrix from `transforms::matrices` at batch
+//! ∈ {1, 3, 64}, plus the concurrency property the workspace
+//! externalization must guarantee: one `Arc<dyn LinearOp>` shared by 8
+//! threads with private `OpWorkspace`s matches serial results
+//! **bit-for-bit**.
+
+use butterfly::butterfly::closed_form::{dft_stack, hadamard_stack};
+use butterfly::linalg::{CMat, Cpx};
+use butterfly::transforms::matrices::{dft_matrix, idft_matrix, target_matrix};
+use butterfly::transforms::op::{ifft_op, plan_with_rng, stack_op, LinearOp, OpWorkspace};
+use butterfly::transforms::spec::ALL_TRANSFORMS;
+use butterfly::util::rng::Rng;
+use std::sync::Arc;
+
+/// Batch sizes: degenerate, odd remainder, full serving batch.
+const BATCHES: [usize; 3] = [1, 3, 64];
+
+/// Transpose a row-major `[batch, n]` block to column-major `[n, batch]`.
+fn to_col(x: &[f32], batch: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; x.len()];
+    for b in 0..batch {
+        for i in 0..n {
+            c[i * batch + b] = x[b * n + i];
+        }
+    }
+    c
+}
+
+/// Apply `op` to a row-major batch (via the column-major contract) and
+/// compare against the dense reference, both with full complex planes
+/// and — for real ops — through the single-plane path.
+fn check_against_dense(op: &dyn LinearOp, dense: &CMat, tol: f32, seed: u64) {
+    let n = op.n();
+    assert_eq!(dense.rows, n, "{}", op.name());
+    assert_eq!(op.is_complex(), dense.im.iter().any(|&v| v != 0.0), "{}", op.name());
+    let mut ws = OpWorkspace::new();
+    let mut rng = Rng::new(seed);
+    for batch in BATCHES {
+        let mut re = vec![0.0f32; batch * n];
+        let mut im = vec![0.0f32; batch * n];
+        rng.fill_normal(&mut re, 0.0, 1.0);
+        rng.fill_normal(&mut im, 0.0, 1.0);
+        let (want_re, want_im) = dense.matvec_batch_planar(&re, &im, batch);
+        let mut cre = to_col(&re, batch, n);
+        let mut cim = to_col(&im, batch, n);
+        op.apply_batch(&mut cre, &mut cim, batch, &mut ws);
+        for b in 0..batch {
+            for i in 0..n {
+                let (gr, gi) = (cre[i * batch + b], cim[i * batch + b]);
+                assert!(
+                    (gr - want_re[b * n + i]).abs() < tol,
+                    "{} B={batch} re ({b},{i}): {gr} vs {}",
+                    op.name(),
+                    want_re[b * n + i]
+                );
+                assert!(
+                    (gi - want_im[b * n + i]).abs() < tol,
+                    "{} B={batch} im ({b},{i}): {gi} vs {}",
+                    op.name(),
+                    want_im[b * n + i]
+                );
+            }
+        }
+        if !op.is_complex() {
+            // single-plane path: same real result, no imaginary plane at all
+            let mut sre = to_col(&re, batch, n);
+            op.apply_batch(&mut sre, &mut [], batch, &mut ws);
+            for b in 0..batch {
+                for i in 0..n {
+                    assert!(
+                        (sre[i * batch + b] - want_re[b * n + i]).abs() < tol,
+                        "{} B={batch} single-plane ({b},{i})",
+                        op.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn factory_ops_match_their_dense_targets() {
+    let n = 16;
+    for kind in ALL_TRANSFORMS {
+        // plan_with_rng and target_matrix draw stochastic targets (the
+        // convolution filter, the randn entries) with identical rng calls
+        let op = plan_with_rng(kind, n, &mut Rng::new(7));
+        let dense = target_matrix(kind, n, &mut Rng::new(7));
+        check_against_dense(op.as_ref(), &dense, 1e-3, 100 + kind as u64);
+    }
+}
+
+#[test]
+fn fft_inverse_op_matches_idft_matrix() {
+    let n = 32;
+    check_against_dense(ifft_op(n).as_ref(), &idft_matrix(n), 1e-3, 11);
+}
+
+#[test]
+fn stack_adapter_matches_closed_form_targets() {
+    let n = 32;
+    let op = stack_op("bp-dft", &dft_stack(n));
+    assert!(op.is_complex());
+    assert_eq!(op.name(), "bp-dft");
+    check_against_dense(op.as_ref(), &dft_matrix(n), 1e-3, 12);
+    // a real stack hardens to a real (single-plane capable) op
+    let had = stack_op("bp-hadamard", &hadamard_stack(n));
+    assert!(!had.is_complex());
+    let dense = target_matrix(butterfly::transforms::spec::TransformKind::Hadamard, n, &mut Rng::new(1));
+    check_against_dense(had.as_ref(), &dense, 1e-3, 13);
+}
+
+#[test]
+fn ifft_op_inverts_fft_op() {
+    let n = 64;
+    let (f, fi) = (plan_with_rng(butterfly::transforms::spec::TransformKind::Dft, n, &mut Rng::new(1)), ifft_op(n));
+    let mut ws = OpWorkspace::new();
+    let mut rng = Rng::new(2);
+    let batch = 3;
+    let mut re = vec![0.0f32; batch * n];
+    let mut im = vec![0.0f32; batch * n];
+    rng.fill_normal(&mut re, 0.0, 1.0);
+    rng.fill_normal(&mut im, 0.0, 1.0);
+    let (re0, im0) = (re.clone(), im.clone());
+    f.apply_batch(&mut re, &mut im, batch, &mut ws);
+    fi.apply_batch(&mut re, &mut im, batch, &mut ws);
+    for k in 0..batch * n {
+        assert!((re[k] - re0[k]).abs() < 1e-4, "re[{k}]");
+        assert!((im[k] - im0[k]).abs() < 1e-4, "im[{k}]");
+    }
+}
+
+#[test]
+fn dense_reference_op_round_trips_dft() {
+    // dense_op wraps an arbitrary CMat: the unitary DFT as a dense op
+    // must agree with the fast FFT op exactly up to fp32 accumulation
+    let n = 16;
+    let fast = plan_with_rng(butterfly::transforms::spec::TransformKind::Dft, n, &mut Rng::new(1));
+    let dense = butterfly::transforms::op::dense_op("dense-dft", dft_matrix(n));
+    assert!(dense.is_complex());
+    let mut ws = OpWorkspace::new();
+    let batch = 3;
+    let mut rng = Rng::new(3);
+    let mut re = vec![0.0f32; batch * n];
+    let mut im = vec![0.0f32; batch * n];
+    rng.fill_normal(&mut re, 0.0, 1.0);
+    rng.fill_normal(&mut im, 0.0, 1.0);
+    let (mut fre, mut fim) = (re.clone(), im.clone());
+    fast.apply_batch(&mut fre, &mut fim, batch, &mut ws);
+    dense.apply_batch(&mut re, &mut im, batch, &mut ws);
+    for k in 0..batch * n {
+        assert!((re[k] - fre[k]).abs() < 1e-4, "re[{k}]");
+        assert!((im[k] - fim[k]).abs() < 1e-4, "im[{k}]");
+    }
+}
+
+#[test]
+fn one_arc_op_shared_by_8_threads_is_bitwise_serial() {
+    // The property the &mut-self/internal-scratch redesign must
+    // guarantee: ops hold only immutable tables, all mutation lives in
+    // the per-thread OpWorkspace, so 8 threads hammering one
+    // Arc<dyn LinearOp> each produce exactly the serial answer.
+    let n = 64;
+    let batch = 5;
+    let ops: Vec<Arc<dyn LinearOp>> = vec![
+        plan_with_rng(butterfly::transforms::spec::TransformKind::Dft, n, &mut Rng::new(5)),
+        plan_with_rng(butterfly::transforms::spec::TransformKind::Dct, n, &mut Rng::new(5)),
+        plan_with_rng(butterfly::transforms::spec::TransformKind::Convolution, n, &mut Rng::new(5)),
+        plan_with_rng(butterfly::transforms::spec::TransformKind::Legendre, n, &mut Rng::new(5)),
+        stack_op("bp-dft", &dft_stack(n)),
+    ];
+    for op in ops {
+        let mut rng = Rng::new(6);
+        let mut re = vec![0.0f32; batch * n];
+        let mut im = vec![0.0f32; batch * n];
+        rng.fill_normal(&mut re, 0.0, 1.0);
+        rng.fill_normal(&mut im, 0.0, 1.0);
+        if !op.is_complex() {
+            im.clear(); // exercise the single-plane path concurrently too
+        }
+        // serial reference
+        let (mut want_re, mut want_im) = (re.clone(), im.clone());
+        op.apply_batch(&mut want_re, &mut want_im, batch, &mut OpWorkspace::new());
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let op = Arc::clone(&op);
+                let (re, im) = (re.clone(), im.clone());
+                let (want_re, want_im) = (want_re.clone(), want_im.clone());
+                std::thread::spawn(move || {
+                    let mut ws = OpWorkspace::new();
+                    for _ in 0..25 {
+                        let (mut r, mut i) = (re.clone(), im.clone());
+                        op.apply_batch(&mut r, &mut i, batch, &mut ws);
+                        assert_eq!(r, want_re, "{} re plane diverged across threads", op.name());
+                        assert_eq!(i, want_im, "{} im plane diverged across threads", op.name());
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+    }
+}
+
+#[test]
+fn ops_are_linear() {
+    // L(ax + by) = a L(x) + b L(y): a quick structural check across the
+    // whole factory surface, single vectors.
+    let n = 16;
+    for kind in ALL_TRANSFORMS {
+        let op = plan_with_rng(kind, n, &mut Rng::new(9));
+        let mut ws = OpWorkspace::new();
+        let mut rng = Rng::new(10);
+        let mut x = vec![Cpx::ZERO; n];
+        let mut y = vec![Cpx::ZERO; n];
+        for v in x.iter_mut().chain(y.iter_mut()) {
+            *v = Cpx::new(rng.normal_f32(0.0, 1.0), rng.normal_f32(0.0, 1.0));
+        }
+        let (a, b) = (0.75f32, -1.25f32);
+        let apply = |v: &[Cpx], ws: &mut OpWorkspace| -> Vec<Cpx> {
+            let mut re: Vec<f32> = v.iter().map(|z| z.re).collect();
+            let mut im: Vec<f32> = v.iter().map(|z| z.im).collect();
+            op.apply_batch(&mut re, &mut im, 1, ws);
+            re.iter().zip(im.iter()).map(|(&r, &i)| Cpx::new(r, i)).collect()
+        };
+        let lx = apply(&x, &mut ws);
+        let ly = apply(&y, &mut ws);
+        let mixed: Vec<Cpx> = x
+            .iter()
+            .zip(y.iter())
+            .map(|(&xv, &yv)| xv.scale(a) + yv.scale(b))
+            .collect();
+        let lmixed = apply(&mixed, &mut ws);
+        for i in 0..n {
+            let want = lx[i].scale(a) + ly[i].scale(b);
+            assert!((lmixed[i] - want).abs() < 1e-3, "{kind} [{i}]");
+        }
+    }
+}

@@ -12,6 +12,7 @@
 use butterfly::butterfly::closed_form::dft_stack;
 use butterfly::linalg::complex::Cpx;
 use butterfly::serving::{BatcherConfig, ServicePool};
+use butterfly::transforms::op::stack_op;
 use butterfly::transforms::matrices::dft_matrix;
 use butterfly::util::rng::Rng;
 use std::time::Duration;
@@ -33,7 +34,7 @@ fn soak_every_reply_matches_dense_reference() {
     let n = 64;
     let pool = ServicePool::spawn(
         "dft",
-        &dft_stack(n),
+        stack_op("dft", &dft_stack(n)),
         4,
         BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(300), queue_cap: 8192 },
     );
@@ -99,7 +100,7 @@ fn slow_lane_backlog_is_drained_by_idle_siblings() {
     let n = 1024;
     let pool = ServicePool::spawn(
         "dft",
-        &dft_stack(n),
+        stack_op("dft", &dft_stack(n)),
         4,
         BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(0), queue_cap: 4096 },
     );
@@ -170,7 +171,7 @@ fn backpressure_full_is_counted_and_never_deadlocks() {
     let n = 256;
     let pool = ServicePool::spawn(
         "dft",
-        &dft_stack(n),
+        stack_op("dft", &dft_stack(n)),
         2,
         BatcherConfig { max_batch: 2, max_wait: Duration::from_micros(50), queue_cap: 4 },
     );
@@ -215,7 +216,7 @@ fn shutdown_while_pending_drains_every_accepted_request_exactly_once() {
     let n = 256;
     let pool = ServicePool::spawn(
         "dft",
-        &dft_stack(n),
+        stack_op("dft", &dft_stack(n)),
         4,
         // a huge window: without shutdown cutting it short, the backlog
         // would sit in the queue for seconds

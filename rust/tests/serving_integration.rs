@@ -7,6 +7,7 @@ use butterfly::coordinator::trial::Trial;
 use butterfly::coordinator::{FactorizeJob, TrialConfig};
 use butterfly::runtime::engine::unpack_stack;
 use butterfly::serving::{BatcherConfig, Router};
+use butterfly::transforms::op::stack_op;
 use butterfly::transforms::spec::TransformKind;
 use butterfly::util::rng::Rng;
 use std::time::Duration;
@@ -33,7 +34,7 @@ fn learned_transform_served_end_to_end() {
     let stack = unpack_stack(n, 1, &theta);
     // 3. install + serve
     let mut router = Router::new();
-    router.install("learned-dft", &stack, 1, BatcherConfig::default());
+    router.install("learned-dft", stack_op("learned-dft", &stack), 1, BatcherConfig::default());
     let target = &job.target;
     let mut worst = 0.0f32;
     for j in 0..n {
@@ -62,9 +63,9 @@ fn multi_transform_router_under_load() {
     rng.fill_normal(&mut h, 0.0, (1.0 / n as f64).sqrt() as f32);
     let mut router = Router::new();
     let cfg = BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(1), queue_cap: 4096 };
-    router.install("dft", &dft_stack(n), 2, cfg.clone());
-    router.install("hadamard", &hadamard_stack(n), 1, cfg.clone());
-    router.install("conv", &convolution_stack(&h), 1, cfg);
+    router.install("dft", stack_op("dft", &dft_stack(n)), 2, cfg.clone());
+    router.install("hadamard", stack_op("hadamard", &hadamard_stack(n)), 1, cfg.clone());
+    router.install("conv", stack_op("conv", &convolution_stack(&h)), 1, cfg);
     let names = ["dft", "hadamard", "conv"];
     let threads: Vec<_> = (0..6)
         .map(|t| {
@@ -95,7 +96,7 @@ fn backpressure_rejects_rather_than_grows() {
     // a deliberately tiny queue + slow-ish service (large n)
     let svc = butterfly::serving::ServicePool::spawn(
         "dft",
-        &dft_stack(n),
+        stack_op("dft", &dft_stack(n)),
         2,
         BatcherConfig { max_batch: 2, max_wait: Duration::from_micros(50), queue_cap: 4 },
     );

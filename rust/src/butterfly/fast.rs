@@ -52,7 +52,6 @@
 //! [`ServicePool`]: crate::serving::service::ServicePool
 
 use crate::butterfly::module::BpStack;
-use crate::butterfly::params::Field;
 use crate::butterfly::permutation::{hard_perm_table, RelaxedPerm};
 
 /// One hardened BP module: a gather table + expanded twiddles.
@@ -173,7 +172,12 @@ impl FastBp {
             let perm = if is_identity { None } else { Some(hard_perm_table(n, &choices)) };
             let mut tw_re = Vec::with_capacity(levels);
             let mut tw_im = Vec::with_capacity(levels);
-            let mut mod_complex = p.field == Field::Complex;
+            // Complexity is decided by the *data*, not the declared
+            // field: a complex-field module whose imaginary plane never
+            // moved (e.g. a real-trained layer round-tripped through the
+            // field-agnostic θ interchange) hardens to the real path, so
+            // it serves single-plane real routes like any real op.
+            let mut mod_complex = false;
             for l in 0..levels {
                 let half = 1usize << l;
                 let blocks = n >> (l + 1);

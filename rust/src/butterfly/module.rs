@@ -46,6 +46,7 @@ pub struct BpModule {
 
 /// Saved activations for one module's backward pass. Slot buffers are
 /// reused across calls when driven through the workspace path.
+#[derive(Clone)]
 pub struct ModuleSaves {
     perm: PermSaves,
     /// Input to butterfly level ℓ (level 0's input = permutation output).

@@ -153,6 +153,7 @@ pub(crate) fn record_slot(slots: &mut Vec<(Vec<f32>, Vec<f32>)>, idx: usize, re:
 
 /// Saved activations for backward: the input to each of the `3L` gate
 /// stages, in application order.
+#[derive(Clone)]
 pub struct PermSaves {
     pub stages: Vec<(Vec<f32>, Vec<f32>)>,
 }

@@ -80,6 +80,17 @@ impl Args {
             Some(v) => v.parse().map_err(|_| format!("--{name} wants an integer, got '{v}'")),
         }
     }
+
+    /// Comma-separated list option (`--methods a,b,c`), trimmed, empty
+    /// items dropped; `default` is parsed the same way when the option
+    /// is absent.
+    pub fn list_or(&self, name: &str, default: &str) -> Vec<String> {
+        self.get_or(name, default)
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -122,6 +133,22 @@ mod tests {
         let b = parse("serve --exact --transform dct");
         assert!(b.flag("exact"));
         assert_eq!(b.get("transform"), Some("dct"));
+    }
+
+    #[test]
+    fn compress_invocation() {
+        let a = parse("compress --dataset multiband --dim 256 --methods bpbp-real,low-rank-matched --threads 4 --serve --save /tmp/layer.json");
+        assert_eq!(a.command, "compress");
+        assert_eq!(a.get("dataset"), Some("multiband"));
+        assert_eq!(a.usize_or("dim", 64).unwrap(), 256);
+        assert_eq!(a.list_or("methods", ""), vec!["bpbp-real", "low-rank-matched"]);
+        assert_eq!(a.usize_or("threads", 0).unwrap(), 4);
+        assert!(a.flag("serve"));
+        assert_eq!(a.get("save"), Some("/tmp/layer.json"));
+        // smoke form
+        let b = parse("compress --smoke");
+        assert!(b.flag("smoke"));
+        assert_eq!(b.list_or("methods", "bpbp-real, low-rank-matched ,"), vec!["bpbp-real", "low-rank-matched"]);
     }
 
     #[test]

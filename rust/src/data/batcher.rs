@@ -69,20 +69,34 @@ impl<'a> BatchIter<'a> {
     /// `(x: [b·dim], y: [b])`.
     #[allow(clippy::type_complexity)]
     pub fn next_batch(&mut self) -> Option<(Vec<f32>, Vec<u8>)> {
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        if self.next_batch_into(&mut x, &mut y) {
+            Some((x, y))
+        } else {
+            None
+        }
+    }
+
+    /// Allocation-free variant: gathers the next mini-batch into the
+    /// caller's buffers (resized in place, reused across batches and
+    /// epochs by the training engine). Returns `false` when the epoch is
+    /// exhausted.
+    pub fn next_batch_into(&mut self, x: &mut Vec<f32>, y: &mut Vec<u8>) -> bool {
         if self.pos >= self.order.len() {
-            return None;
+            return false;
         }
         let b = self.batch.min(self.order.len() - self.pos);
         let dim = self.data.dim;
-        let mut x = vec![0.0f32; b * dim];
-        let mut y = vec![0u8; b];
+        x.resize(b * dim, 0.0);
+        y.resize(b, 0);
         for i in 0..b {
             let src = self.order[self.pos + i];
             x[i * dim..(i + 1) * dim].copy_from_slice(self.data.row(src));
             y[i] = self.data.y[src];
         }
         self.pos += b;
-        Some((x, y))
+        true
     }
 }
 

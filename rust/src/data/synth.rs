@@ -13,6 +13,15 @@
 //!   is added at substantial amplitude.
 //! - [`DatasetKind::CifarGray`] (≈ grayscale CIFAR-10): the grating is
 //!   mixed with class-correlated multi-scale textures and mild noise.
+//! - [`DatasetKind::Multiband`]: the compression benchmark task (the
+//!   `compress` workload / Table-1 analogue). Class signal is spread
+//!   over **five** gratings with class-keyed orientations and
+//!   frequencies plus per-sample random phases, under a dominant
+//!   class-independent low-frequency background. The background owns
+//!   the top principal components and the discriminative signal spans
+//!   many frequency channels, so a rank-r bottleneck (the low-rank
+//!   baseline) loses it while full-spectrum structured layers
+//!   (butterfly, circulant) keep it — the regime Table 1 probes.
 
 use crate::data::batcher::Dataset;
 use crate::util::rng::Rng;
@@ -26,16 +35,19 @@ pub enum DatasetKind {
     BgRot,
     Noise,
     CifarGray,
+    Multiband,
 }
 
 impl DatasetKind {
-    pub const ALL: [DatasetKind; 3] = [DatasetKind::BgRot, DatasetKind::Noise, DatasetKind::CifarGray];
+    pub const ALL: [DatasetKind; 4] =
+        [DatasetKind::BgRot, DatasetKind::Noise, DatasetKind::CifarGray, DatasetKind::Multiband];
 
     pub fn name(self) -> &'static str {
         match self {
             DatasetKind::BgRot => "mnist-bg-rot-like",
             DatasetKind::Noise => "mnist-noise-like",
             DatasetKind::CifarGray => "cifar10-gray-like",
+            DatasetKind::Multiband => "multiband-like",
         }
     }
 
@@ -102,6 +114,26 @@ fn render_sample(kind: DatasetKind, class: usize, rng: &mut Rng, img: &mut [f32]
                 *v += rng.normal_f32(0.0, 0.15);
             }
         }
+        DatasetKind::Multiband => {
+            // class signal spread over 5 frequency components with
+            // per-sample random phase (each component's within-class
+            // variance spans its 2-dim sin/cos plane)
+            for k in 0..5usize {
+                let th = std::f64::consts::PI * (((class * 7 + k * 3) % 20) as f64) / 20.0;
+                let fr = 2.0 + ((class * 5 + k * 9) % 6) as f64;
+                render_grating(img, th, fr, rng.range(0.0, std::f64::consts::TAU), 0.55);
+            }
+            // dominant shared low-frequency background: class-independent
+            // but high-variance, so it owns the top principal components
+            for _ in 0..3 {
+                let th = rng.range(0.0, std::f64::consts::PI);
+                let fr = rng.range(0.4, 1.6);
+                render_grating(img, th, fr, rng.range(0.0, std::f64::consts::TAU), 1.2 / 3.0);
+            }
+            for v in img.iter_mut() {
+                *v += rng.normal_f32(0.0, 0.2);
+            }
+        }
     }
     // per-sample standardization (zero mean, unit variance), matching the
     // usual benchmark preprocessing
@@ -132,6 +164,50 @@ pub fn generate(kind: DatasetKind, n: usize, seed: u64) -> Dataset {
         ys[dst] = y[src];
     }
     Dataset { dim: DIM, classes: CLASSES, x: xs, y: ys }
+}
+
+/// Whether `dim` is a legal [`downsample`] target: `DIM` itself (a
+/// no-op for callers that branch on it) or `s²` for a side `s` dividing
+/// [`IMG`]. The single source of truth for the `compress --dim`
+/// validation, so the CLI check can never drift from the assert below.
+pub fn valid_downsample_dim(dim: usize) -> bool {
+    if dim == DIM {
+        return true;
+    }
+    let side = (dim as f64).sqrt().round() as usize;
+    // side ≥ 2: a 1-pixel "image" would train degenerate 1-dim layers
+    // (and the butterfly substrate needs n ≥ 2)
+    side >= 2 && side * side == dim && IMG % side == 0
+}
+
+/// 2-D average-pool a 32×32 dataset down to `dim = s²` features
+/// (`s` must divide [`IMG`]). This is how the compression workload and
+/// its tests scale the Table-1 task to CPU budgets while preserving the
+/// orientation/frequency structure the class signal lives in (the naive
+/// 1-D flat-vector pooling destroys horizontal frequencies first).
+pub fn downsample(d: &Dataset, dim: usize) -> Dataset {
+    assert_eq!(d.dim, DIM, "downsample expects the 32×32 synthetic layout");
+    assert!(valid_downsample_dim(dim), "target dim must be a square whose side divides {IMG}, got {dim}");
+    let side = (dim as f64).sqrt().round() as usize;
+    let f = IMG / side;
+    let inv = 1.0 / (f * f) as f32;
+    let mut x = vec![0.0f32; d.len() * dim];
+    for s in 0..d.len() {
+        let src = d.row(s);
+        let dst = &mut x[s * dim..(s + 1) * dim];
+        for oy in 0..side {
+            for ox in 0..side {
+                let mut acc = 0.0f32;
+                for ky in 0..f {
+                    for kx in 0..f {
+                        acc += src[(oy * f + ky) * IMG + ox * f + kx];
+                    }
+                }
+                dst[oy * side + ox] = acc * inv;
+            }
+        }
+    }
+    Dataset { dim, classes: d.classes, x, y: d.y.clone() }
 }
 
 #[cfg(test)]
@@ -168,6 +244,42 @@ mod tests {
             assert!(mean.abs() < 1e-3, "mean {mean}");
             assert!((var - 1.0).abs() < 1e-2, "var {var}");
         }
+    }
+
+    #[test]
+    fn downsample_dim_validity() {
+        for ok in [DIM, 64, 256, 16, 1024] {
+            assert!(valid_downsample_dim(ok), "{ok}");
+        }
+        for bad in [0usize, 1, 50, 100, 512, 65] {
+            assert!(!valid_downsample_dim(bad), "{bad}");
+        }
+    }
+
+    #[test]
+    fn downsample_preserves_labels_and_means() {
+        let d = generate(DatasetKind::Multiband, 20, 9);
+        let s = downsample(&d, 256);
+        assert_eq!(s.dim, 256);
+        assert_eq!(s.y, d.y);
+        for i in 0..20 {
+            let full: f32 = d.row(i).iter().sum::<f32>() / DIM as f32;
+            let pooled: f32 = s.row(i).iter().sum::<f32>() / 256.0;
+            assert!((full - pooled).abs() < 1e-4, "sample {i}: {full} vs {pooled}");
+        }
+    }
+
+    #[test]
+    fn multiband_is_deterministic_and_balanced() {
+        let a = generate(DatasetKind::Multiband, 40, 3);
+        let b = generate(DatasetKind::Multiband, 40, 3);
+        assert_eq!(a.x, b.x);
+        let mut counts = [0usize; CLASSES];
+        for &y in &a.y {
+            counts[y as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 4), "{counts:?}");
+        assert_eq!(DatasetKind::parse("multiband"), Some(DatasetKind::Multiband));
     }
 
     #[test]

@@ -36,6 +36,7 @@ fn main() {
         "factorize" => cmd_factorize(&args),
         "zoo" => cmd_zoo(&args),
         "serve" => cmd_serve(&args),
+        "compress" => cmd_compress(&args),
         "engines" => cmd_engines(&args),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
@@ -70,6 +71,21 @@ COMMANDS:
                           FWHT / ...) through the same pool — no training
               (pool workers drain ONE shared queue; --replicas is an
               accepted alias from the old per-replica-queue design)
+  compress    the §4.2 / Table 1 workload: train compressed hidden layers
+              on a synthetic image task, compare accuracy / parameters /
+              inference speed, export the trained butterfly layer as a
+              serveable op
+              --dataset multiband|cifar10-gray|mnist-bg-rot|mnist-noise
+              --dim 256 --train-samples 2000 --test-samples 500
+              --epochs 12 --batch 50 --lr 0.03 --seed 42
+              --threads 0     minibatch worker threads (0 = all cores;
+                              results are bit-identical for any value)
+              --chunk 8       samples per parallel chunk
+              --methods bpbp-real,bpbp-complex,low-rank-matched,circulant,dense
+              --save PATH     write the trained layer artifact (θ + bias)
+              --serve         serve the exported op through a worker pool
+                              (--requests 2000 --pool-workers 2)
+              --smoke         tiny end-to-end run (CI)
   engines     report available execution engines / artifacts
   help        this text
 
@@ -239,6 +255,221 @@ fn cmd_serve(args: &Args) -> i32 {
         println!("served {} requests via a {workers}-worker shared-queue pool in {wall:.2}s", s.served);
         println!("throughput : {:.0} req/s", s.served as f64 / wall);
         println!("mean batch : {:.2}", s.served as f64 / s.batches.max(1) as f64);
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+fn cmd_compress(args: &Args) -> i32 {
+    use butterfly::data::synth::{downsample, generate, valid_downsample_dim, DatasetKind, DIM};
+    use butterfly::nn::mlp::{train_mlp_model, TrainConfig};
+    use butterfly::nn::HiddenKind;
+    use butterfly::transforms::op::bench_nanos_per_vec;
+
+    let run = || -> Result<(), String> {
+        let smoke = args.flag("smoke");
+        let dataset = {
+            let name = args.get_or("dataset", "multiband");
+            DatasetKind::parse(name).ok_or_else(|| format!("unknown dataset '{name}'"))?
+        };
+        let dim = args.usize_or("dim", if smoke { 64 } else { 256 })?;
+        if !valid_downsample_dim(dim) {
+            return Err(format!(
+                "--dim must be {DIM} or a square whose side divides 32 (e.g. 64, 256), got {dim}"
+            ));
+        }
+        let train_n = args.usize_or("train-samples", if smoke { 150 } else { 2000 })?;
+        let test_n = args.usize_or("test-samples", if smoke { 60 } else { 500 })?;
+        let seed = args.u64_or("seed", 42)?;
+        let batch = args.usize_or("batch", if smoke { 25 } else { 50 })?;
+        if batch == 0 {
+            return Err("--batch must be at least 1".into());
+        }
+        let cfg = TrainConfig {
+            epochs: args.usize_or("epochs", if smoke { 1 } else { 12 })?,
+            batch,
+            lr: args.f64_or("lr", 0.03)? as f32,
+            threads: args.usize_or("threads", 0)?,
+            chunk: args.usize_or("chunk", 8)?,
+            seed,
+            ..TrainConfig::default()
+        };
+        let methods: Vec<HiddenKind> = args
+            .list_or(
+                "methods",
+                if smoke {
+                    "bpbp-real,low-rank-matched"
+                } else {
+                    "bpbp-real,bpbp-complex,low-rank-matched,circulant,dense"
+                },
+            )
+            .iter()
+            .map(|m| match m.as_str() {
+                "low-rank-matched" => {
+                    Ok(HiddenKind::LowRank { rank: HiddenKind::parameter_matched_rank(dim) })
+                }
+                other => HiddenKind::parse(other).ok_or_else(|| format!("unknown method '{other}'")),
+            })
+            .collect::<Result<_, _>>()?;
+
+        log::info(&format!(
+            "compress: {} at dim {dim} ({train_n} train / {test_n} test), {} epochs, {} thread(s)",
+            dataset.name(),
+            cfg.epochs,
+            if cfg.threads == 0 { "all".to_string() } else { cfg.threads.to_string() },
+        ));
+        let full_train = generate(dataset, train_n, seed);
+        let full_test = generate(dataset, test_n, seed + 1);
+        let (train, test) = if dim == DIM {
+            (full_train, full_test)
+        } else {
+            (downsample(&full_train, dim), downsample(&full_test, dim))
+        };
+
+        // Table 1 accounting is against the unstructured model at this n.
+        let classes = train.classes;
+        let dense_total = (dim * dim + dim + classes * dim + classes) as f64;
+        let mut table = Table::new(&["method", "test acc", "hidden", "total", "compress", "op flops", "µs/vec (B=64)"])
+            .with_title(format!("Table 1 analogue — {} @ dim {dim}", dataset.name()));
+        // The "hero" is the best-accuracy *exportable* (artifact-capable:
+        // butterfly or circulant) method — what --save/--serve act on.
+        let mut hero: Option<(butterfly::nn::CompressMlp, f32)> = None;
+        let mut lowrank_acc: Option<(usize, f32)> = None;
+        for &kind in &methods {
+            let t0 = Instant::now();
+            let (rep, model) = train_mlp_model(kind, &train, &test, &cfg);
+            let wall = t0.elapsed().as_secs_f64();
+            let op = model.export_hidden_op();
+            table.add_row(vec![
+                kind.name(),
+                format!("{:.3}", rep.test_acc),
+                format!("{}", rep.hidden_params),
+                format!("{}", rep.total_params),
+                format!("{:.1}x", dense_total / rep.total_params as f64),
+                format!("{}", op.flops_per_apply()),
+                format!("{:.2}", bench_nanos_per_vec(op.as_ref(), 64, 20) / 1000.0),
+            ]);
+            log::info(&format!("{}: test acc {:.3} in {wall:.1}s", kind.name(), rep.test_acc));
+            if let HiddenKind::LowRank { rank } = kind {
+                // the summary line quotes this baseline by its actual rank
+                lowrank_acc.get_or_insert((rank, rep.test_acc));
+            }
+            let exportable = matches!(
+                kind,
+                HiddenKind::BpbpReal | HiddenKind::BpbpComplex | HiddenKind::Circulant
+            );
+            if exportable && hero.as_ref().map_or(true, |(_, best)| rep.test_acc > *best) {
+                hero = Some((model, rep.test_acc));
+            }
+        }
+        println!("{}", table.render());
+
+        let Some((model, acc)) = hero else {
+            if args.get("save").is_some() || args.flag("serve") || smoke {
+                // --smoke exists to exercise export + serving in CI, so a
+                // method list with nothing exportable must fail loudly too
+                return Err(
+                    "--save/--serve/--smoke need a structured method (bpbp-real, bpbp-complex, or circulant) in --methods"
+                        .into(),
+                );
+            }
+            return Ok(()); // nothing exportable requested
+        };
+        if let Some((lr_rank, lr_acc)) = lowrank_acc {
+            let matched = lr_rank == HiddenKind::parameter_matched_rank(dim);
+            println!(
+                "{} vs low-rank-{lr_rank}{}: {acc:.3} vs {lr_acc:.3} ({})",
+                model.kind.name(),
+                if matched { " (parameter-matched)" } else { "" },
+                if acc > lr_acc { "structured wins" } else { "low-rank wins — try more epochs" }
+            );
+        }
+
+        // Export the trained hidden layer; prove the artifact round-trip
+        // — through the REAL serialized form (θ → JSON text → parse →
+        // op), the exact bytes --save writes — reproduces the directly
+        // exported op bitwise. (Op ≡ layer-forward−bias parity at batch
+        // {1,3,64} is locked in by tests/nn_compress.rs.)
+        let op = model.export_hidden_op();
+        let art = model.export_hidden_artifact("compress-hidden").expect("structured hero");
+        let art_text = art.to_json().to_string_pretty();
+        let reparsed = butterfly::util::json::parse(&art_text)
+            .map_err(|e| format!("artifact JSON failed to re-parse: {e}"))?;
+        let op2 = butterfly::runtime::artifacts::LayerArtifact::from_json(&reparsed)
+            .and_then(|a| a.to_op())
+            .map_err(|e| e.to_string())?;
+        let differing = {
+            use butterfly::transforms::op::OpWorkspace;
+            let mut rng = butterfly::util::rng::Rng::new(seed ^ 0xC0FF_EE);
+            let b = 8usize;
+            let mut re = vec![0.0f32; b * dim];
+            rng.fill_normal(&mut re, 0.0, 1.0);
+            let mut re2 = re.clone();
+            let mut im = if op.is_complex() { vec![0.0f32; b * dim] } else { Vec::new() };
+            let mut im2 = im.clone();
+            let mut ows = OpWorkspace::new();
+            op.apply_batch(&mut re, &mut im, b, &mut ows);
+            op2.apply_batch(&mut re2, &mut im2, b, &mut ows);
+            // bit-pattern comparison: an f32::max fold would silently
+            // swallow NaN differences, and this gate exists to catch
+            // exactly that kind of divergence
+            re.iter()
+                .zip(&re2)
+                .chain(im.iter().zip(&im2))
+                .filter(|(a, c)| a.to_bits() != c.to_bits())
+                .count()
+        };
+        println!("export parity (op vs serialized-artifact round-trip): {differing} differing scalars");
+        if differing != 0 {
+            return Err(format!("artifact round-trip is not bitwise ({differing} scalars differ)"));
+        }
+
+        if let Some(path) = args.get("save") {
+            art.save(path).map_err(|e| e.to_string())?;
+            println!("saved layer artifact → {path}");
+        }
+
+        if args.flag("serve") || smoke {
+            let requests = args.usize_or("requests", if smoke { 100 } else { 2000 })?;
+            let workers = args.usize_or("pool-workers", 2)?;
+            let mut router = Router::new();
+            router.install("compressed-hidden", op, workers, BatcherConfig::default());
+            let handle = router.handle("compressed-hidden").unwrap();
+            let t0 = Instant::now();
+            let clients: Vec<_> = (0..4u64)
+                .map(|t| {
+                    let h = handle.clone();
+                    // distribute the remainder so exactly `requests` are sent
+                    let per = requests / 4 + usize::from((t as usize) < requests % 4);
+                    std::thread::spawn(move || {
+                        let mut rng = butterfly::util::rng::Rng::new(900 + t);
+                        for _ in 0..per {
+                            let mut v = vec![0.0f32; dim];
+                            rng.fill_normal(&mut v, 0.0, 1.0);
+                            h.call_real(v).expect("serve call");
+                        }
+                    })
+                })
+                .collect();
+            for c in clients {
+                c.join().unwrap();
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let stats = router.shutdown();
+            let s = &stats["compressed-hidden"];
+            println!(
+                "served {} requests through the compressed hidden layer in {wall:.2}s ({:.0} req/s, mean batch {:.2})",
+                s.served,
+                s.served as f64 / wall,
+                s.served as f64 / s.batches.max(1) as f64
+            );
+        }
         Ok(())
     };
     match run() {

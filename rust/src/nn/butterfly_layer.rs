@@ -9,12 +9,45 @@
 //! complex twiddles the imaginary plane is an internal degree of
 //! freedom, which is how the paper's complex variant spends its 2×
 //! parameters).
+//!
+//! Like the rest of `nn/`, the layer runs through two surfaces over one
+//! kernel set: the legacy `&mut self` [`Layer`] path (allocating,
+//! self-contained) and the `*_ws` workspace path (`&self`, caller-owned
+//! saves/tables/scratch — the [`MlpTrainer`] hot path). Both drive the
+//! identical `BpModule` kernels, so they agree bit-for-bit.
+//!
+//! ## Export: trained layer → serveable op
+//!
+//! A trained layer leaves the training world through three doors:
+//!
+//! - [`export_theta`](ButterflyLayer::export_theta) — the flat θ
+//!   interchange vector (`runtime::engine::pack_stack` layout, the same
+//!   contract the AOT/XLA entry points use);
+//! - [`export_op`](ButterflyLayer::export_op) — the **linear part** of
+//!   the layer hardened into an `Arc<dyn LinearOp>`
+//!   (via [`stack_op`]: gather tables + expanded twiddles, O(N log N)
+//!   apply), installable in a `ServicePool`/`Router` like any
+//!   closed-form transform. The bias is affine, not linear, so it is
+//!   **not** folded into the op — it rides next to θ in the artifact;
+//! - [`export_artifact`](ButterflyLayer::export_artifact) — a
+//!   [`LayerArtifact`] (θ + bias + metadata, JSON) whose
+//!   `to_op()` reconstructs the same op bit-for-bit
+//!   (`tests/nn_compress.rs`).
+//!
+//! [`MlpTrainer`]: crate::nn::workspace::MlpTrainer
+//! [`stack_op`]: crate::transforms::op::stack_op
+//! [`LayerArtifact`]: crate::runtime::artifacts::LayerArtifact
 
 use crate::butterfly::module::{BpModule, BpStack, ModuleSaves};
 use crate::butterfly::params::{BpParams, Field, InitScheme, PermTying, TwiddleTying};
+use crate::butterfly::permutation::PermTables;
 use crate::nn::layers::Layer;
+use crate::runtime::artifacts::LayerArtifact;
+use crate::transforms::op::LinearOp;
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
+#[derive(Clone)]
 pub struct ButterflyLayer {
     pub stack: BpStack,
     pub bias: Vec<f32>,
@@ -24,6 +57,17 @@ pub struct ButterflyLayer {
     gbias: Vec<f32>,
     vbias: Vec<f32>,
     saves: Vec<ModuleSaves>,
+}
+
+/// `v ← μv + (g + λp)·mask`, `p ← p − η·v` — the masked momentum update
+/// shared by the legacy and workspace paths (the mask pins the imaginary
+/// plane of real modules and the fixed-permutation logits).
+fn masked_sgd_update(p: &mut [f32], v: &mut [f32], g: &[f32], m: &[f32], lr: f32, momentum: f32, weight_decay: f32) {
+    for i in 0..p.len() {
+        let gi = (g[i] + weight_decay * p[i]) * m[i];
+        v[i] = momentum * v[i] + gi;
+        p[i] -= lr * v[i];
+    }
 }
 
 impl ButterflyLayer {
@@ -65,6 +109,174 @@ impl ButterflyLayer {
     pub fn n(&self) -> usize {
         self.stack.n()
     }
+
+    pub fn depth(&self) -> usize {
+        self.stack.depth()
+    }
+
+    /// Flat workspace-gradient length: full per-module parameter planes
+    /// (masked entries included, pinned at update time) + bias —
+    /// `[module 0 data | … | module D−1 data | bias]`.
+    pub fn grad_len(&self) -> usize {
+        self.stack.modules.iter().map(|m| m.params.data.len()).sum::<usize>() + self.bias.len()
+    }
+
+    fn add_bias(&self, y: &mut [f32], batch: usize) {
+        let n = self.n();
+        for bi in 0..batch {
+            for i in 0..n {
+                y[bi * n + i] += self.bias[i];
+            }
+        }
+    }
+
+    /// Workspace training forward: `x → y = stack(x) + bias`, recording
+    /// every stage input into `saves` (grown to depth on first use).
+    /// `im` is the caller's imaginary plane, `sr`/`si` blend scratch —
+    /// all `≥ batch·n`; `tables` must be built for this `n`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_train_ws(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        im: &mut [f32],
+        batch: usize,
+        saves: &mut Vec<ModuleSaves>,
+        tables: &PermTables,
+        sr: &mut [f32],
+        si: &mut [f32],
+    ) {
+        let n = self.n();
+        let len = batch * n;
+        debug_assert_eq!(x.len(), len);
+        y[..len].copy_from_slice(x);
+        im[..len].fill(0.0);
+        while saves.len() < self.stack.depth() {
+            saves.push(ModuleSaves::new());
+        }
+        for (mi, m) in self.stack.modules.iter().enumerate() {
+            m.forward_saving_with(&mut y[..len], &mut im[..len], batch, &mut saves[mi], tables, sr, si);
+        }
+        self.add_bias(y, batch);
+    }
+
+    /// Workspace inference forward (no saves) — the `&self` evaluation
+    /// path.
+    pub fn infer_ws(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        im: &mut [f32],
+        batch: usize,
+        tables: &PermTables,
+        sr: &mut [f32],
+        si: &mut [f32],
+    ) {
+        let n = self.n();
+        let len = batch * n;
+        debug_assert_eq!(x.len(), len);
+        y[..len].copy_from_slice(x);
+        im[..len].fill(0.0);
+        for m in &self.stack.modules {
+            m.apply_batch_with(&mut y[..len], &mut im[..len], batch, tables, sr, si);
+        }
+        self.add_bias(y, batch);
+    }
+
+    /// Workspace backward: `dy` (in place → `dx`) through the saves the
+    /// last [`forward_train_ws`](ButterflyLayer::forward_train_ws) on
+    /// this workspace recorded; parameter gradients accumulate into the
+    /// flat `grad` slice (layout per [`grad_len`](ButterflyLayer::grad_len)).
+    /// `dim` is gradient scratch for the imaginary plane (zeroed here),
+    /// `sr`/`si` double as the `dx` scratch of the module kernels.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_ws(
+        &self,
+        dy: &mut [f32],
+        dim: &mut [f32],
+        batch: usize,
+        saves: &[ModuleSaves],
+        tables: &PermTables,
+        sr: &mut [f32],
+        si: &mut [f32],
+        grad: &mut [f32],
+    ) {
+        let n = self.n();
+        let len = batch * n;
+        let (mods_grad, bias_grad) = grad.split_at_mut(self.grad_len() - n);
+        for bi in 0..batch {
+            for i in 0..n {
+                bias_grad[i] += dy[bi * n + i];
+            }
+        }
+        dim[..len].fill(0.0);
+        // split the flat module-gradient region into per-module slices
+        let mut parts: Vec<&mut [f32]> = Vec::with_capacity(self.stack.depth());
+        let mut rem = mods_grad;
+        for m in &self.stack.modules {
+            let (head, tail) = rem.split_at_mut(m.params.data.len());
+            parts.push(head);
+            rem = tail;
+        }
+        for (mi, (m, part)) in self.stack.modules.iter().zip(parts).enumerate().rev() {
+            m.backward_with(&saves[mi], &mut dy[..len], &mut dim[..len], part, batch, tables, sr, si);
+        }
+    }
+
+    /// Momentum-SGD update from an external flat gradient (same masks and
+    /// update arithmetic as the legacy [`Layer::sgd_step`]).
+    pub fn apply_grad(&mut self, grad: &[f32], lr: f32, momentum: f32, weight_decay: f32) {
+        let n = self.bias.len();
+        let (mods, gbias) = grad.split_at(grad.len() - n);
+        let mut off = 0usize;
+        for (mi, module) in self.stack.modules.iter_mut().enumerate() {
+            let len = module.params.data.len();
+            masked_sgd_update(
+                &mut module.params.data,
+                &mut self.vel[mi],
+                &mods[off..off + len],
+                &self.masks[mi],
+                lr,
+                momentum,
+                weight_decay,
+            );
+            off += len;
+        }
+        crate::nn::layers::sgd_update(&mut self.bias, &mut self.vbias, gbias, lr, momentum, 0.0);
+    }
+
+    // -----------------------------------------------------------------
+    // export
+    // -----------------------------------------------------------------
+
+    /// Packed flat θ in the AOT interchange layout (concatenated module
+    /// parameter planes; see `runtime::engine`). The bias is not part of
+    /// θ — it travels separately (see [`export_artifact`]).
+    ///
+    /// [`export_artifact`]: ButterflyLayer::export_artifact
+    pub fn export_theta(&self) -> Vec<f32> {
+        crate::runtime::engine::pack_stack(&self.stack)
+    }
+
+    /// Harden the layer's **linear part** into a serveable
+    /// `Arc<dyn LinearOp>` (the bias is affine and stays out; real-field
+    /// layers export as real single-plane ops). Bit-identical to
+    /// `unpack_op(name, n, depth, &self.export_theta())`.
+    pub fn export_op(&self, name: impl Into<String>) -> Arc<dyn LinearOp> {
+        crate::transforms::op::stack_op(name, &self.stack)
+    }
+
+    /// Full trained-layer artifact: θ + bias + rebuild metadata.
+    pub fn export_artifact(&self, name: impl Into<String>) -> LayerArtifact {
+        LayerArtifact {
+            name: name.into(),
+            kind: "bp".into(),
+            n: self.n(),
+            depth: self.depth(),
+            theta: self.export_theta(),
+            bias: self.bias.clone(),
+        }
+    }
 }
 
 impl Layer for ButterflyLayer {
@@ -78,11 +290,7 @@ impl Layer for ButterflyLayer {
         } else {
             self.stack.apply_batch(&mut re, &mut im, batch);
         }
-        for bi in 0..batch {
-            for i in 0..n {
-                re[bi * n + i] += self.bias[i];
-            }
-        }
+        self.add_bias(&mut re, batch);
         re
     }
 
@@ -108,20 +316,17 @@ impl Layer for ButterflyLayer {
 
     fn sgd_step(&mut self, lr: f32, momentum: f32, weight_decay: f32) {
         for (mi, module) in self.stack.modules.iter_mut().enumerate() {
-            let g = &self.grad[mi];
-            let v = &mut self.vel[mi];
-            let m = &self.masks[mi];
-            let p = &mut module.params.data;
-            for i in 0..p.len() {
-                let gi = (g[i] + weight_decay * p[i]) * m[i];
-                v[i] = momentum * v[i] + gi;
-                p[i] -= lr * v[i];
-            }
+            masked_sgd_update(
+                &mut module.params.data,
+                &mut self.vel[mi],
+                &self.grad[mi],
+                &self.masks[mi],
+                lr,
+                momentum,
+                weight_decay,
+            );
         }
-        for i in 0..self.bias.len() {
-            self.vbias[i] = momentum * self.vbias[i] + self.gbias[i];
-            self.bias[i] -= lr * self.vbias[i];
-        }
+        crate::nn::layers::sgd_update(&mut self.bias, &mut self.vbias, &self.gbias, lr, momentum, 0.0);
     }
 
     fn param_count(&self) -> usize {
@@ -196,6 +401,110 @@ mod tests {
             let fd = (lp - lm) / (2.0 * eps);
             assert!((fd - dx[i]).abs() < 3e-2 * (1.0 + fd.abs()), "x[{i}]: fd {fd} vs {}", dx[i]);
         }
+    }
+
+    #[test]
+    fn ws_path_matches_legacy_bitwise() {
+        let mut rng = Rng::new(21);
+        let n = 16;
+        let batch = 3;
+        let mut layer = ButterflyLayer::new(n, 2, Field::Complex, &mut rng);
+        let mut x = vec![0.0f32; batch * n];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        // legacy
+        let y_legacy = layer.forward(&x, batch, true);
+        let dy: Vec<f32> = y_legacy.iter().map(|v| 0.1 * v).collect();
+        layer.zero_grad();
+        let dx_legacy = layer.backward(&dy, batch);
+        // workspace
+        let tables = PermTables::new(n);
+        let mut saves = Vec::new();
+        let (mut y, mut im) = (vec![0.0f32; batch * n], vec![0.0f32; batch * n]);
+        let (mut sr, mut si) = (vec![0.0f32; batch * n], vec![0.0f32; batch * n]);
+        layer.forward_train_ws(&x, &mut y, &mut im, batch, &mut saves, &tables, &mut sr, &mut si);
+        assert_eq!(y_legacy, y, "forward");
+        let mut dws = dy.clone();
+        let mut dim = vec![0.0f32; batch * n];
+        let mut g = vec![0.0f32; layer.grad_len()];
+        layer.backward_ws(&mut dws, &mut dim, batch, &saves, &tables, &mut sr, &mut si, &mut g);
+        assert_eq!(dx_legacy, dws, "dx");
+        // gradient layout: [m0 | m1 | bias]
+        let m0 = layer.stack.modules[0].params.data.len();
+        let m1 = layer.stack.modules[1].params.data.len();
+        assert_eq!(&g[..m0], &layer.grad[0][..], "module 0 grads");
+        assert_eq!(&g[m0..m0 + m1], &layer.grad[1][..], "module 1 grads");
+        assert_eq!(&g[m0 + m1..], &layer.gbias[..], "bias grads");
+        // inference path == legacy eval forward
+        let y_eval = layer.forward(&x, batch, false);
+        let mut y_inf = vec![0.0f32; batch * n];
+        layer.infer_ws(&x, &mut y_inf, &mut im, batch, &tables, &mut sr, &mut si);
+        assert_eq!(y_eval, y_inf, "inference");
+    }
+
+    #[test]
+    fn apply_grad_matches_sgd_step() {
+        let mut rng = Rng::new(22);
+        let n = 8;
+        let mut a = ButterflyLayer::new(n, 2, Field::Real, &mut rng);
+        let mut b = ButterflyLayer::new(n, 2, Field::Real, &mut Rng::new(22));
+        let mut flat = vec![0.0f32; a.grad_len()];
+        Rng::new(5).fill_normal(&mut flat, 0.0, 1.0);
+        // mirror flat into a's legacy per-module buffers
+        let m0 = a.stack.modules[0].params.data.len();
+        let m1 = a.stack.modules[1].params.data.len();
+        a.grad[0].copy_from_slice(&flat[..m0]);
+        a.grad[1].copy_from_slice(&flat[m0..m0 + m1]);
+        a.gbias.copy_from_slice(&flat[m0 + m1..]);
+        a.sgd_step(0.03, 0.9, 1e-4);
+        b.apply_grad(&flat, 0.03, 0.9, 1e-4);
+        for mi in 0..2 {
+            assert_eq!(a.stack.modules[mi].params.data, b.stack.modules[mi].params.data);
+        }
+        assert_eq!(a.bias, b.bias);
+    }
+
+    #[test]
+    fn export_op_matches_forward_minus_bias() {
+        use crate::transforms::op::OpWorkspace;
+        for field in [Field::Real, Field::Complex] {
+            let mut rng = Rng::new(31);
+            let n = 16;
+            let batch = 3;
+            let mut layer = ButterflyLayer::new(n, 2, field, &mut rng);
+            rng.fill_normal(&mut layer.bias, 0.0, 0.5);
+            let mut x = vec![0.0f32; batch * n];
+            rng.fill_normal(&mut x, 0.0, 1.0);
+            let y = layer.forward(&x, batch, false);
+            let op = layer.export_op("hidden");
+            assert_eq!(op.n(), n);
+            assert_eq!(op.is_complex(), field == Field::Complex);
+            // column-major planes for the op
+            let mut re = vec![0.0f32; batch * n];
+            for b in 0..batch {
+                for i in 0..n {
+                    re[i * batch + b] = x[b * n + i];
+                }
+            }
+            let mut im = vec![0.0f32; batch * n];
+            let mut ws = OpWorkspace::new();
+            op.apply_batch(&mut re, &mut im, batch, &mut ws);
+            for b in 0..batch {
+                for i in 0..n {
+                    let want = y[b * n + i] - layer.bias[i];
+                    let got = re[i * batch + b];
+                    assert!((got - want).abs() < 1e-4, "{field:?} [{b},{i}] {got} vs {want}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn theta_roundtrip_is_bitwise() {
+        let mut rng = Rng::new(33);
+        let layer = ButterflyLayer::new(16, 2, Field::Real, &mut rng);
+        let theta = layer.export_theta();
+        let stack = crate::runtime::engine::unpack_stack(16, 2, &theta);
+        assert_eq!(crate::runtime::engine::pack_stack(&stack), theta);
     }
 
     #[test]

@@ -6,11 +6,25 @@
 //! `y = ℜ ifft(fft(h) ∘ fft(x))`, `dx = ℜ ifft(conj(H) ∘ DY)`,
 //! `dh = Σ_b ℜ ifft(conj(X_b) ∘ DY_b)` — all O(N log N) like the
 //! butterfly layer it is compared against.
+//!
+//! Both the legacy [`Layer`] path and the `*_ws` workspace path run the
+//! same free-function kernels below; the workspace path keeps the
+//! per-sample FFT scratch and the saved input spectra in caller planes
+//! ([`NnWorkspace`](crate::nn::workspace::NnWorkspace)), so the
+//! [`MlpTrainer`](crate::nn::workspace::MlpTrainer) steady state
+//! allocates nothing. A trained layer exports its linear part through
+//! [`export_op`](CirculantLayer::export_op) (the same FFT-backed
+//! [`circulant_op`] the closed-form factory serves) with the bias riding
+//! in the [`LayerArtifact`](crate::runtime::artifacts::LayerArtifact).
 
-use crate::nn::layers::Layer;
+use crate::nn::layers::{sgd_update, Layer};
+use crate::runtime::artifacts::LayerArtifact;
 use crate::transforms::fast::FftPlan;
+use crate::transforms::op::{circulant_op, LinearOp};
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
+#[derive(Clone)]
 pub struct CirculantLayer {
     pub n: usize,
     pub h: Vec<f32>,
@@ -21,7 +35,92 @@ pub struct CirculantLayer {
     vb: Vec<f32>,
     plan: FftPlan,
     saved_x_freq: Vec<f32>, // [batch][2][n] interleaved planes (re|im)
-    saved_batch: usize,
+}
+
+/// Forward kernel: per sample, `X = fft(x)`, optionally save `X`, then
+/// `y = ℜ ifft(H ∘ X) + bias`. `hr`/`hi` must already hold `fft(h)`;
+/// `xr`/`xi` are per-sample scratch (`≥ n`).
+#[allow(clippy::too_many_arguments)]
+fn circ_forward_kernel(
+    plan: &FftPlan,
+    bias: &[f32],
+    x: &[f32],
+    y: &mut [f32],
+    batch: usize,
+    mut save_x_freq: Option<&mut [f32]>,
+    hr: &[f32],
+    hi: &[f32],
+    xr: &mut [f32],
+    xi: &mut [f32],
+) {
+    let n = plan.n;
+    for bi in 0..batch {
+        xr[..n].copy_from_slice(&x[bi * n..(bi + 1) * n]);
+        xi[..n].fill(0.0);
+        plan.forward(&mut xr[..n], &mut xi[..n]);
+        if let Some(save) = save_x_freq.as_deref_mut() {
+            save[bi * 2 * n..bi * 2 * n + n].copy_from_slice(&xr[..n]);
+            save[bi * 2 * n + n..(bi + 1) * 2 * n].copy_from_slice(&xi[..n]);
+        }
+        // Y = H ∘ X, in place over the X scratch
+        for k in 0..n {
+            let (a, b) = (xr[k], xi[k]);
+            xr[k] = hr[k] * a - hi[k] * b;
+            xi[k] = hr[k] * b + hi[k] * a;
+        }
+        plan.inverse_scaled(&mut xr[..n], &mut xi[..n]);
+        for i in 0..n {
+            y[bi * n + i] = xr[i] + bias[i];
+        }
+    }
+}
+
+/// Backward kernel: accumulates `gh`/`gb`, overwrites the `dx` rows.
+/// `x_freq` is the spectra plane the forward pass saved; `dyr`/`dyi` and
+/// `tr`/`ti` are per-sample scratch (`≥ n`).
+#[allow(clippy::too_many_arguments)]
+fn circ_backward_kernel(
+    plan: &FftPlan,
+    x_freq: &[f32],
+    dy: &[f32],
+    dx: &mut [f32],
+    gh: &mut [f32],
+    gb: &mut [f32],
+    batch: usize,
+    hr: &[f32],
+    hi: &[f32],
+    dyr: &mut [f32],
+    dyi: &mut [f32],
+    tr: &mut [f32],
+    ti: &mut [f32],
+) {
+    let n = plan.n;
+    for bi in 0..batch {
+        for i in 0..n {
+            gb[i] += dy[bi * n + i];
+        }
+        dyr[..n].copy_from_slice(&dy[bi * n..(bi + 1) * n]);
+        dyi[..n].fill(0.0);
+        plan.forward(&mut dyr[..n], &mut dyi[..n]);
+        // dx = ifft(conj(H) ∘ DY)
+        for k in 0..n {
+            tr[k] = hr[k] * dyr[k] + hi[k] * dyi[k];
+            ti[k] = hr[k] * dyi[k] - hi[k] * dyr[k];
+        }
+        plan.inverse_scaled(&mut tr[..n], &mut ti[..n]);
+        dx[bi * n..(bi + 1) * n].copy_from_slice(&tr[..n]);
+        // dh += ifft(conj(X) ∘ DY)
+        let xr = &x_freq[bi * 2 * n..bi * 2 * n + n];
+        let xi = &x_freq[bi * 2 * n + n..(bi + 1) * 2 * n];
+        for k in 0..n {
+            tr[k] = xr[k] * dyr[k] + xi[k] * dyi[k];
+            ti[k] = xr[k] * dyi[k] - xi[k] * dyr[k];
+        }
+        plan.inverse_scaled(&mut tr[..n], &mut ti[..n]);
+        for k in 0..n {
+            gh[k] += tr[k];
+        }
+    }
 }
 
 impl CirculantLayer {
@@ -38,84 +137,146 @@ impl CirculantLayer {
             vb: vec![0.0; n],
             plan: FftPlan::new(n),
             saved_x_freq: Vec::new(),
-            saved_batch: 0,
         }
     }
 
-    fn h_freq(&self) -> (Vec<f32>, Vec<f32>) {
-        let mut hr = self.h.clone();
-        let mut hi = vec![0.0f32; self.n];
-        self.plan.forward(&mut hr, &mut hi);
-        (hr, hi)
+    /// `fft(h)` into caller scratch (`≥ n` each).
+    fn h_freq_into(&self, hr: &mut [f32], hi: &mut [f32]) {
+        hr[..self.n].copy_from_slice(&self.h);
+        hi[..self.n].fill(0.0);
+        self.plan.forward(&mut hr[..self.n], &mut hi[..self.n]);
+    }
+
+    /// Flat workspace-gradient length (`[gh | gb]`).
+    pub fn grad_len(&self) -> usize {
+        2 * self.n
+    }
+
+    /// Workspace forward. `x_freq` (when training) is the caller's
+    /// `[batch, 2, n]` spectra plane consumed by
+    /// [`backward_ws`](CirculantLayer::backward_ws); `cs` provides four
+    /// `≥ n` scratch planes.
+    pub fn forward_ws(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        batch: usize,
+        x_freq: Option<&mut [f32]>,
+        cs: &mut [Vec<f32>; 6],
+    ) {
+        let [hr, hi, xr, xi, _, _] = cs;
+        self.h_freq_into(hr, hi);
+        circ_forward_kernel(&self.plan, &self.bias, x, y, batch, x_freq, hr, hi, xr, xi);
+    }
+
+    /// Workspace backward: `dx` rows are overwritten, `grad` is the flat
+    /// `[gh | gb]` slice; `cs` provides six `≥ n` scratch planes.
+    pub fn backward_ws(
+        &self,
+        x_freq: &[f32],
+        dy: &[f32],
+        dx: &mut [f32],
+        grad: &mut [f32],
+        batch: usize,
+        cs: &mut [Vec<f32>; 6],
+    ) {
+        let [hr, hi, ..] = cs;
+        self.h_freq_into(hr, hi);
+        self.backward_ws_reusing_hfreq(x_freq, dy, dx, grad, batch, cs);
+    }
+
+    /// [`backward_ws`](CirculantLayer::backward_ws) minus the `fft(h)`
+    /// recompute: requires that `cs[0..2]` still hold the spectra a
+    /// `forward_ws` on the SAME scratch just produced (the chunk engine's
+    /// forward→backward pairing; `h` cannot change in between because
+    /// both take `&self`). Halves the per-chunk plan work.
+    pub(crate) fn backward_ws_reusing_hfreq(
+        &self,
+        x_freq: &[f32],
+        dy: &[f32],
+        dx: &mut [f32],
+        grad: &mut [f32],
+        batch: usize,
+        cs: &mut [Vec<f32>; 6],
+    ) {
+        let (gh, gb) = grad.split_at_mut(self.n);
+        let [hr, hi, dyr, dyi, tr, ti] = cs;
+        circ_backward_kernel(&self.plan, x_freq, dy, dx, gh, gb, batch, hr, hi, dyr, dyi, tr, ti);
+    }
+
+    /// Momentum-SGD update from an external flat `[gh | gb]` gradient
+    /// (weight decay on `h` only, matching the legacy path).
+    pub fn apply_grad(&mut self, grad: &[f32], lr: f32, momentum: f32, weight_decay: f32) {
+        let (gh, gb) = grad.split_at(self.n);
+        sgd_update(&mut self.h, &mut self.vh, gh, lr, momentum, weight_decay);
+        sgd_update(&mut self.bias, &mut self.vb, gb, lr, momentum, 0.0);
+    }
+
+    /// The layer's linear part as a serveable op — the same FFT-backed
+    /// circulant the closed-form factory plans, built from the trained
+    /// filter (bias excluded; see
+    /// [`export_artifact`](CirculantLayer::export_artifact)).
+    pub fn export_op(&self) -> Arc<dyn LinearOp> {
+        circulant_op(&self.h)
+    }
+
+    /// Full trained-layer artifact: filter + bias + rebuild metadata.
+    pub fn export_artifact(&self, name: impl Into<String>) -> LayerArtifact {
+        LayerArtifact {
+            name: name.into(),
+            kind: "circulant".into(),
+            n: self.n,
+            depth: 1,
+            theta: self.h.clone(),
+            bias: self.bias.clone(),
+        }
     }
 }
 
 impl Layer for CirculantLayer {
     fn forward(&mut self, x: &[f32], batch: usize, train: bool) -> Vec<f32> {
         let n = self.n;
-        let (hr, hi) = self.h_freq();
         let mut y = vec![0.0f32; batch * n];
-        if train {
-            self.saved_x_freq = vec![0.0f32; batch * 2 * n];
-            self.saved_batch = batch;
-        }
-        for bi in 0..batch {
-            let mut xr = x[bi * n..(bi + 1) * n].to_vec();
-            let mut xi = vec![0.0f32; n];
-            self.plan.forward(&mut xr, &mut xi);
-            if train {
-                self.saved_x_freq[bi * 2 * n..bi * 2 * n + n].copy_from_slice(&xr);
-                self.saved_x_freq[bi * 2 * n + n..(bi + 1) * 2 * n].copy_from_slice(&xi);
-            }
-            // Y = H ∘ X
-            let mut yr = vec![0.0f32; n];
-            let mut yi = vec![0.0f32; n];
-            for k in 0..n {
-                yr[k] = hr[k] * xr[k] - hi[k] * xi[k];
-                yi[k] = hr[k] * xi[k] + hi[k] * xr[k];
-            }
-            self.plan.inverse_scaled(&mut yr, &mut yi);
-            for i in 0..n {
-                y[bi * n + i] = yr[i] + self.bias[i];
-            }
-        }
+        let mut hr = vec![0.0f32; n];
+        let mut hi = vec![0.0f32; n];
+        let mut xr = vec![0.0f32; n];
+        let mut xi = vec![0.0f32; n];
+        self.h_freq_into(&mut hr, &mut hi);
+        let save = if train {
+            self.saved_x_freq.resize(batch * 2 * n, 0.0);
+            Some(&mut self.saved_x_freq[..])
+        } else {
+            None
+        };
+        circ_forward_kernel(&self.plan, &self.bias, x, &mut y, batch, save, &hr, &hi, &mut xr, &mut xi);
         y
     }
 
     fn backward(&mut self, dy: &[f32], batch: usize) -> Vec<f32> {
         let n = self.n;
-        let (hr, hi) = self.h_freq();
         let mut dx = vec![0.0f32; batch * n];
-        for bi in 0..batch {
-            for i in 0..n {
-                self.gb[i] += dy[bi * n + i];
-            }
-            let mut dyr = dy[bi * n..(bi + 1) * n].to_vec();
-            let mut dyi = vec![0.0f32; n];
-            self.plan.forward(&mut dyr, &mut dyi);
-            // dx = ifft(conj(H) ∘ DY)
-            let mut dxr = vec![0.0f32; n];
-            let mut dxi = vec![0.0f32; n];
-            for k in 0..n {
-                dxr[k] = hr[k] * dyr[k] + hi[k] * dyi[k];
-                dxi[k] = hr[k] * dyi[k] - hi[k] * dyr[k];
-            }
-            self.plan.inverse_scaled(&mut dxr, &mut dxi);
-            dx[bi * n..(bi + 1) * n].copy_from_slice(&dxr);
-            // dh += ifft(conj(X) ∘ DY)
-            let xr = &self.saved_x_freq[bi * 2 * n..bi * 2 * n + n];
-            let xi = &self.saved_x_freq[bi * 2 * n + n..(bi + 1) * 2 * n];
-            let mut dhr = vec![0.0f32; n];
-            let mut dhi = vec![0.0f32; n];
-            for k in 0..n {
-                dhr[k] = xr[k] * dyr[k] + xi[k] * dyi[k];
-                dhi[k] = xr[k] * dyi[k] - xi[k] * dyr[k];
-            }
-            self.plan.inverse_scaled(&mut dhr, &mut dhi);
-            for k in 0..n {
-                self.gh[k] += dhr[k];
-            }
-        }
+        let mut hr = vec![0.0f32; n];
+        let mut hi = vec![0.0f32; n];
+        let mut dyr = vec![0.0f32; n];
+        let mut dyi = vec![0.0f32; n];
+        let mut tr = vec![0.0f32; n];
+        let mut ti = vec![0.0f32; n];
+        self.h_freq_into(&mut hr, &mut hi);
+        circ_backward_kernel(
+            &self.plan,
+            &self.saved_x_freq,
+            dy,
+            &mut dx,
+            &mut self.gh,
+            &mut self.gb,
+            batch,
+            &hr,
+            &hi,
+            &mut dyr,
+            &mut dyi,
+            &mut tr,
+            &mut ti,
+        );
         dx
     }
 
@@ -125,12 +286,8 @@ impl Layer for CirculantLayer {
     }
 
     fn sgd_step(&mut self, lr: f32, momentum: f32, weight_decay: f32) {
-        for i in 0..self.n {
-            self.vh[i] = momentum * self.vh[i] + self.gh[i] + weight_decay * self.h[i];
-            self.h[i] -= lr * self.vh[i];
-            self.vb[i] = momentum * self.vb[i] + self.gb[i];
-            self.bias[i] -= lr * self.vb[i];
-        }
+        sgd_update(&mut self.h, &mut self.vh, &self.gh, lr, momentum, weight_decay);
+        sgd_update(&mut self.bias, &mut self.vb, &self.gb, lr, momentum, 0.0);
     }
 
     fn param_count(&self) -> usize {
@@ -155,6 +312,65 @@ mod tests {
         let got = layer.forward(&x, 1, false);
         for i in 0..n {
             assert!((got[i] - want[i]).abs() < 1e-4, "[{i}] {} vs {}", got[i], want[i]);
+        }
+    }
+
+    #[test]
+    fn ws_path_matches_legacy_bitwise() {
+        let n = 8;
+        let batch = 3;
+        let mut rng = Rng::new(9);
+        let mut layer = CirculantLayer::new(n, &mut rng);
+        rng.fill_normal(&mut layer.bias, 0.0, 0.3);
+        let mut x = vec![0.0f32; batch * n];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let y_legacy = layer.forward(&x, batch, true);
+        let mut cs: [Vec<f32>; 6] = Default::default();
+        for c in cs.iter_mut() {
+            c.resize(n, 0.0);
+        }
+        let mut y_ws = vec![0.0f32; batch * n];
+        let mut xf = vec![0.0f32; batch * 2 * n];
+        layer.forward_ws(&x, &mut y_ws, batch, Some(&mut xf[..]), &mut cs);
+        assert_eq!(y_legacy, y_ws);
+        assert_eq!(layer.saved_x_freq, xf);
+        let dy: Vec<f32> = y_ws.iter().map(|v| v * 0.7).collect();
+        layer.zero_grad();
+        let dx_legacy = layer.backward(&dy, batch);
+        let mut dx_ws = vec![0.0f32; batch * n];
+        let mut g = vec![0.0f32; layer.grad_len()];
+        layer.backward_ws(&xf, &dy, &mut dx_ws, &mut g, batch, &mut cs);
+        assert_eq!(dx_legacy, dx_ws);
+        assert_eq!(&g[..n], &layer.gh[..]);
+        assert_eq!(&g[n..], &layer.gb[..]);
+    }
+
+    #[test]
+    fn export_op_matches_forward_minus_bias() {
+        use crate::transforms::op::OpWorkspace;
+        let n = 16;
+        let batch = 2;
+        let mut rng = Rng::new(12);
+        let mut layer = CirculantLayer::new(n, &mut rng);
+        rng.fill_normal(&mut layer.bias, 0.0, 0.5);
+        let mut x = vec![0.0f32; batch * n];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let y = layer.forward(&x, batch, false);
+        let op = layer.export_op();
+        assert!(!op.is_complex());
+        let mut re = vec![0.0f32; batch * n];
+        for b in 0..batch {
+            for i in 0..n {
+                re[i * batch + b] = x[b * n + i];
+            }
+        }
+        let mut ws = OpWorkspace::new();
+        op.apply_batch(&mut re, &mut [], batch, &mut ws);
+        for b in 0..batch {
+            for i in 0..n {
+                let want = y[b * n + i] - layer.bias[i];
+                assert!((re[i * batch + b] - want).abs() < 1e-4, "[{b},{i}]");
+            }
         }
     }
 

@@ -7,6 +7,13 @@
 //! Architecture: conv stem → 3 residual stages (stride-2 between stages)
 //! → global average pool → optional pre-classifier layer (the Table 2
 //! variable) → dense softmax head.
+//!
+//! This model stays on the legacy `&mut self` [`Layer`] path (the conv /
+//! batch-norm layers have no workspace kernels): it is a once-per-paper
+//! experiment, not a serving or throughput surface. The pre-classifier
+//! slot still benefits from the nn/ refactor indirectly — a trained
+//! [`ButterflyLayer`] inserted here exports through the same
+//! `export_op`/`export_artifact` path as the Table 1 hidden layer.
 
 use crate::butterfly::params::Field;
 use crate::nn::butterfly_layer::ButterflyLayer;

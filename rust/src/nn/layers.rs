@@ -1,11 +1,37 @@
 //! Core layers: dense (with bias), low-rank dense, ReLU, and the fused
-//! softmax cross-entropy head. Each layer owns its parameters, gradient
-//! accumulators, and momentum-SGD velocity; `backward` consumes the
-//! activations saved by the preceding `forward`.
+//! softmax cross-entropy head.
+//!
+//! ## Two execution paths, one set of kernels
+//!
+//! Mirroring the training-engine split in `butterfly::workspace`, every
+//! layer exposes the same arithmetic through two surfaces:
+//!
+//! - the **legacy path** (the [`Layer`] trait): `&mut self`
+//!   forward/backward with internally-saved activations and gradient
+//!   accumulators, allocating its outputs per call. Self-contained; used
+//!   by the convnet (Table 2) and as the reference the engine parity
+//!   tests compare against.
+//! - the **workspace path** (`*_ws` methods): `&self` kernels over
+//!   caller-owned activation/gradient planes (see
+//!   [`NnWorkspace`](crate::nn::workspace::NnWorkspace)) — thread-shareable
+//!   and allocation-free in steady state, which is what lets
+//!   [`MlpTrainer`](crate::nn::workspace::MlpTrainer) run minibatch
+//!   chunks data-parallel.
+//!
+//! Both paths run the identical free-function kernels below, so the
+//! workspace engine is bit-identical to the legacy step whenever the
+//! chunking covers the batch in one piece (`tests/nn_gradcheck.rs`,
+//! `tests/nn_compress.rs`).
+//!
+//! Gradient layout contract for the workspace path: each layer flattens
+//! its parameter gradients into one `[grad_len()]` slice (`DenseLayer`:
+//! `[gw | gb]`; `LowRankLayer`: `[v | u]`, each `[gw | gb]`), and
+//! [`apply_grad`](DenseLayer::apply_grad) consumes the same layout.
 
 use crate::util::rng::Rng;
 
-/// Minimal layer interface for sequential models.
+/// Minimal layer interface for sequential models (the legacy
+/// `&mut self` path; see the module docs for the workspace path).
 pub trait Layer {
     /// Forward over a row-major `[batch, in]` buffer → `[batch, out]`.
     /// `train` enables activation saving for backward.
@@ -22,7 +48,161 @@ pub trait Layer {
     }
 }
 
+// ---------------------------------------------------------------------
+// shared kernels (both paths run exactly these)
+// ---------------------------------------------------------------------
+
+/// `y[b, o] = b[o] + Σ_i w[o, i]·x[b, i]` over row-major planes.
+pub(crate) fn dense_forward_kernel(
+    w: &[f32],
+    b: &[f32],
+    in_dim: usize,
+    out_dim: usize,
+    x: &[f32],
+    y: &mut [f32],
+    batch: usize,
+) {
+    debug_assert!(x.len() >= batch * in_dim && y.len() >= batch * out_dim);
+    for bi in 0..batch {
+        let xr = &x[bi * in_dim..(bi + 1) * in_dim];
+        let yr = &mut y[bi * out_dim..(bi + 1) * out_dim];
+        for o in 0..out_dim {
+            let wr = &w[o * in_dim..(o + 1) * in_dim];
+            let mut acc = b[o];
+            for i in 0..in_dim {
+                acc += wr[i] * xr[i];
+            }
+            yr[o] = acc;
+        }
+    }
+}
+
+/// Dense backward: accumulates `gw`/`gb` and the input gradient `dx`
+/// (callers pass `dx` pre-zeroed; the kernel only adds).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dense_backward_kernel(
+    w: &[f32],
+    in_dim: usize,
+    out_dim: usize,
+    x: &[f32],
+    dy: &[f32],
+    dx: &mut [f32],
+    gw: &mut [f32],
+    gb: &mut [f32],
+    batch: usize,
+) {
+    for bi in 0..batch {
+        let xr = &x[bi * in_dim..(bi + 1) * in_dim];
+        let dyr = &dy[bi * out_dim..(bi + 1) * out_dim];
+        let dxr = &mut dx[bi * in_dim..(bi + 1) * in_dim];
+        for o in 0..out_dim {
+            let g = dyr[o];
+            if g == 0.0 {
+                continue;
+            }
+            gb[o] += g;
+            let wr = &w[o * in_dim..(o + 1) * in_dim];
+            let gwr = &mut gw[o * in_dim..(o + 1) * in_dim];
+            for i in 0..in_dim {
+                gwr[i] += g * xr[i];
+                dxr[i] += g * wr[i];
+            }
+        }
+    }
+}
+
+/// One momentum-SGD update: `v ← μv + g + λp`, `p ← p − η·v`.
+pub(crate) fn sgd_update(p: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, momentum: f32, weight_decay: f32) {
+    for i in 0..p.len() {
+        v[i] = momentum * v[i] + g[i] + weight_decay * p[i];
+        p[i] -= lr * v[i];
+    }
+}
+
+/// Elementwise `y = max(x, 0)`.
+pub(crate) fn relu_forward_kernel(x: &[f32], y: &mut [f32]) {
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi = xi.max(0.0);
+    }
+}
+
+/// `dx = dy ⊙ [x > 0]`, recomputing the mask from the saved
+/// pre-activation (no mask storage needed on the workspace path).
+pub(crate) fn relu_backward_kernel(x: &[f32], dy: &[f32], dx: &mut [f32]) {
+    for i in 0..dx.len() {
+        dx[i] = if x[i] > 0.0 { dy[i] } else { 0.0 };
+    }
+}
+
+/// Fused softmax + cross-entropy kernel: writes
+/// `dl = (softmax(logits) − onehot) / mean_denom` and returns the
+/// **sum** of per-sample losses (f64) plus the argmax-correct count.
+/// The public [`softmax_cross_entropy`] passes `mean_denom = batch`
+/// (the exact division the legacy path always performed — a reciprocal
+/// multiply would shift every pre-existing trajectory by an ulp); the
+/// chunk-parallel engine passes the **full** batch size so per-chunk
+/// gradients sum to exactly the full-batch gradient.
+pub(crate) fn softmax_ce_kernel(
+    logits: &[f32],
+    labels: &[u8],
+    batch: usize,
+    classes: usize,
+    dl: &mut [f32],
+    mean_denom: f32,
+) -> (f64, usize) {
+    debug_assert!(logits.len() >= batch * classes && dl.len() >= batch * classes);
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    for bi in 0..batch {
+        let row = &logits[bi * classes..(bi + 1) * classes];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f32;
+        for &v in row {
+            denom += (v - max).exp();
+        }
+        let label = labels[bi] as usize;
+        let mut argmax = 0usize;
+        for (c, &v) in row.iter().enumerate() {
+            let p = (v - max).exp() / denom;
+            dl[bi * classes + c] = (p - if c == label { 1.0 } else { 0.0 }) / mean_denom;
+            if v > row[argmax] {
+                argmax = c;
+            }
+        }
+        if argmax == label {
+            correct += 1;
+        }
+        loss += -((row[label] - max) as f64 - (denom as f64).ln());
+    }
+    (loss, correct)
+}
+
+/// Argmax-accuracy count with the same first-max tie rule as
+/// [`softmax_ce_kernel`] (used by the non-mutating evaluation path,
+/// which needs no loss or gradient).
+pub(crate) fn count_correct(logits: &[f32], labels: &[u8], batch: usize, classes: usize) -> usize {
+    let mut correct = 0usize;
+    for bi in 0..batch {
+        let row = &logits[bi * classes..(bi + 1) * classes];
+        let mut argmax = 0usize;
+        for (c, &v) in row.iter().enumerate() {
+            if v > row[argmax] {
+                argmax = c;
+            }
+        }
+        if argmax == labels[bi] as usize {
+            correct += 1;
+        }
+    }
+    correct
+}
+
+// ---------------------------------------------------------------------
+// dense
+// ---------------------------------------------------------------------
+
 /// Fully-connected layer `y = W x + b` (`W: [out, in]` row-major).
+#[derive(Clone)]
 pub struct DenseLayer {
     pub in_dim: usize,
     pub out_dim: usize,
@@ -53,50 +233,59 @@ impl DenseLayer {
             saved_x: Vec::new(),
         }
     }
+
+    /// Flat workspace-gradient length (`[gw | gb]`).
+    pub fn grad_len(&self) -> usize {
+        self.w.len() + self.b.len()
+    }
+
+    /// Workspace forward: `&self`, output into a caller plane.
+    pub fn forward_ws(&self, x: &[f32], y: &mut [f32], batch: usize) {
+        dense_forward_kernel(&self.w, &self.b, self.in_dim, self.out_dim, x, y, batch);
+    }
+
+    /// Workspace backward: `x` is the input this chunk saw in forward,
+    /// `dx` must be pre-zeroed, `grad` is the flat `[gw | gb]` slice.
+    pub fn backward_ws(&self, x: &[f32], dy: &[f32], dx: &mut [f32], grad: &mut [f32], batch: usize) {
+        let (gw, gb) = grad.split_at_mut(self.w.len());
+        dense_backward_kernel(&self.w, self.in_dim, self.out_dim, x, dy, dx, gw, gb, batch);
+    }
+
+    /// Momentum-SGD update from an external flat `[gw | gb]` gradient
+    /// (the workspace-path counterpart of [`Layer::sgd_step`]; weight
+    /// decay applies to `w` only, matching the legacy path).
+    pub fn apply_grad(&mut self, grad: &[f32], lr: f32, momentum: f32, weight_decay: f32) {
+        let (gw, gb) = grad.split_at(self.w.len());
+        sgd_update(&mut self.w, &mut self.vw, gw, lr, momentum, weight_decay);
+        sgd_update(&mut self.b, &mut self.vb, gb, lr, momentum, 0.0);
+    }
 }
 
 impl Layer for DenseLayer {
     fn forward(&mut self, x: &[f32], batch: usize, train: bool) -> Vec<f32> {
         debug_assert_eq!(x.len(), batch * self.in_dim);
         if train {
-            self.saved_x = x.to_vec();
+            self.saved_x.clear();
+            self.saved_x.extend_from_slice(x);
         }
         let mut y = vec![0.0f32; batch * self.out_dim];
-        for bi in 0..batch {
-            let xr = &x[bi * self.in_dim..(bi + 1) * self.in_dim];
-            let yr = &mut y[bi * self.out_dim..(bi + 1) * self.out_dim];
-            for o in 0..self.out_dim {
-                let wr = &self.w[o * self.in_dim..(o + 1) * self.in_dim];
-                let mut acc = self.b[o];
-                for i in 0..self.in_dim {
-                    acc += wr[i] * xr[i];
-                }
-                yr[o] = acc;
-            }
-        }
+        dense_forward_kernel(&self.w, &self.b, self.in_dim, self.out_dim, x, &mut y, batch);
         y
     }
 
     fn backward(&mut self, dy: &[f32], batch: usize) -> Vec<f32> {
         let mut dx = vec![0.0f32; batch * self.in_dim];
-        for bi in 0..batch {
-            let xr = &self.saved_x[bi * self.in_dim..(bi + 1) * self.in_dim];
-            let dyr = &dy[bi * self.out_dim..(bi + 1) * self.out_dim];
-            let dxr = &mut dx[bi * self.in_dim..(bi + 1) * self.in_dim];
-            for o in 0..self.out_dim {
-                let g = dyr[o];
-                if g == 0.0 {
-                    continue;
-                }
-                self.gb[o] += g;
-                let wr = &self.w[o * self.in_dim..(o + 1) * self.in_dim];
-                let gwr = &mut self.gw[o * self.in_dim..(o + 1) * self.in_dim];
-                for i in 0..self.in_dim {
-                    gwr[i] += g * xr[i];
-                    dxr[i] += g * wr[i];
-                }
-            }
-        }
+        dense_backward_kernel(
+            &self.w,
+            self.in_dim,
+            self.out_dim,
+            &self.saved_x,
+            dy,
+            &mut dx,
+            &mut self.gw,
+            &mut self.gb,
+            batch,
+        );
         dx
     }
 
@@ -106,14 +295,8 @@ impl Layer for DenseLayer {
     }
 
     fn sgd_step(&mut self, lr: f32, momentum: f32, weight_decay: f32) {
-        for i in 0..self.w.len() {
-            self.vw[i] = momentum * self.vw[i] + self.gw[i] + weight_decay * self.w[i];
-            self.w[i] -= lr * self.vw[i];
-        }
-        for i in 0..self.b.len() {
-            self.vb[i] = momentum * self.vb[i] + self.gb[i];
-            self.b[i] -= lr * self.vb[i];
-        }
+        sgd_update(&mut self.w, &mut self.vw, &self.gw, lr, momentum, weight_decay);
+        sgd_update(&mut self.b, &mut self.vb, &self.gb, lr, momentum, 0.0);
     }
 
     fn param_count(&self) -> usize {
@@ -121,8 +304,13 @@ impl Layer for DenseLayer {
     }
 }
 
+// ---------------------------------------------------------------------
+// low-rank
+// ---------------------------------------------------------------------
+
 /// Low-rank dense `y = U (V x) + b` — the Table 1 "Low-rank" baseline
 /// (Denil et al.), `U: [out, k]`, `V: [k, in]`.
+#[derive(Clone)]
 pub struct LowRankLayer {
     v_layer: DenseLayer,
     u_layer: DenseLayer,
@@ -131,6 +319,57 @@ pub struct LowRankLayer {
 impl LowRankLayer {
     pub fn new(in_dim: usize, out_dim: usize, rank: usize, rng: &mut Rng) -> Self {
         LowRankLayer { v_layer: DenseLayer::new(in_dim, rank, rng), u_layer: DenseLayer::new(rank, out_dim, rng) }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.v_layer.out_dim
+    }
+
+    /// The two factors, for export through the unified op API.
+    pub fn factors(&self) -> (&DenseLayer, &DenseLayer) {
+        (&self.v_layer, &self.u_layer)
+    }
+
+    /// Mutable factor access (finite-difference tests perturb weights).
+    pub fn factors_mut(&mut self) -> (&mut DenseLayer, &mut DenseLayer) {
+        (&mut self.v_layer, &mut self.u_layer)
+    }
+
+    /// Flat workspace-gradient length (`[v | u]`, each `[gw | gb]`).
+    pub fn grad_len(&self) -> usize {
+        self.v_layer.grad_len() + self.u_layer.grad_len()
+    }
+
+    /// Workspace forward; `mid` is the caller's `[batch, rank]` plane for
+    /// the `V x` intermediate (needed again in backward).
+    pub fn forward_ws(&self, x: &[f32], mid: &mut [f32], y: &mut [f32], batch: usize) {
+        self.v_layer.forward_ws(x, mid, batch);
+        self.u_layer.forward_ws(mid, y, batch);
+    }
+
+    /// Workspace backward; `mid` is the plane forward filled, `dmid` and
+    /// `dx` must be pre-zeroed.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_ws(
+        &self,
+        x: &[f32],
+        mid: &[f32],
+        dy: &[f32],
+        dmid: &mut [f32],
+        dx: &mut [f32],
+        grad: &mut [f32],
+        batch: usize,
+    ) {
+        let (gv, gu) = grad.split_at_mut(self.v_layer.grad_len());
+        self.u_layer.backward_ws(mid, dy, dmid, gu, batch);
+        self.v_layer.backward_ws(x, dmid, dx, gv, batch);
+    }
+
+    /// Momentum-SGD update from an external flat `[v | u]` gradient.
+    pub fn apply_grad(&mut self, grad: &[f32], lr: f32, momentum: f32, weight_decay: f32) {
+        let (gv, gu) = grad.split_at(self.v_layer.grad_len());
+        self.v_layer.apply_grad(gv, lr, momentum, weight_decay);
+        self.u_layer.apply_grad(gu, lr, momentum, weight_decay);
     }
 }
 
@@ -156,7 +395,14 @@ impl Layer for LowRankLayer {
     }
 }
 
-/// Elementwise ReLU.
+// ---------------------------------------------------------------------
+// relu
+// ---------------------------------------------------------------------
+
+/// Elementwise ReLU. The workspace path is stateless (the mask is
+/// recomputed from the saved pre-activation plane); the legacy path
+/// keeps the boolean mask for convnet compatibility.
+#[derive(Clone)]
 pub struct ReluLayer {
     mask: Vec<bool>,
 }
@@ -190,29 +436,7 @@ impl Layer for ReluLayer {
 pub fn softmax_cross_entropy(logits: &[f32], labels: &[u8], batch: usize, classes: usize) -> (f32, Vec<f32>, usize) {
     debug_assert_eq!(logits.len(), batch * classes);
     let mut dl = vec![0.0f32; batch * classes];
-    let mut loss = 0.0f64;
-    let mut correct = 0usize;
-    for bi in 0..batch {
-        let row = &logits[bi * classes..(bi + 1) * classes];
-        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut denom = 0.0f32;
-        for &v in row {
-            denom += (v - max).exp();
-        }
-        let label = labels[bi] as usize;
-        let mut argmax = 0usize;
-        for (c, &v) in row.iter().enumerate() {
-            let p = (v - max).exp() / denom;
-            dl[bi * classes + c] = (p - if c == label { 1.0 } else { 0.0 }) / batch as f32;
-            if v > row[argmax] {
-                argmax = c;
-            }
-        }
-        if argmax == label {
-            correct += 1;
-        }
-        loss += -((row[label] - max) as f64 - (denom as f64).ln());
-    }
+    let (loss, correct) = softmax_ce_kernel(logits, labels, batch, classes, &mut dl, batch as f32);
     ((loss / batch as f64) as f32, dl, correct)
 }
 
@@ -265,6 +489,44 @@ mod tests {
     }
 
     #[test]
+    fn ws_path_matches_legacy_bitwise() {
+        // same kernels by construction; this pins the delegation.
+        let mut rng = Rng::new(11);
+        let mut l = DenseLayer::new(5, 4, &mut rng);
+        let batch = 3;
+        let mut x = vec![0.0f32; batch * 5];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let y_legacy = l.forward(&x, batch, true);
+        let mut y_ws = vec![0.0f32; batch * 4];
+        l.forward_ws(&x, &mut y_ws, batch);
+        assert_eq!(y_legacy, y_ws);
+        let dy: Vec<f32> = y_legacy.iter().map(|v| v * 0.3).collect();
+        l.zero_grad();
+        let dx_legacy = l.backward(&dy, batch);
+        let mut dx_ws = vec![0.0f32; batch * 5];
+        let mut g = vec![0.0f32; l.grad_len()];
+        l.backward_ws(&x, &dy, &mut dx_ws, &mut g, batch);
+        assert_eq!(dx_legacy, dx_ws);
+        assert_eq!(&g[..l.w.len()], &l.gw[..]);
+        assert_eq!(&g[l.w.len()..], &l.gb[..]);
+    }
+
+    #[test]
+    fn apply_grad_matches_sgd_step() {
+        let mut rng = Rng::new(12);
+        let mut a = DenseLayer::new(4, 3, &mut rng);
+        let mut b = DenseLayer::new(4, 3, &mut Rng::new(12));
+        let mut g = vec![0.0f32; a.grad_len()];
+        rng.fill_normal(&mut g, 0.0, 1.0);
+        a.gw.copy_from_slice(&g[..a.w.len()]);
+        a.gb.copy_from_slice(&g[a.w.len()..]);
+        a.sgd_step(0.05, 0.9, 1e-4);
+        b.apply_grad(&g, 0.05, 0.9, 1e-4);
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.b, b.b);
+    }
+
+    #[test]
     fn relu_masks_gradient() {
         let mut r = ReluLayer::new();
         let y = r.forward(&[-1.0, 2.0, 0.0, 3.0], 1, true);
@@ -306,6 +568,41 @@ mod tests {
         let logits = vec![2.0f32, 0.0, 0.0, 0.0, 3.0, 0.0];
         let (_, _, correct) = softmax_cross_entropy(&logits, &[0, 2], 2, 3);
         assert_eq!(correct, 1);
+        assert_eq!(count_correct(&logits, &[0, 2], 2, 3), 1);
+    }
+
+    #[test]
+    fn ce_kernel_chunks_sum_to_full_batch() {
+        // the property the parallel engine rests on: dl divided by the
+        // full batch size over chunks equals the full-batch dl, and loss
+        // sums are additive.
+        let mut rng = Rng::new(13);
+        let batch = 7;
+        let classes = 5;
+        let mut logits = vec![0.0f32; batch * classes];
+        rng.fill_normal(&mut logits, 0.0, 2.0);
+        let labels: Vec<u8> = (0..batch).map(|i| (i % classes) as u8).collect();
+        let mut dl_full = vec![0.0f32; batch * classes];
+        let denom = batch as f32;
+        let (l_full, c_full) = softmax_ce_kernel(&logits, &labels, batch, classes, &mut dl_full, denom);
+        let mut dl_chunks = vec![0.0f32; batch * classes];
+        let mut l_sum = 0.0f64;
+        let mut c_sum = 0usize;
+        for (b0, b) in [(0usize, 3usize), (3, 2), (5, 2)] {
+            let (l, c) = softmax_ce_kernel(
+                &logits[b0 * classes..(b0 + b) * classes],
+                &labels[b0..b0 + b],
+                b,
+                classes,
+                &mut dl_chunks[b0 * classes..(b0 + b) * classes],
+                denom,
+            );
+            l_sum += l;
+            c_sum += c;
+        }
+        assert_eq!(c_full, c_sum);
+        assert_eq!(dl_full, dl_chunks, "per-sample dl must not depend on chunking");
+        assert!((l_full - l_sum).abs() < 1e-12);
     }
 
     #[test]
@@ -313,6 +610,29 @@ mod tests {
         let mut rng = Rng::new(3);
         let l = LowRankLayer::new(100, 100, 4, &mut rng);
         assert_eq!(l.param_count(), 4 * 100 + 4 + 100 * 4 + 100);
+        assert_eq!(l.grad_len(), l.param_count());
+    }
+
+    #[test]
+    fn lowrank_ws_matches_legacy() {
+        let mut rng = Rng::new(14);
+        let mut l = LowRankLayer::new(6, 6, 3, &mut rng);
+        let batch = 2;
+        let mut x = vec![0.0f32; batch * 6];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let y_legacy = l.forward(&x, batch, true);
+        let mut mid = vec![0.0f32; batch * 3];
+        let mut y_ws = vec![0.0f32; batch * 6];
+        l.forward_ws(&x, &mut mid, &mut y_ws, batch);
+        assert_eq!(y_legacy, y_ws);
+        let dy: Vec<f32> = y_ws.iter().map(|v| v + 0.1).collect();
+        l.zero_grad();
+        let dx_legacy = l.backward(&dy, batch);
+        let mut dmid = vec![0.0f32; batch * 3];
+        let mut dx_ws = vec![0.0f32; batch * 6];
+        let mut g = vec![0.0f32; l.grad_len()];
+        l.backward_ws(&x, &mid, &dy, &mut dmid, &mut dx_ws, &mut g, batch);
+        assert_eq!(dx_legacy, dx_ws);
     }
 
     #[test]

@@ -3,10 +3,46 @@
 //! This is the apparatus for the paper's §4.2 experiments: the single
 //! hidden layer benchmark (Table 1) and the ResNet + BPBP insertion
 //! (Table 2). It is deliberately minimal — concrete layer structs with
-//! hand-derived backward passes and per-layer momentum-SGD state, not a
-//! general autograd — because the only models required are an MLP and a
-//! small residual CNN, and keeping backward passes explicit makes them
-//! testable against finite differences.
+//! hand-derived backward passes, not a general autograd — because the
+//! only models required are an MLP and a small residual CNN, and
+//! keeping backward passes explicit makes them testable against finite
+//! differences (`rust/tests/nn_gradcheck.rs`).
+//!
+//! ## Architecture: one kernel set, two surfaces
+//!
+//! Every Table 1 layer exposes its arithmetic twice, following the
+//! PR 3/PR 4 conventions used everywhere else in the crate:
+//!
+//! - the **legacy [`Layer`] trait** (`&mut self`, allocating,
+//!   internally-saved state) — the self-contained reference path, and
+//!   what the Table 2 convnet composes;
+//! - the **workspace path** (`*_ws` methods, `&self`): all activation
+//!   planes, stage saves, and gradient buffers live in a caller-owned
+//!   [`NnWorkspace`], so layers are thread-shareable and the hot loop
+//!   allocates nothing.
+//!
+//! The workspace path is what makes training parallel: [`MlpTrainer`]
+//! splits each minibatch into fixed-size chunks, fans them out over
+//! `std::thread::scope`, and reduces per-chunk gradients in chunk-index
+//! order — training runs are **bit-identical for every thread count**,
+//! and `T = 1` with one chunk reproduces the legacy step exactly (see
+//! `nn::workspace` for the determinism rule).
+//!
+//! Inference is non-mutating everywhere: [`CompressMlp::logits_ws`] /
+//! [`CompressMlp::evaluate`] take `&self` plus a workspace, matching the
+//! `LinearOp` convention, so evaluation can never perturb training
+//! state.
+//!
+//! ## Leaving the training world
+//!
+//! Trained structured layers export their linear part into the unified
+//! transform API: `ButterflyLayer → θ → Arc<dyn LinearOp>` (hardened
+//! gather tables + expanded twiddles), `CirculantLayer → h →
+//! circulant_op`, with biases riding in a
+//! [`LayerArtifact`](crate::runtime::artifacts::LayerArtifact). That is
+//! the bridge the `compress` CLI crosses: train under §4.2, then serve
+//! the compressed layer through `ServicePool`/`Router` like any
+//! closed-form transform.
 //!
 //! - [`layers`] — Dense, LowRank, ReLU, bias, softmax cross-entropy.
 //! - [`butterfly_layer`] — the BP/BPBP structured hidden layer (fixed
@@ -14,16 +50,21 @@
 //!   contribution as a drop-in module.
 //! - [`circulant`] — FFT-backed circulant (1-D convolution) layer, a
 //!   Table 1 baseline.
-//! - [`mlp`] — the Table 1 single-hidden-layer model.
-//! - [`convnet`] — the Table 2 compact residual CNN.
+//! - [`workspace`] — [`NnWorkspace`] + the chunk-parallel
+//!   [`MlpTrainer`].
+//! - [`mlp`] — the Table 1 single-hidden-layer model and
+//!   [`train_mlp`](mlp::train_mlp).
+//! - [`convnet`] — the Table 2 compact residual CNN (legacy path only).
 
 pub mod butterfly_layer;
 pub mod circulant;
 pub mod convnet;
 pub mod layers;
 pub mod mlp;
+pub mod workspace;
 
 pub use butterfly_layer::ButterflyLayer;
 pub use circulant::CirculantLayer;
 pub use layers::{softmax_cross_entropy, DenseLayer, Layer, LowRankLayer, ReluLayer};
-pub use mlp::{CompressMlp, HiddenKind, TrainReport};
+pub use mlp::{CompressMlp, HiddenKind, HiddenLayer, TrainReport};
+pub use workspace::{MlpTrainer, NnWorkspace};

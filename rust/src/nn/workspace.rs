@@ -1,0 +1,397 @@
+//! The `nn/` training engine: a reusable per-thread [`NnWorkspace`]
+//! (all activation/gradient planes of one model, grown once and reused
+//! forever) and the chunk-parallel [`MlpTrainer`] minibatch driver —
+//! the PR 3 `butterfly::workspace` patterns brought to the §4.2
+//! compression models.
+//!
+//! ## Why a workspace
+//!
+//! One legacy [`CompressMlp::train_step`] allocates every activation,
+//! every gradient plane, and the butterfly stage saves afresh — at
+//! Table 1 sizes that is megabytes of allocation traffic per step
+//! dwarfing the O(N log N) arithmetic of the structured hidden layers.
+//! An [`NnWorkspace`] owns all of it once: hidden/ReLU/logit activation
+//! planes, upstream-gradient planes, the butterfly imaginary plane +
+//! [`ModuleSaves`] slots + [`PermTables`], the low-rank mid planes, and
+//! the circulant FFT scratch. Steady state allocates nothing.
+//!
+//! ## Determinism rule for the parallel driver
+//!
+//! [`MlpTrainer::step`] splits each minibatch into fixed-size **chunks**
+//! (`chunk` samples; independent of the thread count), hands chunk `i`
+//! to thread `i mod T`, and keeps one gradient buffer and one
+//! `(loss, correct)` slot **per chunk**. After the scoped join, chunk
+//! buffers are reduced in **chunk-index order** — so the floating-point
+//! summation order is a pure function of `(batch, chunk)` and never of
+//! `T` or scheduling. Consequences, asserted in
+//! `tests/nn_compress.rs`:
+//!
+//! - a training run is **bit-identical for every thread count**
+//!   (`T ∈ {1, 2, 8}` produce the same `TrainReport`), not merely per-`T`
+//!   reproducible — stronger than the factorization engine's guarantee,
+//!   bought by per-chunk (not per-thread) gradient buffers;
+//! - with `chunk ≥ batch` the single chunk accumulates exactly like the
+//!   legacy path, so `T = 1` is bit-identical to
+//!   [`CompressMlp::train_step`];
+//! - the per-sample `dlogits` mean denominator is `B_full` (not the
+//!   chunk size), so chunk gradients sum to exactly the full-batch
+//!   gradient (see `softmax_ce_kernel`).
+//!
+//! The per-chunk gradient memory is `⌈B/chunk⌉ · grad_len` floats — at
+//! the paper's batch 50 and default chunk 8, seven buffers.
+//!
+//! [`CompressMlp::train_step`]: crate::nn::mlp::CompressMlp::train_step
+
+use crate::butterfly::module::ModuleSaves;
+use crate::butterfly::permutation::PermTables;
+use crate::nn::mlp::{CompressMlp, HiddenLayer};
+
+fn grow(v: &mut Vec<f32>, len: usize) {
+    if v.len() < len {
+        v.resize(len, 0.0);
+    }
+}
+
+/// Caller-owned scratch for one model's forward/backward hot path:
+/// every plane the chunk kernels touch, reused across chunks, steps,
+/// and epochs. One workspace serves any `(batch, model)` it is
+/// [`ensure`](NnWorkspace::ensure)d for; it carries no results between
+/// calls.
+#[derive(Default)]
+pub struct NnWorkspace {
+    /// Hidden pre-activation `[b, n]` (kept through backward — the ReLU
+    /// mask is recomputed from it).
+    pub(crate) h: Vec<f32>,
+    /// ReLU output `[b, n]`.
+    pub(crate) a: Vec<f32>,
+    /// Head output `[b, classes]`.
+    pub(crate) logits: Vec<f32>,
+    /// `d logits` `[b, classes]`.
+    pub(crate) dl: Vec<f32>,
+    /// `d relu-out` `[b, n]`.
+    pub(crate) da: Vec<f32>,
+    /// `d hidden-out` `[b, n]` (becomes the hidden layer's `dx` in place
+    /// on the butterfly path).
+    pub(crate) dh: Vec<f32>,
+    /// Input gradient `[b, n]` (computed and discarded — the hidden
+    /// layer is first).
+    pub(crate) dx: Vec<f32>,
+    /// Butterfly imaginary plane `[b, n]`.
+    pub(crate) im: Vec<f32>,
+    /// Butterfly imaginary-gradient plane `[b, n]`.
+    pub(crate) dimg: Vec<f32>,
+    /// Butterfly per-module stage saves (slot buffers reused per chunk).
+    pub(crate) saves: Vec<ModuleSaves>,
+    /// Permutation gather tables (function of `n` only).
+    pub(crate) tables: Option<PermTables>,
+    /// Butterfly blend / backward-`dx` scratch `[b, n]` each.
+    pub(crate) sr: Vec<f32>,
+    pub(crate) si: Vec<f32>,
+    /// Low-rank mid activations `[b, rank]`; circulant saved input
+    /// spectra `[b, 2n]`.
+    pub(crate) mid: Vec<f32>,
+    /// Low-rank mid gradient `[b, rank]`.
+    pub(crate) dmid: Vec<f32>,
+    /// Circulant per-sample FFT scratch (six `n`-planes).
+    pub(crate) cs: [Vec<f32>; 6],
+}
+
+impl NnWorkspace {
+    /// An empty workspace; planes grow on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Size every plane the model's chunk kernels will touch for a
+    /// `batch`-row chunk (idempotent; called by the model entry points,
+    /// public so callers can pre-warm a workspace off the hot path).
+    pub fn ensure(&mut self, model: &CompressMlp, batch: usize) {
+        let n = model.n;
+        let len = batch * n;
+        grow(&mut self.h, len);
+        grow(&mut self.a, len);
+        grow(&mut self.da, len);
+        grow(&mut self.dh, len);
+        grow(&mut self.dx, len);
+        grow(&mut self.logits, batch * model.classes);
+        grow(&mut self.dl, batch * model.classes);
+        match model.hidden() {
+            HiddenLayer::Dense(_) => {}
+            HiddenLayer::LowRank(l) => {
+                grow(&mut self.mid, batch * l.rank());
+                grow(&mut self.dmid, batch * l.rank());
+            }
+            HiddenLayer::Butterfly(_) => {
+                grow(&mut self.im, len);
+                grow(&mut self.dimg, len);
+                grow(&mut self.sr, len);
+                grow(&mut self.si, len);
+                if self.tables.as_ref().map_or(true, |t| t.n != n) {
+                    self.tables = Some(PermTables::new(n));
+                }
+            }
+            HiddenLayer::Circulant(_) => {
+                grow(&mut self.mid, batch * 2 * n);
+                for c in self.cs.iter_mut() {
+                    grow(c, n);
+                }
+            }
+        }
+    }
+}
+
+/// The chunk-parallel minibatch driver (see the module docs for the
+/// determinism rule). What persists is the *memory* — per-thread
+/// workspaces, per-chunk gradient buffers, the reduced model gradient —
+/// not the OS threads: each step runs a fresh `std::thread::scope`, the
+/// std-only way to lend `&model` to workers without `Arc`-ifying the
+/// training state (same trade as `butterfly::workspace::ParallelTrainer`).
+pub struct MlpTrainer {
+    threads: usize,
+    chunk: usize,
+    workspaces: Vec<NnWorkspace>,
+    /// `grads[t][k]` = flat model gradient of chunk `k·T + t` — indexed
+    /// back in chunk order during the reduction.
+    grads: Vec<Vec<Vec<f32>>>,
+    /// `(loss sum, correct)` per chunk, same indexing as `grads`.
+    parts: Vec<Vec<(f64, usize)>>,
+    /// The reduced full-batch gradient.
+    grad: Vec<f32>,
+}
+
+impl MlpTrainer {
+    /// `threads = 0` means all available cores. `chunk` is the fixed
+    /// chunk size (samples) — part of the floating-point summation
+    /// grouping, so changing it changes results at rounding level;
+    /// changing `threads` never does.
+    pub fn new(threads: usize, chunk: usize) -> Self {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        MlpTrainer {
+            threads,
+            chunk: chunk.max(1),
+            workspaces: (0..threads).map(|_| NnWorkspace::new()).collect(),
+            grads: (0..threads).map(|_| Vec::new()).collect(),
+            parts: (0..threads).map(|_| Vec::new()).collect(),
+            grad: Vec::new(),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    /// A workspace for model evaluation between steps (reuses thread 0's
+    /// planes — no extra memory).
+    pub fn eval_workspace(&mut self) -> &mut NnWorkspace {
+        &mut self.workspaces[0]
+    }
+
+    /// One data-parallel minibatch SGD step; returns
+    /// `(mean loss, correct)`. Bit-identical for any thread count; with
+    /// `chunk ≥ batch` also bit-identical to the legacy
+    /// `CompressMlp::train_step`.
+    pub fn step(
+        &mut self,
+        model: &mut CompressMlp,
+        x: &[f32],
+        y: &[u8],
+        lr: f32,
+        momentum: f32,
+        weight_decay: f32,
+    ) -> (f32, usize) {
+        let bsz = y.len();
+        let n = model.n;
+        assert_eq!(x.len(), bsz * n, "x must be [batch, n]");
+        assert!(bsz > 0, "empty minibatch");
+        let chunk = self.chunk.min(bsz);
+        let num_chunks = bsz.div_ceil(chunk);
+        let t = self.threads.min(num_chunks).max(1);
+        let glen = model.grad_len();
+        let denom = bsz as f32;
+        // size per-chunk buffers: thread ti owns chunks ti, ti+t, …
+        for ti in 0..t {
+            let local = (num_chunks - ti).div_ceil(t);
+            let gs = &mut self.grads[ti];
+            while gs.len() < local {
+                gs.push(Vec::new());
+            }
+            for g in gs.iter_mut().take(local) {
+                if g.len() != glen {
+                    g.clear();
+                    g.resize(glen, 0.0);
+                }
+            }
+            self.parts[ti].resize(local, (0.0, 0));
+        }
+        {
+            let model_ref: &CompressMlp = model;
+            if t == 1 {
+                // the serial path: same chunk sequence, no spawn/join
+                run_chunks(
+                    model_ref,
+                    x,
+                    y,
+                    ChunkPlan { bsz, n, chunk, t, num_chunks, denom, ti: 0 },
+                    &mut self.workspaces[0],
+                    &mut self.grads[0],
+                    &mut self.parts[0],
+                );
+            } else {
+                let workspaces = &mut self.workspaces[..t];
+                let grads = &mut self.grads[..t];
+                let parts = &mut self.parts[..t];
+                std::thread::scope(|scope| {
+                    for (ti, ((ws, gs), ps)) in
+                        workspaces.iter_mut().zip(grads.iter_mut()).zip(parts.iter_mut()).enumerate()
+                    {
+                        let plan = ChunkPlan { bsz, n, chunk, t, num_chunks, denom, ti };
+                        scope.spawn(move || run_chunks(model_ref, x, y, plan, ws, gs, ps));
+                    }
+                });
+            }
+        }
+        // fixed-order reduction: chunk 0, 1, …, C−1 — never thread order
+        if self.grad.len() != glen {
+            self.grad.clear();
+            self.grad.resize(glen, 0.0);
+        } else {
+            self.grad.fill(0.0);
+        }
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0usize;
+        for ci in 0..num_chunks {
+            let g = &self.grads[ci % t][ci / t];
+            for (acc, v) in self.grad.iter_mut().zip(g.iter()) {
+                *acc += *v;
+            }
+            let (l, c) = self.parts[ci % t][ci / t];
+            loss_sum += l;
+            correct += c;
+        }
+        model.apply_grad(&self.grad, lr, momentum, weight_decay);
+        ((loss_sum / bsz as f64) as f32, correct)
+    }
+}
+
+/// Everything a worker needs to know about its share of the minibatch
+/// (all `Copy` — the chunk→thread mapping is `ci ≡ ti (mod t)`).
+#[derive(Clone, Copy)]
+struct ChunkPlan {
+    bsz: usize,
+    n: usize,
+    chunk: usize,
+    t: usize,
+    num_chunks: usize,
+    /// Mean denominator for the CE gradient: the FULL batch size.
+    denom: f32,
+    ti: usize,
+}
+
+/// One worker's loop: its chunks in ascending chunk order, each into its
+/// own pre-zeroed gradient buffer and `(loss, correct)` slot.
+fn run_chunks(
+    model: &CompressMlp,
+    x: &[f32],
+    y: &[u8],
+    p: ChunkPlan,
+    ws: &mut NnWorkspace,
+    gs: &mut [Vec<f32>],
+    ps: &mut [(f64, usize)],
+) {
+    for (k, ci) in (p.ti..p.num_chunks).step_by(p.t).enumerate() {
+        let j0 = ci * p.chunk;
+        let b = p.chunk.min(p.bsz - j0);
+        let g = &mut gs[k];
+        g.fill(0.0);
+        ps[k] = model.chunk_loss_and_grad(&x[j0 * p.n..(j0 + b) * p.n], &y[j0..j0 + b], b, p.denom, ws, g);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::mlp::HiddenKind;
+    use crate::util::rng::Rng;
+
+    fn toy_batch(n: usize, bsz: usize, seed: u64) -> (Vec<f32>, Vec<u8>) {
+        let mut rng = Rng::new(seed);
+        let mut x = vec![0.0f32; bsz * n];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let y: Vec<u8> = (0..bsz).map(|i| (i % 4) as u8).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn single_chunk_step_matches_legacy_train_step_bitwise() {
+        for kind in [
+            HiddenKind::Dense,
+            HiddenKind::BpbpReal,
+            HiddenKind::BpbpComplex,
+            HiddenKind::LowRank { rank: 3 },
+            HiddenKind::Circulant,
+        ] {
+            let n = 16;
+            let bsz = 6;
+            let mut legacy = CompressMlp::new(kind, n, 4, &mut Rng::new(77));
+            let mut engine = CompressMlp::new(kind, n, 4, &mut Rng::new(77));
+            let (x, y) = toy_batch(n, bsz, 5);
+            let mut trainer = MlpTrainer::new(1, bsz); // one chunk = whole batch
+            for step in 0..3 {
+                let (l_legacy, c_legacy) = legacy.train_step(&x, &y, 0.05, 0.9, 1e-4);
+                let (l_ws, c_ws) = trainer.step(&mut engine, &x, &y, 0.05, 0.9, 1e-4);
+                assert_eq!(l_legacy.to_bits(), l_ws.to_bits(), "{} step {step} loss", kind.name());
+                assert_eq!(c_legacy, c_ws, "{} step {step} correct", kind.name());
+            }
+            // all parameters marched in lockstep
+            let mut wsa = NnWorkspace::new();
+            let mut wsb = NnWorkspace::new();
+            let la = legacy.logits_ws(&x, bsz, &mut wsa).to_vec();
+            let lb = engine.logits_ws(&x, bsz, &mut wsb).to_vec();
+            assert_eq!(la, lb, "{} final logits", kind.name());
+        }
+    }
+
+    #[test]
+    fn step_is_bitwise_identical_across_thread_counts() {
+        for kind in [HiddenKind::BpbpReal, HiddenKind::Dense, HiddenKind::Circulant] {
+            let n = 16;
+            let bsz = 23; // ragged: 8 + 8 + 7
+            let (x, y) = toy_batch(n, bsz, 9);
+            let mut reports: Vec<(u32, Vec<f32>)> = Vec::new();
+            for threads in [1usize, 2, 8] {
+                let mut model = CompressMlp::new(kind, n, 4, &mut Rng::new(3));
+                let mut trainer = MlpTrainer::new(threads, 8);
+                let mut last = 0.0f32;
+                for _ in 0..4 {
+                    let (l, _) = trainer.step(&mut model, &x, &y, 0.05, 0.9, 0.0);
+                    last = l;
+                }
+                let mut ws = NnWorkspace::new();
+                let logits = model.logits_ws(&x, bsz, &mut ws).to_vec();
+                reports.push((last.to_bits(), logits));
+            }
+            for r in &reports[1..] {
+                assert_eq!(reports[0].0, r.0, "{} loss differs across T", kind.name());
+                assert_eq!(reports[0].1, r.1, "{} logits differ across T", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn thread_count_exceeding_chunks_is_fine() {
+        let n = 8;
+        let (x, y) = toy_batch(n, 3, 2);
+        let mut model = CompressMlp::new(HiddenKind::Dense, n, 4, &mut Rng::new(1));
+        let mut trainer = MlpTrainer::new(8, 2); // 2 chunks, 8 threads
+        let (l, _) = trainer.step(&mut model, &x, &y, 0.05, 0.9, 0.0);
+        assert!(l.is_finite());
+    }
+}

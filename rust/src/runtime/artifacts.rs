@@ -1,10 +1,22 @@
-//! Artifact manifest: `artifacts/manifest.json`, written by
-//! `python/compile/aot.py`, read here. Each entry names one AOT-lowered
-//! XLA computation (HLO text) plus its input/output tensor specs so the
-//! Rust side can marshal literals without re-deriving shapes.
+//! On-disk artifacts.
+//!
+//! Two formats live here:
+//!
+//! - [`Manifest`] — `artifacts/manifest.json`, written by
+//!   `python/compile/aot.py`, read here. Each entry names one AOT-lowered
+//!   XLA computation (HLO text) plus its input/output tensor specs so the
+//!   Rust side can marshal literals without re-deriving shapes.
+//! - [`LayerArtifact`] — one **trained compressed layer** (the §4.2
+//!   workload's output): the flat θ interchange vector plus the bias and
+//!   the metadata needed to rebuild a serveable
+//!   `Arc<dyn LinearOp>` via [`to_op`](LayerArtifact::to_op). JSON with
+//!   shortest-round-trip floats, so save → load → apply is **bitwise**
+//!   identical to the in-memory export (property-tested in
+//!   `tests/nn_compress.rs`). The `compress` CLI writes these with
+//!   `--save` and `serve`s them back.
 
 use crate::util::error::{Context, Result};
-use crate::util::json::{self, Json};
+use crate::util::json::{self, obj, Json};
 use crate::{anyhow, bail};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -120,6 +132,110 @@ impl Manifest {
     }
 }
 
+// ---------------------------------------------------------------------
+// trained-layer artifacts
+// ---------------------------------------------------------------------
+
+/// A trained compressed layer on disk: θ (+ bias) with enough metadata
+/// to rebuild the serveable op. `kind` selects the rebuild path:
+/// `"bp"` (butterfly stack θ, `runtime::engine` interchange layout) or
+/// `"circulant"` (θ = the learned filter `h`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerArtifact {
+    pub name: String,
+    pub kind: String,
+    pub n: usize,
+    /// Stack depth for `"bp"`; 1 for `"circulant"`.
+    pub depth: usize,
+    pub theta: Vec<f32>,
+    pub bias: Vec<f32>,
+}
+
+fn f32_arr(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|&v| Json::Num(v as f64)).collect())
+}
+
+fn parse_f32_arr(j: &Json, what: &str) -> Result<Vec<f32>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("{what} is not an array"))?
+        .iter()
+        .map(|v| v.as_f64().map(|x| x as f32).ok_or_else(|| anyhow!("non-numeric entry in {what}")))
+        .collect()
+}
+
+impl LayerArtifact {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("layer_version", Json::Num(1.0)),
+            ("name", Json::Str(self.name.clone())),
+            ("kind", Json::Str(self.kind.clone())),
+            ("n", Json::Num(self.n as f64)),
+            ("depth", Json::Num(self.depth as f64)),
+            ("theta", f32_arr(&self.theta)),
+            ("bias", f32_arr(&self.bias)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<LayerArtifact> {
+        let version = j.get("layer_version").and_then(|v| v.as_usize()).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported layer artifact version {version}");
+        }
+        let get_str = |k: &str| -> Result<String> {
+            Ok(j.get(k).and_then(|v| v.as_str()).ok_or_else(|| anyhow!("missing '{k}'"))?.to_string())
+        };
+        let get_usize =
+            |k: &str| -> Result<usize> { j.get(k).and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("missing '{k}'")) };
+        Ok(LayerArtifact {
+            name: get_str("name")?,
+            kind: get_str("kind")?,
+            n: get_usize("n")?,
+            depth: get_usize("depth")?,
+            theta: parse_f32_arr(j.get("theta").unwrap_or(&Json::Null), "theta")?,
+            bias: parse_f32_arr(j.get("bias").unwrap_or(&Json::Null), "bias")?,
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<LayerArtifact> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        let j = json::parse(&text).map_err(|e| anyhow!("layer artifact JSON: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    /// Rebuild the serveable op (the linear part; the bias stays in the
+    /// artifact for the caller to apply where it belongs). Bit-identical
+    /// to the op the trained layer exported, because θ round-trips
+    /// losslessly and the hardening path is shared.
+    pub fn to_op(&self) -> Result<std::sync::Arc<dyn crate::transforms::op::LinearOp>> {
+        if self.bias.len() != self.n {
+            bail!("artifact '{}': bias has {} entries, want {}", self.name, self.bias.len(), self.n);
+        }
+        match self.kind.as_str() {
+            "bp" => {
+                let want = crate::runtime::engine::theta_len(self.n, self.depth);
+                if self.theta.len() != want {
+                    bail!("bp artifact '{}': theta has {} scalars, want {want}", self.name, self.theta.len());
+                }
+                Ok(crate::runtime::engine::unpack_op(self.name.clone(), self.n, self.depth, &self.theta))
+            }
+            "circulant" => {
+                if self.theta.len() != self.n {
+                    bail!("circulant artifact '{}': filter has {} taps, want {}", self.name, self.theta.len(), self.n);
+                }
+                Ok(crate::transforms::op::circulant_op(&self.theta))
+            }
+            other => bail!("unknown layer artifact kind '{other}'"),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,5 +273,49 @@ mod tests {
     fn missing_entry_is_error() {
         let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
         assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn layer_artifact_json_roundtrip_is_bitwise() {
+        let a = LayerArtifact {
+            name: "hidden".into(),
+            kind: "circulant".into(),
+            n: 4,
+            depth: 1,
+            // awkward floats: denormal-ish, negative zero, exact ints
+            theta: vec![0.1, -0.0, 3.0, f32::MIN_POSITIVE],
+            bias: vec![1.5e-7, -2.25, 0.0, 1.0],
+        };
+        let text = a.to_json().to_string_pretty();
+        let b = LayerArtifact::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.kind, b.kind);
+        for (x, y) in a.theta.iter().zip(&b.theta) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in a.bias.iter().zip(&b.bias) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn layer_artifact_rejects_bad_kind_and_lengths() {
+        let mut a = LayerArtifact {
+            name: "x".into(),
+            kind: "bp".into(),
+            n: 8,
+            depth: 1,
+            theta: vec![0.0; 3], // wrong length
+            bias: vec![0.0; 8],
+        };
+        assert!(a.to_op().is_err());
+        a.kind = "mystery".into();
+        assert!(a.to_op().is_err());
+        a.kind = "circulant".into();
+        a.theta = vec![0.0; 8];
+        assert!(a.to_op().is_ok());
+        // a truncated bias must not rebuild either
+        a.bias = vec![0.0; 7];
+        assert!(a.to_op().is_err());
     }
 }

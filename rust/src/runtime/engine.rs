@@ -88,10 +88,16 @@ pub fn unpack_stack(n: usize, depth: usize, theta: &[f32]) -> BpStack {
     BpStack::new(modules)
 }
 
-/// Unpack a flat theta straight into a serveable op: the adapter the
-/// coordinator→serving handoff uses (θ interchange → hardened
+/// Unpack a flat theta straight into a serveable op: the adapter both
+/// handoffs into serving use — coordinator→serving for factorization
+/// jobs, and trained-layer artifacts
+/// ([`LayerArtifact::to_op`](crate::runtime::artifacts::LayerArtifact::to_op),
+/// fed by `ButterflyLayer::export_theta`) for the §4.2 compression
+/// workload. θ interchange → hardened
 /// [`FastBp`](crate::butterfly::fast::FastBp) →
-/// [`LinearOp`](crate::transforms::op::LinearOp)).
+/// [`LinearOp`](crate::transforms::op::LinearOp); the layout is
+/// field-agnostic, and hardening decides real vs complex from the data,
+/// so a real-trained layer round-trips to a real single-plane op.
 pub fn unpack_op(
     name: impl Into<String>,
     n: usize,

@@ -5,7 +5,9 @@
 //! - [`tensor`] — a minimal host tensor (shape + f32 buffer) used as the
 //!   engine currency.
 //! - [`artifacts`] — the manifest (`artifacts/manifest.json`) describing
-//!   every lowered entrypoint: HLO-text path, input/output specs.
+//!   every lowered entrypoint (HLO-text path, input/output specs), and
+//!   [`LayerArtifact`]: a trained compressed layer (θ + bias) that
+//!   rebuilds a serveable op.
 //! - [`engine`] — the [`Engine`](engine::Engine) abstraction with two
 //!   implementations:
 //!   [`XlaEngine`](engine::XlaEngine) (PJRT CPU, compile-once-and-cache)
@@ -21,6 +23,6 @@ pub mod artifacts;
 pub mod engine;
 pub mod tensor;
 
-pub use artifacts::{EntrySpec, Manifest, TensorSpec};
+pub use artifacts::{EntrySpec, LayerArtifact, Manifest, TensorSpec};
 pub use engine::{Engine, NativeEngine, XlaEngine};
 pub use tensor::Tensor;

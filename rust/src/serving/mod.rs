@@ -1,9 +1,11 @@
 //! Batched transform serving (vLLM-router-style): any
 //! [`LinearOp`](crate::transforms::op::LinearOp) — a learned butterfly
 //! stack hardened to its O(N log N) fast multiply, a closed-form
-//! FFT/DCT/FWHT plan, a circulant, or the dense reference — is installed
-//! behind a router + dynamic batcher: bounded queue, batch window,
-//! backpressure.
+//! FFT/DCT/FWHT plan, a circulant, a **trained compressed hidden layer**
+//! exported from `nn/` (the `compress` workload's
+//! `ButterflyLayer`/`CirculantLayer` → θ → op path), or the dense
+//! reference — is installed behind a router + dynamic batcher: bounded
+//! queue, batch window, backpressure.
 //!
 //! This is the systems face of the paper's Figure 4 (right) claim: the
 //! learned BP multiply is fast enough to serve as a drop-in replacement

@@ -56,6 +56,7 @@ pub fn bit_reversal_table(n: usize) -> Vec<usize> {
 /// A reusable FFT plan: twiddle tables and the bit-reversal index table.
 /// Construction is O(N); each execution is O(N log N) with no allocation
 /// beyond the caller's buffers.
+#[derive(Clone)]
 pub struct FftPlan {
     pub n: usize,
     bitrev: Vec<usize>,

@@ -448,22 +448,23 @@ impl LinearOp for DenseOp {
             re.copy_from_slice(&yre[..len]);
             im.copy_from_slice(&yim[..len]);
         } else {
-            real_matvec_col(&self.m.re, n, re, &mut yre[..len], batch);
+            real_matvec_col(&self.m.re, n, n, re, &mut yre[..len], batch);
             re.copy_from_slice(&yre[..len]);
             if !im.is_empty() {
-                real_matvec_col(&self.m.re, n, im, &mut yre[..len], batch);
+                real_matvec_col(&self.m.re, n, n, im, &mut yre[..len], batch);
                 im.copy_from_slice(&yre[..len]);
             }
         }
     }
 }
 
-/// `y[i,b] = Σ_j a[i,j] · x[j,b]` on column-major lanes, batch innermost.
-fn real_matvec_col(a: &[f32], n: usize, x: &[f32], y: &mut [f32], batch: usize) {
-    for i in 0..n {
+/// `y[i,b] = Σ_j a[i,j] · x[j,b]` for a row-major `[rows, cols]` matrix
+/// on column-major lanes, batch innermost.
+fn real_matvec_col(a: &[f32], rows: usize, cols: usize, x: &[f32], y: &mut [f32], batch: usize) {
+    for i in 0..rows {
         let yrow = &mut y[i * batch..(i + 1) * batch];
         yrow.fill(0.0);
-        for (j, &aij) in a[i * n..(i + 1) * n].iter().enumerate() {
+        for (j, &aij) in a[i * cols..(i + 1) * cols].iter().enumerate() {
             if aij == 0.0 {
                 continue;
             }
@@ -512,6 +513,116 @@ pub fn dense_op(name: impl Into<String>, m: CMat) -> Arc<dyn LinearOp> {
     assert_eq!(m.rows, m.cols, "LinearOp is square");
     let complex = m.im.iter().any(|&v| v != 0.0);
     Arc::new(DenseOp { m, name: name.into(), complex })
+}
+
+// ---------------------------------------------------------------------------
+// Low-rank (two rectangular factors)
+// ---------------------------------------------------------------------------
+
+/// The factored low-rank map `y = U (V x)` applied as two rectangular
+/// matvecs — O(2·n·r) instead of the composed matrix's O(n²). This is
+/// the honest fast form of the Table 1 "Low-rank" baseline, so the
+/// compression workload's inference-speed comparison pits fast form
+/// against fast form. A real op: each plane transforms independently.
+struct LowRankOp {
+    /// `V: [rank, n]` row-major.
+    v: Vec<f32>,
+    /// `U: [n, rank]` row-major.
+    u: Vec<f32>,
+    n: usize,
+    rank: usize,
+    name: String,
+}
+
+impl LowRankOp {
+    fn apply_plane(&self, io: &mut [f32], batch: usize, ws: &mut OpWorkspace) {
+        let (mid, out) = ws.planes();
+        let mlen = self.rank * batch;
+        let olen = self.n * batch;
+        if mid.len() < mlen {
+            mid.resize(mlen, 0.0);
+        }
+        if out.len() < olen {
+            out.resize(olen, 0.0);
+        }
+        real_matvec_col(&self.v, self.rank, self.n, io, &mut mid[..mlen], batch);
+        real_matvec_col(&self.u, self.n, self.rank, &mid[..mlen], &mut out[..olen], batch);
+        io.copy_from_slice(&out[..olen]);
+    }
+}
+
+impl LinearOp for LowRankOp {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn is_complex(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn flops_per_apply(&self) -> usize {
+        4 * self.n * self.rank
+    }
+
+    fn apply_batch(&self, re: &mut [f32], im: &mut [f32], batch: usize, ws: &mut OpWorkspace) {
+        check_planes(self.n, false, re, im, batch);
+        if batch == 0 {
+            return;
+        }
+        self.apply_plane(re, batch, ws);
+        if !im.is_empty() {
+            self.apply_plane(im, batch, ws);
+        }
+    }
+}
+
+/// The rank-`rank` map `U·V` behind the unified API (`v: [rank, n]`,
+/// `u: [n, rank]`, both row-major) — how a trained
+/// [`LowRankLayer`](crate::nn::layers::LowRankLayer) exports its linear
+/// part.
+pub fn lowrank_op(name: impl Into<String>, n: usize, rank: usize, v: &[f32], u: &[f32]) -> Arc<dyn LinearOp> {
+    assert_eq!(v.len(), rank * n, "V must be [rank, n]");
+    assert_eq!(u.len(), n * rank, "U must be [n, rank]");
+    Arc::new(LowRankOp { v: v.to_vec(), u: u.to_vec(), n, rank, name: name.into() })
+}
+
+// ---------------------------------------------------------------------------
+// timing helper
+// ---------------------------------------------------------------------------
+
+/// Mean nanoseconds per vector of `op.apply_batch` at batch `b` over
+/// `iters` timed applies (plus one warm-up that sizes the workspace).
+/// One timing policy shared by the `compress` CLI and
+/// `benches/table1_compress.rs`, so their speed columns can never
+/// silently diverge. Inputs are seeded noise; complex ops get a full
+/// imaginary plane, real ops the single-plane path.
+pub fn bench_nanos_per_vec(op: &dyn LinearOp, b: usize, iters: usize) -> f64 {
+    let n = op.n();
+    let mut rng = Rng::new(0xBE7C);
+    // Pristine input restored before every apply: feeding an op its own
+    // output would decay/blow up by gain^iters and time denormal or
+    // inf/NaN arithmetic instead of the op.
+    let mut x = vec![0.0f32; b * n];
+    rng.fill_normal(&mut x, 0.0, 1.0);
+    let mut re = x.clone();
+    let mut im = if op.is_complex() { vec![0.0f32; b * n] } else { Vec::new() };
+    let mut ws = OpWorkspace::new();
+    op.apply_batch(&mut re, &mut im, b, &mut ws);
+    let iters = iters.max(1);
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        re.copy_from_slice(&x);
+        if !im.is_empty() {
+            im.fill(0.0);
+        }
+        op.apply_batch(&mut re, &mut im, b, &mut ws);
+        crate::util::timer::black_box(re[0]);
+    }
+    t0.elapsed().as_nanos() as f64 / (iters * b) as f64
 }
 
 // ---------------------------------------------------------------------------
@@ -625,5 +736,50 @@ mod tests {
         let op = fft_op(8);
         let mut re = vec![0.0f32; 8];
         op.apply_batch(&mut re, &mut [], 1, &mut OpWorkspace::new());
+    }
+
+    #[test]
+    fn lowrank_op_matches_composed_dense() {
+        let mut rng = Rng::new(17);
+        let n = 12;
+        let rank = 3;
+        let mut v = vec![0.0f32; rank * n];
+        let mut u = vec![0.0f32; n * rank];
+        rng.fill_normal(&mut v, 0.0, 1.0);
+        rng.fill_normal(&mut u, 0.0, 1.0);
+        let op = lowrank_op("lr", n, rank, &v, &u);
+        assert!(!op.is_complex());
+        assert_eq!(op.flops_per_apply(), 4 * n * rank);
+        // composed dense reference m = U·V
+        let mut m = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for k in 0..rank {
+                    acc += u[i * rank + k] as f64 * v[k * n + j] as f64;
+                }
+                m[i * n + j] = acc as f32;
+            }
+        }
+        let mut ws = OpWorkspace::new();
+        for batch in [1usize, 3, 8] {
+            let mut x = vec![0.0f32; batch * n];
+            rng.fill_normal(&mut x, 0.0, 1.0);
+            let mut got = x.clone();
+            op.apply_batch(&mut got, &mut [], batch, &mut ws);
+            for b in 0..batch {
+                for i in 0..n {
+                    let mut want = 0.0f64;
+                    for j in 0..n {
+                        want += m[i * n + j] as f64 * x[j * batch + b] as f64;
+                    }
+                    assert!(
+                        (got[i * batch + b] - want as f32).abs() < 1e-3,
+                        "B={batch} [{i},{b}]: {} vs {want}",
+                        got[i * batch + b]
+                    );
+                }
+            }
+        }
     }
 }

@@ -162,7 +162,10 @@ fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
 
 fn write_num(out: &mut String, n: f64) {
     if n.is_finite() {
-        if n.fract() == 0.0 && n.abs() < 9e15 {
+        // the integer fast-path must skip −0.0: `0` would drop the sign
+        // bit and break the bitwise float round-trip layer artifacts
+        // rely on (`{}` on f64 prints `-0` which parses back exactly)
+        if n.fract() == 0.0 && n.abs() < 9e15 && !(n == 0.0 && n.is_sign_negative()) {
             let _ = write!(out, "{}", n as i64);
         } else {
             let _ = write!(out, "{n}");

@@ -1,0 +1,344 @@
+//! The compression pipeline end to end, plus the property/determinism
+//! suites the ISSUE-5 satellites specify:
+//!
+//! - property: exported `LinearOp` ≡ `ButterflyLayer` forward (minus
+//!   bias) at batch {1, 3, 64}; linearity of the exported op; artifact
+//!   pack → save → load → apply round-trip is **bitwise**;
+//! - determinism: `train_mlp` with one seed yields an identical
+//!   `TrainReport` for `T ∈ {1, 2, 8}`, and the engine at `T = 1` with
+//!   one chunk per batch reproduces the legacy `train_step` loop
+//!   bit-for-bit;
+//! - regression: evaluation (`&self`) can never perturb training state;
+//! - end to end: a butterfly-hidden MLP trained on the multiband
+//!   Table-1 task beats the parameter-matched low-rank baseline, its
+//!   exported op passes `op_conformance`-style dense-reference parity,
+//!   and the op serves through a `ServicePool`.
+
+use butterfly::butterfly::params::Field;
+use butterfly::data::batcher::BatchIter;
+use butterfly::data::synth::{downsample, generate, DatasetKind};
+use butterfly::nn::mlp::{train_mlp, train_mlp_model, TrainConfig};
+use butterfly::nn::{ButterflyLayer, CirculantLayer, CompressMlp, HiddenKind, Layer, MlpTrainer, NnWorkspace};
+use butterfly::runtime::engine::unpack_stack;
+use butterfly::serving::{BatcherConfig, ServicePool};
+use butterfly::transforms::op::{LinearOp, OpWorkspace};
+use butterfly::util::quickcheck::{check_close, run_prop, PropConfig};
+use butterfly::util::rng::Rng;
+
+/// Row-major `[b, n]` → column-major `[n, b]`.
+fn to_cols(x: &[f32], batch: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; batch * n];
+    for b in 0..batch {
+        for i in 0..n {
+            c[i * batch + b] = x[b * n + i];
+        }
+    }
+    c
+}
+
+// ---------------------------------------------------------------------
+// property: exported op ≡ layer forward (minus bias)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_exported_op_matches_layer_forward() {
+    let cfg = PropConfig { cases: 24, ..Default::default() };
+    run_prop("export ≡ forward − bias", &cfg, |g| {
+        let n = g.pow2(3, 5); // 8..32
+        let depth = *g.choose(&[1usize, 2]);
+        let field = if g.bool() { Field::Complex } else { Field::Real };
+        let batch = *g.choose(&[1usize, 3, 64]);
+        let mut rng = Rng::new(g.rng.next_u64());
+        let mut layer = ButterflyLayer::new(n, depth, field, &mut rng);
+        rng.fill_normal(&mut layer.bias, 0.0, 0.5);
+        let x = g.vec_normal(batch * n);
+        // layer forward (legacy eval path)
+        let mut lyr = layer.forward(&x, batch, false);
+        for bi in 0..batch {
+            for i in 0..n {
+                lyr[bi * n + i] -= layer.bias[i];
+            }
+        }
+        // exported op on column-major planes
+        let op = layer.export_op("prop");
+        let mut re = to_cols(&x, batch, n);
+        let mut im = vec![0.0f32; batch * n];
+        let mut ws = OpWorkspace::new();
+        op.apply_batch(&mut re, &mut im, batch, &mut ws);
+        let want = to_cols(&lyr, batch, n);
+        check_close(&re, &want, 1e-5, 1e-4)
+    });
+}
+
+#[test]
+fn prop_exported_op_is_linear() {
+    let cfg = PropConfig { cases: 24, ..Default::default() };
+    run_prop("export linearity", &cfg, |g| {
+        let n = g.pow2(3, 5);
+        let field = if g.bool() { Field::Complex } else { Field::Real };
+        let mut rng = Rng::new(g.rng.next_u64());
+        let layer = ButterflyLayer::new(n, 2, field, &mut rng);
+        let op = layer.export_op("lin");
+        let a = 0.5 + g.f32_in(1.0).abs();
+        let x = g.vec_normal(n);
+        let y = g.vec_normal(n);
+        let mut ws = OpWorkspace::new();
+        let apply = |v: &[f32], ws: &mut OpWorkspace| -> (Vec<f32>, Vec<f32>) {
+            let mut re = v.to_vec();
+            let mut im = vec![0.0f32; n];
+            op.apply_batch(&mut re, &mut im, 1, ws);
+            (re, im)
+        };
+        // op(a·x + y)
+        let mixed: Vec<f32> = x.iter().zip(&y).map(|(&u, &v)| a * u + v).collect();
+        let (sre, sim) = apply(&mixed, &mut ws);
+        // a·op(x) + op(y)
+        let (xre, xim) = apply(&x, &mut ws);
+        let (yre, yim) = apply(&y, &mut ws);
+        let wre: Vec<f32> = xre.iter().zip(&yre).map(|(&u, &v)| a * u + v).collect();
+        let wim: Vec<f32> = xim.iter().zip(&yim).map(|(&u, &v)| a * u + v).collect();
+        check_close(&sre, &wre, 1e-4, 1e-3)?;
+        check_close(&sim, &wim, 1e-4, 1e-3)
+    });
+}
+
+#[test]
+fn prop_artifact_roundtrip_is_bitwise() {
+    let dir = std::env::temp_dir();
+    let cfg = PropConfig { cases: 12, ..Default::default() };
+    let mut case = 0usize;
+    run_prop("artifact round-trip", &cfg, |g| {
+        case += 1;
+        let n = g.pow2(3, 5);
+        let mut rng = Rng::new(g.rng.next_u64());
+        let batch = *g.choose(&[1usize, 3, 64]);
+        let x = g.vec_normal(batch * n);
+        // alternate butterfly / circulant artifacts
+        let (direct, art) = if g.bool() {
+            let field = if g.bool() { Field::Complex } else { Field::Real };
+            let mut layer = ButterflyLayer::new(n, 2, field, &mut rng);
+            rng.fill_normal(&mut layer.bias, 0.0, 0.5);
+            (layer.export_op("rt"), layer.export_artifact("rt"))
+        } else {
+            let layer = CirculantLayer::new(n, &mut rng);
+            (layer.export_op(), layer.export_artifact("rt"))
+        };
+        // pid-unique names: two concurrent runs of this suite (debug +
+        // release, or two checkouts sharing /tmp) must not race
+        let path = dir.join(format!("butterfly-layer-rt-{}-{case}.json", std::process::id()));
+        art.save(&path).map_err(|e| e.to_string())?;
+        let loaded = butterfly::runtime::artifacts::LayerArtifact::load(&path).map_err(|e| e.to_string())?;
+        let _ = std::fs::remove_file(&path);
+        if loaded != art {
+            return Err("artifact changed across save/load".into());
+        }
+        let rebuilt = loaded.to_op().map_err(|e| e.to_string())?;
+        if rebuilt.is_complex() != direct.is_complex() || rebuilt.n() != direct.n() {
+            return Err("rebuilt op metadata differs".into());
+        }
+        let mut ws = OpWorkspace::new();
+        let mut re_a = to_cols(&x, batch, n);
+        let mut re_b = re_a.clone();
+        let (mut im_a, mut im_b) = if direct.is_complex() {
+            (vec![0.0f32; batch * n], vec![0.0f32; batch * n])
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        direct.apply_batch(&mut re_a, &mut im_a, batch, &mut ws);
+        rebuilt.apply_batch(&mut re_b, &mut im_b, batch, &mut ws);
+        for (i, (a, b)) in re_a.iter().zip(&re_b).chain(im_a.iter().zip(&im_b)).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("round-trip not bitwise at {i}: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// determinism
+// ---------------------------------------------------------------------
+
+fn small_task() -> (butterfly::data::batcher::Dataset, butterfly::data::batcher::Dataset) {
+    let train = downsample(&generate(DatasetKind::CifarGray, 120, 5), 64);
+    let test = downsample(&generate(DatasetKind::CifarGray, 40, 6), 64);
+    (train, test)
+}
+
+#[test]
+fn train_report_is_identical_across_thread_counts() {
+    let (train, test) = small_task();
+    for kind in [HiddenKind::BpbpReal, HiddenKind::Circulant, HiddenKind::LowRank { rank: 4 }] {
+        let mut reports = Vec::new();
+        for threads in [1usize, 2, 8] {
+            let cfg = TrainConfig { epochs: 2, batch: 20, lr: 0.02, threads, chunk: 8, ..Default::default() };
+            reports.push(train_mlp(kind, &train, &test, &cfg));
+        }
+        assert_eq!(reports[0], reports[1], "{}: T=1 vs T=2", kind.name());
+        assert_eq!(reports[0], reports[2], "{}: T=1 vs T=8", kind.name());
+    }
+}
+
+#[test]
+fn engine_t1_single_chunk_matches_legacy_loop_bitwise() {
+    let (train, test) = small_task();
+    let kind = HiddenKind::BpbpReal;
+    let cfg = TrainConfig { epochs: 2, batch: 20, lr: 0.02, threads: 1, chunk: 20, ..Default::default() };
+    let engine_report = train_mlp(kind, &train, &test, &cfg);
+
+    // replicate train_mlp by hand on the legacy &mut train_step path:
+    // identical rng stream, split, batching, and evaluation
+    let mut rng = Rng::new(cfg.seed);
+    let split = train.split(cfg.val_frac);
+    let mut model = CompressMlp::new(kind, train.dim, train.classes, &mut rng);
+    let mut ws = NnWorkspace::new();
+    for epoch in 0..cfg.epochs {
+        let mut iter = BatchIter::new(&split.train, cfg.batch, &mut rng);
+        let mut total = 0.0f64;
+        let mut batches = 0usize;
+        while let Some((x, y)) = iter.next_batch() {
+            let (loss, _) = model.train_step(&x, &y, cfg.lr, cfg.momentum, cfg.weight_decay);
+            total += loss as f64;
+            batches += 1;
+        }
+        let legacy_loss = (total / batches as f64) as f32;
+        let got = engine_report.epochs[epoch].train_loss;
+        assert_eq!(legacy_loss.to_bits(), got.to_bits(), "epoch {epoch} loss: {legacy_loss} vs {got}");
+        let legacy_val = model.evaluate(&split.holdout, cfg.batch, &mut ws);
+        assert_eq!(legacy_val, engine_report.epochs[epoch].val_acc, "epoch {epoch} val acc");
+    }
+}
+
+#[test]
+fn evaluation_never_perturbs_training() {
+    let (train, _) = small_task();
+    let probe = downsample(&generate(DatasetKind::CifarGray, 30, 7), 64);
+    let mk = || CompressMlp::new(HiddenKind::BpbpReal, 64, 10, &mut Rng::new(11));
+    let mut plain = mk();
+    let mut evaluated = mk();
+    let mut trainer_a = MlpTrainer::new(2, 8);
+    let mut trainer_b = MlpTrainer::new(2, 8);
+    let mut ws = NnWorkspace::new();
+    let x = &train.x[..20 * 64];
+    let y = &train.y[..20];
+    for _ in 0..4 {
+        let (la, _) = trainer_a.step(&mut plain, x, y, 0.02, 0.9, 0.0);
+        // interleave evaluations on the other model — must change nothing
+        let _ = evaluated.evaluate(&probe, 7, &mut ws);
+        let (lb, _) = trainer_b.step(&mut evaluated, x, y, 0.02, 0.9, 0.0);
+        let _ = evaluated.evaluate(&probe, 30, &mut ws);
+        assert_eq!(la.to_bits(), lb.to_bits(), "losses diverged after an eval");
+    }
+    let la = plain.logits_ws(x, 20, &mut ws).to_vec();
+    let lb = evaluated.logits_ws(x, 20, &mut ws).to_vec();
+    assert_eq!(la, lb, "evaluation perturbed training state");
+}
+
+// ---------------------------------------------------------------------
+// end to end: the §4.2 compression claim + serving
+// ---------------------------------------------------------------------
+
+#[test]
+fn compress_end_to_end_beats_matched_lowrank_and_serves() {
+    let dim = 256;
+    let train = downsample(&generate(DatasetKind::Multiband, 400, 42), dim);
+    let test = downsample(&generate(DatasetKind::Multiband, 200, 43), dim);
+    let cfg = TrainConfig { epochs: 12, batch: 25, lr: 0.03, threads: 2, chunk: 8, ..Default::default() };
+
+    let rank = HiddenKind::parameter_matched_rank(dim);
+    let (bp_report, bp_model) = train_mlp_model(HiddenKind::BpbpReal, &train, &test, &cfg);
+    let lr_report = train_mlp(HiddenKind::LowRank { rank }, &train, &test, &cfg);
+
+    // parameter parity (the fixed-budget comparison is fair)
+    let hi = bp_report.hidden_params.max(lr_report.hidden_params) as f64;
+    let lo = bp_report.hidden_params.min(lr_report.hidden_params) as f64;
+    assert!(hi / lo < 1.05, "budgets differ: bp {} vs low-rank {}", bp_report.hidden_params, lr_report.hidden_params);
+
+    // §4.2's claim at fixed budget: butterfly structure wins on a task
+    // whose signal spans many frequency channels
+    assert!(
+        bp_report.test_acc > lr_report.test_acc,
+        "butterfly {:.3} must beat parameter-matched low-rank-{rank} {:.3}",
+        bp_report.test_acc,
+        lr_report.test_acc
+    );
+    assert!(bp_report.test_acc > 0.3, "butterfly acc {:.3} too weak to mean anything", bp_report.test_acc);
+
+    // export: op ≡ dense reconstruction of the trained stack
+    // (op_conformance-style dense-reference parity at batch {1, 3, 64})
+    let op = bp_model.export_hidden_op();
+    assert!(!op.is_complex(), "real-field export must be a real op");
+    assert_eq!(op.n(), dim);
+    let art = bp_model.export_hidden_artifact("e2e").expect("butterfly artifact");
+    let dense = unpack_stack(dim, art.depth, &art.theta).to_matrix();
+    let mut ws = OpWorkspace::new();
+    let mut rng = Rng::new(99);
+    for batch in [1usize, 3, 64] {
+        let mut x = vec![0.0f32; batch * dim];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let mut re = x.clone();
+        op.apply_batch(&mut re, &mut [], batch, &mut ws);
+        // matvec_batch_planar is row-major [batch, n]
+        let mut rows = vec![0.0f32; batch * dim];
+        for b in 0..batch {
+            for i in 0..dim {
+                rows[b * dim + i] = x[i * batch + b];
+            }
+        }
+        let zeros = vec![0.0f32; batch * dim];
+        let (want_re, _) = dense.matvec_batch_planar(&rows, &zeros, batch);
+        for b in 0..batch {
+            for i in 0..dim {
+                let got = re[i * batch + b];
+                let want = want_re[b * dim + i];
+                assert!(
+                    (got - want).abs() < 1e-3 + 1e-3 * want.abs(),
+                    "B={batch} [{i},{b}]: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    // serve the compressed layer through a worker pool and check the
+    // answers against the dense reconstruction
+    let svc = ServicePool::spawn("compressed", op, 2, BatcherConfig::default());
+    let h = svc.handle();
+    assert!(!h.is_complex());
+    let clients: Vec<_> = (0..8)
+        .map(|k| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(500 + k);
+                let mut x = vec![0.0f32; dim];
+                rng.fill_normal(&mut x, 0.0, 1.0);
+                (x.clone(), h.call_real(x).unwrap())
+            })
+        })
+        .collect();
+    let zeros = vec![0.0f32; dim];
+    for c in clients {
+        let (x, got) = c.join().unwrap();
+        let (want, _) = dense.matvec_batch_planar(&x, &zeros, 1);
+        for i in 0..dim {
+            assert!((got[i] - want[i]).abs() < 1e-3 + 1e-3 * want[i].abs(), "serve [{i}]");
+        }
+    }
+    let stats = svc.shutdown();
+    assert_eq!(stats.served, 8);
+    assert_eq!(stats.bad_request, 0);
+}
+
+// ---------------------------------------------------------------------
+// column-major serving layout helper is itself exercised above; pin the
+// low-rank export path too (flops story for the CLI table)
+// ---------------------------------------------------------------------
+
+#[test]
+fn lowrank_export_is_fast_form() {
+    let mut rng = Rng::new(21);
+    let model = CompressMlp::new(HiddenKind::LowRank { rank: 4 }, 64, 10, &mut rng);
+    let op = model.export_hidden_op();
+    assert_eq!(op.flops_per_apply(), 4 * 64 * 4, "low-rank op must be O(n·r), not O(n²)");
+    let dense = CompressMlp::new(HiddenKind::Dense, 64, 10, &mut rng).export_hidden_op();
+    assert!(op.flops_per_apply() < dense.flops_per_apply() / 4);
+}

@@ -1,0 +1,346 @@
+//! Finite-difference gradient checks for every `nn/` layer, run against
+//! the workspace (`*_ws`) kernels — the same kernels the legacy `Layer`
+//! trait delegates to, so one sweep covers both surfaces.
+//!
+//! Method: central differences on a quadratic objective
+//! `L = Σ y² / 2` (f64-accumulated). Every layer here is *linear* in
+//! each individual parameter and in the input, so `L` is exactly
+//! quadratic along any single coordinate and the central difference has
+//! **zero truncation error** — the only discrepancy is f32 forward
+//! rounding, which the tolerance `2e-3 · (1 + |∂|)` dominates by a wide
+//! margin at these sizes. The softmax-CE head (not quadratic) gets its
+//! own check at a smaller step. All seeds fixed.
+
+use butterfly::butterfly::params::Field;
+use butterfly::butterfly::permutation::PermTables;
+use butterfly::nn::layers::softmax_cross_entropy;
+use butterfly::nn::{ButterflyLayer, CirculantLayer, DenseLayer, Layer, LowRankLayer, ReluLayer};
+use butterfly::util::rng::Rng;
+
+const EPS: f32 = 1e-2;
+
+fn quad_loss(y: &[f32]) -> f64 {
+    y.iter().map(|&v| (v as f64) * (v as f64) / 2.0).sum()
+}
+
+fn check(label: &str, fd: f32, an: f32) {
+    let tol = 2e-3 * (1.0 + fd.abs().max(an.abs()));
+    assert!((fd - an).abs() < tol, "{label}: fd {fd} vs analytic {an} (tol {tol})");
+}
+
+// ---------------------------------------------------------------------
+// dense (weights, bias, input)
+// ---------------------------------------------------------------------
+
+#[test]
+fn dense_ws_gradcheck() {
+    let mut rng = Rng::new(101);
+    let (in_dim, out_dim, batch) = (6, 5, 3);
+    let mut l = DenseLayer::new(in_dim, out_dim, &mut rng);
+    let mut x = vec![0.0f32; batch * in_dim];
+    rng.fill_normal(&mut x, 0.0, 0.7);
+
+    let loss = |l: &DenseLayer, x: &[f32]| -> f64 {
+        let mut y = vec![0.0f32; batch * out_dim];
+        l.forward_ws(x, &mut y, batch);
+        quad_loss(&y)
+    };
+    let mut y = vec![0.0f32; batch * out_dim];
+    l.forward_ws(&x, &mut y, batch);
+    let dy = y.clone(); // dL/dy = y for the quadratic objective
+    let mut dx = vec![0.0f32; batch * in_dim];
+    let mut g = vec![0.0f32; l.grad_len()];
+    l.backward_ws(&x, &dy, &mut dx, &mut g, batch);
+
+    for i in 0..in_dim * out_dim {
+        let o = l.w[i];
+        l.w[i] = o + EPS;
+        let lp = loss(&l, &x);
+        l.w[i] = o - EPS;
+        let lm = loss(&l, &x);
+        l.w[i] = o;
+        check(&format!("dense w[{i}]"), ((lp - lm) / (2.0 * EPS as f64)) as f32, g[i]);
+    }
+    for i in 0..out_dim {
+        let o = l.b[i];
+        l.b[i] = o + EPS;
+        let lp = loss(&l, &x);
+        l.b[i] = o - EPS;
+        let lm = loss(&l, &x);
+        l.b[i] = o;
+        check(&format!("dense b[{i}]"), ((lp - lm) / (2.0 * EPS as f64)) as f32, g[in_dim * out_dim + i]);
+    }
+    for i in 0..x.len() {
+        let o = x[i];
+        x[i] = o + EPS;
+        let lp = loss(&l, &x);
+        x[i] = o - EPS;
+        let lm = loss(&l, &x);
+        x[i] = o;
+        check(&format!("dense x[{i}]"), ((lp - lm) / (2.0 * EPS as f64)) as f32, dx[i]);
+    }
+}
+
+// ---------------------------------------------------------------------
+// low-rank (both factors, input)
+// ---------------------------------------------------------------------
+
+#[test]
+fn lowrank_ws_gradcheck() {
+    let mut rng = Rng::new(102);
+    let (n, rank, batch) = (6, 2, 3);
+    let mut l = LowRankLayer::new(n, n, rank, &mut rng);
+    let mut x = vec![0.0f32; batch * n];
+    rng.fill_normal(&mut x, 0.0, 0.7);
+
+    let loss = |l: &LowRankLayer, x: &[f32]| -> f64 {
+        let mut mid = vec![0.0f32; batch * rank];
+        let mut y = vec![0.0f32; batch * n];
+        l.forward_ws(x, &mut mid, &mut y, batch);
+        quad_loss(&y)
+    };
+    let mut mid = vec![0.0f32; batch * rank];
+    let mut y = vec![0.0f32; batch * n];
+    l.forward_ws(&x, &mut mid, &mut y, batch);
+    let dy = y.clone();
+    let mut dmid = vec![0.0f32; batch * rank];
+    let mut dx = vec![0.0f32; batch * n];
+    let mut g = vec![0.0f32; l.grad_len()];
+    l.backward_ws(&x, &mid, &dy, &mut dmid, &mut dx, &mut g, batch);
+
+    let v_grad_len = l.factors().0.grad_len();
+    // V weights sit at the head of the flat gradient, U weights after
+    for i in (0..rank * n).step_by(2) {
+        let o = l.factors().0.w[i];
+        l.factors_mut().0.w[i] = o + EPS;
+        let lp = loss(&l, &x);
+        l.factors_mut().0.w[i] = o - EPS;
+        let lm = loss(&l, &x);
+        l.factors_mut().0.w[i] = o;
+        check(&format!("lowrank v[{i}]"), ((lp - lm) / (2.0 * EPS as f64)) as f32, g[i]);
+    }
+    for i in (0..n * rank).step_by(2) {
+        let o = l.factors().1.w[i];
+        l.factors_mut().1.w[i] = o + EPS;
+        let lp = loss(&l, &x);
+        l.factors_mut().1.w[i] = o - EPS;
+        let lm = loss(&l, &x);
+        l.factors_mut().1.w[i] = o;
+        check(&format!("lowrank u[{i}]"), ((lp - lm) / (2.0 * EPS as f64)) as f32, g[v_grad_len + i]);
+    }
+    for i in 0..x.len() {
+        let o = x[i];
+        x[i] = o + EPS;
+        let lp = loss(&l, &x);
+        x[i] = o - EPS;
+        let lm = loss(&l, &x);
+        x[i] = o;
+        check(&format!("lowrank x[{i}]"), ((lp - lm) / (2.0 * EPS as f64)) as f32, dx[i]);
+    }
+}
+
+// ---------------------------------------------------------------------
+// ReLU (input gradient through the legacy path; no parameters)
+// ---------------------------------------------------------------------
+
+#[test]
+fn relu_gradcheck_away_from_kink() {
+    let mut rng = Rng::new(103);
+    let mut r = ReluLayer::new();
+    // keep every coordinate at least 10·EPS from the kink
+    let x: Vec<f32> = (0..12)
+        .map(|_| {
+            let v = rng.normal_f32(0.0, 1.0);
+            v + v.signum() * 0.2
+        })
+        .collect();
+    let y = r.forward(&x, 1, true);
+    let dy = y.clone();
+    let dx = r.backward(&dy, 1);
+    for i in 0..x.len() {
+        let mut xp = x.clone();
+        xp[i] += EPS;
+        let lp = quad_loss(&r.forward(&xp, 1, false));
+        xp[i] -= 2.0 * EPS;
+        let lm = quad_loss(&r.forward(&xp, 1, false));
+        check(&format!("relu x[{i}]"), ((lp - lm) / (2.0 * EPS as f64)) as f32, dx[i]);
+    }
+}
+
+// ---------------------------------------------------------------------
+// softmax cross-entropy (logit gradient)
+// ---------------------------------------------------------------------
+
+#[test]
+fn softmax_ce_gradcheck() {
+    let mut rng = Rng::new(104);
+    let (batch, classes) = (3, 5);
+    let mut logits = vec![0.0f32; batch * classes];
+    rng.fill_normal(&mut logits, 0.0, 1.5);
+    let labels: Vec<u8> = (0..batch).map(|i| ((i * 2) % classes) as u8).collect();
+    let (_, dl, _) = softmax_cross_entropy(&logits, &labels, batch, classes);
+    let eps = 1e-3f32;
+    for i in 0..logits.len() {
+        let o = logits[i];
+        logits[i] = o + eps;
+        let (lp, _, _) = softmax_cross_entropy(&logits, &labels, batch, classes);
+        logits[i] = o - eps;
+        let (lm, _, _) = softmax_cross_entropy(&logits, &labels, batch, classes);
+        logits[i] = o;
+        check(&format!("softmax logit[{i}]"), (lp - lm) / (2.0 * eps), dl[i]);
+    }
+}
+
+// ---------------------------------------------------------------------
+// butterfly (real + complex, depth 1 and 2; twiddles, bias, input)
+// ---------------------------------------------------------------------
+
+fn butterfly_gradcheck(field: Field, depth: usize, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let n = 8;
+    let batch = 2;
+    let mut layer = ButterflyLayer::new(n, depth, field, &mut rng);
+    rng.fill_normal(&mut layer.bias, 0.0, 0.3);
+    let mut x = vec![0.0f32; batch * n];
+    rng.fill_normal(&mut x, 0.0, 0.7);
+    let tables = PermTables::new(n);
+    let len = batch * n;
+
+    let loss = |layer: &ButterflyLayer, x: &[f32]| -> f64 {
+        let mut y = vec![0.0f32; len];
+        let mut im = vec![0.0f32; len];
+        let (mut sr, mut si) = (vec![0.0f32; len], vec![0.0f32; len]);
+        layer.infer_ws(x, &mut y, &mut im, batch, &tables, &mut sr, &mut si);
+        quad_loss(&y)
+    };
+
+    // analytic gradients through the workspace training path
+    let mut y = vec![0.0f32; len];
+    let mut im = vec![0.0f32; len];
+    let (mut sr, mut si) = (vec![0.0f32; len], vec![0.0f32; len]);
+    let mut saves = Vec::new();
+    layer.forward_train_ws(&x, &mut y, &mut im, batch, &mut saves, &tables, &mut sr, &mut si);
+    let mut dy = y.clone();
+    let mut dimg = vec![0.0f32; len];
+    let mut g = vec![0.0f32; layer.grad_len()];
+    layer.backward_ws(&mut dy, &mut dimg, batch, &saves, &tables, &mut sr, &mut si, &mut g);
+
+    let tag = format!("bp-{:?}-d{depth}", field);
+    let mut off = 0usize;
+    for mi in 0..depth {
+        let mask = layer.stack.modules[mi].params.trainable_mask();
+        let plen = layer.stack.modules[mi].params.data.len();
+        for i in (0..plen).step_by(5) {
+            if mask[i] == 0.0 {
+                continue;
+            }
+            let o = layer.stack.modules[mi].params.data[i];
+            layer.stack.modules[mi].params.data[i] = o + EPS;
+            let lp = loss(&layer, &x);
+            layer.stack.modules[mi].params.data[i] = o - EPS;
+            let lm = loss(&layer, &x);
+            layer.stack.modules[mi].params.data[i] = o;
+            check(&format!("{tag} m{mi}[{i}]"), ((lp - lm) / (2.0 * EPS as f64)) as f32, g[off + i]);
+        }
+        off += plen;
+    }
+    for i in 0..n {
+        let o = layer.bias[i];
+        layer.bias[i] = o + EPS;
+        let lp = loss(&layer, &x);
+        layer.bias[i] = o - EPS;
+        let lm = loss(&layer, &x);
+        layer.bias[i] = o;
+        check(&format!("{tag} bias[{i}]"), ((lp - lm) / (2.0 * EPS as f64)) as f32, g[off + i]);
+    }
+    // input gradient (dy became dx in place)
+    for i in 0..x.len() {
+        let o = x[i];
+        x[i] = o + EPS;
+        let lp = loss(&layer, &x);
+        x[i] = o - EPS;
+        let lm = loss(&layer, &x);
+        x[i] = o;
+        check(&format!("{tag} x[{i}]"), ((lp - lm) / (2.0 * EPS as f64)) as f32, dy[i]);
+    }
+}
+
+#[test]
+fn butterfly_real_depth1_gradcheck() {
+    butterfly_gradcheck(Field::Real, 1, 201);
+}
+
+#[test]
+fn butterfly_real_depth2_gradcheck() {
+    butterfly_gradcheck(Field::Real, 2, 202);
+}
+
+#[test]
+fn butterfly_complex_depth1_gradcheck() {
+    butterfly_gradcheck(Field::Complex, 1, 203);
+}
+
+#[test]
+fn butterfly_complex_depth2_gradcheck() {
+    butterfly_gradcheck(Field::Complex, 2, 204);
+}
+
+// ---------------------------------------------------------------------
+// circulant (filter, bias, input)
+// ---------------------------------------------------------------------
+
+#[test]
+fn circulant_ws_gradcheck() {
+    let mut rng = Rng::new(105);
+    let n = 8;
+    let batch = 2;
+    let mut layer = CirculantLayer::new(n, &mut rng);
+    rng.fill_normal(&mut layer.bias, 0.0, 0.3);
+    let mut x = vec![0.0f32; batch * n];
+    rng.fill_normal(&mut x, 0.0, 0.7);
+    let mut cs: [Vec<f32>; 6] = Default::default();
+    for c in cs.iter_mut() {
+        c.resize(n, 0.0);
+    }
+
+    let loss = |layer: &CirculantLayer, x: &[f32], cs: &mut [Vec<f32>; 6]| -> f64 {
+        let mut y = vec![0.0f32; batch * n];
+        layer.forward_ws(x, &mut y, batch, None, cs);
+        quad_loss(&y)
+    };
+    let mut y = vec![0.0f32; batch * n];
+    let mut xfreq = vec![0.0f32; batch * 2 * n];
+    layer.forward_ws(&x, &mut y, batch, Some(&mut xfreq[..]), &mut cs);
+    let dy = y.clone();
+    let mut dx = vec![0.0f32; batch * n];
+    let mut g = vec![0.0f32; layer.grad_len()];
+    layer.backward_ws(&xfreq, &dy, &mut dx, &mut g, batch, &mut cs);
+
+    for i in 0..n {
+        let o = layer.h[i];
+        layer.h[i] = o + EPS;
+        let lp = loss(&layer, &x, &mut cs);
+        layer.h[i] = o - EPS;
+        let lm = loss(&layer, &x, &mut cs);
+        layer.h[i] = o;
+        check(&format!("circ h[{i}]"), ((lp - lm) / (2.0 * EPS as f64)) as f32, g[i]);
+    }
+    for i in 0..n {
+        let o = layer.bias[i];
+        layer.bias[i] = o + EPS;
+        let lp = loss(&layer, &x, &mut cs);
+        layer.bias[i] = o - EPS;
+        let lm = loss(&layer, &x, &mut cs);
+        layer.bias[i] = o;
+        check(&format!("circ b[{i}]"), ((lp - lm) / (2.0 * EPS as f64)) as f32, g[n + i]);
+    }
+    for i in 0..x.len() {
+        let o = x[i];
+        x[i] = o + EPS;
+        let lp = loss(&layer, &x, &mut cs);
+        x[i] = o - EPS;
+        let lm = loss(&layer, &x, &mut cs);
+        x[i] = o;
+        check(&format!("circ x[{i}]"), ((lp - lm) / (2.0 * EPS as f64)) as f32, dx[i]);
+    }
+}

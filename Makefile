@@ -1,6 +1,6 @@
 # Convenience targets; CI runs the same commands (see .github/workflows/ci.yml).
 
-.PHONY: build test bench-smoke bench fmt clippy py-test artifacts all
+.PHONY: build test bench-smoke bench bench-json bench-compare fmt clippy py-test artifacts all
 
 all: build test py-test
 
@@ -14,7 +14,18 @@ bench-smoke:
 	cd rust && cargo bench --no-run
 
 bench:
-	cd rust && BENCH_FAST=1 cargo bench
+	cd rust && BUTTERFLY_BENCH_SMOKE=1 cargo bench
+
+# Full-profile run of the pinned scenario matrix; rewrites the committed
+# BENCH_*.json baselines at the repo root (commit the diff when claiming
+# a speedup).
+bench-json:
+	cd rust && cargo run --release -- bench --json
+
+# What the CI bench-gate job runs: fresh smoke matrix vs the committed
+# baselines; exits nonzero on an out-of-band regression.
+bench-compare:
+	cd rust && cargo run --release -- bench --json --smoke --compare
 
 fmt:
 	cd rust && cargo fmt

@@ -12,6 +12,7 @@ use butterfly::opt::adam::Adam;
 use butterfly::transforms::matrices::dft_matrix;
 use butterfly::util::rng::Rng;
 use butterfly::util::table::{fmt_sci, Table};
+use butterfly::util::timer::smoke_mode;
 
 struct Variant {
     name: &'static str,
@@ -47,7 +48,7 @@ fn run(v: &Variant, n: usize, steps: usize, seed: u64) -> f64 {
 }
 
 fn main() {
-    let fast = std::env::var("BENCH_FAST").ok().as_deref() == Some("1");
+    let fast = smoke_mode();
     let steps = if fast { 300 } else { 2000 };
     let n = 16;
     let variants = [

@@ -9,38 +9,21 @@
 //! The full-size RMSE grid is `examples/transform_zoo.rs`.
 
 use butterfly::baselines::{butterfly_budget, lowrank_baseline, sparse_baseline, sparse_plus_lowrank_baseline};
-use butterfly::butterfly::module::{BpModule, BpStack, FactorizeLoss};
-use butterfly::butterfly::params::{BpParams, Field, InitScheme, PermTying, TwiddleTying};
+use butterfly::butterfly::module::{BpStack, FactorizeLoss};
 use butterfly::butterfly::workspace::ParallelTrainer;
 use butterfly::coordinator::{run_job, FactorizeJob, Metrics, Registry, SchedulerConfig};
+use butterfly::runtime::bench::{recovery_steps_per_sec, recovery_workload};
 use butterfly::transforms::matrices::target_matrix;
-use butterfly::transforms::spec::{TransformKind, ALL_TRANSFORMS};
+use butterfly::transforms::spec::ALL_TRANSFORMS;
 use butterfly::util::rng::Rng;
 use butterfly::util::table::{fmt_sci, Table};
-use butterfly::util::timer::black_box;
+use butterfly::util::timer::{black_box, smoke_mode};
 use std::time::Instant;
-
-fn train_stack(n: usize, seed: u64) -> BpStack {
-    let mut rng = Rng::new(seed);
-    let mut p = BpParams::init(
-        n,
-        Field::Complex,
-        TwiddleTying::Factor,
-        PermTying::Untied,
-        InitScheme::OrthogonalLike,
-        &mut rng,
-    );
-    for k in 0..p.levels {
-        for g in 0..3 {
-            p.set_logit(k, g, rng.normal_f32(0.0, 1.0));
-        }
-    }
-    BpStack::new(vec![BpModule::new(p)])
-}
 
 /// Steps/sec of the allocating path: fresh grad buffers + per-chunk
 /// allocations every step, exactly as the pre-workspace `Trial::advance`
-/// hot loop behaved.
+/// hot loop behaved. Kept local: this is the historical baseline the
+/// sweep compares against, not a configuration anything still ships.
 fn steps_per_sec_alloc(loss: &FactorizeLoss, stack: &BpStack, steps: usize) -> f64 {
     // warmup
     let mut grad = stack.zero_grad();
@@ -49,23 +32,6 @@ fn steps_per_sec_alloc(loss: &FactorizeLoss, stack: &BpStack, steps: usize) -> f
     for _ in 0..steps {
         let mut grad = stack.zero_grad();
         black_box(loss.loss_and_grad(stack, &mut grad));
-    }
-    steps as f64 / t0.elapsed().as_secs_f64()
-}
-
-/// Steps/sec of the workspace engine at a given thread count (1 ⇒ the
-/// serial `loss_and_grad_ws` path): persistent grads + workspace.
-fn steps_per_sec_ws(loss: &FactorizeLoss, stack: &BpStack, threads: usize, steps: usize) -> f64 {
-    let mut pool = ParallelTrainer::new(stack.n(), threads);
-    let mut grad = stack.zero_grad();
-    // warmup (also sizes every buffer)
-    black_box(loss.loss_and_grad_parallel(stack, &mut grad, &mut pool));
-    let t0 = Instant::now();
-    for _ in 0..steps {
-        for g in grad.iter_mut() {
-            g.iter_mut().for_each(|v| *v = 0.0);
-        }
-        black_box(loss.loss_and_grad_parallel(stack, &mut grad, &mut pool));
     }
     steps as f64 / t0.elapsed().as_secs_f64()
 }
@@ -83,9 +49,6 @@ fn engine_sweep(fast: bool) {
     let mut table = Table::new(&cols)
         .with_title("fig3 engine: Adam steps/sec, allocating path vs workspace engine");
     for &n in ns {
-        let stack = train_stack(n, 7);
-        let mut rng = Rng::new(42);
-        let target = target_matrix(TransformKind::Dft, n, &mut rng);
         let steps = if fast {
             8
         } else {
@@ -99,13 +62,15 @@ fn engine_sweep(fast: bool) {
             if chunk > n {
                 continue;
             }
-            let mut loss = FactorizeLoss::new(target.clone());
-            loss.chunk = chunk;
+            // the shared harness workload (runtime::bench) — same stack
+            // and target construction the `bench` CLI's train area pins
+            let (stack, loss) = recovery_workload(n, chunk, 7);
             let alloc_sps = steps_per_sec_alloc(&loss, &stack, steps);
             let mut row = vec![n.to_string(), chunk.to_string(), format!("{alloc_sps:.1}")];
             let mut ws1 = 0.0;
             for &t in threads {
-                let sps = steps_per_sec_ws(&loss, &stack, t, steps);
+                let mut pool = ParallelTrainer::new(n, t);
+                let sps = recovery_steps_per_sec(&loss, &stack, &mut pool, steps);
                 if t == 1 {
                     ws1 = sps;
                 }
@@ -121,7 +86,7 @@ fn engine_sweep(fast: bool) {
 }
 
 fn main() {
-    let fast = std::env::var("BENCH_FAST").ok().as_deref() == Some("1");
+    let fast = smoke_mode();
 
     engine_sweep(fast);
 

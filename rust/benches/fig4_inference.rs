@@ -12,16 +12,18 @@ use butterfly::linalg::dense::Mat;
 use butterfly::transforms::fast::{FftPlan, RealTransformPlan};
 use butterfly::util::rng::Rng;
 use butterfly::util::table::Table;
-use butterfly::util::timer::{bench, black_box, BenchConfig};
+use butterfly::util::timer::{bench, black_box, smoke_mode, BenchConfig};
 
 fn main() {
     let cfg = BenchConfig::from_env();
+    // smoke keeps two sizes so the N-scaling columns still render
+    let ns: &[usize] = if smoke_mode() { &[64, 256] } else { &[64, 128, 256, 512, 1024, 2048] };
     let mut table = Table::new(&[
         "N", "GEMV ns", "BP ns", "BP ns/vec B=64", "FFT ns", "DCT ns", "DST ns", "BP/GEMV speedup", "BP/FFT ratio",
     ])
     .with_title("Figure 4 (right): transform timings (single-threaded; batched column amortizes twiddle loads)");
 
-    for n in [64usize, 128, 256, 512, 1024, 2048] {
+    for &n in ns {
         let mut rng = Rng::new(7);
         // dense real GEMV (the O(N²) baseline)
         let dense = Mat::from_fn(n, n, |_, _| rng.normal_f32(0.0, 1.0));

@@ -12,13 +12,16 @@ use butterfly::nn::layers::{DenseLayer, Layer};
 use butterfly::transforms::fast::FftPlan;
 use butterfly::util::rng::Rng;
 use butterfly::util::table::Table;
-use butterfly::util::timer::{bench, black_box, BenchConfig};
+use butterfly::util::timer::{bench, black_box, smoke_mode, BenchConfig};
 
 fn main() {
     let mut cfg = BenchConfig::from_env();
     cfg.runs = cfg.runs.min(5); // steps are heavy
-    let n = std::env::var("FIG4_N").ok().and_then(|v| v.parse().ok()).unwrap_or(1024usize);
-    let batch = std::env::var("FIG4_BATCH").ok().and_then(|v| v.parse().ok()).unwrap_or(256usize);
+    // smoke shrinks the paper setting (N=1024, batch 256) so the CI
+    // execution pass stays fast; FIG4_N/FIG4_BATCH still override
+    let (def_n, def_batch) = if smoke_mode() { (256usize, 64usize) } else { (1024, 256) };
+    let n = std::env::var("FIG4_N").ok().and_then(|v| v.parse().ok()).unwrap_or(def_n);
+    let batch = std::env::var("FIG4_BATCH").ok().and_then(|v| v.parse().ok()).unwrap_or(def_batch);
     let mut rng = Rng::new(3);
     let mut x = vec![0.0f32; batch * n];
     rng.fill_normal(&mut x, 0.0, 1.0);

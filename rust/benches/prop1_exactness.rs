@@ -7,7 +7,7 @@ use butterfly::linalg::dense::{CMat, Mat};
 use butterfly::transforms::matrices;
 use butterfly::util::rng::Rng;
 use butterfly::util::table::{fmt_sci, Table};
-use butterfly::util::timer::{bench, black_box, BenchConfig};
+use butterfly::util::timer::{bench, black_box, smoke_mode, BenchConfig};
 
 fn real_plane_rmse(m: &CMat, t: &Mat) -> f64 {
     let n = m.rows;
@@ -21,7 +21,7 @@ fn real_plane_rmse(m: &CMat, t: &Mat) -> f64 {
 
 fn main() {
     let cfg = BenchConfig::from_env();
-    let fast_mode = std::env::var("BENCH_FAST").ok().as_deref() == Some("1");
+    let fast_mode = smoke_mode();
     let ns: &[usize] = if fast_mode { &[64] } else { &[64, 256, 1024] };
     let mut table = Table::new(&["transform", "class", "N", "rmse", "apply ns"])
         .with_title("Proposition 1: closed-form factorizations (exactness + O(N log N) apply)");

@@ -15,18 +15,18 @@
 
 use butterfly::butterfly::closed_form::{dft_stack, hadamard_stack};
 use butterfly::butterfly::fast::{BatchWorkspace, FastBp, Workspace};
-use butterfly::serving::{BatcherConfig, Router};
-use butterfly::transforms::op::{plan, stack_op, LinearOp, OpWorkspace};
+use butterfly::runtime::bench::{pool_load, scenario_seed};
+use butterfly::transforms::op::{op_ns_per_vec_samples, plan, stack_op, LinearOp};
 use butterfly::transforms::spec::TransformKind;
 use butterfly::util::rng::Rng;
 use butterfly::util::table::Table;
-use butterfly::util::timer::{bench, black_box, BenchConfig};
+use butterfly::util::timer::{bench, black_box, percentile, smoke_mode, BenchConfig};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 fn main() {
     let cfg = BenchConfig::from_env();
-    let fast_mode = std::env::var("BENCH_FAST").ok().as_deref() == Some("1");
+    let fast_mode = smoke_mode();
     let n = 1024usize;
     let requests: usize = if fast_mode { 400 } else { 4000 };
     let clients = 8usize;
@@ -85,7 +85,10 @@ fn main() {
     ];
     let mut otable = Table::new(&["op", "planes", "flops/apply", "B=1 ns/vec", "B=8 ns/vec", "B=64 ns/vec"])
         .with_title(format!("exact ops vs learned stacks, unified LinearOp harness (N={opn})"));
-    let mut ws = OpWorkspace::new();
+    // pristine-input restore per apply (the non-unitary circulant would
+    // otherwise overflow its own output) lives inside the shared
+    // measurement core — the same numbers `bench --json` commits
+    let (op_reps, op_iters) = if fast_mode { (1usize, 2usize) } else { (7, 25) };
     for (label, op) in &ops {
         let mut row = vec![
             label.to_string(),
@@ -93,31 +96,9 @@ fn main() {
             op.flops_per_apply().to_string(),
         ];
         for bsize in [1usize, 8, 64] {
-            // every row re-copies pristine input each iteration: applying
-            // a non-unitary op (the circulant) to its own output for the
-            // whole measurement would overflow to inf/NaN and time
-            // garbage data, so the memcpy is part of the harness for all
-            let mut re0 = vec![0.0f32; bsize * opn];
-            Rng::new(bsize as u64).fill_normal(&mut re0, 0.0, 1.0);
-            let mut re = re0.clone();
-            let mut im = vec![0.0f32; bsize * opn];
-            let per_vec = if op.is_complex() {
-                bench(&cfg, || {
-                    re.copy_from_slice(&re0);
-                    im.fill(0.0);
-                    op.apply_batch(black_box(&mut re), black_box(&mut im), bsize, &mut ws);
-                })
-                .median()
-                    / bsize as f64
-            } else {
-                bench(&cfg, || {
-                    re.copy_from_slice(&re0);
-                    op.apply_batch(black_box(&mut re), &mut [], bsize, &mut ws);
-                })
-                .median()
-                    / bsize as f64
-            };
-            row.push(format!("{per_vec:.0}"));
+            let samples =
+                op_ns_per_vec_samples(op.as_ref(), bsize, op_reps, op_iters, bsize as u64 ^ 0xBE7C);
+            row.push(format!("{:.0}", percentile(&samples, 50.0)));
         }
         otable.add_row(row);
     }
@@ -180,7 +161,9 @@ fn main() {
 
 /// Drive `requests` total requests from `clients` threads through one
 /// route served by a `workers`-wide shared-queue pool; returns
-/// (vectors/sec, mean batch, mean latency µs).
+/// (vectors/sec, mean batch, mean latency µs). Thin adapter over the
+/// shared `runtime::bench::pool_load` harness — the exact loop the
+/// `bench` CLI's serving area commits to `BENCH_serving.json`.
 fn run_load(
     stack: &butterfly::butterfly::module::BpStack,
     workers: usize,
@@ -189,34 +172,14 @@ fn run_load(
     clients: usize,
     requests: usize,
 ) -> (f64, f64, f64) {
-    let n = stack.n();
-    let mut router = Router::new();
-    router.install(
-        "dft",
+    let s = pool_load(
         stack_op("dft", stack),
         workers,
-        BatcherConfig { max_batch, max_wait: Duration::from_micros(wait_us), queue_cap: 65536 },
+        max_batch,
+        Duration::from_micros(wait_us),
+        clients,
+        requests,
+        scenario_seed("benches/serving"),
     );
-    let t0 = Instant::now();
-    let threads: Vec<_> = (0..clients)
-        .map(|t| {
-            let h = router.handle("dft").unwrap();
-            let per = requests / clients;
-            std::thread::spawn(move || {
-                let mut rng = Rng::new(t as u64);
-                for _ in 0..per {
-                    let mut x = vec![0.0f32; n];
-                    rng.fill_normal(&mut x, 0.0, 1.0);
-                    h.call_real(x).expect("serve");
-                }
-            })
-        })
-        .collect();
-    for th in threads {
-        th.join().unwrap();
-    }
-    let wall = t0.elapsed().as_secs_f64();
-    let stats = router.shutdown();
-    let s = &stats["dft"];
-    (s.served as f64 / wall, s.served as f64 / s.batches.max(1) as f64, s.mean_latency_micros)
+    (s.vectors_per_sec, s.mean_batch, s.mean_latency_micros)
 }

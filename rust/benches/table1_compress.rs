@@ -11,14 +11,16 @@
 //!    B ∈ {1, 64}: the O(N log N) vs O(N²) story at serving batch sizes
 //!    (paper's "4× faster inference" axis).
 //!
-//! `BENCH_FAST=1` shrinks sizes for the CI smoke run.
+//! `BUTTERFLY_BENCH_SMOKE=1` (or `--smoke`) shrinks sizes for the CI
+//! smoke run.
 
 use butterfly::nn::mlp::HiddenKind;
-use butterfly::nn::{CompressMlp, MlpTrainer};
+use butterfly::nn::CompressMlp;
+use butterfly::runtime::bench::{compress_steps_per_sec, scenario_seed};
 use butterfly::transforms::op::{bench_nanos_per_vec, LinearOp};
 use butterfly::util::rng::Rng;
 use butterfly::util::table::Table;
-use butterfly::util::timer::black_box;
+use butterfly::util::timer::{black_box, smoke_mode};
 use std::time::Instant;
 
 fn batch_of(n: usize, bsz: usize, classes: usize, seed: u64) -> (Vec<f32>, Vec<u8>) {
@@ -41,22 +43,8 @@ fn legacy_steps_per_sec(kind: HiddenKind, n: usize, bsz: usize, steps: usize) ->
     steps as f64 / t0.elapsed().as_secs_f64()
 }
 
-fn engine_steps_per_sec(kind: HiddenKind, n: usize, bsz: usize, threads: usize, steps: usize) -> f64 {
-    let classes = 10;
-    let mut model = CompressMlp::new(kind, n, classes, &mut Rng::new(3));
-    let mut trainer = MlpTrainer::new(threads, 8);
-    let (x, y) = batch_of(n, bsz, classes, 5);
-    // warmup sizes every workspace plane and chunk-grad buffer
-    black_box(trainer.step(&mut model, &x, &y, 0.02, 0.9, 0.0));
-    let t0 = Instant::now();
-    for _ in 0..steps {
-        black_box(trainer.step(&mut model, &x, &y, 0.02, 0.9, 0.0));
-    }
-    steps as f64 / t0.elapsed().as_secs_f64()
-}
-
 fn main() {
-    let fast = std::env::var("BENCH_FAST").ok().as_deref() == Some("1");
+    let fast = smoke_mode();
     let kinds = [
         HiddenKind::Dense,
         HiddenKind::BpbpReal,
@@ -91,7 +79,10 @@ fn main() {
             let steps = if matches!(kind, HiddenKind::Dense) && n >= 1024 { steps.min(2) } else { steps };
             let mut row = vec![kind.name(), n.to_string(), format!("{:.1}", legacy_steps_per_sec(kind, n, bsz, steps))];
             for &t in threads {
-                row.push(format!("{:.1}", engine_steps_per_sec(kind, n, bsz, t, steps)));
+                // the shared engine harness (runtime::bench) — pristine
+                // model per call, same loop the bench CLI commits
+                let seed = scenario_seed(&format!("benches/table1/{}/n{n}/T{t}", kind.name()));
+                row.push(format!("{:.1}", compress_steps_per_sec(kind, n, bsz, t, 8, steps, seed)));
             }
             table.add_row(row);
         }

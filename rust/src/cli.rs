@@ -152,6 +152,23 @@ mod tests {
     }
 
     #[test]
+    fn bench_invocation() {
+        // the CI gate form: --compare as a bare trailing flag means
+        // "against the default baseline dir"...
+        let a = parse("bench --json --smoke --compare");
+        assert_eq!(a.command, "bench");
+        assert!(a.flag("json") && a.flag("smoke") && a.flag("compare"));
+        assert_eq!(a.get("compare"), None);
+        assert_eq!(a.list_or("areas", "train,ops,serving"), vec!["train", "ops", "serving"]);
+        // ... while --compare DIR pins an explicit baseline dir
+        let b = parse("bench --areas ops --compare baselines/v1 --json");
+        assert_eq!(b.get("compare"), Some("baselines/v1"));
+        assert!(!b.flag("compare"));
+        assert!(b.flag("json"));
+        assert_eq!(b.list_or("areas", "train,ops,serving"), vec!["ops"]);
+    }
+
+    #[test]
     fn defaults_and_errors() {
         let a = parse("zoo");
         assert_eq!(a.usize_or("n", 8).unwrap(), 8);

@@ -37,6 +37,7 @@ fn main() {
         "zoo" => cmd_zoo(&args),
         "serve" => cmd_serve(&args),
         "compress" => cmd_compress(&args),
+        "bench" => cmd_bench(&args),
         "engines" => cmd_engines(&args),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
@@ -86,6 +87,17 @@ COMMANDS:
               --serve         serve the exported op through a worker pool
                               (--requests 2000 --pool-workers 2)
               --smoke         tiny end-to-end run (CI)
+  bench       run the pinned perf scenario matrix (the perf-trajectory
+              harness behind the CI bench-gate job)
+              --areas train,ops,serving   subset of areas to run
+              --json          write BENCH_<area>.json at the repo root
+              --out DIR       write the JSON elsewhere
+              --smoke         1 repetition, short timed blocks (CI gate;
+                              compare bands widen to ±35%)
+              --compare [DIR] diff this run against committed baselines
+                              (default: the repo root); exits 1 on an
+                              out-of-band regression when the env
+                              fingerprints match, 0 otherwise
   engines     report available execution engines / artifacts
   help        this text
 
@@ -474,6 +486,74 @@ fn cmd_compress(args: &Args) -> i32 {
     };
     match run() {
         Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+fn cmd_bench(args: &Args) -> i32 {
+    use butterfly::runtime::bench::{self, Comparison, Report};
+
+    let run = || -> Result<i32, String> {
+        // --smoke on this invocation or the shared env knob
+        // (BUTTERFLY_BENCH_SMOKE=1 / legacy BENCH_FAST=1)
+        let smoke = args.flag("smoke") || butterfly::util::timer::smoke_mode();
+        let areas = args.list_or("areas", "train,ops,serving");
+        for a in &areas {
+            if !bench::AREAS.contains(&a.as_str()) {
+                return Err(format!("unknown area '{a}' (want one of train, ops, serving)"));
+            }
+        }
+        let out_dir = args.get("out").map(std::path::PathBuf::from).unwrap_or_else(bench::default_root);
+        let compare_requested = args.flag("compare") || args.get("compare").is_some();
+        let baseline_dir =
+            args.get("compare").map(std::path::PathBuf::from).unwrap_or_else(bench::default_root);
+
+        // Load baselines BEFORE writing anything: with --json and the
+        // default dirs, the fresh reports land on the very paths we
+        // compare against.
+        let mut baselines: Vec<(String, Option<Report>)> = Vec::new();
+        if compare_requested {
+            for area in &areas {
+                let path = baseline_dir.join(Report::filename(area));
+                match Report::load(&path) {
+                    Ok(r) => baselines.push((area.clone(), Some(r))),
+                    Err(e) => {
+                        log::warn(&format!("no usable baseline for '{area}' ({e}) — skipping compare"));
+                        baselines.push((area.clone(), None));
+                    }
+                }
+            }
+        }
+
+        if smoke {
+            log::info("smoke profile: 1 repetition, short timed blocks — numbers are a gate, not a measurement");
+        }
+        let mut comparisons: Vec<Comparison> = Vec::new();
+        for area in &areas {
+            let report = bench::run_area(area, smoke).expect("area validated above");
+            println!("{}", report.render());
+            if args.flag("json") {
+                let path = out_dir.join(Report::filename(area));
+                report.save(&path)?;
+                println!("wrote {}", path.display());
+            }
+            if compare_requested {
+                if let Some((_, Some(baseline))) =
+                    baselines.iter().find(|(a, b)| a == area && b.is_some())
+                {
+                    let cmp = Comparison::compare(baseline, &report);
+                    println!("{}", cmp.render());
+                    comparisons.push(cmp);
+                }
+            }
+        }
+        Ok(bench::gate_exit_code(&comparisons))
+    };
+    match run() {
+        Ok(code) => code,
         Err(e) => {
             eprintln!("error: {e}");
             2

@@ -1,0 +1,900 @@
+//! The perf-trajectory harness: a pinned scenario matrix, machine-
+//! readable `BENCH_<area>.json` reports, and the baseline-compare logic
+//! behind the CI `bench-gate` job.
+//!
+//! The paper's headline claim is speed (recover the O(N log N) FFT,
+//! serve learned transforms faster than dense), so speed here is a
+//! **tracked artifact**, not an assertion in a commit message: every
+//! `bench --json` run writes one JSON file per area at the repo root,
+//! and `bench --compare` diffs a fresh run against the committed
+//! baselines with per-scenario noise bands. From PR 6 on, a
+//! "measurably faster" claim lands as a diff in a checked-in
+//! `BENCH_*.json`.
+//!
+//! ## The matrix
+//!
+//! Three areas, each a fixed list of scenario ids (the ids are the
+//! contract — smoke mode shrinks repetitions, never ids or sizes, so a
+//! smoke run remains comparable against a committed full baseline):
+//!
+//! - **train** — training-engine throughput in Adam/SGD steps per
+//!   second: the butterfly recovery engine
+//!   (`FactorizeLoss::loss_and_grad_parallel`) and the nn compression
+//!   engine (`MlpTrainer::step`), each at T ∈ {1, 2, 8} worker threads.
+//! - **ops** — serving-kernel latency in ns per vector for every
+//!   `LinearOp` kind `plan()` can produce, at B ∈ {1, 8, 64, 256}
+//!   column-major lanes (measured through
+//!   [`op_ns_per_vec_samples`](crate::transforms::op::op_ns_per_vec_samples),
+//!   the same core the `compress` CLI and the table benches print).
+//! - **serving** — end-to-end `ServicePool` throughput in vectors per
+//!   second under a fixed offered load, at W ∈ {1, 2, 4, 8} workers
+//!   draining one shared queue.
+//!
+//! ## Determinism
+//!
+//! Wall-clock numbers measure the machine only when the workload is
+//! pinned: every scenario derives its RNG seed from its id (FNV-1a), and
+//! every repetition restores pristine state — ops re-copy their input
+//! before each apply (PR 5's denormal-drift rule), the nn trainer
+//! re-clones the untouched model, and each pool repetition spawns a
+//! fresh router. Two runs of the same binary execute bit-identical
+//! workloads.
+//!
+//! ## Comparing
+//!
+//! [`Comparison::compare`] walks baseline and current scenarios by id.
+//! A scenario regresses when its median moves beyond the baseline's
+//! noise band (default ±15%, overridable per entry in the committed
+//! JSON; widened to ±35% when either side is a smoke run). Missing or
+//! new scenarios warn. When the env fingerprints differ — different CPU
+//! model, core count, build flags, or a baseline not marked
+//! `provenance: "measured"` — regressions are reported but downgraded
+//! to advisory and the gate passes: cross-machine numbers are context,
+//! not a gate.
+
+use crate::butterfly::closed_form::dft_stack;
+use crate::butterfly::module::{BpModule, BpStack, FactorizeLoss};
+use crate::butterfly::params::{BpParams, Field, InitScheme, PermTying, TwiddleTying};
+use crate::butterfly::workspace::ParallelTrainer;
+use crate::nn::{CompressMlp, HiddenKind, MlpTrainer};
+use crate::serving::{BatcherConfig, Router};
+use crate::transforms::matrices::target_matrix;
+use crate::transforms::op::{op_ns_per_vec_samples, plan_with_rng, stack_op, LinearOp};
+use crate::transforms::spec::{TransformKind, ALL_TRANSFORMS};
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+use crate::util::timer::{black_box, percentile};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Default multiplicative noise band: medians within ±15% of the
+/// baseline are considered unchanged.
+pub const DEFAULT_NOISE_BAND: f64 = 0.15;
+
+/// Band floor applied when either side of a comparison is a smoke run
+/// (one repetition, short timed blocks): smoke numbers gate only gross
+/// regressions.
+pub const SMOKE_NOISE_BAND: f64 = 0.35;
+
+/// The three areas, in run order. Each maps to one `BENCH_<area>.json`.
+pub const AREAS: [&str; 3] = ["train", "ops", "serving"];
+
+/// Schema version stamped into every report.
+pub const SCHEMA_VERSION: usize = 1;
+
+// ---------------------------------------------------------------------------
+// Stats
+// ---------------------------------------------------------------------------
+
+/// Robust summary of one scenario's repetition samples.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stats {
+    pub median: f64,
+    /// 25th percentile (lower IQR edge).
+    pub q1: f64,
+    /// 75th percentile (upper IQR edge).
+    pub q3: f64,
+    /// Number of warmup-discarded repetitions summarized.
+    pub reps: usize,
+}
+
+impl Stats {
+    /// Median/IQR of the per-repetition values (warmup already
+    /// discarded by the caller).
+    pub fn from_samples(samples: &[f64]) -> Stats {
+        Stats {
+            median: percentile(samples, 50.0),
+            q1: percentile(samples, 25.0),
+            q3: percentile(samples, 75.0),
+            reps: samples.len(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Units
+// ---------------------------------------------------------------------------
+
+/// Measurement unit of a scenario — also encodes the regression
+/// direction (ns/vec regresses upward, throughputs regress downward).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Unit {
+    NsPerVec,
+    StepsPerSec,
+    VectorsPerSec,
+}
+
+impl Unit {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Unit::NsPerVec => "ns_per_vec",
+            Unit::StepsPerSec => "steps_per_sec",
+            Unit::VectorsPerSec => "vectors_per_sec",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Unit> {
+        match s {
+            "ns_per_vec" => Some(Unit::NsPerVec),
+            "steps_per_sec" => Some(Unit::StepsPerSec),
+            "vectors_per_sec" => Some(Unit::VectorsPerSec),
+            _ => None,
+        }
+    }
+
+    /// Whether a larger median is an improvement (throughputs) or a
+    /// regression (latencies).
+    pub fn higher_is_better(self) -> bool {
+        !matches!(self, Unit::NsPerVec)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scenarios and reports
+// ---------------------------------------------------------------------------
+
+/// One measured cell of the matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    /// Stable id, e.g. `ops/dft/n1024/B64` — the compare key.
+    pub id: String,
+    pub unit: Unit,
+    pub stats: Stats,
+    /// Multiplicative noise band for comparisons against this entry
+    /// (editable per scenario in the committed baseline).
+    pub noise_band: f64,
+}
+
+/// Environment fingerprint stamped into every report: comparisons only
+/// hard-gate between runs whose fingerprints match.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnvFingerprint {
+    /// CPU model string from `/proc/cpuinfo` ("unknown" off-Linux).
+    pub cpu: String,
+    /// Available hardware parallelism.
+    pub cores: usize,
+    /// `rustc --version` of the toolchain on PATH at run time.
+    pub rustc: String,
+    /// Short git HEAD sha (or `GITHUB_SHA` under CI).
+    pub git_sha: String,
+    /// "release" or "debug" (from `debug_assertions`).
+    pub flags: String,
+    /// Whether this run used the smoke profile.
+    pub smoke: bool,
+    /// "measured" for harness output; committed seeds may carry
+    /// "estimated" until re-baselined, which keeps them advisory.
+    pub provenance: String,
+}
+
+impl EnvFingerprint {
+    /// Detect the current environment.
+    pub fn detect(smoke: bool) -> EnvFingerprint {
+        EnvFingerprint {
+            cpu: read_cpu_model(),
+            cores: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+            rustc: cmd_stdout("rustc", &["--version"]).unwrap_or_else(|| "unknown".into()),
+            git_sha: detect_git_sha(),
+            flags: if cfg!(debug_assertions) { "debug".into() } else { "release".into() },
+            smoke,
+            provenance: "measured".into(),
+        }
+    }
+
+    /// Whether `self` (the baseline) and `current` are comparable
+    /// enough to hard-gate: same CPU model, core count, and build
+    /// flags, both actually measured. Smoke mode is deliberately NOT
+    /// part of the match — it only widens the noise band.
+    pub fn matches(&self, current: &EnvFingerprint) -> bool {
+        self.provenance == "measured"
+            && current.provenance == "measured"
+            && self.cpu != "unknown"
+            && self.cpu == current.cpu
+            && self.cores == current.cores
+            && self.flags == current.flags
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("cpu", self.cpu.as_str().into()),
+            ("cores", self.cores.into()),
+            ("rustc", self.rustc.as_str().into()),
+            ("git_sha", self.git_sha.as_str().into()),
+            ("flags", self.flags.as_str().into()),
+            ("smoke", self.smoke.into()),
+            ("provenance", self.provenance.as_str().into()),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<EnvFingerprint, String> {
+        let field = |k: &str| v.get(k).ok_or_else(|| format!("env missing '{k}'"));
+        let s = |k: &str| -> Result<String, String> {
+            Ok(field(k)?.as_str().ok_or_else(|| format!("env '{k}' must be a string"))?.to_string())
+        };
+        Ok(EnvFingerprint {
+            cpu: s("cpu")?,
+            cores: field("cores")?.as_usize().ok_or("env 'cores' must be an integer")?,
+            rustc: s("rustc")?,
+            git_sha: s("git_sha")?,
+            flags: s("flags")?,
+            smoke: field("smoke")?.as_bool().ok_or("env 'smoke' must be a bool")?,
+            provenance: v.get("provenance").and_then(|p| p.as_str()).unwrap_or("measured").to_string(),
+        })
+    }
+}
+
+fn read_cpu_model() -> String {
+    std::fs::read_to_string("/proc/cpuinfo")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("model name"))
+                .and_then(|l| l.split(':').nth(1).map(|m| m.trim().to_string()))
+        })
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
+}
+
+fn cmd_stdout(cmd: &str, args: &[&str]) -> Option<String> {
+    std::process::Command::new(cmd)
+        .args(args)
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .filter(|s| !s.is_empty())
+}
+
+fn detect_git_sha() -> String {
+    cmd_stdout("git", &["rev-parse", "--short=12", "HEAD"])
+        .or_else(|| std::env::var("GITHUB_SHA").ok().map(|s| s.chars().take(12).collect()))
+        .unwrap_or_else(|| "unknown".into())
+}
+
+/// One area's measurements: what `BENCH_<area>.json` holds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Report {
+    pub area: String,
+    pub env: EnvFingerprint,
+    pub scenarios: Vec<Scenario>,
+}
+
+impl Report {
+    /// `BENCH_<area>.json` — the committed filename for an area.
+    pub fn filename(area: &str) -> String {
+        format!("BENCH_{area}.json")
+    }
+
+    pub fn to_json(&self) -> Json {
+        let scenarios: Vec<Json> = self
+            .scenarios
+            .iter()
+            .map(|s| {
+                obj(vec![
+                    ("id", s.id.as_str().into()),
+                    ("unit", s.unit.as_str().into()),
+                    ("median", s.stats.median.into()),
+                    ("q1", s.stats.q1.into()),
+                    ("q3", s.stats.q3.into()),
+                    ("reps", s.stats.reps.into()),
+                    ("noise_band", s.noise_band.into()),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("schema", SCHEMA_VERSION.into()),
+            ("area", self.area.as_str().into()),
+            ("env", self.env.to_json()),
+            ("scenarios", Json::Arr(scenarios)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Report, String> {
+        let area = v
+            .get("area")
+            .and_then(|a| a.as_str())
+            .ok_or("report missing string 'area'")?
+            .to_string();
+        let env = EnvFingerprint::from_json(v.get("env").ok_or("report missing 'env'")?)?;
+        let mut scenarios = Vec::new();
+        for (i, s) in v
+            .get("scenarios")
+            .and_then(|s| s.as_arr())
+            .ok_or("report missing array 'scenarios'")?
+            .iter()
+            .enumerate()
+        {
+            let field = |k: &str| s.get(k).ok_or_else(|| format!("scenario {i} missing '{k}'"));
+            let num = |k: &str| -> Result<f64, String> {
+                field(k)?.as_f64().ok_or_else(|| format!("scenario {i} '{k}' must be a number"))
+            };
+            let unit_name = field("unit")?.as_str().ok_or_else(|| format!("scenario {i} 'unit' must be a string"))?;
+            scenarios.push(Scenario {
+                id: field("id")?
+                    .as_str()
+                    .ok_or_else(|| format!("scenario {i} 'id' must be a string"))?
+                    .to_string(),
+                unit: Unit::parse(unit_name).ok_or_else(|| format!("scenario {i}: unknown unit '{unit_name}'"))?,
+                stats: Stats {
+                    median: num("median")?,
+                    q1: num("q1")?,
+                    q3: num("q3")?,
+                    reps: field("reps")?.as_usize().ok_or_else(|| format!("scenario {i} 'reps' must be an integer"))?,
+                },
+                noise_band: s.get("noise_band").and_then(|b| b.as_f64()).unwrap_or(DEFAULT_NOISE_BAND),
+            });
+        }
+        Ok(Report { area, env, scenarios })
+    }
+
+    /// Write pretty JSON (trailing newline, so the committed files are
+    /// POSIX text).
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        let mut text = self.to_json().to_string_pretty();
+        text.push('\n');
+        std::fs::write(path, text).map_err(|e| format!("write {}: {e}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Report, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        let v = crate::util::json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        Report::from_json(&v)
+    }
+
+    /// Human table of this report's scenarios.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["scenario", "unit", "median", "q1", "q3", "reps"]).with_title(format!(
+            "bench[{}] — {}{}",
+            self.area,
+            self.env.cpu,
+            if self.env.smoke { " (smoke: 1 rep, advisory numbers)" } else { "" }
+        ));
+        for s in &self.scenarios {
+            t.add_row(vec![
+                s.id.clone(),
+                s.unit.as_str().to_string(),
+                format!("{:.1}", s.stats.median),
+                format!("{:.1}", s.stats.q1),
+                format!("{:.1}", s.stats.q3),
+                s.stats.reps.to_string(),
+            ]);
+        }
+        t.render()
+    }
+}
+
+/// Where `BENCH_*.json` live: the repo root. Resolved by probing for
+/// ROADMAP.md in `.` then `..` (the crate dir when invoked via
+/// `cargo run` from `rust/`), falling back to `.`.
+pub fn default_root() -> PathBuf {
+    for d in [".", ".."] {
+        if Path::new(d).join("ROADMAP.md").is_file() {
+            return PathBuf::from(d);
+        }
+    }
+    PathBuf::from(".")
+}
+
+// ---------------------------------------------------------------------------
+// Compare
+// ---------------------------------------------------------------------------
+
+/// Per-scenario comparison outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Within the noise band.
+    Ok,
+    /// Better than the band — worth a baseline refresh.
+    Improved,
+    /// Worse than the band — fails the gate when envs match.
+    Regressed,
+    /// Present only in the current run (warns, never fails).
+    New,
+    /// Present only in the baseline (warns, never fails).
+    Missing,
+}
+
+impl Verdict {
+    fn label(self) -> &'static str {
+        match self {
+            Verdict::Ok => "ok",
+            Verdict::Improved => "IMPROVED",
+            Verdict::Regressed => "REGRESSED",
+            Verdict::New => "new (no baseline)",
+            Verdict::Missing => "missing from current",
+        }
+    }
+}
+
+/// One row of a comparison table.
+#[derive(Debug, Clone)]
+pub struct CompareRow {
+    pub id: String,
+    pub unit: Unit,
+    pub baseline: Option<f64>,
+    pub current: Option<f64>,
+    /// current / baseline median.
+    pub ratio: Option<f64>,
+    /// Effective noise band used for this row.
+    pub band: f64,
+    pub verdict: Verdict,
+}
+
+/// A full baseline-vs-current diff for one area.
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    pub area: String,
+    /// Whether the fingerprints hard-gate (see
+    /// [`EnvFingerprint::matches`]). False downgrades regressions to
+    /// advisory.
+    pub env_match: bool,
+    pub baseline_env: EnvFingerprint,
+    pub current_env: EnvFingerprint,
+    pub rows: Vec<CompareRow>,
+}
+
+impl Comparison {
+    /// Diff `current` against `baseline` scenario-by-scenario.
+    pub fn compare(baseline: &Report, current: &Report) -> Comparison {
+        let smoke = baseline.env.smoke || current.env.smoke;
+        let mut rows = Vec::new();
+        for b in &baseline.scenarios {
+            let mut band = b.noise_band.max(0.0);
+            if smoke {
+                band = band.max(SMOKE_NOISE_BAND);
+            }
+            match current.scenarios.iter().find(|c| c.id == b.id) {
+                None => rows.push(CompareRow {
+                    id: b.id.clone(),
+                    unit: b.unit,
+                    baseline: Some(b.stats.median),
+                    current: None,
+                    ratio: None,
+                    band,
+                    verdict: Verdict::Missing,
+                }),
+                Some(c) => {
+                    let comparable = b.stats.median.is_finite()
+                        && c.stats.median.is_finite()
+                        && b.stats.median > 0.0
+                        && c.stats.median > 0.0
+                        && b.unit == c.unit;
+                    let (ratio, verdict) = if !comparable {
+                        (None, Verdict::New)
+                    } else {
+                        let r = c.stats.median / b.stats.median;
+                        let v = if b.unit.higher_is_better() {
+                            if r < 1.0 - band {
+                                Verdict::Regressed
+                            } else if r > 1.0 + band {
+                                Verdict::Improved
+                            } else {
+                                Verdict::Ok
+                            }
+                        } else if r > 1.0 + band {
+                            Verdict::Regressed
+                        } else if r < 1.0 - band {
+                            Verdict::Improved
+                        } else {
+                            Verdict::Ok
+                        };
+                        (Some(r), v)
+                    };
+                    rows.push(CompareRow {
+                        id: b.id.clone(),
+                        unit: b.unit,
+                        baseline: Some(b.stats.median),
+                        current: Some(c.stats.median),
+                        ratio,
+                        band,
+                        verdict,
+                    });
+                }
+            }
+        }
+        for c in &current.scenarios {
+            if !baseline.scenarios.iter().any(|b| b.id == c.id) {
+                rows.push(CompareRow {
+                    id: c.id.clone(),
+                    unit: c.unit,
+                    baseline: None,
+                    current: Some(c.stats.median),
+                    ratio: None,
+                    band: if smoke { SMOKE_NOISE_BAND } else { DEFAULT_NOISE_BAND },
+                    verdict: Verdict::New,
+                });
+            }
+        }
+        Comparison {
+            area: baseline.area.clone(),
+            env_match: baseline.env.matches(&current.env),
+            baseline_env: baseline.env.clone(),
+            current_env: current.env.clone(),
+            rows,
+        }
+    }
+
+    pub fn count(&self, v: Verdict) -> usize {
+        self.rows.iter().filter(|r| r.verdict == v).count()
+    }
+
+    pub fn regressions(&self) -> usize {
+        self.count(Verdict::Regressed)
+    }
+
+    /// Whether this area passes the gate: no regression, or fingerprints
+    /// that don't support hard-gating (mismatch ⇒ advisory warnings
+    /// only).
+    pub fn gate(&self) -> bool {
+        self.regressions() == 0 || !self.env_match
+    }
+
+    /// Human regression table + verdict summary.
+    pub fn render(&self) -> String {
+        let fmt = |v: Option<f64>| v.map(|x| format!("{x:.1}")).unwrap_or_else(|| "-".into());
+        let mut t = Table::new(&["scenario", "unit", "baseline", "current", "ratio", "band", "verdict"])
+            .with_title(format!("bench compare[{}] vs baseline @ {}", self.area, self.baseline_env.git_sha));
+        for r in &self.rows {
+            t.add_row(vec![
+                r.id.clone(),
+                r.unit.as_str().to_string(),
+                fmt(r.baseline),
+                fmt(r.current),
+                r.ratio.map(|x| format!("{x:.3}")).unwrap_or_else(|| "-".into()),
+                format!("±{:.0}%", r.band * 100.0),
+                r.verdict.label().to_string(),
+            ]);
+        }
+        let mut out = t.render();
+        out.push_str(&format!(
+            "\n{}: {} ok, {} improved, {} regressed, {} new, {} missing — {}\n",
+            self.area,
+            self.count(Verdict::Ok),
+            self.count(Verdict::Improved),
+            self.regressions(),
+            self.count(Verdict::New),
+            self.count(Verdict::Missing),
+            if self.gate() {
+                if self.regressions() > 0 {
+                    "PASS (regressions advisory: env fingerprint mismatch)"
+                } else {
+                    "PASS"
+                }
+            } else {
+                "FAIL"
+            }
+        ));
+        if !self.env_match {
+            out.push_str(&format!(
+                "note: baseline env ({} / {} cores / {} / {}) != current env ({} / {} cores / {}) — not hard-gating\n",
+                self.baseline_env.cpu,
+                self.baseline_env.cores,
+                self.baseline_env.flags,
+                self.baseline_env.provenance,
+                self.current_env.cpu,
+                self.current_env.cores,
+                self.current_env.flags,
+            ));
+        }
+        out
+    }
+}
+
+/// Process exit code for a set of area comparisons: nonzero iff any
+/// area fails its gate. (The CLI maps this straight to `exit()`, and
+/// `rust/tests/bench_compare.rs` pins the mapping.)
+pub fn gate_exit_code(cmps: &[Comparison]) -> i32 {
+    if cmps.iter().all(Comparison::gate) {
+        0
+    } else {
+        1
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared workload builders (used by the CLI harness AND the bench suites)
+// ---------------------------------------------------------------------------
+
+/// FNV-1a of a scenario id — the pinned per-scenario RNG seed.
+pub fn scenario_seed(id: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in id.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The pinned recovery workload: one complex factor-tied BPBP-style
+/// module with noised permutation logits on the DFT target — the same
+/// construction `benches/fig3_recovery.rs` sweeps.
+pub fn recovery_workload(n: usize, chunk: usize, seed: u64) -> (BpStack, FactorizeLoss) {
+    let mut rng = Rng::new(seed);
+    let mut p = BpParams::init(
+        n,
+        Field::Complex,
+        TwiddleTying::Factor,
+        PermTying::Untied,
+        InitScheme::OrthogonalLike,
+        &mut rng,
+    );
+    for k in 0..p.levels {
+        for g in 0..3 {
+            p.set_logit(k, g, rng.normal_f32(0.0, 1.0));
+        }
+    }
+    let stack = BpStack::new(vec![BpModule::new(p)]);
+    let target = target_matrix(TransformKind::Dft, n, &mut Rng::new(seed ^ 0xA5A5));
+    let mut loss = FactorizeLoss::new(target);
+    loss.chunk = chunk.min(n).max(1);
+    (stack, loss)
+}
+
+/// Steps/sec of the workspace training engine (`loss_and_grad_parallel`)
+/// over `steps` timed steps, after one untimed warm step that sizes
+/// every buffer. The stack is immutable and the gradient re-zeroed per
+/// step, so repetitions run bit-identical workloads. Shared by the
+/// `bench` CLI and `benches/fig3_recovery.rs`.
+pub fn recovery_steps_per_sec(
+    loss: &FactorizeLoss,
+    stack: &BpStack,
+    pool: &mut ParallelTrainer,
+    steps: usize,
+) -> f64 {
+    let mut grad = stack.zero_grad();
+    black_box(loss.loss_and_grad_parallel(stack, &mut grad, pool));
+    let steps = steps.max(1);
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        for g in grad.iter_mut() {
+            g.iter_mut().for_each(|v| *v = 0.0);
+        }
+        black_box(loss.loss_and_grad_parallel(stack, &mut grad, pool));
+    }
+    steps as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// SGD steps/sec of the chunk-parallel nn engine (`MlpTrainer::step`)
+/// on one pinned minibatch, after a warm step taken on a throwaway
+/// clone — so the measured model starts from pristine weights on every
+/// call and repetitions are bit-identical. Shared by the `bench` CLI
+/// and `benches/table1_compress.rs`.
+pub fn compress_steps_per_sec(
+    kind: HiddenKind,
+    n: usize,
+    bsz: usize,
+    threads: usize,
+    chunk: usize,
+    steps: usize,
+    seed: u64,
+) -> f64 {
+    let classes = 10usize;
+    let mut model = CompressMlp::new(kind, n, classes, &mut Rng::new(seed));
+    let mut trainer = MlpTrainer::new(threads, chunk);
+    let mut x = vec![0.0f32; bsz * n];
+    Rng::new(seed ^ 0x5EED).fill_normal(&mut x, 0.0, 1.0);
+    let y: Vec<u8> = (0..bsz).map(|i| (i % classes) as u8).collect();
+    let mut warm = model.clone();
+    black_box(trainer.step(&mut warm, &x, &y, 0.02, 0.9, 0.0));
+    let steps = steps.max(1);
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        black_box(trainer.step(&mut model, &x, &y, 0.02, 0.9, 0.0));
+    }
+    steps as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Aggregate result of one offered-load run through a shared-queue
+/// [`Router`] route.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolLoadStats {
+    pub vectors_per_sec: f64,
+    pub mean_batch: f64,
+    pub mean_latency_micros: f64,
+}
+
+/// Drive `requests` total real-plane requests from `clients` threads
+/// through one route served by a `workers`-wide shared-queue pool
+/// (fresh router per call, seeded clients, remainder distributed so
+/// exactly `requests` are sent). Shared by the `bench` CLI and
+/// `benches/serving.rs`.
+pub fn pool_load(
+    op: Arc<dyn LinearOp>,
+    workers: usize,
+    max_batch: usize,
+    max_wait: Duration,
+    clients: usize,
+    requests: usize,
+    seed: u64,
+) -> PoolLoadStats {
+    let n = op.n();
+    let mut router = Router::new();
+    router.install("bench", op, workers, BatcherConfig { max_batch, max_wait, queue_cap: 65536 });
+    let handle = router.handle("bench").unwrap();
+    let t0 = Instant::now();
+    let threads: Vec<_> = (0..clients.max(1))
+        .map(|t| {
+            let h = handle.clone();
+            let per = requests / clients.max(1) + usize::from(t < requests % clients.max(1));
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(seed.wrapping_add(t as u64));
+                for _ in 0..per {
+                    let mut x = vec![0.0f32; n];
+                    rng.fill_normal(&mut x, 0.0, 1.0);
+                    h.call_real(x).expect("bench pool call");
+                }
+            })
+        })
+        .collect();
+    for th in threads {
+        th.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = router.shutdown();
+    let s = &stats["bench"];
+    PoolLoadStats {
+        vectors_per_sec: s.served as f64 / wall,
+        mean_batch: s.served as f64 / s.batches.max(1) as f64,
+        mean_latency_micros: s.mean_latency_micros,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The scenario matrix
+// ---------------------------------------------------------------------------
+
+fn push(out: &mut Vec<Scenario>, id: String, unit: Unit, samples: &[f64]) {
+    out.push(Scenario { id, unit, stats: Stats::from_samples(samples), noise_band: DEFAULT_NOISE_BAND });
+}
+
+/// Training-engine throughput: recovery + nn-compress steps/sec at
+/// T ∈ {1, 2, 8}.
+pub fn run_train(smoke: bool) -> Report {
+    let (reps, steps) = if smoke { (1usize, 2usize) } else { (5, 12) };
+    let n = 256usize;
+    let mut scenarios = Vec::new();
+    for t in [1usize, 2, 8] {
+        let id = format!("train/recovery-dft/n{n}/T{t}");
+        let seed = scenario_seed(&id);
+        let (stack, loss) = recovery_workload(n, 64, seed);
+        let mut pool = ParallelTrainer::new(n, t);
+        // one discarded repetition warms caches and sizes every buffer
+        recovery_steps_per_sec(&loss, &stack, &mut pool, steps);
+        let samples: Vec<f64> =
+            (0..reps).map(|_| recovery_steps_per_sec(&loss, &stack, &mut pool, steps)).collect();
+        push(&mut scenarios, id, Unit::StepsPerSec, &samples);
+    }
+    let bsz = 50usize; // the paper's §4.2 batch size
+    for t in [1usize, 2, 8] {
+        let id = format!("train/compress-bpbp-real/n{n}/T{t}");
+        let seed = scenario_seed(&id);
+        compress_steps_per_sec(HiddenKind::BpbpReal, n, bsz, t, 8, steps, seed);
+        let samples: Vec<f64> = (0..reps)
+            .map(|_| compress_steps_per_sec(HiddenKind::BpbpReal, n, bsz, t, 8, steps, seed))
+            .collect();
+        push(&mut scenarios, id, Unit::StepsPerSec, &samples);
+    }
+    Report { area: "train".into(), env: EnvFingerprint::detect(smoke), scenarios }
+}
+
+/// Serving-kernel latency: ns/vec of every `plan()` kind at
+/// B ∈ {1, 8, 64, 256}. Fast kinds run at N = 1024; the dense-fallback
+/// kinds (legendre, randn — O(N²) by construction) at N = 256 to bound
+/// wall-clock. The id embeds N, so the distinction is explicit in the
+/// baseline.
+pub fn run_ops(smoke: bool) -> Report {
+    let (reps, iters) = if smoke { (1usize, 2usize) } else { (7, 25) };
+    let mut scenarios = Vec::new();
+    for kind in ALL_TRANSFORMS {
+        let n = match kind {
+            TransformKind::Legendre | TransformKind::Randn => 256usize,
+            _ => 1024,
+        };
+        for b in [1usize, 8, 64, 256] {
+            let id = format!("ops/{}/n{n}/B{b}", kind.name());
+            let seed = scenario_seed(&id);
+            let op = plan_with_rng(kind, n, &mut Rng::new(seed));
+            let samples = op_ns_per_vec_samples(op.as_ref(), b, reps, iters, seed ^ 0xBE7C);
+            push(&mut scenarios, id, Unit::NsPerVec, &samples);
+        }
+    }
+    Report { area: "ops".into(), env: EnvFingerprint::detect(smoke), scenarios }
+}
+
+/// `ServicePool` end-to-end throughput at W ∈ {1, 2, 4, 8} workers
+/// draining one shared queue under fixed offered load (8 clients,
+/// hardened closed-form DFT stack at N = 1024, max_batch 32,
+/// 500 µs window — the `benches/serving.rs` scaling configuration).
+pub fn run_serving(smoke: bool) -> Report {
+    let (reps, requests) = if smoke { (1usize, 240usize) } else { (3, 2000) };
+    let n = 1024usize;
+    let clients = 8usize;
+    let op = stack_op("bench-dft", &dft_stack(n));
+    let mut scenarios = Vec::new();
+    for w in [1usize, 2, 4, 8] {
+        let id = format!("serving/pool-dft/n{n}/W{w}");
+        let seed = scenario_seed(&id);
+        // warm repetition (shorter) spins up allocator/pagecache state
+        pool_load(op.clone(), w, 32, Duration::from_micros(500), clients, requests.min(240), seed);
+        let samples: Vec<f64> = (0..reps)
+            .map(|_| {
+                pool_load(op.clone(), w, 32, Duration::from_micros(500), clients, requests, seed)
+                    .vectors_per_sec
+            })
+            .collect();
+        push(&mut scenarios, id, Unit::VectorsPerSec, &samples);
+    }
+    Report { area: "serving".into(), env: EnvFingerprint::detect(smoke), scenarios }
+}
+
+/// Run one area by name.
+pub fn run_area(area: &str, smoke: bool) -> Option<Report> {
+    match area {
+        "train" => Some(run_train(smoke)),
+        "ops" => Some(run_ops(smoke)),
+        "serving" => Some(run_serving(smoke)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_seed_is_stable_and_distinct() {
+        // pinned value: changing the hash silently re-seeds every
+        // scenario and invalidates committed baselines
+        assert_eq!(scenario_seed(""), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(scenario_seed("ops/dft/n1024/B1"), scenario_seed("ops/dft/n1024/B8"));
+        assert_eq!(scenario_seed("train/recovery-dft/n256/T1"), scenario_seed("train/recovery-dft/n256/T1"));
+    }
+
+    #[test]
+    fn filenames_and_areas() {
+        assert_eq!(Report::filename("ops"), "BENCH_ops.json");
+        for a in AREAS {
+            assert!(a.chars().all(|c| c.is_ascii_lowercase()));
+        }
+        assert!(run_area("nope", true).is_none());
+    }
+
+    #[test]
+    fn unit_round_trip() {
+        for u in [Unit::NsPerVec, Unit::StepsPerSec, Unit::VectorsPerSec] {
+            assert_eq!(Unit::parse(u.as_str()), Some(u));
+        }
+        assert!(Unit::NsPerVec.higher_is_better() == false);
+        assert!(Unit::StepsPerSec.higher_is_better() && Unit::VectorsPerSec.higher_is_better());
+    }
+
+    #[test]
+    fn stats_from_samples() {
+        let s = Stats::from_samples(&[4.0, 1.0, 3.0, 2.0, 5.0]);
+        assert_eq!(s.reps, 5);
+        assert!((s.median - 3.0).abs() < 1e-12);
+        assert!((s.q1 - 2.0).abs() < 1e-12);
+        assert!((s.q3 - 4.0).abs() < 1e-12);
+    }
+}

@@ -8,6 +8,9 @@
 //!   every lowered entrypoint (HLO-text path, input/output specs), and
 //!   [`LayerArtifact`]: a trained compressed layer (θ + bias) that
 //!   rebuilds a serveable op.
+//! - [`bench`] — the perf-trajectory harness behind the `bench` CLI
+//!   subcommand: the pinned scenario matrix, `BENCH_<area>.json`
+//!   reports, and the baseline-compare gate CI enforces.
 //! - [`engine`] — the [`Engine`](engine::Engine) abstraction with two
 //!   implementations:
 //!   [`XlaEngine`](engine::XlaEngine) (PJRT CPU, compile-once-and-cache)
@@ -20,6 +23,7 @@
 //! parser reassigns ids (see /opt/xla-example/README.md).
 
 pub mod artifacts;
+pub mod bench;
 pub mod engine;
 pub mod tensor;
 

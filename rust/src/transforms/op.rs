@@ -594,18 +594,23 @@ pub fn lowrank_op(name: impl Into<String>, n: usize, rank: usize, v: &[f32], u: 
 // timing helper
 // ---------------------------------------------------------------------------
 
-/// Mean nanoseconds per vector of `op.apply_batch` at batch `b` over
-/// `iters` timed applies (plus one warm-up that sizes the workspace).
-/// One timing policy shared by the `compress` CLI and
-/// `benches/table1_compress.rs`, so their speed columns can never
-/// silently diverge. Inputs are seeded noise; complex ops get a full
-/// imaginary plane, real ops the single-plane path.
-pub fn bench_nanos_per_vec(op: &dyn LinearOp, b: usize, iters: usize) -> f64 {
+/// Per-repetition nanoseconds-per-vector samples of `op.apply_batch` at
+/// batch `b`: `reps` timed blocks of `iters` applies each, after one
+/// untimed warm-up apply that sizes the workspace. This is THE op
+/// measurement core — the `compress` CLI, `benches/table1_compress.rs`,
+/// and the `bench --json` perf-trajectory harness (`runtime::bench`,
+/// which turns the samples into median/IQR) all go through it, so their
+/// speed columns can never silently diverge.
+///
+/// Inputs are noise drawn from `seed`; complex ops get a full imaginary
+/// plane, real ops the single-plane path. Pristine input is restored
+/// before every apply: feeding an op its own output would decay/blow up
+/// by gain^iters and time denormal or inf/NaN arithmetic instead of the
+/// op (the restore memcpy is deliberately part of the timed harness for
+/// every op, so rows stay comparable).
+pub fn op_ns_per_vec_samples(op: &dyn LinearOp, b: usize, reps: usize, iters: usize, seed: u64) -> Vec<f64> {
     let n = op.n();
-    let mut rng = Rng::new(0xBE7C);
-    // Pristine input restored before every apply: feeding an op its own
-    // output would decay/blow up by gain^iters and time denormal or
-    // inf/NaN arithmetic instead of the op.
+    let mut rng = Rng::new(seed);
     let mut x = vec![0.0f32; b * n];
     rng.fill_normal(&mut x, 0.0, 1.0);
     let mut re = x.clone();
@@ -613,16 +618,27 @@ pub fn bench_nanos_per_vec(op: &dyn LinearOp, b: usize, iters: usize) -> f64 {
     let mut ws = OpWorkspace::new();
     op.apply_batch(&mut re, &mut im, b, &mut ws);
     let iters = iters.max(1);
-    let t0 = std::time::Instant::now();
-    for _ in 0..iters {
-        re.copy_from_slice(&x);
-        if !im.is_empty() {
-            im.fill(0.0);
+    let mut samples = Vec::with_capacity(reps.max(1));
+    for _ in 0..reps.max(1) {
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            re.copy_from_slice(&x);
+            if !im.is_empty() {
+                im.fill(0.0);
+            }
+            op.apply_batch(&mut re, &mut im, b, &mut ws);
+            crate::util::timer::black_box(re[0]);
         }
-        op.apply_batch(&mut re, &mut im, b, &mut ws);
-        crate::util::timer::black_box(re[0]);
+        samples.push(t0.elapsed().as_nanos() as f64 / (iters * b) as f64);
     }
-    t0.elapsed().as_nanos() as f64 / (iters * b) as f64
+    samples
+}
+
+/// Mean nanoseconds per vector over one timed block of `iters` applies —
+/// the single-repetition form of [`op_ns_per_vec_samples`], kept as the
+/// convenience the `compress` CLI and table benches print.
+pub fn bench_nanos_per_vec(op: &dyn LinearOp, b: usize, iters: usize) -> f64 {
+    op_ns_per_vec_samples(op, b, 1, iters, 0xBE7C)[0]
 }
 
 // ---------------------------------------------------------------------------

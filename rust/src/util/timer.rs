@@ -26,6 +26,16 @@ impl Samples {
         percentile(&self.nanos, 90.0)
     }
 
+    /// First quartile (25th percentile) — lower edge of the IQR.
+    pub fn q1(&self) -> f64 {
+        percentile(&self.nanos, 25.0)
+    }
+
+    /// Third quartile (75th percentile) — upper edge of the IQR.
+    pub fn q3(&self) -> f64 {
+        percentile(&self.nanos, 75.0)
+    }
+
     pub fn mean(&self) -> f64 {
         self.nanos.iter().sum::<f64>() / self.nanos.len().max(1) as f64
     }
@@ -38,7 +48,10 @@ impl Samples {
     }
 }
 
-fn percentile(xs: &[f64], p: f64) -> f64 {
+/// Linear-interpolated percentile of an unsorted sample set (`p` in
+/// 0..=100). Shared by [`Samples`] and the `runtime::bench` median/IQR
+/// summaries so every perf number in the repo uses one definition.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
@@ -78,18 +91,36 @@ impl Default for BenchConfig {
 }
 
 impl BenchConfig {
-    /// A faster profile for CI / smoke runs (set `BENCH_FAST=1`).
+    /// The profile selected by [`smoke_mode`]: tiny sizes, one measured
+    /// repetition — fast enough that CI executes every bench suite on
+    /// every push instead of only compiling them.
+    pub fn smoke() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(10),
+            runs: 1,
+            min_run_time: Duration::from_millis(2),
+        }
+    }
+
+    /// Smoke profile when [`smoke_mode`] is on, the full profile
+    /// otherwise.
     pub fn from_env() -> Self {
-        if std::env::var("BENCH_FAST").ok().as_deref() == Some("1") {
-            BenchConfig {
-                warmup: Duration::from_millis(20),
-                runs: 5,
-                min_run_time: Duration::from_millis(5),
-            }
+        if smoke_mode() {
+            BenchConfig::smoke()
         } else {
             BenchConfig::default()
         }
     }
+}
+
+/// The one smoke knob shared by every bench suite and the `bench` CLI:
+/// on when `BUTTERFLY_BENCH_SMOKE=1` (the CI setting), when the legacy
+/// `BENCH_FAST=1` alias is set, or when the process was invoked with a
+/// `--smoke` argument (`cargo bench -- --smoke`). Smoke means small N
+/// and one repetition — a fast execution gate, not a measurement.
+pub fn smoke_mode() -> bool {
+    let env_on = |k: &str| std::env::var(k).ok().as_deref() == Some("1");
+    env_on("BUTTERFLY_BENCH_SMOKE") || env_on("BENCH_FAST") || std::env::args().any(|a| a == "--smoke")
 }
 
 /// Measure `f` (one logical iteration per call) under `cfg`.
@@ -186,6 +217,10 @@ mod tests {
         assert!((s.median() - 11.5).abs() < 1e-9);
         assert!(s.mad() < 2.0);
         assert!(s.mean() > s.median());
+        // IQR brackets the median even with the outlier present.
+        assert!(s.q1() <= s.median() && s.median() <= s.q3());
+        assert!((s.q1() - 11.0).abs() < 1e-9);
+        assert!((s.q3() - 12.0).abs() < 1e-9);
     }
 
     #[test]

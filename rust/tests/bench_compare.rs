@@ -1,0 +1,364 @@
+//! The bench-gate contract: noise-band math, missing/new-scenario
+//! handling, env-fingerprint mismatch downgrading failure to a warning,
+//! and the `BENCH_*.json` round-trip through `util::json`.
+//!
+//! These tests pin the behavior CI leans on — in particular that an
+//! injected synthetic regression makes the gate exit nonzero (the
+//! acceptance criterion for the harness) and that baselines from a
+//! different machine can never fail someone else's build.
+
+use butterfly::runtime::bench::{
+    gate_exit_code, Comparison, EnvFingerprint, Report, Scenario, Stats, Unit, Verdict,
+    DEFAULT_NOISE_BAND, SMOKE_NOISE_BAND,
+};
+
+fn env(cpu: &str, smoke: bool) -> EnvFingerprint {
+    EnvFingerprint {
+        cpu: cpu.to_string(),
+        cores: 8,
+        rustc: "rustc 1.75.0".to_string(),
+        git_sha: "abc123def456".to_string(),
+        flags: "release".to_string(),
+        smoke,
+        provenance: "measured".to_string(),
+    }
+}
+
+fn scenario(id: &str, unit: Unit, median: f64) -> Scenario {
+    Scenario {
+        id: id.to_string(),
+        unit,
+        stats: Stats { median, q1: median * 0.98, q3: median * 1.02, reps: 5 },
+        noise_band: DEFAULT_NOISE_BAND,
+    }
+}
+
+fn report(area: &str, env: EnvFingerprint, scenarios: Vec<Scenario>) -> Report {
+    Report { area: area.to_string(), env, scenarios }
+}
+
+fn row<'a>(cmp: &'a Comparison, id: &str) -> &'a butterfly::runtime::bench::CompareRow {
+    cmp.rows.iter().find(|r| r.id == id).unwrap_or_else(|| panic!("no row '{id}'"))
+}
+
+// ---------------------------------------------------------------------------
+// noise-band math
+// ---------------------------------------------------------------------------
+
+#[test]
+fn within_band_is_ok_in_both_directions() {
+    let base = report(
+        "ops",
+        env("cpu-a", false),
+        vec![scenario("ops/dft/n1024/B1", Unit::NsPerVec, 1000.0)],
+    );
+    for median in [870.0, 1000.0, 1140.0] {
+        let cur = report(
+            "ops",
+            env("cpu-a", false),
+            vec![scenario("ops/dft/n1024/B1", Unit::NsPerVec, median)],
+        );
+        let cmp = Comparison::compare(&base, &cur);
+        assert_eq!(row(&cmp, "ops/dft/n1024/B1").verdict, Verdict::Ok, "median {median}");
+        assert!(cmp.gate());
+        assert_eq!(gate_exit_code(&[cmp]), 0);
+    }
+}
+
+#[test]
+fn injected_regression_fails_the_gate_lower_is_better() {
+    // ns/vec regresses UPWARD: +20% latency is out of the ±15% band
+    let base = report(
+        "ops",
+        env("cpu-a", false),
+        vec![scenario("ops/dft/n1024/B1", Unit::NsPerVec, 1000.0)],
+    );
+    let cur = report(
+        "ops",
+        env("cpu-a", false),
+        vec![scenario("ops/dft/n1024/B1", Unit::NsPerVec, 1200.0)],
+    );
+    let cmp = Comparison::compare(&base, &cur);
+    let r = row(&cmp, "ops/dft/n1024/B1");
+    assert_eq!(r.verdict, Verdict::Regressed);
+    assert!((r.ratio.unwrap() - 1.2).abs() < 1e-9);
+    assert!(!cmp.gate());
+    assert_eq!(gate_exit_code(&[cmp]), 1, "the CI gate must exit nonzero on a regression");
+}
+
+#[test]
+fn injected_regression_fails_the_gate_higher_is_better() {
+    // steps/sec regresses DOWNWARD: −20% throughput is out of band,
+    // while +20% is an improvement, not a regression
+    let base = report(
+        "train",
+        env("cpu-a", false),
+        vec![scenario("train/recovery-dft/n256/T1", Unit::StepsPerSec, 500.0)],
+    );
+    let slower = report(
+        "train",
+        env("cpu-a", false),
+        vec![scenario("train/recovery-dft/n256/T1", Unit::StepsPerSec, 400.0)],
+    );
+    let cmp = Comparison::compare(&base, &slower);
+    assert_eq!(row(&cmp, "train/recovery-dft/n256/T1").verdict, Verdict::Regressed);
+    assert_eq!(gate_exit_code(&[cmp]), 1);
+
+    let faster = report(
+        "train",
+        env("cpu-a", false),
+        vec![scenario("train/recovery-dft/n256/T1", Unit::StepsPerSec, 600.0)],
+    );
+    let cmp = Comparison::compare(&base, &faster);
+    assert_eq!(row(&cmp, "train/recovery-dft/n256/T1").verdict, Verdict::Improved);
+    assert_eq!(gate_exit_code(&[cmp]), 0);
+}
+
+#[test]
+fn per_entry_noise_band_overrides_the_default() {
+    // a committed baseline can widen its own band: ±50% tolerates a
+    // +40% latency swing that the default band would fail
+    let mut wide = scenario("ops/randn/n256/B1", Unit::NsPerVec, 1000.0);
+    wide.noise_band = 0.50;
+    let base = report("ops", env("cpu-a", false), vec![wide]);
+    let cur = report(
+        "ops",
+        env("cpu-a", false),
+        vec![scenario("ops/randn/n256/B1", Unit::NsPerVec, 1400.0)],
+    );
+    let cmp = Comparison::compare(&base, &cur);
+    let r = row(&cmp, "ops/randn/n256/B1");
+    assert_eq!(r.verdict, Verdict::Ok);
+    assert!((r.band - 0.50).abs() < 1e-12, "band comes from the baseline entry");
+}
+
+#[test]
+fn smoke_runs_widen_the_band_to_at_least_35_percent() {
+    let base = report(
+        "ops",
+        env("cpu-a", false),
+        vec![scenario("ops/dft/n1024/B1", Unit::NsPerVec, 1000.0)],
+    );
+    // +25% would regress under the full ±15% band, but the current run
+    // is smoke (1 rep), so the effective band is ±35%
+    let cur = report(
+        "ops",
+        env("cpu-a", true),
+        vec![scenario("ops/dft/n1024/B1", Unit::NsPerVec, 1250.0)],
+    );
+    let cmp = Comparison::compare(&base, &cur);
+    let r = row(&cmp, "ops/dft/n1024/B1");
+    assert!((r.band - SMOKE_NOISE_BAND).abs() < 1e-12);
+    assert_eq!(r.verdict, Verdict::Ok);
+    // ... and a gross +50% regression still fails even at smoke width
+    let cur = report(
+        "ops",
+        env("cpu-a", true),
+        vec![scenario("ops/dft/n1024/B1", Unit::NsPerVec, 1500.0)],
+    );
+    let cmp = Comparison::compare(&base, &cur);
+    assert_eq!(row(&cmp, "ops/dft/n1024/B1").verdict, Verdict::Regressed);
+    assert_eq!(gate_exit_code(&[cmp]), 1);
+}
+
+// ---------------------------------------------------------------------------
+// missing / new scenarios
+// ---------------------------------------------------------------------------
+
+#[test]
+fn missing_and_new_scenarios_warn_but_never_fail() {
+    let base = report(
+        "ops",
+        env("cpu-a", false),
+        vec![
+            scenario("ops/dft/n1024/B1", Unit::NsPerVec, 1000.0),
+            scenario("ops/retired/n1024/B1", Unit::NsPerVec, 500.0),
+        ],
+    );
+    let cur = report(
+        "ops",
+        env("cpu-a", false),
+        vec![
+            scenario("ops/dft/n1024/B1", Unit::NsPerVec, 1010.0),
+            scenario("ops/brand-new/n1024/B1", Unit::NsPerVec, 700.0),
+        ],
+    );
+    let cmp = Comparison::compare(&base, &cur);
+    assert_eq!(row(&cmp, "ops/retired/n1024/B1").verdict, Verdict::Missing);
+    assert_eq!(row(&cmp, "ops/brand-new/n1024/B1").verdict, Verdict::New);
+    assert_eq!(row(&cmp, "ops/dft/n1024/B1").verdict, Verdict::Ok);
+    assert!(cmp.gate(), "missing/new entries must not fail the gate");
+    assert_eq!(gate_exit_code(&[cmp]), 0);
+}
+
+#[test]
+fn degenerate_medians_are_incomparable_not_regressions() {
+    // a zero / non-finite median means the measurement is broken, not
+    // that perf regressed — report it as New (no ratio), don't gate
+    let base = report(
+        "ops",
+        env("cpu-a", false),
+        vec![scenario("ops/dft/n1024/B1", Unit::NsPerVec, 0.0)],
+    );
+    let cur = report(
+        "ops",
+        env("cpu-a", false),
+        vec![scenario("ops/dft/n1024/B1", Unit::NsPerVec, 1000.0)],
+    );
+    let cmp = Comparison::compare(&base, &cur);
+    let r = row(&cmp, "ops/dft/n1024/B1");
+    assert_eq!(r.verdict, Verdict::New);
+    assert!(r.ratio.is_none());
+    assert_eq!(gate_exit_code(&[cmp]), 0);
+}
+
+// ---------------------------------------------------------------------------
+// env-fingerprint mismatch downgrades failure to a warning
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cross_machine_regression_is_advisory_only() {
+    let base = report(
+        "ops",
+        env("cpu-a", false),
+        vec![scenario("ops/dft/n1024/B1", Unit::NsPerVec, 1000.0)],
+    );
+    // 3x slower — but measured on different hardware
+    let cur = report(
+        "ops",
+        env("cpu-b", false),
+        vec![scenario("ops/dft/n1024/B1", Unit::NsPerVec, 3000.0)],
+    );
+    let cmp = Comparison::compare(&base, &cur);
+    assert!(!cmp.env_match);
+    // the regression is still REPORTED in the table...
+    assert_eq!(row(&cmp, "ops/dft/n1024/B1").verdict, Verdict::Regressed);
+    assert_eq!(cmp.regressions(), 1);
+    // ...but the gate passes: cross-machine numbers are context
+    assert!(cmp.gate());
+    assert_eq!(gate_exit_code(&[cmp]), 0);
+    assert!(cmp.render().contains("advisory"), "render must say why it passed:\n{}", cmp.render());
+}
+
+#[test]
+fn estimated_baselines_never_hard_gate() {
+    // committed seeds carry provenance:"estimated" until re-baselined on
+    // the real runner class — they must not be able to fail a build
+    let mut base_env = env("cpu-a", false);
+    base_env.provenance = "estimated".to_string();
+    let base = report(
+        "ops",
+        base_env,
+        vec![scenario("ops/dft/n1024/B1", Unit::NsPerVec, 1000.0)],
+    );
+    let cur = report(
+        "ops",
+        env("cpu-a", false),
+        vec![scenario("ops/dft/n1024/B1", Unit::NsPerVec, 5000.0)],
+    );
+    let cmp = Comparison::compare(&base, &cur);
+    assert!(!cmp.env_match);
+    assert!(cmp.gate());
+    assert_eq!(gate_exit_code(&[cmp]), 0);
+}
+
+#[test]
+fn mismatch_only_downgrades_it_does_not_hide_passes() {
+    // env mismatch with NO regressions is still a plain pass
+    let base = report(
+        "ops",
+        env("cpu-a", false),
+        vec![scenario("ops/dft/n1024/B1", Unit::NsPerVec, 1000.0)],
+    );
+    let cur = report(
+        "ops",
+        env("cpu-b", false),
+        vec![scenario("ops/dft/n1024/B1", Unit::NsPerVec, 1010.0)],
+    );
+    let cmp = Comparison::compare(&base, &cur);
+    assert!(cmp.gate());
+    assert_eq!(cmp.regressions(), 0);
+}
+
+#[test]
+fn gate_exit_code_aggregates_across_areas() {
+    let mk = |median: f64| {
+        let base = report(
+            "ops",
+            env("cpu-a", false),
+            vec![scenario("ops/dft/n1024/B1", Unit::NsPerVec, 1000.0)],
+        );
+        let cur = report(
+            "ops",
+            env("cpu-a", false),
+            vec![scenario("ops/dft/n1024/B1", Unit::NsPerVec, median)],
+        );
+        Comparison::compare(&base, &cur)
+    };
+    assert_eq!(gate_exit_code(&[]), 0, "no baselines at all is a pass");
+    assert_eq!(gate_exit_code(&[mk(1000.0), mk(1010.0)]), 0);
+    // one bad area fails the whole gate
+    assert_eq!(gate_exit_code(&[mk(1000.0), mk(2000.0)]), 1);
+}
+
+// ---------------------------------------------------------------------------
+// JSON round-trip through util::json
+// ---------------------------------------------------------------------------
+
+#[test]
+fn report_round_trips_through_json_text() {
+    let rep = report(
+        "serving",
+        env("Example CPU @ 3.2GHz", false),
+        vec![
+            scenario("serving/pool-dft/n1024/W1", Unit::VectorsPerSec, 41235.5),
+            {
+                let mut s = scenario("serving/pool-dft/n1024/W8", Unit::VectorsPerSec, 198000.0);
+                s.noise_band = 0.25;
+                s
+            },
+        ],
+    );
+    let text = rep.to_json().to_string_pretty();
+    let parsed = butterfly::util::json::parse(&text).expect("valid JSON");
+    let back = Report::from_json(&parsed).expect("well-formed report");
+    assert_eq!(back, rep);
+    // schema version is stamped in the serialized form
+    assert_eq!(parsed.get("schema").and_then(|v| v.as_usize()), Some(1));
+}
+
+#[test]
+fn report_save_load_round_trips_on_disk() {
+    let rep = report(
+        "train",
+        env("Example CPU @ 3.2GHz", true),
+        vec![scenario("train/recovery-dft/n256/T2", Unit::StepsPerSec, 812.25)],
+    );
+    let path = std::env::temp_dir().join(format!("bench_compare_rt_{}.json", std::process::id()));
+    rep.save(&path).expect("save");
+    let back = Report::load(&path).expect("load");
+    std::fs::remove_file(&path).ok();
+    assert_eq!(back, rep);
+}
+
+#[test]
+fn loading_rejects_malformed_reports() {
+    assert!(butterfly::util::json::parse("{").is_err());
+    let missing_env = butterfly::util::json::parse(r#"{"area": "ops", "scenarios": []}"#).unwrap();
+    assert!(Report::from_json(&missing_env).is_err());
+    let bad_unit = butterfly::util::json::parse(
+        r#"{"area":"ops","env":{"cpu":"x","cores":1,"rustc":"r","git_sha":"s","flags":"release","smoke":false},
+            "scenarios":[{"id":"a","unit":"parsecs","median":1,"q1":1,"q3":1,"reps":1}]}"#,
+    )
+    .unwrap();
+    assert!(Report::from_json(&bad_unit).is_err());
+    // absent noise_band falls back to the default
+    let no_band = butterfly::util::json::parse(
+        r#"{"area":"ops","env":{"cpu":"x","cores":1,"rustc":"r","git_sha":"s","flags":"release","smoke":false},
+            "scenarios":[{"id":"a","unit":"ns_per_vec","median":1,"q1":1,"q3":1,"reps":1}]}"#,
+    )
+    .unwrap();
+    let rep = Report::from_json(&no_band).expect("noise_band is optional");
+    assert!((rep.scenarios[0].noise_band - DEFAULT_NOISE_BAND).abs() < 1e-12);
+    assert_eq!(rep.env.provenance, "measured", "absent provenance defaults to measured");
+}

@@ -13,10 +13,11 @@
 //! load (same clients, same request count) — adding workers must not
 //! fragment batches the way per-replica queues did.
 
-use butterfly::butterfly::closed_form::{dft_stack, hadamard_stack};
+use butterfly::butterfly::closed_form::{dct_stack, dft_stack, hadamard_stack};
 use butterfly::butterfly::fast::{BatchWorkspace, FastBp, Workspace};
 use butterfly::runtime::bench::{pool_load, scenario_seed};
-use butterfly::transforms::op::{op_ns_per_vec_samples, plan, stack_op, LinearOp};
+use butterfly::transforms::fuse::{FuseSpec, FuseStrategy};
+use butterfly::transforms::op::{op_ns_per_vec_samples, plan, stack_op, stack_op_fused, LinearOp};
 use butterfly::transforms::spec::TransformKind;
 use butterfly::util::rng::Rng;
 use butterfly::util::table::Table;
@@ -103,6 +104,55 @@ fn main() {
         otable.add_row(row);
     }
     println!("{}", otable.render());
+
+    // fused vs unfused: the factor-fusion claim, measured through the
+    // same harness. Each closed-form stack serves as log N butterfly
+    // stages and as K ∈ {2, 4} fused block-sparse kernels; the trailing
+    // columns are the fused/unfused ns/vec ratio (< 1.00x = fusion wins).
+    let fstacks: Vec<(&str, butterfly::butterfly::module::BpStack)> =
+        vec![("fft", dft_stack(opn)), ("dct2", dct_stack(opn)), ("fwht", hadamard_stack(opn))];
+    let mut ftable = Table::new(&[
+        "stack",
+        "apply path",
+        "flops/apply",
+        "B=1 ns/vec",
+        "B=64 ns/vec",
+        "B=1 vs unfused",
+        "B=64 vs unfused",
+    ])
+    .with_title(format!("fused vs unfused butterfly stacks (N={opn}, balanced split)"));
+    for (label, stack) in &fstacks {
+        let mut variants: Vec<(String, Arc<dyn LinearOp>)> =
+            vec![("unfused (log N stages)".into(), stack_op(format!("stack-{label}"), stack))];
+        for k in [2usize, 4] {
+            variants.push((
+                format!("fused k={k}"),
+                stack_op_fused(format!("fused-{label}"), stack, &FuseSpec::with_k(k, FuseStrategy::Balanced)),
+            ));
+        }
+        let mut base = [1.0f64; 2];
+        for (i, (path, op)) in variants.iter().enumerate() {
+            let mut ns = [0.0f64; 2];
+            for (j, &bsize) in [1usize, 64].iter().enumerate() {
+                let samples =
+                    op_ns_per_vec_samples(op.as_ref(), bsize, op_reps, op_iters, bsize as u64 ^ 0xF05E);
+                ns[j] = percentile(&samples, 50.0);
+            }
+            if i == 0 {
+                base = ns;
+            }
+            ftable.add_row(vec![
+                label.to_string(),
+                path.clone(),
+                op.flops_per_apply().to_string(),
+                format!("{:.0}", ns[0]),
+                format!("{:.0}", ns[1]),
+                format!("{:.2}x", ns[0] / base[0]),
+                format!("{:.2}x", ns[1] / base[1]),
+            ]);
+        }
+    }
+    println!("{}", ftable.render());
 
     // raw capacity: one worker, batch-32 applies
     let stack = dft_stack(n);

@@ -536,6 +536,52 @@ impl FastBp {
         let per_level = self.n / 2 * 6 * if self.complex { 4 } else { 1 };
         self.stages.len() * self.levels * per_level
     }
+
+    // -----------------------------------------------------------------
+    // Per-factor structure (consumed by transforms::fuse)
+    // -----------------------------------------------------------------
+
+    /// Number of hardened stages (= the stack's module depth).
+    pub fn depth(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// The hardened gather table of stage `stage` (`out[i] = in[t[i]]`),
+    /// or `None` when that stage's permutation hardened to the identity.
+    pub fn stage_perm(&self, stage: usize) -> Option<&[usize]> {
+        self.stages[stage].perm.as_deref()
+    }
+
+    /// Borrowed view of one butterfly factor: stage `stage`, level
+    /// `level`. This is the structural interface the fusion planner
+    /// consumes — block size, stride, and the flat twiddle tables —
+    /// instead of the monolithic apply.
+    pub fn factor(&self, stage: usize, level: usize) -> FactorView<'_> {
+        let s = &self.stages[stage];
+        FactorView {
+            half: 1usize << level,
+            blocks: self.n >> (level + 1),
+            tw_re: &s.tw_re[level],
+            tw_im: if self.complex { Some(&s.tw_im[level][..]) } else { None },
+        }
+    }
+}
+
+/// One hardened butterfly factor of a [`FastBp`], viewed structurally:
+/// the factor is block-diagonal with `blocks` blocks of size `2·half`,
+/// each block pairing positions `j` and `j + half` (stride `half`)
+/// through a 2×2 unit. `tw_re`/`tw_im` hold the f32 unit entries
+/// `[g00, g01, g10, g11]` per unit in `(block, j)` application order —
+/// the exact layout the apply kernels stream.
+pub struct FactorView<'a> {
+    /// In-block stride between the two inputs of a unit (= 2^level).
+    pub half: usize,
+    /// Number of size-`2·half` blocks (= n / 2^{level+1}).
+    pub blocks: usize,
+    /// Flat `[g00, g01, g10, g11]` per unit, `(block, j)` order.
+    pub tw_re: &'a [f32],
+    /// Imaginary parts, same layout; `None` when the stack hardened real.
+    pub tw_im: Option<&'a [f32]>,
 }
 
 #[cfg(test)]

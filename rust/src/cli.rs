@@ -152,6 +152,23 @@ mod tests {
     }
 
     #[test]
+    fn fuse_option_forms() {
+        // the fused serving entry points: --fuse takes a strategy value
+        let a = parse("serve --transform dft --n 1024 --exact --fuse balanced:4");
+        assert!(a.flag("exact"));
+        assert_eq!(a.get("fuse"), Some("balanced:4"));
+        // equals syntax and the compress --serve route
+        let b = parse("compress --smoke --fuse=auto --serve");
+        assert_eq!(b.get("fuse"), Some("auto"));
+        assert!(b.flag("serve"));
+        // bare --fuse (no value) parses as a flag, which cmd_serve treats
+        // as "no fuse requested" rather than an error
+        let c = parse("serve --transform dft --fuse");
+        assert_eq!(c.get("fuse"), None);
+        assert!(c.flag("fuse"));
+    }
+
+    #[test]
     fn bench_invocation() {
         // the CI gate form: --compare as a bare trailing flag means
         // "against the default baseline dir"...

@@ -13,9 +13,10 @@
 use butterfly::butterfly::fast::{FastBp, Workspace};
 use butterfly::cli::Args;
 use butterfly::coordinator::{run_job, FactorizeJob, Metrics, Registry, SchedulerConfig};
-use butterfly::runtime::engine::{auto_engine, unpack_op};
+use butterfly::runtime::engine::{auto_engine, unpack_op, unpack_op_fused};
 use butterfly::serving::{BatcherConfig, Router};
-use butterfly::transforms::op::{stack_op, LinearOp};
+use butterfly::transforms::fuse::FuseSpec;
+use butterfly::transforms::op::{stack_op, stack_op_fused, LinearOp};
 use butterfly::transforms::spec::TransformKind;
 use butterfly::util::log;
 use butterfly::util::table::{fmt_sci, Table};
@@ -70,6 +71,12 @@ COMMANDS:
               --transform dft --n 256 --requests 1000 --pool-workers 2
               --exact     serve the closed-form fast op (FFT / fast DCT /
                           FWHT / ...) through the same pool — no training
+              --fuse auto|memory|balanced[:K]
+                          serve butterfly stacks as K fused block-sparse
+                          kernels instead of log N stages; with --exact,
+                          kinds whose closed-form stack is not the exact
+                          operator (dct/dst/hartley/legendre/randn) fall
+                          back to the unfused fast op
               (pool workers drain ONE shared queue; --replicas is an
               accepted alias from the old per-replica-queue design)
   compress    the §4.2 / Table 1 workload: train compressed hidden layers
@@ -86,6 +93,9 @@ COMMANDS:
               --save PATH     write the trained layer artifact (θ + bias)
               --serve         serve the exported op through a worker pool
                               (--requests 2000 --pool-workers 2)
+              --fuse auto|memory|balanced[:K]
+                              serve a bp artifact as fused kernels
+                              (circulant artifacts serve unfused)
               --smoke         tiny end-to-end run (CI)
   bench       run the pinned perf scenario matrix (the perf-trajectory
               harness behind the CI bench-gate job)
@@ -210,26 +220,41 @@ fn cmd_serve(args: &Args) -> i32 {
         let n = args.usize_or("n", 256)?;
         let requests = args.usize_or("requests", 1000)?;
         let workers = args.usize_or("pool-workers", args.usize_or("replicas", 2)?)?;
+        let fuse = args.get("fuse").map(FuseSpec::parse).transpose()?;
         // One serving path for everything: resolve the transform to an
         // Arc<dyn LinearOp>. --exact takes the closed-form fast op from
         // the factory (no training job at all); otherwise a closed-form
         // or learned BP stack is hardened through the stack adapter.
         // Both paths draw stochastic targets (the convolution filter)
         // from the same rng, so toggling --exact serves the same matrix.
+        // --fuse swaps every butterfly-stack apply for the K-kernel
+        // fused path; the pool install below is untouched either way.
         let mut rng = butterfly::util::rng::Rng::new(7);
         let op: std::sync::Arc<dyn LinearOp> = if args.flag("exact") {
-            let op = butterfly::transforms::op::plan_with_rng(kind, n, &mut rng);
+            let op = match &fuse {
+                Some(spec) => butterfly::transforms::op::plan_fused_with_rng(kind, n, &mut rng, spec),
+                None => butterfly::transforms::op::plan_with_rng(kind, n, &mut rng),
+            };
+            if fuse.is_some() && !op.name().contains("fused") {
+                log::info(&format!("'{}' has no exact closed-form stack to fuse; serving it unfused", op.name()));
+            }
             log::info(&format!("serving closed-form op '{}' (no training)", op.name()));
             op
         } else {
             match butterfly::butterfly::closed_form::closed_form_stack(kind, n, &mut rng) {
-                Some((s, _)) => stack_op(kind.name(), &s),
+                Some((s, _)) => match &fuse {
+                    Some(spec) => stack_op_fused(kind.name(), &s, spec),
+                    None => stack_op(kind.name(), &s),
+                },
                 None => {
                     let job = FactorizeJob::paper(kind, n, 42, 4000);
                     let cfg = SchedulerConfig::default();
                     let res = run_job(&job, &cfg, &Metrics::new(), &Registry::new());
                     log::info(&format!("learned {} to rmse {}", kind.name(), fmt_sci(res.best_rmse)));
-                    unpack_op(kind.name(), n, job.depth, &res.best_theta)
+                    match &fuse {
+                        Some(spec) => unpack_op_fused(kind.name(), n, job.depth, &res.best_theta, spec),
+                        None => unpack_op(kind.name(), n, job.depth, &res.best_theta),
+                    }
                 }
             }
         };
@@ -450,8 +475,18 @@ fn cmd_compress(args: &Args) -> i32 {
         if args.flag("serve") || smoke {
             let requests = args.usize_or("requests", if smoke { 100 } else { 2000 })?;
             let workers = args.usize_or("pool-workers", 2)?;
+            // --fuse serves the artifact's fused rebuild (bp artifacts
+            // only; circulant serves unfused — see LayerArtifact::to_op_with)
+            let serve_op = match args.get("fuse").map(FuseSpec::parse).transpose()? {
+                Some(spec) => {
+                    let fused = art.to_op_with(Some(&spec)).map_err(|e| e.to_string())?;
+                    println!("serving fused op '{}'", fused.name());
+                    fused
+                }
+                None => op,
+            };
             let mut router = Router::new();
-            router.install("compressed-hidden", op, workers, BatcherConfig::default());
+            router.install("compressed-hidden", serve_op, workers, BatcherConfig::default());
             let handle = router.handle("compressed-hidden").unwrap();
             let t0 = Instant::now();
             let clients: Vec<_> = (0..4u64)

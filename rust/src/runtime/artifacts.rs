@@ -214,6 +214,17 @@ impl LayerArtifact {
     /// to the op the trained layer exported, because θ round-trips
     /// losslessly and the hardening path is shared.
     pub fn to_op(&self) -> Result<std::sync::Arc<dyn crate::transforms::op::LinearOp>> {
+        self.to_op_with(None)
+    }
+
+    /// [`to_op`](Self::to_op) with an optional fuse step. `"bp"`
+    /// artifacts serve as K fused block-sparse kernels under the spec;
+    /// `"circulant"` already applies through one FFT plan with no
+    /// butterfly stages to merge, so it serves unfused regardless.
+    pub fn to_op_with(
+        &self,
+        fuse: Option<&crate::transforms::fuse::FuseSpec>,
+    ) -> Result<std::sync::Arc<dyn crate::transforms::op::LinearOp>> {
         if self.bias.len() != self.n {
             bail!("artifact '{}': bias has {} entries, want {}", self.name, self.bias.len(), self.n);
         }
@@ -223,7 +234,16 @@ impl LayerArtifact {
                 if self.theta.len() != want {
                     bail!("bp artifact '{}': theta has {} scalars, want {want}", self.name, self.theta.len());
                 }
-                Ok(crate::runtime::engine::unpack_op(self.name.clone(), self.n, self.depth, &self.theta))
+                Ok(match fuse {
+                    Some(spec) => crate::runtime::engine::unpack_op_fused(
+                        self.name.clone(),
+                        self.n,
+                        self.depth,
+                        &self.theta,
+                        spec,
+                    ),
+                    None => crate::runtime::engine::unpack_op(self.name.clone(), self.n, self.depth, &self.theta),
+                })
             }
             "circulant" => {
                 if self.theta.len() != self.n {

@@ -52,14 +52,15 @@
 //! to advisory and the gate passes: cross-machine numbers are context,
 //! not a gate.
 
-use crate::butterfly::closed_form::dft_stack;
+use crate::butterfly::closed_form::{dct_stack, dft_stack, hadamard_stack};
 use crate::butterfly::module::{BpModule, BpStack, FactorizeLoss};
 use crate::butterfly::params::{BpParams, Field, InitScheme, PermTying, TwiddleTying};
 use crate::butterfly::workspace::ParallelTrainer;
 use crate::nn::{CompressMlp, HiddenKind, MlpTrainer};
 use crate::serving::{BatcherConfig, Router};
 use crate::transforms::matrices::target_matrix;
-use crate::transforms::op::{op_ns_per_vec_samples, plan_with_rng, stack_op, LinearOp};
+use crate::transforms::fuse::{FuseSpec, FuseStrategy};
+use crate::transforms::op::{op_ns_per_vec_samples, plan_with_rng, stack_op, stack_op_fused, LinearOp};
 use crate::transforms::spec::{TransformKind, ALL_TRANSFORMS};
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
@@ -803,6 +804,12 @@ pub fn run_train(smoke: bool) -> Report {
 /// kinds (legendre, randn — O(N²) by construction) at N = 256 to bound
 /// wall-clock. The id embeds N, so the distinction is explicit in the
 /// baseline.
+///
+/// The fused-factor rows (`ops/stack-*` and `ops/fused-*-k{2,4}`) time
+/// the closed-form butterfly stacks for fft/dct2/fwht at N = 1024,
+/// B ∈ {1, 64}: `stack-*` is the unfused log N-stage apply and the
+/// direct comparison baseline for the `fused-*` rows (the plain
+/// `ops/dft/...` rows time the FFT plan, not the butterfly stack).
 pub fn run_ops(smoke: bool) -> Report {
     let (reps, iters) = if smoke { (1usize, 2usize) } else { (7, 25) };
     let mut scenarios = Vec::new();
@@ -817,6 +824,28 @@ pub fn run_ops(smoke: bool) -> Report {
             let op = plan_with_rng(kind, n, &mut Rng::new(seed));
             let samples = op_ns_per_vec_samples(op.as_ref(), b, reps, iters, seed ^ 0xBE7C);
             push(&mut scenarios, id, Unit::NsPerVec, &samples);
+        }
+    }
+    let n = 1024usize;
+    let stacks: [(&str, BpStack); 3] =
+        [("fft", dft_stack(n)), ("dct2", dct_stack(n)), ("fwht", hadamard_stack(n))];
+    for (label, stack) in &stacks {
+        for b in [1usize, 64] {
+            let id = format!("ops/stack-{label}/n{n}/B{b}");
+            let seed = scenario_seed(&id);
+            let op = stack_op(format!("stack-{label}"), stack);
+            let samples = op_ns_per_vec_samples(op.as_ref(), b, reps, iters, seed ^ 0xBE7C);
+            push(&mut scenarios, id, Unit::NsPerVec, &samples);
+        }
+        for k in [2usize, 4] {
+            let spec = FuseSpec::with_k(k, FuseStrategy::Balanced);
+            for b in [1usize, 64] {
+                let id = format!("ops/fused-{label}-k{k}/n{n}/B{b}");
+                let seed = scenario_seed(&id);
+                let op = stack_op_fused(format!("fused-{label}"), stack, &spec);
+                let samples = op_ns_per_vec_samples(op.as_ref(), b, reps, iters, seed ^ 0xBE7C);
+                push(&mut scenarios, id, Unit::NsPerVec, &samples);
+            }
         }
     }
     Report { area: "ops".into(), env: EnvFingerprint::detect(smoke), scenarios }

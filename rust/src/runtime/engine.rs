@@ -107,6 +107,20 @@ pub fn unpack_op(
     crate::transforms::op::stack_op(name, &unpack_stack(n, depth, theta))
 }
 
+/// [`unpack_op`] with a fuse step: the unpacked stack is hardened and
+/// served as K fused block-sparse kernels under `spec` instead of log N
+/// butterfly stages. Same θ interchange, same `LinearOp` contract — only
+/// the apply path differs.
+pub fn unpack_op_fused(
+    name: impl Into<String>,
+    n: usize,
+    depth: usize,
+    theta: &[f32],
+    spec: &crate::transforms::fuse::FuseSpec,
+) -> std::sync::Arc<dyn crate::transforms::op::LinearOp> {
+    crate::transforms::op::stack_op_fused(name, &unpack_stack(n, depth, theta), spec)
+}
+
 /// Parse `..._n{N}_d{D}` suffixes.
 fn parse_nd(entry: &str) -> Option<(usize, usize)> {
     let n_pos = entry.rfind("_n")?;

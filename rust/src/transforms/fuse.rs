@@ -1,0 +1,330 @@
+//! The fusion planner: hardened butterfly stack → K fused block-sparse
+//! kernels ([`KsKernel`]) behind a [`FusedOp`].
+//!
+//! The square-dyadic shape (log N factors of span 2) is the
+//! worst-performing apply-time choice — 2–4 fused factors win (lazylinop
+//! `ksm`; Kaleidoscope serves merged kernels the same way). The planner
+//! partitions each module's `log N` levels into K contiguous groups
+//! under a strategy chooser, composes each group's twiddle product in
+//! **f64** (rounded to the `f32` kernel planes once), and interleaves
+//! the kernels with the hardened boundary permutations.
+//!
+//! ## Strategies
+//!
+//! - [`FuseStrategy::Memory`] — greedy pairwise merging that always
+//!   fuses the adjacent pair producing the smallest merged kernel
+//!   (weights cost `n · 2^{group}` scalars, so every merge step adds
+//!   the fewest bytes possible). The plans skew small-heavy — 10 levels
+//!   at K = 3 give `[4, 4, 2]` versus balanced's `[4, 3, 3]` — trading
+//!   a little total weight for one cheap trailing stage.
+//! - [`FuseStrategy::Balanced`] — contiguous groups of (near-)equal
+//!   size: per-stage FLOPs `∝ n · 2^{group}` are equalized as closely
+//!   as an integer split allows (remainder levels go to the earliest
+//!   groups, deterministically).
+//! - `auto` ([`FuseSpec::parse`] without an explicit strategy/K) picks K
+//!   by N — 2 for N ≤ 64, 3 for N ≤ 512, 4 above — with the balanced
+//!   split.
+//!
+//! ## Boundary behavior
+//!
+//! Fusing with K = log N yields groups of size 1 whose kernels copy the
+//! stage twiddles verbatim — the chain is the unfused stack, **bitwise**
+//! (the span-2 apply reproduces the unfused operation order exactly).
+//! Re-fusing an already-fused op is unrepresentable through the normal
+//! entry points (the planner consumes [`FastBp`] factor structure, which
+//! [`FusedOp`] deliberately does not re-expose); [`fuse_again`] exists to
+//! pin that boundary — it returns the same op when the requested plan is
+//! identical (idempotent) and an error otherwise (rejected).
+
+use crate::butterfly::fast::FastBp;
+use crate::butterfly::module::BpStack;
+use crate::transforms::ksm::{FusedOp, FusedStep, KsKernel};
+use crate::transforms::op::LinearOp;
+use std::sync::Arc;
+
+/// How the planner partitions a module's levels into K groups.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FuseStrategy {
+    /// Greedy min-merged-bytes pairwise fusion (every merge step adds
+    /// the fewest kernel bytes possible).
+    Memory,
+    /// Equal-size contiguous groups (equalizes per-stage FLOPs).
+    Balanced,
+}
+
+impl FuseStrategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            FuseStrategy::Memory => "memory",
+            FuseStrategy::Balanced => "balanced",
+        }
+    }
+}
+
+/// A parsed `--fuse` request: strategy plus optional explicit K
+/// (`None` = pick by N via [`auto_k`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FuseSpec {
+    pub k: Option<usize>,
+    pub strategy: FuseStrategy,
+}
+
+impl FuseSpec {
+    /// The `auto` spec: balanced split, K chosen by N.
+    pub fn auto() -> Self {
+        FuseSpec { k: None, strategy: FuseStrategy::Balanced }
+    }
+
+    /// Fixed K with a strategy (the bench matrix's K ∈ {2, 4} rows).
+    pub fn with_k(k: usize, strategy: FuseStrategy) -> Self {
+        FuseSpec { k: Some(k), strategy }
+    }
+
+    /// Parse a `--fuse` value: `auto`, `memory`, `balanced`, optionally
+    /// suffixed `:K` (e.g. `balanced:3`). K = 0 is rejected here — the
+    /// planner's "rejected" boundary for nonsensical plans.
+    pub fn parse(s: &str) -> Result<FuseSpec, String> {
+        let (base, k) = match s.split_once(':') {
+            Some((b, ks)) => {
+                let k: usize = ks.parse().map_err(|_| format!("--fuse: '{ks}' is not a factor count"))?;
+                if k == 0 {
+                    return Err("--fuse: K must be at least 1".into());
+                }
+                (b, Some(k))
+            }
+            None => (s, None),
+        };
+        let strategy = match base {
+            "auto" | "balanced" => FuseStrategy::Balanced,
+            "memory" => FuseStrategy::Memory,
+            other => {
+                return Err(format!("--fuse: unknown strategy '{other}' (want memory|balanced|auto, optionally ':K')"))
+            }
+        };
+        Ok(FuseSpec { k, strategy })
+    }
+
+    /// Resolve the factor count for a module of `levels` butterfly
+    /// levels (clamped so a shallow stack never asks for more kernels
+    /// than it has factors).
+    pub fn resolve_k(&self, levels: usize) -> usize {
+        self.k.unwrap_or_else(|| auto_k(levels)).clamp(1, levels.max(1))
+    }
+}
+
+/// K by N (levels = log₂ N): 2–4 fused factors beat log N stages, and
+/// deeper stacks amortize more passes — 2 for N ≤ 64, 3 for N ≤ 512,
+/// 4 above.
+pub fn auto_k(levels: usize) -> usize {
+    if levels <= 6 {
+        2
+    } else if levels <= 9 {
+        3
+    } else {
+        4
+    }
+}
+
+/// Partition `levels` unit factors into `k` contiguous groups
+/// (application order). `k` must already be clamped to `1..=levels`.
+pub fn plan_groups(levels: usize, k: usize, strategy: FuseStrategy) -> Vec<usize> {
+    assert!(k >= 1 && k <= levels, "k={k} must be within 1..=levels ({levels})");
+    match strategy {
+        FuseStrategy::Balanced => {
+            let base = levels / k;
+            let rem = levels % k;
+            (0..k).map(|i| base + usize::from(i < rem)).collect()
+        }
+        FuseStrategy::Memory => {
+            let mut g = vec![1usize; levels];
+            while g.len() > k {
+                // merged kernel bytes ∝ 2^{gi+gj}: compare exponents
+                let mut best = 0usize;
+                let mut best_cost = usize::MAX;
+                for i in 0..g.len() - 1 {
+                    let cost = g[i] + g[i + 1];
+                    if cost < best_cost {
+                        best_cost = cost;
+                        best = i;
+                    }
+                }
+                let merged = g.remove(best + 1);
+                g[best] += merged;
+            }
+            g
+        }
+    }
+}
+
+/// Compose the product of levels `l0 .. l0+g` of one hardened stage into
+/// a [`KsKernel`]. Group size 1 copies the stage twiddles verbatim
+/// (bitwise); larger groups compose in f64 and round once to f32.
+fn build_kernel(fast: &FastBp, stage: usize, l0: usize, g: usize) -> KsKernel {
+    let n = fast.n;
+    let stride = 1usize << l0;
+    if g == 1 {
+        let f = fast.factor(stage, l0);
+        let w_im = f.tw_im.map(|s| s.to_vec()).unwrap_or_default();
+        return KsKernel::new(n, 2, stride, f.tw_re.to_vec(), w_im);
+    }
+    let span = 1usize << g;
+    let nblocks = n / span;
+    let complex = fast.complex;
+    // Row-major span×span tile per block, identity-initialized; each
+    // level left-multiplies its 2×2 units onto the running product.
+    let mut wre = vec![0.0f64; n * span];
+    let mut wim = vec![0.0f64; if complex { n * span } else { 0 }];
+    for blk in 0..nblocks {
+        for r in 0..span {
+            wre[(blk * span + r) * span + r] = 1.0;
+        }
+    }
+    for lr in 0..g {
+        let l = l0 + lr;
+        let f = fast.factor(stage, l);
+        let half = f.half;
+        for blk in 0..nblocks {
+            let a = blk / stride;
+            let d = blk % stride;
+            let tile = blk * span * span;
+            for pr in 0..span / 2 {
+                // rows r0 (bit lr clear) and r1 = r0 | 2^lr pair up at
+                // this level; their absolute positions differ by 2^l
+                let low = pr & ((1usize << lr) - 1);
+                let r0 = ((pr >> lr) << (lr + 1)) | low;
+                let r1 = r0 | (1usize << lr);
+                let p = a * span * stride + r0 * stride + d;
+                let t = ((p >> (l + 1)) * half + (p & (half - 1))) * 4;
+                let (g00r, g01r, g10r, g11r) =
+                    (f.tw_re[t] as f64, f.tw_re[t + 1] as f64, f.tw_re[t + 2] as f64, f.tw_re[t + 3] as f64);
+                let (g00i, g01i, g10i, g11i) = match f.tw_im {
+                    Some(ti) => (ti[t] as f64, ti[t + 1] as f64, ti[t + 2] as f64, ti[t + 3] as f64),
+                    None => (0.0, 0.0, 0.0, 0.0),
+                };
+                for c in 0..span {
+                    let i0 = tile + r0 * span + c;
+                    let i1 = tile + r1 * span + c;
+                    let (x0r, x1r) = (wre[i0], wre[i1]);
+                    let (x0i, x1i) = if complex { (wim[i0], wim[i1]) } else { (0.0, 0.0) };
+                    wre[i0] = g00r * x0r - g00i * x0i + g01r * x1r - g01i * x1i;
+                    wre[i1] = g10r * x0r - g10i * x0i + g11r * x1r - g11i * x1i;
+                    if complex {
+                        wim[i0] = g00r * x0i + g00i * x0r + g01r * x1i + g01i * x1r;
+                        wim[i1] = g10r * x0i + g10i * x0r + g11r * x1i + g11i * x1r;
+                    }
+                }
+            }
+        }
+    }
+    let w_re: Vec<f32> = wre.iter().map(|&v| v as f32).collect();
+    let w_im: Vec<f32> = wim.iter().map(|&v| v as f32).collect();
+    KsKernel::new(n, span, stride, w_re, w_im)
+}
+
+/// Fuse a hardened [`FastBp`] into a [`FusedOp`]: per stage, the
+/// hardened boundary gather (if any) followed by the group kernels.
+pub fn fuse_fast(name: impl Into<String>, fast: &FastBp, spec: &FuseSpec) -> FusedOp {
+    let levels = fast.levels;
+    let k = spec.resolve_k(levels);
+    let groups = plan_groups(levels, k, spec.strategy);
+    let mut steps = Vec::new();
+    for stage in 0..fast.depth() {
+        if let Some(t) = fast.stage_perm(stage) {
+            steps.push(FusedStep::Perm(t.to_vec()));
+        }
+        let mut l0 = 0usize;
+        for &g in &groups {
+            steps.push(FusedStep::Kernel(build_kernel(fast, stage, l0, g)));
+            l0 += g;
+        }
+    }
+    let name = format!("{}~fused[{}:k{}]", name.into(), spec.strategy.name(), k);
+    FusedOp::new(fast.n, fast.complex, name, steps, groups)
+}
+
+/// Harden a (learned or closed-form) [`BpStack`] and fuse it — the
+/// stack-level entry `stack_op` gains through
+/// [`stack_op_fused`](crate::transforms::op::stack_op_fused).
+pub fn fuse_stack(name: impl Into<String>, stack: &BpStack, spec: &FuseSpec) -> FusedOp {
+    fuse_fast(name, &FastBp::from_stack(stack), spec)
+}
+
+/// The planner's boundary pin: "fusing" an already-fused op succeeds
+/// only when the requested plan is exactly the one it already has
+/// (idempotent — the same op is returned); any other request is
+/// rejected, because the fused kernels no longer expose the per-level
+/// structure a different grouping would need.
+pub fn fuse_again(op: &FusedOp, spec: &FuseSpec) -> Result<Arc<dyn LinearOp>, String> {
+    let levels: usize = op.groups().iter().sum();
+    let k = spec.resolve_k(levels);
+    let want = plan_groups(levels, k, spec.strategy);
+    if want == op.groups() {
+        Ok(Arc::new(op.clone()))
+    } else {
+        Err(format!(
+            "op '{}' is already fused as {:?}; re-fusing to {:?} would need the per-level factors back — \
+             fuse the unfused stack instead",
+            op.name(),
+            op.groups(),
+            want
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_groups_equalize() {
+        assert_eq!(plan_groups(10, 4, FuseStrategy::Balanced), vec![3, 3, 2, 2]);
+        assert_eq!(plan_groups(10, 3, FuseStrategy::Balanced), vec![4, 3, 3]);
+        assert_eq!(plan_groups(6, 2, FuseStrategy::Balanced), vec![3, 3]);
+        assert_eq!(plan_groups(5, 5, FuseStrategy::Balanced), vec![1, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn memory_groups_merge_smallest_first() {
+        // 10 → 3: singles pair up left to right, then the cheapest pairs
+        // merge again — [4, 4, 2] keeps every *merge* minimal.
+        assert_eq!(plan_groups(10, 3, FuseStrategy::Memory), vec![4, 4, 2]);
+        assert_eq!(plan_groups(4, 2, FuseStrategy::Memory), vec![2, 2]);
+    }
+
+    #[test]
+    fn groups_cover_all_levels() {
+        for levels in [4usize, 6, 10, 12] {
+            for k in 1..=levels {
+                for s in [FuseStrategy::Memory, FuseStrategy::Balanced] {
+                    let g = plan_groups(levels, k, s);
+                    assert_eq!(g.len(), k, "levels={levels} k={k} {s:?}");
+                    assert_eq!(g.iter().sum::<usize>(), levels);
+                    assert!(g.iter().all(|&x| x >= 1));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spec_parses_and_rejects() {
+        assert_eq!(FuseSpec::parse("auto").unwrap(), FuseSpec::auto());
+        assert_eq!(FuseSpec::parse("memory").unwrap(), FuseSpec { k: None, strategy: FuseStrategy::Memory });
+        assert_eq!(
+            FuseSpec::parse("balanced:4").unwrap(),
+            FuseSpec { k: Some(4), strategy: FuseStrategy::Balanced }
+        );
+        assert!(FuseSpec::parse("memory:0").is_err());
+        assert!(FuseSpec::parse("fast").is_err());
+        assert!(FuseSpec::parse("balanced:x").is_err());
+    }
+
+    #[test]
+    fn auto_k_scales_with_n() {
+        assert_eq!(auto_k(4), 2); // N = 16
+        assert_eq!(auto_k(6), 2); // N = 64
+        assert_eq!(auto_k(8), 3); // N = 256
+        assert_eq!(auto_k(10), 4); // N = 1024
+        // shallow stacks clamp rather than over-split
+        assert_eq!(FuseSpec::with_k(8, FuseStrategy::Balanced).resolve_k(3), 3);
+    }
+}

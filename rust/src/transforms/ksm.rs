@@ -1,0 +1,349 @@
+//! Block-sparse fused kernels: the "ksm" apply path.
+//!
+//! The product of adjacent butterfly levels `l0 .. l0+g` of one hardened
+//! module is block-diagonal at block size `2^{l0+g}` with entry `(i, j)`
+//! nonzero iff `i ≡ j (mod 2^{l0})` — a Kronecker-sparse factor
+//! `I_outer ⊗ (dense span×span pattern) ⊗ I_stride` with
+//! `span = 2^g`, `stride = 2^{l0}`, `outer = n / (span·stride)`. A
+//! [`KsKernel`] stores that factor in the 4-D `ks_values` layout —
+//! **blocks × out-rows × in-cols**, applied **batch-innermost** (the
+//! fourth dimension): one weight is loaded per `(block, row, col)` and
+//! streamed across all `B` lanes, the same discipline as
+//! `butterfly::fast`.
+//!
+//! A [`FusedOp`] strings K such kernels (per module) together with the
+//! hardened boundary permutations and serves the result behind
+//! [`LinearOp`] — it drops into `ServicePool` exactly like any other op.
+//! Kernels are built by `transforms::fuse` (f64 twiddle composition,
+//! bitwise twiddle copy for group size 1); this module only holds the
+//! representation and the apply loops.
+//!
+//! All planes are `f32` (the [`LinearOp`] plane contract), column-major
+//! `[n, batch]`. All scratch is caller-owned via [`OpWorkspace`]; the op
+//! itself is immutable, `Send + Sync`, and `Arc`-shareable across pool
+//! workers.
+//!
+//! [`LinearOp`]: crate::transforms::op::LinearOp
+//! [`OpWorkspace`]: crate::transforms::op::OpWorkspace
+
+use crate::transforms::op::{check_planes, LinearOp, OpWorkspace};
+
+/// One fused block-sparse factor in the 4-D `ks_values` layout.
+///
+/// Weights are flat `w[(blk·span + r)·span + c]` with
+/// `blk = a·stride + d` enumerating the `n / span` independent
+/// sub-problems (`a` = outer block, `d` = in-block residue). Row `r` of
+/// block `(a, d)` is position `a·span·stride + r·stride + d`; the kernel
+/// computes `out[row_r] = Σ_c w[blk, r, c] · in[row_c]` over every lane.
+#[derive(Clone)]
+pub struct KsKernel {
+    n: usize,
+    span: usize,
+    stride: usize,
+    w_re: Vec<f32>,
+    /// Empty when the kernel is real.
+    w_im: Vec<f32>,
+}
+
+impl KsKernel {
+    /// Wrap prebuilt weights. `w_re` (and `w_im` unless empty) must hold
+    /// `n · span` scalars in the layout documented on the type.
+    pub fn new(n: usize, span: usize, stride: usize, w_re: Vec<f32>, w_im: Vec<f32>) -> Self {
+        assert!(n.is_power_of_two() && span.is_power_of_two() && stride.is_power_of_two());
+        assert!(span >= 2 && span * stride <= n, "span {span} · stride {stride} must divide n {n}");
+        assert_eq!(w_re.len(), n * span, "ks_values must be (n/span)·span·span");
+        assert!(w_im.is_empty() || w_im.len() == n * span, "imaginary ks_values length mismatch");
+        KsKernel { n, span, stride, w_re, w_im }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Dense sub-block edge (2^{levels fused}).
+    pub fn span(&self) -> usize {
+        self.span
+    }
+
+    /// Inner identity stride (2^{first fused level}).
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    pub fn is_complex(&self) -> bool {
+        !self.w_im.is_empty()
+    }
+
+    /// Bytes held by the kernel's weight tables.
+    pub fn weight_bytes(&self) -> usize {
+        (self.w_re.len() + self.w_im.len()) * std::mem::size_of::<f32>()
+    }
+
+    /// Real-arithmetic FLOPs of one single-vector apply: per output
+    /// element, `span` products accumulated first-term-initialized
+    /// (`span − 1` adds); ×4 products + alternating adds when complex.
+    pub fn flops_per_apply(&self) -> usize {
+        if self.is_complex() {
+            self.n * (8 * self.span - 2)
+        } else {
+            self.n * (2 * self.span - 1)
+        }
+    }
+
+    /// Real apply of one column-major `[n, batch]` plane into `out`
+    /// (disjoint scratch, same layout). Batch-innermost: each weight is
+    /// read once and streamed across the `batch` lanes. The accumulator
+    /// is initialized from column 0 (not zero) and updated
+    /// `acc = acc + w·x`, so a `span == 2` kernel reproduces the unfused
+    /// level kernel's `g00·x0 + g01·x1` bit for bit.
+    pub fn apply_real_col(&self, x: &[f32], out: &mut [f32], batch: usize) {
+        debug_assert!(!self.is_complex());
+        debug_assert_eq!(x.len(), self.n * batch);
+        debug_assert_eq!(out.len(), self.n * batch);
+        let (span, stride) = (self.span, self.stride);
+        let outer = self.n / (span * stride);
+        let w = &self.w_re;
+        let mut wi = 0usize;
+        for a in 0..outer {
+            let abase = a * span * stride * batch;
+            for d in 0..stride {
+                let base = abase + d * batch;
+                for r in 0..span {
+                    let o0 = base + r * stride * batch;
+                    let orow = &mut out[o0..o0 + batch];
+                    let w0 = w[wi];
+                    wi += 1;
+                    let xrow = &x[base..base + batch];
+                    for b in 0..batch {
+                        orow[b] = w0 * xrow[b];
+                    }
+                    for c in 1..span {
+                        let wc = w[wi];
+                        wi += 1;
+                        let x0 = base + c * stride * batch;
+                        let xrow = &x[x0..x0 + batch];
+                        for b in 0..batch {
+                            orow[b] = orow[b] + wc * xrow[b];
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Complex apply over planar column-major planes into disjoint
+    /// scratch planes. Accumulation order matches the unfused complex
+    /// level kernel (`wr·xr − wi·xi` first term, then
+    /// `acc + wr·xr − wi·xi` per column), so a `span == 2` kernel with
+    /// verbatim twiddles is bitwise the unfused stage.
+    pub fn apply_complex_col(
+        &self,
+        xre: &[f32],
+        xim: &[f32],
+        out_re: &mut [f32],
+        out_im: &mut [f32],
+        batch: usize,
+    ) {
+        debug_assert!(self.is_complex());
+        debug_assert_eq!(xre.len(), self.n * batch);
+        let (span, stride) = (self.span, self.stride);
+        let outer = self.n / (span * stride);
+        let (wr_all, wi_all) = (&self.w_re, &self.w_im);
+        let mut wi = 0usize;
+        for a in 0..outer {
+            let abase = a * span * stride * batch;
+            for d in 0..stride {
+                let base = abase + d * batch;
+                for r in 0..span {
+                    let o0 = base + r * stride * batch;
+                    let or = &mut out_re[o0..o0 + batch];
+                    let oi = &mut out_im[o0..o0 + batch];
+                    let (gr, gi) = (wr_all[wi], wi_all[wi]);
+                    wi += 1;
+                    let xr = &xre[base..base + batch];
+                    let xi = &xim[base..base + batch];
+                    for b in 0..batch {
+                        or[b] = gr * xr[b] - gi * xi[b];
+                        oi[b] = gr * xi[b] + gi * xr[b];
+                    }
+                    for c in 1..span {
+                        let (gr, gi) = (wr_all[wi], wi_all[wi]);
+                        wi += 1;
+                        let x0 = base + c * stride * batch;
+                        let xr = &xre[x0..x0 + batch];
+                        let xi = &xim[x0..x0 + batch];
+                        for b in 0..batch {
+                            or[b] = or[b] + gr * xr[b] - gi * xi[b];
+                            oi[b] = oi[b] + gr * xi[b] + gi * xr[b];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One step of a fused apply chain: a hardened boundary permutation or a
+/// fused kernel. Permutations stay explicit gather steps (folding a
+/// general permutation into a kernel would destroy its Kronecker
+/// sparsity).
+#[derive(Clone)]
+pub enum FusedStep {
+    /// `out[i] = in[t[i]]` (the hardened module-boundary gather).
+    Perm(Vec<usize>),
+    Kernel(KsKernel),
+}
+
+/// K fused block-sparse kernels (per module) plus the boundary
+/// permutations, behind [`LinearOp`]. Built by
+/// [`transforms::fuse`](crate::transforms::fuse); immutable and
+/// `Arc`-shareable — all apply scratch lives in the caller's
+/// [`OpWorkspace`] fused planes.
+#[derive(Clone)]
+pub struct FusedOp {
+    n: usize,
+    complex: bool,
+    name: String,
+    steps: Vec<FusedStep>,
+    /// Group sizes (levels per kernel, application order) shared by
+    /// every module — the planner's decision, kept for idempotence
+    /// checks and diagnostics.
+    groups: Vec<usize>,
+}
+
+impl FusedOp {
+    pub(crate) fn new(n: usize, complex: bool, name: String, steps: Vec<FusedStep>, groups: Vec<usize>) -> Self {
+        debug_assert!(steps.iter().any(|s| matches!(s, FusedStep::Kernel(_))));
+        FusedOp { n, complex, name, steps, groups }
+    }
+
+    /// Kernels per module (the planner's K).
+    pub fn k(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Levels fused into each kernel, application order.
+    pub fn groups(&self) -> &[usize] {
+        &self.groups
+    }
+
+    /// Spans (dense sub-block edges) of every kernel in the chain.
+    pub fn kernel_spans(&self) -> Vec<usize> {
+        self.steps
+            .iter()
+            .filter_map(|s| match s {
+                FusedStep::Kernel(k) => Some(k.span()),
+                FusedStep::Perm(_) => None,
+            })
+            .collect()
+    }
+
+    /// Total weight bytes across every kernel — what the `memory`
+    /// strategy keeps small at every merge step.
+    pub fn kernel_bytes(&self) -> usize {
+        self.steps
+            .iter()
+            .map(|s| match s {
+                FusedStep::Kernel(k) => k.weight_bytes(),
+                FusedStep::Perm(_) => 0,
+            })
+            .sum()
+    }
+
+    /// Run one plane (real arithmetic) through every step.
+    fn run_real_plane(&self, io: &mut [f32], batch: usize, ws: &mut OpWorkspace) {
+        let len = self.n * batch;
+        for step in &self.steps {
+            let (sre, _) = ws.fused_planes();
+            if sre.len() < len {
+                sre.resize(len, 0.0);
+            }
+            match step {
+                FusedStep::Perm(t) => gather(io, &mut sre[..len], t, batch),
+                FusedStep::Kernel(k) => k.apply_real_col(io, &mut sre[..len], batch),
+            }
+            io.copy_from_slice(&sre[..len]);
+        }
+    }
+
+    /// Run both planes (complex arithmetic) through every step.
+    fn run_complex(&self, re: &mut [f32], im: &mut [f32], batch: usize, ws: &mut OpWorkspace) {
+        let len = self.n * batch;
+        for step in &self.steps {
+            let (sre, sim) = ws.fused_planes();
+            if sre.len() < len {
+                sre.resize(len, 0.0);
+            }
+            if sim.len() < len {
+                sim.resize(len, 0.0);
+            }
+            match step {
+                FusedStep::Perm(t) => {
+                    gather(re, &mut sre[..len], t, batch);
+                    gather(im, &mut sim[..len], t, batch);
+                }
+                FusedStep::Kernel(k) => k.apply_complex_col(re, im, &mut sre[..len], &mut sim[..len], batch),
+            }
+            re.copy_from_slice(&sre[..len]);
+            im.copy_from_slice(&sim[..len]);
+        }
+    }
+}
+
+/// Column-major permutation gather: `out` row `i` = `in` row `t[i]`
+/// (`batch` contiguous lanes per row — one table read per position).
+fn gather(x: &[f32], out: &mut [f32], t: &[usize], batch: usize) {
+    for (i, &src) in t.iter().enumerate() {
+        out[i * batch..(i + 1) * batch].copy_from_slice(&x[src * batch..(src + 1) * batch]);
+    }
+}
+
+impl LinearOp for FusedOp {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn is_complex(&self) -> bool {
+        self.complex
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Actual fused-kernel FLOPs (sum over kernels; gathers are free of
+    /// arithmetic) — *not* the unfused stack's count: fusing trades
+    /// arithmetic for passes, and the compress op-flops table reports
+    /// what the fused chain really executes.
+    fn flops_per_apply(&self) -> usize {
+        self.steps
+            .iter()
+            .map(|s| match s {
+                FusedStep::Kernel(k) => k.flops_per_apply(),
+                FusedStep::Perm(_) => 0,
+            })
+            .sum()
+    }
+
+    fn apply_batch(&self, re: &mut [f32], im: &mut [f32], batch: usize, ws: &mut OpWorkspace) {
+        check_planes(self.n, self.complex, re, im, batch);
+        if batch == 0 {
+            return;
+        }
+        if self.complex {
+            self.run_complex(re, im, batch, ws);
+        } else {
+            self.run_real_plane(re, batch, ws);
+            if !im.is_empty() {
+                self.run_real_plane(im, batch, ws);
+            }
+        }
+    }
+}
+
+// One Arc<FusedOp> is shared across pool workers; keep it thread-shareable.
+#[allow(dead_code)]
+fn assert_fused_op_is_send_sync() {
+    fn check<T: Send + Sync>() {}
+    check::<FusedOp>();
+}

@@ -11,8 +11,15 @@
 //! - [`op`] — the object-safe [`LinearOp`] trait, its implementations
 //!   for every family above (plus hardened BP stacks and the dense
 //!   reference), and the [`op::plan`] factory.
+//! - [`ksm`] — fused block-sparse kernels ([`ksm::KsKernel`] /
+//!   [`ksm::FusedOp`]): the K-factor apply path that replaces log N
+//!   butterfly stages at serve time.
+//! - [`fuse`] — the fusion planner: strategy chooser ([`fuse::FuseSpec`])
+//!   and the f64 twiddle composition from hardened stacks to kernels.
 
 pub mod fast;
+pub mod fuse;
+pub mod ksm;
 pub mod matrices;
 pub mod op;
 pub mod spec;
@@ -25,5 +32,7 @@ pub use matrices::{
     circulant_matrix, convolution_matrix, dct_matrix, dft_matrix, dst_matrix, hadamard_matrix,
     hartley_matrix, idft_matrix, legendre_matrix, randn_matrix, target_matrix,
 };
-pub use op::{stack_op, LinearOp, OpWorkspace};
+pub use fuse::{FuseSpec, FuseStrategy};
+pub use ksm::{FusedOp, KsKernel};
+pub use op::{stack_op, stack_op_fused, LinearOp, OpWorkspace};
 pub use spec::{TransformKind, ALL_TRANSFORMS};

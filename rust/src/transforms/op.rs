@@ -35,14 +35,20 @@
 //!   fast form).
 //! - [`stack_op`] — adapter from a (learned or closed-form) [`BpStack`],
 //!   hardened through [`FastBp`].
+//! - [`stack_op_fused`] / [`plan_fused`] / [`plan_fused_with_rng`] — the
+//!   factor-fusion variants: the same stack served as K fused
+//!   block-sparse kernels ([`crate::transforms::fuse`]) instead of
+//!   log N butterfly stages.
 //! - [`fft_op`] / [`ifft_op`] / [`dct_op`] / [`dst_op`] / [`hartley_op`]
 //!   / [`fwht_op`] / [`circulant_op`] / [`dense_op`] — the individual
 //!   constructors.
 
+use crate::butterfly::closed_form::{closed_form_stack, CompareMode};
 use crate::butterfly::fast::{BatchWorkspace, FastBp};
 use crate::butterfly::module::BpStack;
 use crate::linalg::CMat;
 use crate::transforms::fast::{fwht_batch_col, CirculantPlan, FftPlan, RealTransformPlan};
+use crate::transforms::fuse::{self, FuseSpec};
 use crate::transforms::matrices;
 use crate::transforms::spec::TransformKind;
 use crate::util::rng::Rng;
@@ -84,6 +90,8 @@ pub struct OpWorkspace {
     sre: Vec<f32>,
     sim: Vec<f32>,
     stage: Vec<f32>,
+    fre: Vec<f32>,
+    fim: Vec<f32>,
 }
 
 impl OpWorkspace {
@@ -112,10 +120,18 @@ impl OpWorkspace {
         }
         &mut self.stage[..len]
     }
+
+    /// Two growable planes reserved for the fused apply chain
+    /// ([`FusedOp`](crate::transforms::ksm::FusedOp) ping-pongs each
+    /// step through them). Separate from [`Self::planes`] so a fused op
+    /// embedded in a larger chain never aliases FFT-chain scratch.
+    pub fn fused_planes(&mut self) -> (&mut Vec<f32>, &mut Vec<f32>) {
+        (&mut self.fre, &mut self.fim)
+    }
 }
 
 /// Assert the plane contract shared by every implementation.
-fn check_planes(n: usize, complex: bool, re: &[f32], im: &[f32], batch: usize) {
+pub(crate) fn check_planes(n: usize, complex: bool, re: &[f32], im: &[f32], batch: usize) {
     assert_eq!(re.len(), n * batch, "re plane must be batch*n");
     if im.is_empty() {
         assert!(!complex, "complex ops require a full imaginary plane");
@@ -169,6 +185,15 @@ impl LinearOp for BpOp {
 /// Harden a (learned or closed-form) [`BpStack`] into a serveable op.
 pub fn stack_op(name: impl Into<String>, stack: &BpStack) -> Arc<dyn LinearOp> {
     Arc::new(BpOp { fast: FastBp::from_stack(stack), name: name.into() })
+}
+
+/// Harden **and fuse** a [`BpStack`]: the same operator as [`stack_op`]
+/// served as K block-sparse kernels per module instead of log N
+/// butterfly stages (see [`crate::transforms::fuse`] for the planner and
+/// strategy semantics). Same `LinearOp` contract, same
+/// `Arc`-shareability — it drops into `ServicePool` unchanged.
+pub fn stack_op_fused(name: impl Into<String>, stack: &BpStack, spec: &FuseSpec) -> Arc<dyn LinearOp> {
+    Arc::new(fuse::fuse_stack(name, stack, spec))
 }
 
 // ---------------------------------------------------------------------------
@@ -681,6 +706,32 @@ pub fn plan(kind: TransformKind, n: usize) -> Arc<dyn LinearOp> {
     plan_with_rng(kind, n, &mut Rng::new(DEFAULT_PLAN_SEED))
 }
 
+/// [`plan_with_rng`] with a fuse step: kinds whose closed-form butterfly
+/// stack computes the operator *exactly* (DFT, Hadamard, Convolution)
+/// are served as fused block-sparse kernels under `spec`. The DCT/DST
+/// closed-form stacks carry `RealPart` semantics (the transform is the
+/// real part of a complex chain — a different operator than the real
+/// [`dct_op`]/[`dst_op`]), and Hartley/Legendre/Randn have no
+/// closed-form stack at all; those kinds fall back to the unfused
+/// factory op unchanged.
+pub fn plan_fused_with_rng(
+    kind: TransformKind,
+    n: usize,
+    rng: &mut Rng,
+    spec: &FuseSpec,
+) -> Arc<dyn LinearOp> {
+    match closed_form_stack(kind, n, rng) {
+        Some((stack, CompareMode::Exact)) => stack_op_fused(kind.name(), &stack, spec),
+        _ => plan_with_rng(kind, n, rng),
+    }
+}
+
+/// The fused factory: [`plan`] with a fuse step (see
+/// [`plan_fused_with_rng`] for which kinds fuse and which fall back).
+pub fn plan_fused(kind: TransformKind, n: usize, spec: &FuseSpec) -> Arc<dyn LinearOp> {
+    plan_fused_with_rng(kind, n, &mut Rng::new(DEFAULT_PLAN_SEED), spec)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -743,6 +794,41 @@ mod tests {
                 op.apply_batch(&mut re, &mut im, batch, &mut ws);
                 assert!(re.iter().chain(im.iter()).all(|v| v.is_finite()), "{kind} B={batch}");
             }
+        }
+    }
+
+    #[test]
+    fn plan_fused_matches_plan_where_exact() {
+        let mut rng = Rng::new(9);
+        let n = 64;
+        let batch = 3;
+        for kind in [TransformKind::Dft, TransformKind::Hadamard, TransformKind::Convolution] {
+            let unfused = plan(kind, n);
+            let fused = plan_fused(kind, n, &FuseSpec::auto());
+            assert!(fused.name().contains("fused"), "{kind}: {}", fused.name());
+            assert_eq!(fused.n(), n);
+            let mut re = vec![0.0f32; batch * n];
+            let mut im = vec![0.0f32; batch * n];
+            rng.fill_normal(&mut re, 0.0, 1.0);
+            rng.fill_normal(&mut im, 0.0, 1.0);
+            let (mut fre, mut fim) = (re.clone(), im.clone());
+            let mut ws = OpWorkspace::new();
+            unfused.apply_batch(&mut re, &mut im, batch, &mut ws);
+            fused.apply_batch(&mut fre, &mut fim, batch, &mut ws);
+            for k in 0..batch * n {
+                assert!((re[k] - fre[k]).abs() < 1e-3, "{kind} re[{k}]: {} vs {}", re[k], fre[k]);
+                assert!((im[k] - fim[k]).abs() < 1e-3, "{kind} im[{k}]: {} vs {}", im[k], fim[k]);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_fused_falls_back_without_exact_stack() {
+        // RealPart stacks (dct/dst) and kinds with no closed form serve
+        // the unfused factory op — same names, same operator.
+        for kind in [TransformKind::Dct, TransformKind::Dst, TransformKind::Hartley, TransformKind::Randn] {
+            let op = plan_fused(kind, 16, &FuseSpec::auto());
+            assert_eq!(op.name(), kind.name(), "{kind} must fall back unfused");
         }
     }
 

@@ -1,0 +1,165 @@
+//! Property pins for the fusion planner's boundary behavior.
+//!
+//! Two claims the rest of the fusion suite leans on:
+//!
+//! 1. **K = log N is the identity fusion.** Group size 1 copies each
+//!    stage's twiddle vector verbatim and the `KsKernel` span-2 apply
+//!    uses the same accumulation order as the unfused butterfly kernel,
+//!    so the fused op is BITWISE the unfused `stack_op` — asserted with
+//!    `f32::to_bits` equality, not a tolerance. This is what licenses
+//!    `op_conformance`'s looser 1e-4 band for larger groups: any drift
+//!    there comes from f64 composition ordering, not from the apply path.
+//! 2. **Fusing twice is idempotent-or-rejected.** `fuse_again` succeeds
+//!    only when the requested plan is exactly the plan the op already
+//!    has (returning a clone); any other grouping is rejected, because
+//!    the fused kernels no longer expose the per-level factors.
+
+use butterfly::butterfly::closed_form::{dct_stack, dft_stack, hadamard_stack};
+use butterfly::butterfly::module::BpStack;
+use butterfly::transforms::fuse::{fuse_again, fuse_stack, plan_groups, FuseSpec, FuseStrategy};
+use butterfly::transforms::op::{stack_op, LinearOp, OpWorkspace};
+use butterfly::util::rng::Rng;
+
+const STRATEGIES: [FuseStrategy; 2] = [FuseStrategy::Balanced, FuseStrategy::Memory];
+
+/// Random planes for one op: full re/im for complex, re-only for real
+/// (the natural single-plane route a real request carries).
+fn planes(n: usize, batch: usize, complex: bool, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut re = vec![0.0f32; n * batch];
+    let mut im = vec![0.0f32; if complex { n * batch } else { 0 }];
+    let mut rng = Rng::new(seed);
+    rng.fill_normal(&mut re, 0.0, 1.0);
+    if complex {
+        rng.fill_normal(&mut im, 0.0, 1.0);
+    }
+    (re, im)
+}
+
+fn test_stacks() -> Vec<(&'static str, BpStack)> {
+    vec![("fft", dft_stack(64)), ("dct2", dct_stack(32)), ("fwht", hadamard_stack(64))]
+}
+
+#[test]
+fn k_log_n_fusion_is_bitwise_the_unfused_stack() {
+    for (label, stack) in &test_stacks() {
+        let n = stack.n();
+        let levels = n.trailing_zeros() as usize;
+        let unfused = stack_op(*label, stack);
+        for strategy in STRATEGIES {
+            // both strategies degenerate to all-singleton groups at K = levels
+            let spec = FuseSpec::with_k(levels, strategy);
+            let fused = fuse_stack(*label, stack, &spec);
+            assert_eq!(fused.groups(), vec![1usize; levels].as_slice(), "{label}");
+            assert!(fused.kernel_spans().iter().all(|&s| s == 2), "{label}: singleton groups span 2");
+            for batch in [1usize, 5, 64] {
+                let (re0, im0) = planes(n, batch, unfused.is_complex(), 0x5EED ^ batch as u64);
+                let (mut ra, mut ia) = (re0.clone(), im0.clone());
+                let (mut rb, mut ib) = (re0.clone(), im0.clone());
+                let mut ws = OpWorkspace::new();
+                unfused.apply_batch(&mut ra, &mut ia, batch, &mut ws);
+                fused.apply_batch(&mut rb, &mut ib, batch, &mut ws);
+                for (i, (a, b)) in ra.iter().zip(&rb).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{label} re[{i}] batch={batch}: {a} vs {b}");
+                }
+                for (i, (a, b)) in ia.iter().zip(&ib).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{label} im[{i}] batch={batch}: {a} vs {b}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn over_large_k_clamps_to_log_n_and_stays_bitwise() {
+    let stack = dft_stack(16);
+    let unfused = stack_op("fft16", &stack);
+    // K = 99 clamps to the 4 available levels → identity fusion again
+    let fused = fuse_stack("fft16", &stack, &FuseSpec::with_k(99, FuseStrategy::Balanced));
+    assert!(fused.name().contains(":k4"), "clamped K shows in the name: {}", fused.name());
+    assert_eq!(fused.groups(), &[1, 1, 1, 1]);
+    let batch = 3usize;
+    let (re0, im0) = planes(16, batch, true, 0xC1A);
+    let (mut ra, mut ia) = (re0.clone(), im0.clone());
+    let (mut rb, mut ib) = (re0, im0);
+    let mut ws = OpWorkspace::new();
+    unfused.apply_batch(&mut ra, &mut ia, batch, &mut ws);
+    fused.apply_batch(&mut rb, &mut ib, batch, &mut ws);
+    assert!(ra.iter().zip(&rb).all(|(a, b)| a.to_bits() == b.to_bits()));
+    assert!(ia.iter().zip(&ib).all(|(a, b)| a.to_bits() == b.to_bits()));
+}
+
+#[test]
+fn fuse_again_is_idempotent_for_the_same_plan() {
+    let stack = dft_stack(64); // 6 levels
+    let spec = FuseSpec::with_k(2, FuseStrategy::Balanced); // [3, 3]
+    let fused = fuse_stack("fft", &stack, &spec);
+    let again = fuse_again(&fused, &spec).expect("same plan must be accepted");
+    assert_eq!(again.name(), fused.name());
+
+    // the clone computes the identical map
+    let batch = 4usize;
+    let (re0, im0) = planes(64, batch, true, 0xA6A1);
+    let (mut ra, mut ia) = (re0.clone(), im0.clone());
+    let (mut rb, mut ib) = (re0, im0);
+    let mut ws = OpWorkspace::new();
+    fused.apply_batch(&mut ra, &mut ia, batch, &mut ws);
+    again.apply_batch(&mut rb, &mut ib, batch, &mut ws);
+    assert!(ra.iter().zip(&rb).all(|(a, b)| a.to_bits() == b.to_bits()));
+    assert!(ia.iter().zip(&ib).all(|(a, b)| a.to_bits() == b.to_bits()));
+
+    // `auto` resolves to balanced K=2 at 6 levels — the same plan, so it
+    // is also accepted (idempotence is about the resolved plan, not the
+    // literal spec)
+    assert!(fuse_again(&fused, &FuseSpec::auto()).is_ok());
+}
+
+#[test]
+fn fuse_again_rejects_any_other_plan() {
+    let stack = dft_stack(64); // 6 levels
+    let fused = fuse_stack("fft", &stack, &FuseSpec::with_k(2, FuseStrategy::Balanced)); // [3, 3]
+    // different K
+    let err = fuse_again(&fused, &FuseSpec::with_k(3, FuseStrategy::Balanced)).unwrap_err();
+    assert!(err.contains("already fused"), "unexpected error: {err}");
+    // same K, different strategy → memory plans [4, 2] ≠ [3, 3]
+    assert_eq!(plan_groups(6, 2, FuseStrategy::Memory), vec![4, 2]);
+    assert!(fuse_again(&fused, &FuseSpec::with_k(2, FuseStrategy::Memory)).is_err());
+    // and K = 0 never reaches the planner: the spec parser rejects it
+    assert!(FuseSpec::parse("balanced:0").is_err());
+}
+
+#[test]
+fn plan_groups_partition_invariants() {
+    for levels in [1usize, 2, 4, 6, 9, 10, 12] {
+        for k in 1..=levels {
+            for strategy in STRATEGIES {
+                let g = plan_groups(levels, k, strategy);
+                assert_eq!(g.len(), k, "levels={levels} k={k} {strategy:?}");
+                assert_eq!(g.iter().sum::<usize>(), levels, "levels={levels} k={k} {strategy:?}");
+                assert!(g.iter().all(|&x| x >= 1));
+                // deterministic: planning twice gives the same partition
+                assert_eq!(g, plan_groups(levels, k, strategy));
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_accounting_reports_actual_kernel_cost() {
+    // complex DFT at N=64, balanced K=3 → groups [2, 2, 2], spans [4, 4, 4]
+    let fused = fuse_stack("fft", &dft_stack(64), &FuseSpec::with_k(3, FuseStrategy::Balanced));
+    assert_eq!(fused.kernel_spans(), vec![4, 4, 4]);
+    // complex kernel: n·(8·span − 2) flops; weights: n·span f32 per plane
+    assert_eq!(fused.flops_per_apply(), 3 * 64 * (8 * 4 - 2));
+    assert_eq!(fused.kernel_bytes(), 3 * 2 * (64 * 4) * 4);
+
+    // real FWHT at N=64, K = log N → six span-2 kernels, n·3 flops each
+    let fwht = fuse_stack("fwht", &hadamard_stack(64), &FuseSpec::with_k(6, FuseStrategy::Memory));
+    assert_eq!(fwht.flops_per_apply(), 6 * 64 * 3);
+    assert_eq!(fwht.kernel_bytes(), 6 * (64 * 2) * 4);
+
+    // depth-2 stack: the per-stage plan is repeated for every stage
+    let dct = fuse_stack("dct2", &dct_stack(32), &FuseSpec::with_k(2, FuseStrategy::Balanced));
+    let spans = dct.kernel_spans();
+    assert_eq!(spans.len(), 2 * dct.k(), "two stages × K kernels");
+    assert_eq!(&spans[..2], &spans[2..], "same plan in both stages");
+}

@@ -7,10 +7,11 @@
 //! threads with private `OpWorkspace`s matches serial results
 //! **bit-for-bit**.
 
-use butterfly::butterfly::closed_form::{dft_stack, hadamard_stack};
+use butterfly::butterfly::closed_form::{dct_stack, dft_stack, hadamard_stack};
 use butterfly::linalg::{CMat, Cpx};
+use butterfly::transforms::fuse::{FuseSpec, FuseStrategy};
 use butterfly::transforms::matrices::{dft_matrix, idft_matrix, target_matrix};
-use butterfly::transforms::op::{ifft_op, plan_with_rng, stack_op, LinearOp, OpWorkspace};
+use butterfly::transforms::op::{ifft_op, plan_with_rng, stack_op, stack_op_fused, LinearOp, OpWorkspace};
 use butterfly::transforms::spec::ALL_TRANSFORMS;
 use butterfly::util::rng::Rng;
 use std::sync::Arc;
@@ -113,6 +114,66 @@ fn stack_adapter_matches_closed_form_targets() {
     check_against_dense(had.as_ref(), &dense, 1e-3, 13);
 }
 
+/// Every fused variant of a stack (K ∈ {2, 3, 4} × both strategies) must
+/// compute the same operator as the unfused stack op and as the stack's
+/// dense reconstruction, at batch {1, 3, 64}, including the real
+/// single-plane path (inside `check_against_dense`).
+///
+/// Tolerances are honest about the arithmetic: group-size-1 kernels are
+/// bitwise the unfused stage (pinned by `tests/fuse_property.rs`), but a
+/// fused group composes its twiddle product in f64 and rounds once to
+/// f32 — a *different* (more accurate) f32 association than running the
+/// levels separately, so fused-vs-unfused agreement is ~1e-4 on unit-
+/// scale data, and both sit inside the suite's 1e-3 dense band.
+#[test]
+fn fused_ops_match_unfused_stack_and_dense() {
+    let n = 32;
+    let stacks = [
+        ("fft", dft_stack(n)),
+        ("dct2", dct_stack(n)), // depth-2 complex stack: perms + 2 modules
+        ("fwht", hadamard_stack(n)), // real: exercises the single-plane path
+    ];
+    let mut ws = OpWorkspace::new();
+    for (label, stack) in &stacks {
+        let unfused = stack_op(format!("stack-{label}"), stack);
+        let dense = stack.to_matrix();
+        for k in [2usize, 3, 4] {
+            for strategy in [FuseStrategy::Memory, FuseStrategy::Balanced] {
+                let spec = FuseSpec::with_k(k, strategy);
+                let fused = stack_op_fused(format!("stack-{label}"), stack, &spec);
+                assert_eq!(fused.n(), n);
+                assert_eq!(fused.is_complex(), unfused.is_complex(), "{label} k={k}");
+                check_against_dense(fused.as_ref(), &dense, 1e-3, 40 + k as u64);
+                // directly against the unfused apply path, all batches
+                let mut rng = Rng::new(50 + k as u64);
+                for batch in BATCHES {
+                    let mut re = vec![0.0f32; batch * n];
+                    let mut im = vec![0.0f32; batch * n];
+                    rng.fill_normal(&mut re, 0.0, 1.0);
+                    rng.fill_normal(&mut im, 0.0, 1.0);
+                    let (mut ure, mut uim) = (re.clone(), im.clone());
+                    unfused.apply_batch(&mut ure, &mut uim, batch, &mut ws);
+                    fused.apply_batch(&mut re, &mut im, batch, &mut ws);
+                    for i in 0..batch * n {
+                        assert!(
+                            (re[i] - ure[i]).abs() < 1e-4,
+                            "{label} k={k} {strategy:?} B={batch} re[{i}]: {} vs {}",
+                            re[i],
+                            ure[i]
+                        );
+                        assert!(
+                            (im[i] - uim[i]).abs() < 1e-4,
+                            "{label} k={k} {strategy:?} B={batch} im[{i}]: {} vs {}",
+                            im[i],
+                            uim[i]
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[test]
 fn ifft_op_inverts_fft_op() {
     let n = 64;
@@ -171,6 +232,10 @@ fn one_arc_op_shared_by_8_threads_is_bitwise_serial() {
         plan_with_rng(butterfly::transforms::spec::TransformKind::Convolution, n, &mut Rng::new(5)),
         plan_with_rng(butterfly::transforms::spec::TransformKind::Legendre, n, &mut Rng::new(5)),
         stack_op("bp-dft", &dft_stack(n)),
+        // fused ops hold only immutable kernel tables and route all
+        // scratch through the workspace's fused planes — same proof
+        stack_op_fused("fused-dft", &dft_stack(n), &FuseSpec::with_k(3, FuseStrategy::Balanced)),
+        stack_op_fused("fused-fwht", &hadamard_stack(n), &FuseSpec::with_k(2, FuseStrategy::Memory)),
     ];
     for op in ops {
         let mut rng = Rng::new(6);

@@ -85,10 +85,45 @@ fn engine_sweep(fast: bool) {
     println!("zero steady-state allocations), near-linear ws scaling to 4T.");
 }
 
+/// Scalar-vs-SIMD training throughput: Adam steps/sec of the 1-thread
+/// workspace engine under each kernel backend. Single-threaded while the
+/// backend is flipped, so the process-wide override is race-free.
+fn kernel_sweep(fast: bool) {
+    use butterfly::kernels;
+    let native = kernels::auto_detect();
+    let ns: &[usize] = if fast { &[64] } else { &[64, 256, 1024] };
+    let mut table = Table::new(&["n", "scalar sps", &format!("{} sps", native.name()), "speedup"])
+        .with_title(format!(
+            "fig3 engine: training steps/sec by kernel backend (ws 1T, chunk 64, isa = [{}])",
+            kernels::detected_features().join(","),
+        ));
+    let prev = kernels::active();
+    for &n in ns {
+        let steps = if fast { 8 } else { if n <= 64 { 60 } else if n <= 256 { 16 } else { 4 } };
+        let chunk = 64.min(n);
+        let (stack, loss) = recovery_workload(n, chunk, 7);
+        let mut sps = [0.0f64; 2];
+        for (i, be) in [kernels::Backend::Scalar, native].into_iter().enumerate() {
+            kernels::set_active(be);
+            let mut pool = ParallelTrainer::new(n, 1);
+            sps[i] = recovery_steps_per_sec(&loss, &stack, &mut pool, steps);
+        }
+        table.add_row(vec![
+            n.to_string(),
+            format!("{:.1}", sps[0]),
+            format!("{:.1}", sps[1]),
+            format!("{:.2}x", sps[1] / sps[0]),
+        ]);
+    }
+    kernels::set_active(prev);
+    println!("{}", table.render());
+}
+
 fn main() {
     let fast = smoke_mode();
 
     engine_sweep(fast);
+    kernel_sweep(fast);
 
     let ns: &[usize] = if fast { &[8] } else { &[8, 16, 32] };
     let cfg = SchedulerConfig {

@@ -15,6 +15,7 @@
 
 use butterfly::butterfly::closed_form::{dct_stack, dft_stack, hadamard_stack};
 use butterfly::butterfly::fast::{BatchWorkspace, FastBp, Workspace};
+use butterfly::kernels;
 use butterfly::runtime::bench::{pool_load, scenario_seed};
 use butterfly::transforms::fuse::{FuseSpec, FuseStrategy};
 use butterfly::transforms::op::{op_ns_per_vec_samples, plan, stack_op, stack_op_fused, LinearOp};
@@ -69,6 +70,46 @@ fn main() {
         }
     }
     println!("{}", btable.render());
+
+    // scalar vs SIMD kernel backends through the identical batched apply
+    // — the microkernel layer's speedup claim in isolation. The bench
+    // process is single-threaded here, so flipping the process-wide
+    // backend between timed blocks is race-free; it is restored after.
+    let native = kernels::auto_detect();
+    let mut ktable = Table::new(&["N", "B", "scalar ns/vec", &format!("{} ns/vec", native.name()), "speedup"])
+        .with_title(format!(
+            "kernel backends, apply_complex_batch_col (native = {}, isa = [{}])",
+            native.name(),
+            kernels::detected_features().join(","),
+        ));
+    let prev = kernels::active();
+    for nn in [256usize, 1024] {
+        let fast = FastBp::from_stack(&dft_stack(nn));
+        let mut bws = BatchWorkspace::new();
+        for bsize in [8usize, 64] {
+            let mut re = vec![0.0f32; bsize * nn];
+            let mut im = vec![0.0f32; bsize * nn];
+            Rng::new(nn as u64).fill_normal(&mut re, 0.0, 1.0);
+            let mut per_vec = [0.0f64; 2];
+            for (i, be) in [kernels::Backend::Scalar, native].into_iter().enumerate() {
+                kernels::set_active(be);
+                per_vec[i] = bench(&cfg, || {
+                    fast.apply_complex_batch_col(black_box(&mut re), black_box(&mut im), bsize, &mut bws);
+                })
+                .median()
+                    / bsize as f64;
+            }
+            ktable.add_row(vec![
+                nn.to_string(),
+                bsize.to_string(),
+                format!("{:.0}", per_vec[0]),
+                format!("{:.0}", per_vec[1]),
+                format!("{:.2}x", per_vec[0] / per_vec[1]),
+            ]);
+        }
+    }
+    kernels::set_active(prev);
+    println!("{}", ktable.render());
 
     // exact closed-form ops vs learned/hardened BP stacks, through the
     // IDENTICAL harness: every op is an Arc<dyn LinearOp> driven by the

@@ -53,6 +53,7 @@
 
 use crate::butterfly::module::BpStack;
 use crate::butterfly::permutation::{hard_perm_table, RelaxedPerm};
+use crate::kernels;
 
 /// One hardened BP module: a gather table + expanded twiddles.
 struct FastStage {
@@ -109,6 +110,10 @@ pub struct BatchWorkspace {
     /// Gather scratch for permutation stages.
     buf_re: Vec<f32>,
     buf_im: Vec<f32>,
+    /// Compact `[n × tile]` planes for the cache-blocked stage walk on
+    /// large `n × batch` blocks (see [`FastBp::apply_real_batch_col`]).
+    tile_re: Vec<f32>,
+    tile_im: Vec<f32>,
 }
 
 impl BatchWorkspace {
@@ -154,6 +159,44 @@ fn cols_to_rows(src: &[f32], dst: &mut [f32], batch: usize, n: usize) {
         for (i, v) in row.iter_mut().enumerate() {
             *v = src[i * batch + b];
         }
+    }
+}
+
+/// Per-block byte budget for the cache-blocked stage walk. When the live
+/// planes of one apply (`n × batch × planes × 4` bytes) blow past this,
+/// every one of the `depth × levels` stage passes streams the whole
+/// block from memory — the stride-`n/2` pairing of the last level is the
+/// worst offender. Lane-tiling the batch keeps a compact `[n × tile]`
+/// copy resident across all passes at the cost of one copy in and out.
+const TILE_TARGET_BYTES: usize = 768 * 1024;
+
+/// Column-tile width for a cache-blocked walk, or `None` when the block
+/// already fits (or is too tall for even an 8-lane tile to fit, where
+/// tiling would add copies without creating residency).
+fn tile_width(n: usize, batch: usize, planes: usize) -> Option<usize> {
+    if n * batch * planes * 4 <= TILE_TARGET_BYTES {
+        return None;
+    }
+    let tile = TILE_TARGET_BYTES / (n * planes * 4) / 8 * 8;
+    if tile >= 8 && tile < batch {
+        Some(tile)
+    } else {
+        None
+    }
+}
+
+/// Copy lanes `t0 .. t0+tw` of a column-major `[n, batch]` plane into a
+/// compact `[n, tw]` tile.
+fn tile_in(src: &[f32], dst: &mut [f32], batch: usize, n: usize, t0: usize, tw: usize) {
+    for i in 0..n {
+        dst[i * tw..(i + 1) * tw].copy_from_slice(&src[i * batch + t0..i * batch + t0 + tw]);
+    }
+}
+
+/// Scatter a compact `[n, tw]` tile back into lanes `t0 .. t0+tw`.
+fn tile_out(src: &[f32], dst: &mut [f32], batch: usize, n: usize, t0: usize, tw: usize) {
+    for i in 0..n {
+        dst[i * batch + t0..i * batch + t0 + tw].copy_from_slice(&src[i * tw..(i + 1) * tw]);
     }
 }
 
@@ -337,12 +380,15 @@ impl FastBp {
             return;
         }
         let len = batch * self.n;
-        grow(&mut ws.col_re, len);
-        grow(&mut ws.buf_re, len);
-        rows_to_cols(x, &mut ws.col_re[..len], batch, self.n);
-        let BatchWorkspace { col_re, buf_re, .. } = ws;
-        self.batch_stages_real(&mut col_re[..len], batch, &mut buf_re[..len]);
-        cols_to_rows(&ws.col_re[..len], x, batch, self.n);
+        // take the transpose plane out of the workspace so the
+        // column-major entry point (which owns the tiling decision) can
+        // borrow the rest of the scratch
+        let mut col = std::mem::take(&mut ws.col_re);
+        grow(&mut col, len);
+        rows_to_cols(x, &mut col[..len], batch, self.n);
+        self.apply_real_batch_col(&mut col[..len], batch, ws);
+        cols_to_rows(&col[..len], x, batch, self.n);
+        ws.col_re = col;
     }
 
     /// Batched complex apply over row-major `[batch, n]` planes.
@@ -360,24 +406,17 @@ impl FastBp {
             return;
         }
         let len = batch * self.n;
-        grow(&mut ws.col_re, len);
-        grow(&mut ws.col_im, len);
-        grow(&mut ws.buf_re, len);
-        grow(&mut ws.buf_im, len);
-        rows_to_cols(re, &mut ws.col_re[..len], batch, self.n);
-        rows_to_cols(im, &mut ws.col_im[..len], batch, self.n);
-        {
-            let BatchWorkspace { col_re, col_im, buf_re, buf_im } = ws;
-            self.batch_stages_complex(
-                &mut col_re[..len],
-                &mut col_im[..len],
-                batch,
-                &mut buf_re[..len],
-                &mut buf_im[..len],
-            );
-        }
-        cols_to_rows(&ws.col_re[..len], re, batch, self.n);
-        cols_to_rows(&ws.col_im[..len], im, batch, self.n);
+        let mut col_re = std::mem::take(&mut ws.col_re);
+        let mut col_im = std::mem::take(&mut ws.col_im);
+        grow(&mut col_re, len);
+        grow(&mut col_im, len);
+        rows_to_cols(re, &mut col_re[..len], batch, self.n);
+        rows_to_cols(im, &mut col_im[..len], batch, self.n);
+        self.apply_complex_batch_col(&mut col_re[..len], &mut col_im[..len], batch, ws);
+        cols_to_rows(&col_re[..len], re, batch, self.n);
+        cols_to_rows(&col_im[..len], im, batch, self.n);
+        ws.col_re = col_re;
+        ws.col_im = col_im;
     }
 
     /// Batched real apply on an already **column-major** `[n, batch]`
@@ -389,8 +428,26 @@ impl FastBp {
         if batch == 0 {
             return;
         }
-        grow(&mut ws.buf_re, batch * self.n);
-        self.batch_stages_real(x, batch, &mut ws.buf_re[..batch * self.n]);
+        let n = self.n;
+        if let Some(tile) = tile_width(n, batch, 2) {
+            // cache-blocked: run the whole stage walk per lane tile so
+            // all depth × levels passes stay resident (bitwise-neutral —
+            // the per-element arithmetic is unchanged)
+            grow(&mut ws.tile_re, n * tile);
+            grow(&mut ws.buf_re, n * tile);
+            let mut t0 = 0;
+            while t0 < batch {
+                let tw = tile.min(batch - t0);
+                tile_in(x, &mut ws.tile_re[..n * tw], batch, n, t0, tw);
+                let BatchWorkspace { tile_re, buf_re, .. } = ws;
+                self.batch_stages_real(&mut tile_re[..n * tw], tw, &mut buf_re[..n * tw]);
+                tile_out(&ws.tile_re[..n * tw], x, batch, n, t0, tw);
+                t0 += tw;
+            }
+            return;
+        }
+        grow(&mut ws.buf_re, batch * n);
+        self.batch_stages_real(x, batch, &mut ws.buf_re[..batch * n]);
     }
 
     /// Batched complex apply on column-major `[n, batch]` planes.
@@ -400,7 +457,34 @@ impl FastBp {
         if batch == 0 {
             return;
         }
-        let len = batch * self.n;
+        let n = self.n;
+        if let Some(tile) = tile_width(n, batch, 4) {
+            grow(&mut ws.tile_re, n * tile);
+            grow(&mut ws.tile_im, n * tile);
+            grow(&mut ws.buf_re, n * tile);
+            grow(&mut ws.buf_im, n * tile);
+            let mut t0 = 0;
+            while t0 < batch {
+                let tw = tile.min(batch - t0);
+                tile_in(re, &mut ws.tile_re[..n * tw], batch, n, t0, tw);
+                tile_in(im, &mut ws.tile_im[..n * tw], batch, n, t0, tw);
+                {
+                    let BatchWorkspace { tile_re, tile_im, buf_re, buf_im, .. } = ws;
+                    self.batch_stages_complex(
+                        &mut tile_re[..n * tw],
+                        &mut tile_im[..n * tw],
+                        tw,
+                        &mut buf_re[..n * tw],
+                        &mut buf_im[..n * tw],
+                    );
+                }
+                tile_out(&ws.tile_re[..n * tw], re, batch, n, t0, tw);
+                tile_out(&ws.tile_im[..n * tw], im, batch, n, t0, tw);
+                t0 += tw;
+            }
+            return;
+        }
+        let len = batch * n;
         grow(&mut ws.buf_re, len);
         grow(&mut ws.buf_im, len);
         let BatchWorkspace { buf_re, buf_im, .. } = ws;
@@ -409,9 +493,11 @@ impl FastBp {
 
     /// The real batched stage walk: `x` is column-major `[n, batch]`,
     /// `gather` is scratch of at least `n * batch`. Twiddles are loaded
-    /// once per unit; the innermost loop streams the `batch` lanes.
+    /// once per unit; the innermost `batch`-lane stream is a
+    /// [`kernels::bf2_real`] microkernel call (SIMD where dispatched).
     fn batch_stages_real(&self, x: &mut [f32], batch: usize, gather: &mut [f32]) {
         let n = self.n;
+        let be = kernels::active();
         for s in &self.stages {
             if let Some(t) = &s.perm {
                 let g = &mut gather[..n * batch];
@@ -431,15 +517,9 @@ impl FastBp {
                     let twb = &tw[toff..toff + half * 4];
                     for j in 0..half {
                         let t = j * 4;
-                        let (g00, g01, g10, g11) = (twb[t], twb[t + 1], twb[t + 2], twb[t + 3]);
                         let lo_j = &mut lo[j * batch..(j + 1) * batch];
                         let hi_j = &mut hi[j * batch..(j + 1) * batch];
-                        for (lo_v, hi_v) in lo_j.iter_mut().zip(hi_j.iter_mut()) {
-                            let x0 = *lo_v;
-                            let x1 = *hi_v;
-                            *lo_v = g00 * x0 + g01 * x1;
-                            *hi_v = g10 * x0 + g11 * x1;
-                        }
+                        kernels::bf2_real(be, twb[t], twb[t + 1], twb[t + 2], twb[t + 3], lo_j, hi_j);
                     }
                 }
             }
@@ -458,6 +538,7 @@ impl FastBp {
         gather_im: &mut [f32],
     ) {
         let n = self.n;
+        let be = kernels::active();
         for s in &self.stages {
             if let Some(t) = &s.perm {
                 let gr = &mut gather_re[..n * batch];
@@ -485,20 +566,21 @@ impl FastBp {
                         let tw_i = &twi[toff..toff + half * 4];
                         for j in 0..half {
                             let t = j * 4;
-                            let (g00r, g01r, g10r, g11r) = (tw_r[t], tw_r[t + 1], tw_r[t + 2], tw_r[t + 3]);
-                            let (g00i, g01i, g10i, g11i) = (tw_i[t], tw_i[t + 1], tw_i[t + 2], tw_i[t + 3]);
+                            let g = [
+                                tw_r[t],
+                                tw_i[t],
+                                tw_r[t + 1],
+                                tw_i[t + 1],
+                                tw_r[t + 2],
+                                tw_i[t + 2],
+                                tw_r[t + 3],
+                                tw_i[t + 3],
+                            ];
                             let rlo = &mut re_lo[j * batch..(j + 1) * batch];
                             let ilo = &mut im_lo[j * batch..(j + 1) * batch];
                             let rhi = &mut re_hi[j * batch..(j + 1) * batch];
                             let ihi = &mut im_hi[j * batch..(j + 1) * batch];
-                            for k in 0..batch {
-                                let (x0r, x0i) = (rlo[k], ilo[k]);
-                                let (x1r, x1i) = (rhi[k], ihi[k]);
-                                rlo[k] = g00r * x0r - g00i * x0i + g01r * x1r - g01i * x1i;
-                                ilo[k] = g00r * x0i + g00i * x0r + g01r * x1i + g01i * x1r;
-                                rhi[k] = g10r * x0r - g10i * x0i + g11r * x1r - g11i * x1i;
-                                ihi[k] = g10r * x0i + g10i * x0r + g11r * x1i + g11i * x1r;
-                            }
+                            kernels::bf2_complex(be, &g, rlo, ilo, rhi, ihi);
                         }
                     }
                 } else {
@@ -515,14 +597,9 @@ impl FastBp {
                             let ilo = &mut im_lo[j * batch..(j + 1) * batch];
                             let rhi = &mut re_hi[j * batch..(j + 1) * batch];
                             let ihi = &mut im_hi[j * batch..(j + 1) * batch];
-                            for k in 0..batch {
-                                let (x0r, x0i) = (rlo[k], ilo[k]);
-                                let (x1r, x1i) = (rhi[k], ihi[k]);
-                                rlo[k] = g00 * x0r + g01 * x1r;
-                                ilo[k] = g00 * x0i + g01 * x1i;
-                                rhi[k] = g10 * x0r + g11 * x1r;
-                                ihi[k] = g10 * x0i + g11 * x1i;
-                            }
+                            // real twiddles act identically on both planes
+                            kernels::bf2_real(be, g00, g01, g10, g11, rlo, rhi);
+                            kernels::bf2_real(be, g00, g01, g10, g11, ilo, ihi);
                         }
                     }
                 }
@@ -845,6 +922,34 @@ mod tests {
             .collect();
         for t in threads {
             t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn tiled_batch_col_is_bitwise_the_per_item_path() {
+        // n × batch large enough to trip the cache-blocked walk: tiling
+        // must be invisible — bit for bit — next to the untiled
+        // single-vector path
+        let n = 1024;
+        let batch = 128;
+        assert!(tile_width(n, batch, 2).is_some(), "block too small to exercise tiling");
+        let stack = hardened_stack(n, 1, Field::Real, 91);
+        let fast = FastBp::from_stack(&stack);
+        assert!(!fast.complex);
+        let mut rng = Rng::new(92);
+        let mut rows = vec![0.0f32; batch * n];
+        rng.fill_normal(&mut rows, 0.0, 1.0);
+        let mut cols = vec![0.0f32; batch * n];
+        rows_to_cols(&rows, &mut cols, batch, n);
+        let mut bws = BatchWorkspace::new();
+        fast.apply_real_batch_col(&mut cols, batch, &mut bws);
+        let mut ws = Workspace::new(n);
+        for bi in 0..batch {
+            let mut row = rows[bi * n..(bi + 1) * n].to_vec();
+            fast.apply_real(&mut row, &mut ws);
+            for i in 0..n {
+                assert_eq!(row[i].to_bits(), cols[i * batch + bi].to_bits(), "row {bi} [{i}]");
+            }
         }
     }
 

@@ -14,24 +14,70 @@
 //! is what "optimize over complex entries" means for a real-valued loss):
 //! `dx = conj(G)ᵀ applied pairwise`, `dG += dy ⊗ conj(x)`.
 //!
-//! ## Loop order: batch innermost
+//! ## Loop order: contiguous pair spans through the microkernel layer
 //!
-//! Both kernels walk `(block, pair)` in the outer loops and the batch in
-//! the innermost loop, mirroring `fast.rs`'s batched serving kernels: the
-//! 8 twiddle scalars of a unit are loaded **once** per `(block, pair)`
-//! and stay in registers while the batch rows stream past (stride `n`
-//! between rows), instead of being re-read `batch` times. The backward
-//! pass additionally accumulates each unit's `dG` in registers across the
-//! batch and commits it to `grad` once per `(block, pair)`, so a training
-//! chunk touches each twiddle-gradient slot `blocks` times (factor tying)
-//! or once (block tying) rather than `batch × blocks` times. Per-element
-//! arithmetic is unchanged; under factor tying the `dG` accumulation
-//! order becomes (block, batch-row) instead of (batch-row, block), which
-//! only reorders a floating-point sum (covered by the finite-difference
-//! tests below).
+//! Both kernels stage the level's twiddles once into an SoA scratch (8
+//! planes in `(block, pair)` order, one gather per component) and then
+//! walk batch rows in the outer loop, handing each block's contiguous
+//! `half`-element pair span to the [`crate::kernels`] span kernels
+//! (`bf2_cpx_span_fwd` / `bf2_cpx_span_bwd`) — in the row-major
+//! `[batch, n]` layout the pair indices `j` of one block are the
+//! contiguous axis, so they are the SIMD lanes here (the batch axis is
+//! `n`-strided). The backward pass accumulates each unit's `dG` in SoA
+//! scratch slots across the batch rows — the same per-slot add sequence
+//! as the old register accumulation — and commits every slot to `grad`
+//! once, in `(block, pair)` order. Per-element arithmetic is the exact
+//! legacy `Cpx` expression dag (conjugations are explicit sign flips),
+//! so results are bitwise identical to the pre-kernel implementation on
+//! every backend, which the workspace-vs-legacy and thread-count
+//! determinism suites rely on.
+
+use std::cell::RefCell;
 
 use crate::butterfly::params::BpParams;
+use crate::kernels::{self, TwSpan, TwSpanMut};
 use crate::linalg::complex::Cpx;
+
+thread_local! {
+    /// Per-thread SoA staging scratch (twiddles + dG accumulators):
+    /// thread-local so the chunk-parallel training engine keeps its
+    /// allocation-free, bit-reproducible-per-thread-count property.
+    static SOA_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Split a scratch buffer into 8 equal SoA planes of `len` each.
+fn split8(buf: &mut [f32], len: usize) -> [&mut [f32]; 8] {
+    let (s0, r) = buf.split_at_mut(len);
+    let (s1, r) = r.split_at_mut(len);
+    let (s2, r) = r.split_at_mut(len);
+    let (s3, r) = r.split_at_mut(len);
+    let (s4, r) = r.split_at_mut(len);
+    let (s5, r) = r.split_at_mut(len);
+    let (s6, r) = r.split_at_mut(len);
+    let (s7, _) = r.split_at_mut(len);
+    [s0, s1, s2, s3, s4, s5, s6, s7]
+}
+
+/// Gather the level's 2×2 unit entries into 8 SoA planes in
+/// `[g00r, g00i, g01r, g01i, g10r, g10i, g11r, g11i]` order, `(block,
+/// pair)` position order — the layout the span kernels stream.
+fn stage_twiddles(p: &BpParams, level: usize, half: usize, blocks: usize, tw: &mut [&mut [f32]; 8]) {
+    let mut k = 0;
+    for b in 0..blocks {
+        for j in 0..half {
+            let u = p.unit_index(level, b, j);
+            tw[0][k] = p.data[p.tw_idx(level, 0, u, 0, 0)];
+            tw[1][k] = p.data[p.tw_idx(level, 1, u, 0, 0)];
+            tw[2][k] = p.data[p.tw_idx(level, 0, u, 0, 1)];
+            tw[3][k] = p.data[p.tw_idx(level, 1, u, 0, 1)];
+            tw[4][k] = p.data[p.tw_idx(level, 0, u, 1, 0)];
+            tw[5][k] = p.data[p.tw_idx(level, 1, u, 1, 0)];
+            tw[6][k] = p.data[p.tw_idx(level, 0, u, 1, 1)];
+            tw[7][k] = p.data[p.tw_idx(level, 1, u, 1, 1)];
+            k += 1;
+        }
+    }
+}
 
 /// Apply level `level` of module `p` in place to a `[batch, n]` planar
 /// complex batch.
@@ -42,29 +88,36 @@ pub fn level_forward(p: &BpParams, level: usize, re: &mut [f32], im: &mut [f32],
     let half = 1usize << level; // in-block pair distance
     let m = half << 1; // block size
     let blocks = n / m;
-    for b in 0..blocks {
-        for j in 0..half {
-            let u = p.unit_index(level, b, j);
-            let g00 = Cpx::new(p.data[p.tw_idx(level, 0, u, 0, 0)], p.data[p.tw_idx(level, 1, u, 0, 0)]);
-            let g01 = Cpx::new(p.data[p.tw_idx(level, 0, u, 0, 1)], p.data[p.tw_idx(level, 1, u, 0, 1)]);
-            let g10 = Cpx::new(p.data[p.tw_idx(level, 0, u, 1, 0)], p.data[p.tw_idx(level, 1, u, 1, 0)]);
-            let g11 = Cpx::new(p.data[p.tw_idx(level, 0, u, 1, 1)], p.data[p.tw_idx(level, 1, u, 1, 1)]);
-            let mut i0 = b * m + j;
-            let mut i1 = i0 + half;
-            for _ in 0..batch {
-                let x0 = Cpx::new(re[i0], im[i0]);
-                let x1 = Cpx::new(re[i1], im[i1]);
-                let y0 = g00 * x0 + g01 * x1;
-                let y1 = g10 * x0 + g11 * x1;
-                re[i0] = y0.re;
-                im[i0] = y0.im;
-                re[i1] = y1.re;
-                im[i1] = y1.im;
-                i0 += n;
-                i1 += n;
+    let units = blocks * half;
+    let be = kernels::active();
+    SOA_SCRATCH.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        if buf.len() < 8 * units {
+            buf.resize(8 * units, 0.0);
+        }
+        let mut tw = split8(&mut buf[..8 * units], units);
+        stage_twiddles(p, level, half, blocks, &mut tw);
+        for r in 0..batch {
+            let row = r * n;
+            for b in 0..blocks {
+                let base = row + b * m;
+                let (rlo, rhi) = re[base..base + m].split_at_mut(half);
+                let (ilo, ihi) = im[base..base + m].split_at_mut(half);
+                let s = b * half..(b + 1) * half;
+                let span = TwSpan {
+                    g00r: &tw[0][s.clone()],
+                    g00i: &tw[1][s.clone()],
+                    g01r: &tw[2][s.clone()],
+                    g01i: &tw[3][s.clone()],
+                    g10r: &tw[4][s.clone()],
+                    g10i: &tw[5][s.clone()],
+                    g11r: &tw[6][s.clone()],
+                    g11i: &tw[7][s],
+                };
+                kernels::bf2_cpx_span_fwd(be, &span, rlo, ilo, rhi, ihi);
             }
         }
-    }
+    });
 }
 
 /// Backward through level `level`.
@@ -90,53 +143,72 @@ pub fn level_backward(
     let half = 1usize << level;
     let m = half << 1;
     let blocks = n / m;
-    for b in 0..blocks {
-        for j in 0..half {
-            let u = p.unit_index(level, b, j);
-            let g00 = Cpx::new(p.data[p.tw_idx(level, 0, u, 0, 0)], p.data[p.tw_idx(level, 1, u, 0, 0)]);
-            let g01 = Cpx::new(p.data[p.tw_idx(level, 0, u, 0, 1)], p.data[p.tw_idx(level, 1, u, 0, 1)]);
-            let g10 = Cpx::new(p.data[p.tw_idx(level, 0, u, 1, 0)], p.data[p.tw_idx(level, 1, u, 1, 0)]);
-            let g11 = Cpx::new(p.data[p.tw_idx(level, 0, u, 1, 1)], p.data[p.tw_idx(level, 1, u, 1, 1)]);
-            // per-unit dG accumulated in registers across the batch,
-            // committed to `grad` once per (block, pair)
-            let mut dg00 = Cpx::ZERO;
-            let mut dg01 = Cpx::ZERO;
-            let mut dg10 = Cpx::ZERO;
-            let mut dg11 = Cpx::ZERO;
-            let mut i0 = b * m + j;
-            let mut i1 = i0 + half;
-            for _ in 0..batch {
-                let x0 = Cpx::new(x_re[i0], x_im[i0]);
-                let x1 = Cpx::new(x_re[i1], x_im[i1]);
-                let d0 = Cpx::new(dy_re[i0], dy_im[i0]);
-                let d1 = Cpx::new(dy_re[i1], dy_im[i1]);
-
-                // dG += dy ⊗ conj(x)
-                dg00 += d0 * x0.conj();
-                dg01 += d0 * x1.conj();
-                dg10 += d1 * x0.conj();
-                dg11 += d1 * x1.conj();
-
-                // dx = conj(G)ᵀ dy  (pairwise)
-                let dx0 = g00.conj() * d0 + g10.conj() * d1;
-                let dx1 = g01.conj() * d0 + g11.conj() * d1;
-                dy_re[i0] = dx0.re;
-                dy_im[i0] = dx0.im;
-                dy_re[i1] = dx1.re;
-                dy_im[i1] = dx1.im;
-                i0 += n;
-                i1 += n;
-            }
-            grad[p.tw_idx(level, 0, u, 0, 0)] += dg00.re;
-            grad[p.tw_idx(level, 1, u, 0, 0)] += dg00.im;
-            grad[p.tw_idx(level, 0, u, 0, 1)] += dg01.re;
-            grad[p.tw_idx(level, 1, u, 0, 1)] += dg01.im;
-            grad[p.tw_idx(level, 0, u, 1, 0)] += dg10.re;
-            grad[p.tw_idx(level, 1, u, 1, 0)] += dg10.im;
-            grad[p.tw_idx(level, 0, u, 1, 1)] += dg11.re;
-            grad[p.tw_idx(level, 1, u, 1, 1)] += dg11.im;
+    let units = blocks * half;
+    let be = kernels::active();
+    SOA_SCRATCH.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        if buf.len() < 16 * units {
+            buf.resize(16 * units, 0.0);
         }
-    }
+        let (tw_buf, dg_buf) = buf.split_at_mut(8 * units);
+        let mut tw = split8(tw_buf, units);
+        stage_twiddles(p, level, half, blocks, &mut tw);
+        let dg_buf = &mut dg_buf[..8 * units];
+        dg_buf.fill(0.0);
+        let [dg0, dg1, dg2, dg3, dg4, dg5, dg6, dg7] = split8(dg_buf, units);
+        // per-unit dG accumulated in SoA scratch slots across the batch
+        // rows (same per-slot add sequence as the old register
+        // accumulation), committed to `grad` once per (block, pair)
+        for r in 0..batch {
+            let row = r * n;
+            for b in 0..blocks {
+                let base = row + b * m;
+                let (x0r, x1r) = x_re[base..base + m].split_at(half);
+                let (x0i, x1i) = x_im[base..base + m].split_at(half);
+                let (d0r, d1r) = dy_re[base..base + m].split_at_mut(half);
+                let (d0i, d1i) = dy_im[base..base + m].split_at_mut(half);
+                let s = b * half..(b + 1) * half;
+                let span = TwSpan {
+                    g00r: &tw[0][s.clone()],
+                    g00i: &tw[1][s.clone()],
+                    g01r: &tw[2][s.clone()],
+                    g01i: &tw[3][s.clone()],
+                    g10r: &tw[4][s.clone()],
+                    g10i: &tw[5][s.clone()],
+                    g11r: &tw[6][s.clone()],
+                    g11i: &tw[7][s.clone()],
+                };
+                let mut dg = TwSpanMut {
+                    g00r: &mut dg0[s.clone()],
+                    g00i: &mut dg1[s.clone()],
+                    g01r: &mut dg2[s.clone()],
+                    g01i: &mut dg3[s.clone()],
+                    g10r: &mut dg4[s.clone()],
+                    g10i: &mut dg5[s.clone()],
+                    g11r: &mut dg6[s.clone()],
+                    g11i: &mut dg7[s],
+                };
+                kernels::bf2_cpx_span_bwd(be, &span, &mut dg, x0r, x0i, x1r, x1i, d0r, d0i, d1r, d1i);
+            }
+        }
+        // scatter in (block, pair) order with the legacy 8-commit
+        // sequence, so tied units see the identical add order
+        let mut k = 0;
+        for b in 0..blocks {
+            for j in 0..half {
+                let u = p.unit_index(level, b, j);
+                grad[p.tw_idx(level, 0, u, 0, 0)] += dg0[k];
+                grad[p.tw_idx(level, 1, u, 0, 0)] += dg1[k];
+                grad[p.tw_idx(level, 0, u, 0, 1)] += dg2[k];
+                grad[p.tw_idx(level, 1, u, 0, 1)] += dg3[k];
+                grad[p.tw_idx(level, 0, u, 1, 0)] += dg4[k];
+                grad[p.tw_idx(level, 1, u, 1, 0)] += dg5[k];
+                grad[p.tw_idx(level, 0, u, 1, 1)] += dg6[k];
+                grad[p.tw_idx(level, 1, u, 1, 1)] += dg7[k];
+                k += 1;
+            }
+        }
+    });
 }
 
 /// Reconstruct level `level` as a dense complex matrix (test/debug aid;
@@ -275,6 +347,117 @@ mod tests {
                 xr[i] = orig;
                 let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
                 assert!((fd - dyr[i]).abs() < 2e-2 * (1.0 + fd.abs()), "dx re coord {i}: fd {fd} vs {}", dyr[i]);
+            }
+        }
+    }
+
+    /// Pin the SoA span-kernel path bitwise against the straight-line
+    /// `Cpx` reference the module used before the kernel refactor. This
+    /// is the contract the workspace-vs-legacy and thread-determinism
+    /// suites depend on: the microkernel layer may change loop order,
+    /// never arithmetic.
+    #[test]
+    fn forward_backward_match_cpx_reference_bitwise() {
+        for tying in [TwiddleTying::Factor, TwiddleTying::Block] {
+            let n = 32;
+            let p = rand_params(n, tying, 41);
+            let mut rng = Rng::new(43);
+            let batch = 5;
+            let mut xr = vec![0.0f32; batch * n];
+            let mut xi = vec![0.0f32; batch * n];
+            rng.fill_normal(&mut xr, 0.0, 1.0);
+            rng.fill_normal(&mut xi, 0.0, 1.0);
+            for level in 0..p.levels {
+                let half = 1usize << level;
+                let m = half << 1;
+                // reference forward: legacy (block, pair, batch) loop
+                let (mut rr, mut ri) = (xr.clone(), xi.clone());
+                for b in 0..(n / m) {
+                    for j in 0..half {
+                        let u = p.unit_index(level, b, j);
+                        let g = |r: usize, c: usize| {
+                            Cpx::new(p.data[p.tw_idx(level, 0, u, r, c)], p.data[p.tw_idx(level, 1, u, r, c)])
+                        };
+                        let (g00, g01, g10, g11) = (g(0, 0), g(0, 1), g(1, 0), g(1, 1));
+                        let mut i0 = b * m + j;
+                        let mut i1 = i0 + half;
+                        for _ in 0..batch {
+                            let x0 = Cpx::new(rr[i0], ri[i0]);
+                            let x1 = Cpx::new(rr[i1], ri[i1]);
+                            let y0 = g00 * x0 + g01 * x1;
+                            let y1 = g10 * x0 + g11 * x1;
+                            rr[i0] = y0.re;
+                            ri[i0] = y0.im;
+                            rr[i1] = y1.re;
+                            ri[i1] = y1.im;
+                            i0 += n;
+                            i1 += n;
+                        }
+                    }
+                }
+                let (mut kr, mut ki) = (xr.clone(), xi.clone());
+                level_forward(&p, level, &mut kr, &mut ki, batch);
+                for i in 0..batch * n {
+                    assert_eq!(kr[i].to_bits(), rr[i].to_bits(), "{tying:?} level {level} fwd re[{i}]");
+                    assert_eq!(ki[i].to_bits(), ri[i].to_bits(), "{tying:?} level {level} fwd im[{i}]");
+                }
+
+                // reference backward: legacy register-accumulated dG
+                let mut dyr = vec![0.0f32; batch * n];
+                let mut dyi = vec![0.0f32; batch * n];
+                rng.fill_normal(&mut dyr, 0.0, 1.0);
+                rng.fill_normal(&mut dyi, 0.0, 1.0);
+                let (mut refr, mut refi) = (dyr.clone(), dyi.clone());
+                let mut ref_grad = vec![0.0f32; p.data.len()];
+                for b in 0..(n / m) {
+                    for j in 0..half {
+                        let u = p.unit_index(level, b, j);
+                        let g = |r: usize, c: usize| {
+                            Cpx::new(p.data[p.tw_idx(level, 0, u, r, c)], p.data[p.tw_idx(level, 1, u, r, c)])
+                        };
+                        let (g00, g01, g10, g11) = (g(0, 0), g(0, 1), g(1, 0), g(1, 1));
+                        let (mut dg00, mut dg01, mut dg10, mut dg11) =
+                            (Cpx::ZERO, Cpx::ZERO, Cpx::ZERO, Cpx::ZERO);
+                        let mut i0 = b * m + j;
+                        let mut i1 = i0 + half;
+                        for _ in 0..batch {
+                            let x0 = Cpx::new(xr[i0], xi[i0]);
+                            let x1 = Cpx::new(xr[i1], xi[i1]);
+                            let d0 = Cpx::new(refr[i0], refi[i0]);
+                            let d1 = Cpx::new(refr[i1], refi[i1]);
+                            dg00 += d0 * x0.conj();
+                            dg01 += d0 * x1.conj();
+                            dg10 += d1 * x0.conj();
+                            dg11 += d1 * x1.conj();
+                            let dx0 = g00.conj() * d0 + g10.conj() * d1;
+                            let dx1 = g01.conj() * d0 + g11.conj() * d1;
+                            refr[i0] = dx0.re;
+                            refi[i0] = dx0.im;
+                            refr[i1] = dx1.re;
+                            refi[i1] = dx1.im;
+                            i0 += n;
+                            i1 += n;
+                        }
+                        ref_grad[p.tw_idx(level, 0, u, 0, 0)] += dg00.re;
+                        ref_grad[p.tw_idx(level, 1, u, 0, 0)] += dg00.im;
+                        ref_grad[p.tw_idx(level, 0, u, 0, 1)] += dg01.re;
+                        ref_grad[p.tw_idx(level, 1, u, 0, 1)] += dg01.im;
+                        ref_grad[p.tw_idx(level, 0, u, 1, 0)] += dg10.re;
+                        ref_grad[p.tw_idx(level, 1, u, 1, 0)] += dg10.im;
+                        ref_grad[p.tw_idx(level, 0, u, 1, 1)] += dg11.re;
+                        ref_grad[p.tw_idx(level, 1, u, 1, 1)] += dg11.im;
+                    }
+                }
+                let (mut kdr, mut kdi) = (dyr.clone(), dyi.clone());
+                let mut grad = vec![0.0f32; p.data.len()];
+                level_backward(&p, level, &xr, &xi, &mut kdr, &mut kdi, &mut grad, batch);
+                for i in 0..batch * n {
+                    assert_eq!(kdr[i].to_bits(), refr[i].to_bits(), "{tying:?} level {level} dx re[{i}]");
+                    assert_eq!(kdi[i].to_bits(), refi[i].to_bits(), "{tying:?} level {level} dx im[{i}]");
+                }
+                for i in 0..grad.len() {
+                    assert_eq!(grad[i].to_bits(), ref_grad[i].to_bits(), "{tying:?} level {level} dG[{i}]");
+                }
             }
         }
     }

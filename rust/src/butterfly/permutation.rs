@@ -20,13 +20,16 @@
 //!
 //! Training hot path: the `*_with` entry points take a [`PermTables`]
 //! (gather tables built once per workspace, never per call) plus caller-
-//! owned scratch planes, and run each gate stage batch-innermost — the
-//! gather index and gate weight are read once per position and streamed
-//! across the batch, mirroring the level kernels. The plain
+//! owned scratch planes. The forward gate blend routes through the
+//! `crate::kernels` microkernel layer per contiguous block span; the
+//! backward stays a hand-rolled scalar loop because its `dp` reduction
+//! accumulates in `f64` in a pinned (block, position, row) order that
+//! the f32 SIMD kernels deliberately do not model. The plain
 //! `forward`/`backward` wrappers allocate per call and exist for tests
 //! and cold paths.
 
 use crate::butterfly::params::BpParams;
+use crate::kernels;
 
 /// Hard per-step choice: `[a, b, c]` switched on/off for each of the `L`
 /// recursive steps.
@@ -181,10 +184,14 @@ pub struct RelaxedPerm;
 
 impl RelaxedPerm {
     /// Apply one gate stage in place: `y = p·(P^g x) + (1−p)·x`,
-    /// block-diagonally at block size `m`. Batch-innermost: each gather
-    /// index `table[i]` and the gate weight `p` are read once per
-    /// position and streamed across all batch rows (stride `n`) into the
-    /// `out` planes, which are then copied back wholesale.
+    /// block-diagonally at block size `m`. Walks `(row, block)` and hands
+    /// each block's contiguous `m`-element span to the
+    /// `kernels::gate_blend` microkernel (the blend is a gather, so the
+    /// kernel is scalar on every backend — routing it through the layer
+    /// keeps all hot loops in one place); the `out` planes are then
+    /// copied back wholesale. Blend order is irrelevant to the result:
+    /// there is no accumulation and the `out` planes are disjoint from
+    /// the inputs, so this is bitwise the batch-innermost original.
     fn gate_stage(
         re: &mut [f32],
         im: &mut [f32],
@@ -204,17 +211,13 @@ impl RelaxedPerm {
         }
         let q = 1.0 - p;
         let len = batch * n;
-        for blk in 0..(n / m) {
-            let base = blk * m;
-            for (i, &ti) in table.iter().enumerate() {
-                let mut s = base + ti;
-                let mut d = base + i;
-                for _ in 0..batch {
-                    out_re[d] = p * re[s] + q * re[d];
-                    out_im[d] = p * im[s] + q * im[d];
-                    s += n;
-                    d += n;
-                }
+        let be = kernels::active();
+        for r in 0..batch {
+            let row = r * n;
+            for blk in 0..(n / m) {
+                let base = row + blk * m;
+                kernels::gate_blend(be, p, q, &re[base..base + m], table, &mut out_re[base..base + m]);
+                kernels::gate_blend(be, p, q, &im[base..base + m], table, &mut out_im[base..base + m]);
             }
         }
         re[..len].copy_from_slice(&out_re[..len]);

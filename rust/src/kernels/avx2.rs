@@ -1,0 +1,158 @@
+//! AVX2/FMA instantiation of the generic kernel bodies (x86-64 only).
+//!
+//! Each public function is a thin `#[target_feature(enable = "avx2,fma")]`
+//! wrapper that monomorphizes the matching `generic::*` body over
+//! [`V8`] (8 × f32 in a `__m256`). The wrappers are `unsafe` to call:
+//! the caller (the dispatch macro in `kernels::mod`) must have verified
+//! `is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")`
+//! first. Inside the wrapper the compiler may assume AVX2+FMA, which is
+//! what lets the `#[inline(always)]` generic bodies compile to real
+//! vector code.
+//!
+//! Only [`V8::mul_add`] emits FMA — the elementwise kernels use plain
+//! `vmulps`/`vaddps`/`vsubps`/`vxorps` so their results stay bitwise
+//! identical to the scalar reference (see the contract in
+//! `kernels::generic`).
+#![cfg(target_arch = "x86_64")]
+
+use core::arch::x86_64::*;
+
+use super::generic::{self, TwSpan, TwSpanMut, Vf32};
+
+/// 8-lane f32 vector backed by a `__m256`.
+///
+/// Every method is only called from inside a `target_feature(avx2,fma)`
+/// wrapper, so the intrinsics are in scope feature-wise; the `unsafe`
+/// blocks discharge the raw-pointer obligations of `load`/`store` and
+/// the target-feature obligation rustc still tracks on non-`target_feature`
+/// inline contexts.
+#[derive(Clone, Copy)]
+pub(crate) struct V8(__m256);
+
+impl Vf32 for V8 {
+    const LANES: usize = 8;
+    #[inline(always)]
+    unsafe fn load(p: *const f32) -> Self {
+        V8(_mm256_loadu_ps(p))
+    }
+    #[inline(always)]
+    unsafe fn store(self, p: *mut f32) {
+        _mm256_storeu_ps(p, self.0)
+    }
+    #[inline(always)]
+    fn splat(x: f32) -> Self {
+        unsafe { V8(_mm256_set1_ps(x)) }
+    }
+    #[inline(always)]
+    fn add(self, o: Self) -> Self {
+        unsafe { V8(_mm256_add_ps(self.0, o.0)) }
+    }
+    #[inline(always)]
+    fn sub(self, o: Self) -> Self {
+        unsafe { V8(_mm256_sub_ps(self.0, o.0)) }
+    }
+    #[inline(always)]
+    fn mul(self, o: Self) -> Self {
+        unsafe { V8(_mm256_mul_ps(self.0, o.0)) }
+    }
+    #[inline(always)]
+    fn neg(self) -> Self {
+        // exact IEEE sign flip via xor with the sign-bit mask (never
+        // `0.0 - x`, which differs on signed zeros)
+        unsafe { V8(_mm256_xor_ps(self.0, _mm256_set1_ps(-0.0))) }
+    }
+    #[inline(always)]
+    fn vmax(self, o: Self) -> Self {
+        unsafe { V8(_mm256_max_ps(self.0, o.0)) }
+    }
+    #[inline(always)]
+    fn mul_add(self, a: Self, b: Self) -> Self {
+        // fused: only the dot-product family calls this, under its
+        // documented (non-bitwise) accuracy contract
+        unsafe { V8(_mm256_fmadd_ps(self.0, a.0, b.0)) }
+    }
+    #[inline(always)]
+    fn gt_zero_select(self, t: Self) -> Self {
+        unsafe {
+            let mask = _mm256_cmp_ps::<_CMP_GT_OQ>(self.0, _mm256_setzero_ps());
+            V8(_mm256_and_ps(mask, t.0))
+        }
+    }
+    #[inline(always)]
+    fn hsum(self) -> f32 {
+        // fixed left-to-right lane order so the reduction is
+        // deterministic for a given backend
+        let mut lanes = [0.0f32; 8];
+        unsafe { _mm256_storeu_ps(lanes.as_mut_ptr(), self.0) };
+        let mut acc = lanes[0];
+        for &l in &lanes[1..] {
+            acc += l;
+        }
+        acc
+    }
+}
+
+macro_rules! avx2_wrap {
+    ($(fn $name:ident($($arg:ident: $ty:ty),* $(,)?) $(-> $ret:ty)?;)*) => {
+        $(
+            /// # Safety
+            /// Caller must have verified AVX2 + FMA are available on the
+            /// running CPU (the dispatch layer does).
+            #[target_feature(enable = "avx2,fma")]
+            pub(crate) unsafe fn $name($($arg: $ty),*) $(-> $ret)? {
+                generic::$name::<V8>($($arg),*)
+            }
+        )*
+    };
+}
+
+avx2_wrap! {
+    fn bf2_real(g00: f32, g01: f32, g10: f32, g11: f32, lo: &mut [f32], hi: &mut [f32]);
+    fn bf2_complex(g: &[f32; 8], rlo: &mut [f32], ilo: &mut [f32], rhi: &mut [f32], ihi: &mut [f32]);
+    fn axpy_set(w: f32, x: &[f32], out: &mut [f32]);
+    fn axpy_acc(w: f32, x: &[f32], out: &mut [f32]);
+    fn axpy2_acc(w: f32, x1: &[f32], x2: &[f32], o1: &mut [f32], o2: &mut [f32]);
+    fn caxpy_set(gr: f32, gi: f32, xr: &[f32], xi: &[f32], or_: &mut [f32], oi: &mut [f32]);
+    fn caxpy_acc(gr: f32, gi: f32, xr: &[f32], xi: &[f32], or_: &mut [f32], oi: &mut [f32]);
+    fn cmul_acc(gr: f32, gi: f32, xr: &[f32], xi: &[f32], or_: &mut [f32], oi: &mut [f32]);
+    fn fft_bf(wr: f32, wi: f32, rl: &mut [f32], il: &mut [f32], rh: &mut [f32], ih: &mut [f32]);
+    fn fwht_pair(s: f32, lo: &mut [f32], hi: &mut [f32]);
+    fn cmul_scalar(hr: f32, hi: f32, re: &mut [f32], im: &mut [f32]);
+    fn scale(s: f32, x: &mut [f32]);
+    fn rot_scale(c: f32, s: f32, sc: f32, vr: &[f32], vi: &[f32], out: &mut [f32]);
+    fn sub_scale(s: f32, vr: &[f32], vi: &[f32], out: &mut [f32]);
+    fn relu_fwd(x: &[f32], y: &mut [f32]);
+    fn relu_bwd(x: &[f32], dy: &[f32], dx: &mut [f32]);
+    fn sgd_step(p: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, momentum: f32, wd: f32);
+    fn masked_sgd_step(p: &mut [f32], v: &mut [f32], g: &[f32], m: &[f32], lr: f32, momentum: f32, wd: f32);
+    fn add_acc(x: &[f32], out: &mut [f32]);
+    fn cmul_ew(hr: &[f32], hi: &[f32], xr: &mut [f32], xi: &mut [f32]);
+    fn cmulc_ew(hr: &[f32], hi: &[f32], xr: &[f32], xi: &[f32], or_: &mut [f32], oi: &mut [f32]);
+    fn dot_acc(init: f32, a: &[f32], b: &[f32]) -> f32;
+}
+
+/// # Safety
+/// Caller must have verified AVX2 + FMA are available.
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn bf2_cpx_span_fwd(tw: &TwSpan<'_>, rlo: &mut [f32], ilo: &mut [f32], rhi: &mut [f32], ihi: &mut [f32]) {
+    generic::bf2_cpx_span_fwd::<V8>(tw, rlo, ilo, rhi, ihi)
+}
+
+/// # Safety
+/// Caller must have verified AVX2 + FMA are available.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn bf2_cpx_span_bwd(
+    tw: &TwSpan<'_>,
+    dg: &mut TwSpanMut<'_>,
+    x0r: &[f32],
+    x0i: &[f32],
+    x1r: &[f32],
+    x1i: &[f32],
+    d0r: &mut [f32],
+    d0i: &mut [f32],
+    d1r: &mut [f32],
+    d1i: &mut [f32],
+) {
+    generic::bf2_cpx_span_bwd::<V8>(tw, dg, x0r, x0i, x1r, x1i, d0r, d0i, d1r, d1i)
+}

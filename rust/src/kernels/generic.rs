@@ -1,0 +1,868 @@
+//! Width-generic kernel bodies, written once against the [`Vf32`]
+//! vector abstraction and instantiated per backend (`f32` = the scalar
+//! reference, `avx2::V8`, `neon::V4`).
+//!
+//! ## The bitwise contract
+//!
+//! Every kernel here except [`dot_acc`] is **elementwise**: each output
+//! lane is a fixed dag of IEEE-754 single-precision `mul`/`add`/`sub`/
+//! `neg`/`max` ops on that lane's inputs, with no cross-lane
+//! accumulation and no FMA contraction. Per-element IEEE arithmetic is
+//! identical at any vector width, so these kernels produce **bitwise
+//! identical** results on every backend — including the scalar tail a
+//! vector backend runs for trailing lanes. The expression *shapes*
+//! (association order of every `+`/`-`) are copied verbatim from the
+//! legacy loops they replaced; changing one is a silent behaviour change
+//! that `tests/kernel_conformance.rs` and the crate's bitwise
+//! equivalence suites will catch.
+//!
+//! [`dot_acc`] is the one exception: vector backends keep `LANES`
+//! partial sums (with FMA where the ISA has it) and reduce them at the
+//! end, which reassociates the sum. Its contract is a documented
+//! relative bound, not bitwise equality — see the function docs.
+
+/// Minimal f32 vector abstraction. `LANES == 1` (the `f32` impl) is the
+/// scalar reference; wider impls must be lane-wise IEEE-exact for
+/// `add`/`sub`/`mul`/`neg` so the elementwise kernels stay bitwise
+/// across backends.
+pub(crate) trait Vf32: Copy {
+    const LANES: usize;
+    /// # Safety
+    /// `p .. p + LANES` must be readable.
+    unsafe fn load(p: *const f32) -> Self;
+    /// # Safety
+    /// `p .. p + LANES` must be writable.
+    unsafe fn store(self, p: *mut f32);
+    fn splat(x: f32) -> Self;
+    fn add(self, o: Self) -> Self;
+    fn sub(self, o: Self) -> Self;
+    fn mul(self, o: Self) -> Self;
+    /// Exact IEEE sign flip (never `0.0 - x`).
+    fn neg(self) -> Self;
+    /// Lane-wise max (the relu kernel only feeds it finite data and a
+    /// `+0.0` splat, where every ISA's semantics agree).
+    fn vmax(self, o: Self) -> Self;
+    /// `self * a + b`, contracted to FMA where the ISA has it. Used only
+    /// by the dot-product family; the scalar impl is unfused on purpose.
+    fn mul_add(self, a: Self, b: Self) -> Self;
+    /// Lane-wise `if x > 0 { t } else { 0.0 }` where `self` is `x`.
+    fn gt_zero_select(self, t: Self) -> Self;
+    /// Horizontal sum, lane 0 first (left-to-right) so the reduction
+    /// order is fixed per backend.
+    fn hsum(self) -> f32;
+}
+
+impl Vf32 for f32 {
+    const LANES: usize = 1;
+    #[inline(always)]
+    unsafe fn load(p: *const f32) -> f32 {
+        *p
+    }
+    #[inline(always)]
+    unsafe fn store(self, p: *mut f32) {
+        *p = self;
+    }
+    #[inline(always)]
+    fn splat(x: f32) -> f32 {
+        x
+    }
+    #[inline(always)]
+    fn add(self, o: f32) -> f32 {
+        self + o
+    }
+    #[inline(always)]
+    fn sub(self, o: f32) -> f32 {
+        self - o
+    }
+    #[inline(always)]
+    fn mul(self, o: f32) -> f32 {
+        self * o
+    }
+    #[inline(always)]
+    fn neg(self) -> f32 {
+        -self
+    }
+    #[inline(always)]
+    fn vmax(self, o: f32) -> f32 {
+        self.max(o)
+    }
+    #[inline(always)]
+    fn mul_add(self, a: f32, b: f32) -> f32 {
+        // unfused: the scalar backend is the bit-exactness reference for
+        // the legacy `acc += w * x` loops
+        self * a + b
+    }
+    #[inline(always)]
+    fn gt_zero_select(self, t: f32) -> f32 {
+        if self > 0.0 {
+            t
+        } else {
+            0.0
+        }
+    }
+    #[inline(always)]
+    fn hsum(self) -> f32 {
+        self
+    }
+}
+
+/// Per-element complex 2×2 twiddles in SoA layout, one slice per
+/// component — the staged form `butterfly::level` hands the span
+/// kernels. All eight slices have the same length as the data spans.
+pub struct TwSpan<'a> {
+    pub g00r: &'a [f32],
+    pub g00i: &'a [f32],
+    pub g01r: &'a [f32],
+    pub g01i: &'a [f32],
+    pub g10r: &'a [f32],
+    pub g10i: &'a [f32],
+    pub g11r: &'a [f32],
+    pub g11i: &'a [f32],
+}
+
+/// Mutable SoA accumulators for the twiddle gradient of one span.
+pub struct TwSpanMut<'a> {
+    pub g00r: &'a mut [f32],
+    pub g00i: &'a mut [f32],
+    pub g01r: &'a mut [f32],
+    pub g01i: &'a mut [f32],
+    pub g10r: &'a mut [f32],
+    pub g10i: &'a mut [f32],
+    pub g11r: &'a mut [f32],
+    pub g11i: &'a mut [f32],
+}
+
+// ---------------------------------------------------------------------
+// butterfly 2x2 stage kernels (serving layout: lanes = batch columns)
+// ---------------------------------------------------------------------
+
+/// Real 2×2 butterfly over batch lanes, in place:
+/// `lo = g00·lo + g01·hi`, `hi = g10·lo₀ + g11·hi₀`.
+#[inline(always)]
+pub(crate) fn bf2_real<V: Vf32>(g00: f32, g01: f32, g10: f32, g11: f32, lo: &mut [f32], hi: &mut [f32]) {
+    let n = lo.len();
+    debug_assert_eq!(hi.len(), n);
+    let (v00, v01, v10, v11) = (V::splat(g00), V::splat(g01), V::splat(g10), V::splat(g11));
+    let mut k = 0;
+    while k + V::LANES <= n {
+        unsafe {
+            let x0 = V::load(lo.as_ptr().add(k));
+            let x1 = V::load(hi.as_ptr().add(k));
+            v00.mul(x0).add(v01.mul(x1)).store(lo.as_mut_ptr().add(k));
+            v10.mul(x0).add(v11.mul(x1)).store(hi.as_mut_ptr().add(k));
+        }
+        k += V::LANES;
+    }
+    while k < n {
+        let (x0, x1) = (lo[k], hi[k]);
+        lo[k] = g00 * x0 + g01 * x1;
+        hi[k] = g10 * x0 + g11 * x1;
+        k += 1;
+    }
+}
+
+/// Complex 2×2 butterfly over batch lanes, in place, serving shape
+/// (`((a−b)+c)−d` per real part — the `fast.rs` accumulation order,
+/// which a span-2 fused `KsKernel` reproduces bit for bit).
+/// `g = [g00r, g00i, g01r, g01i, g10r, g10i, g11r, g11i]`.
+#[inline(always)]
+pub(crate) fn bf2_complex<V: Vf32>(g: &[f32; 8], rlo: &mut [f32], ilo: &mut [f32], rhi: &mut [f32], ihi: &mut [f32]) {
+    let n = rlo.len();
+    debug_assert!(ilo.len() == n && rhi.len() == n && ihi.len() == n);
+    let [g00r, g00i, g01r, g01i, g10r, g10i, g11r, g11i] = *g;
+    let (v00r, v00i, v01r, v01i) = (V::splat(g00r), V::splat(g00i), V::splat(g01r), V::splat(g01i));
+    let (v10r, v10i, v11r, v11i) = (V::splat(g10r), V::splat(g10i), V::splat(g11r), V::splat(g11i));
+    let mut k = 0;
+    while k + V::LANES <= n {
+        unsafe {
+            let x0r = V::load(rlo.as_ptr().add(k));
+            let x0i = V::load(ilo.as_ptr().add(k));
+            let x1r = V::load(rhi.as_ptr().add(k));
+            let x1i = V::load(ihi.as_ptr().add(k));
+            v00r.mul(x0r).sub(v00i.mul(x0i)).add(v01r.mul(x1r)).sub(v01i.mul(x1i)).store(rlo.as_mut_ptr().add(k));
+            v00r.mul(x0i).add(v00i.mul(x0r)).add(v01r.mul(x1i)).add(v01i.mul(x1r)).store(ilo.as_mut_ptr().add(k));
+            v10r.mul(x0r).sub(v10i.mul(x0i)).add(v11r.mul(x1r)).sub(v11i.mul(x1i)).store(rhi.as_mut_ptr().add(k));
+            v10r.mul(x0i).add(v10i.mul(x0r)).add(v11r.mul(x1i)).add(v11i.mul(x1r)).store(ihi.as_mut_ptr().add(k));
+        }
+        k += V::LANES;
+    }
+    while k < n {
+        let (x0r, x0i, x1r, x1i) = (rlo[k], ilo[k], rhi[k], ihi[k]);
+        rlo[k] = g00r * x0r - g00i * x0i + g01r * x1r - g01i * x1i;
+        ilo[k] = g00r * x0i + g00i * x0r + g01r * x1i + g01i * x1r;
+        rhi[k] = g10r * x0r - g10i * x0i + g11r * x1r - g11i * x1i;
+        ihi[k] = g10r * x0i + g10i * x0r + g11r * x1i + g11i * x1r;
+        k += 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// axpy family (ksm fused blocks, dense matvec panels)
+// ---------------------------------------------------------------------
+
+/// `out = w · x` over lanes.
+#[inline(always)]
+pub(crate) fn axpy_set<V: Vf32>(w: f32, x: &[f32], out: &mut [f32]) {
+    let n = x.len();
+    debug_assert_eq!(out.len(), n);
+    let wv = V::splat(w);
+    let mut k = 0;
+    while k + V::LANES <= n {
+        unsafe {
+            wv.mul(V::load(x.as_ptr().add(k))).store(out.as_mut_ptr().add(k));
+        }
+        k += V::LANES;
+    }
+    while k < n {
+        out[k] = w * x[k];
+        k += 1;
+    }
+}
+
+/// `out = out + w · x` over lanes (shape `o + (w·x)`, the `ksm`/`matvec`
+/// accumulation order).
+#[inline(always)]
+pub(crate) fn axpy_acc<V: Vf32>(w: f32, x: &[f32], out: &mut [f32]) {
+    let n = x.len();
+    debug_assert_eq!(out.len(), n);
+    let wv = V::splat(w);
+    let mut k = 0;
+    while k + V::LANES <= n {
+        unsafe {
+            let o = V::load(out.as_ptr().add(k));
+            o.add(wv.mul(V::load(x.as_ptr().add(k)))).store(out.as_mut_ptr().add(k));
+        }
+        k += V::LANES;
+    }
+    while k < n {
+        out[k] += w * x[k];
+        k += 1;
+    }
+}
+
+/// Two accumulating axpys sharing one weight: `o1 += w·x1`, `o2 += w·x2`
+/// (the dense backward's `gw += g·x; dx += g·w` panel).
+#[inline(always)]
+pub(crate) fn axpy2_acc<V: Vf32>(w: f32, x1: &[f32], x2: &[f32], o1: &mut [f32], o2: &mut [f32]) {
+    let n = x1.len();
+    debug_assert!(x2.len() == n && o1.len() == n && o2.len() == n);
+    let wv = V::splat(w);
+    let mut k = 0;
+    while k + V::LANES <= n {
+        unsafe {
+            let a = V::load(o1.as_ptr().add(k));
+            a.add(wv.mul(V::load(x1.as_ptr().add(k)))).store(o1.as_mut_ptr().add(k));
+            let b = V::load(o2.as_ptr().add(k));
+            b.add(wv.mul(V::load(x2.as_ptr().add(k)))).store(o2.as_mut_ptr().add(k));
+        }
+        k += V::LANES;
+    }
+    while k < n {
+        o1[k] += w * x1[k];
+        o2[k] += w * x2[k];
+        k += 1;
+    }
+}
+
+/// Complex axpy, set form: `or = gr·xr − gi·xi`, `oi = gr·xi + gi·xr`.
+#[inline(always)]
+pub(crate) fn caxpy_set<V: Vf32>(gr: f32, gi: f32, xr: &[f32], xi: &[f32], or_: &mut [f32], oi: &mut [f32]) {
+    let n = xr.len();
+    debug_assert!(xi.len() == n && or_.len() == n && oi.len() == n);
+    let (vr, vi) = (V::splat(gr), V::splat(gi));
+    let mut k = 0;
+    while k + V::LANES <= n {
+        unsafe {
+            let ar = V::load(xr.as_ptr().add(k));
+            let ai = V::load(xi.as_ptr().add(k));
+            vr.mul(ar).sub(vi.mul(ai)).store(or_.as_mut_ptr().add(k));
+            vr.mul(ai).add(vi.mul(ar)).store(oi.as_mut_ptr().add(k));
+        }
+        k += V::LANES;
+    }
+    while k < n {
+        let (ar, ai) = (xr[k], xi[k]);
+        or_[k] = gr * ar - gi * ai;
+        oi[k] = gr * ai + gi * ar;
+        k += 1;
+    }
+}
+
+/// Complex axpy, accumulate form: `or = (or + gr·xr) − gi·xi`,
+/// `oi = (oi + gr·xi) + gi·xr` — the `ksm` column order, which composed
+/// after [`caxpy_set`] reproduces the serving butterfly bit for bit.
+#[inline(always)]
+pub(crate) fn caxpy_acc<V: Vf32>(gr: f32, gi: f32, xr: &[f32], xi: &[f32], or_: &mut [f32], oi: &mut [f32]) {
+    let n = xr.len();
+    debug_assert!(xi.len() == n && or_.len() == n && oi.len() == n);
+    let (vr, vi) = (V::splat(gr), V::splat(gi));
+    let mut k = 0;
+    while k + V::LANES <= n {
+        unsafe {
+            let ar = V::load(xr.as_ptr().add(k));
+            let ai = V::load(xi.as_ptr().add(k));
+            let pr = V::load(or_.as_ptr().add(k));
+            let pi = V::load(oi.as_ptr().add(k));
+            pr.add(vr.mul(ar)).sub(vi.mul(ai)).store(or_.as_mut_ptr().add(k));
+            pi.add(vr.mul(ai)).add(vi.mul(ar)).store(oi.as_mut_ptr().add(k));
+        }
+        k += V::LANES;
+    }
+    while k < n {
+        let (ar, ai) = (xr[k], xi[k]);
+        or_[k] = or_[k] + gr * ar - gi * ai;
+        oi[k] = oi[k] + gr * ai + gi * ar;
+        k += 1;
+    }
+}
+
+/// Complex axpy in `Cpx`-operator order: `or += (gr·xr − gi·xi)`,
+/// `oi += (gr·xi + gi·xr)` — the product is reduced *before* the
+/// accumulate, matching dense `CMat`/`Cpx` matvec arithmetic bit for bit
+/// (contrast [`caxpy_acc`], which folds the accumulator in left to
+/// right the way the `ksm` columns do).
+#[inline(always)]
+pub(crate) fn cmul_acc<V: Vf32>(gr: f32, gi: f32, xr: &[f32], xi: &[f32], or_: &mut [f32], oi: &mut [f32]) {
+    let n = xr.len();
+    debug_assert!(xi.len() == n && or_.len() == n && oi.len() == n);
+    let (vr, vi) = (V::splat(gr), V::splat(gi));
+    let mut k = 0;
+    while k + V::LANES <= n {
+        unsafe {
+            let ar = V::load(xr.as_ptr().add(k));
+            let ai = V::load(xi.as_ptr().add(k));
+            let pr = V::load(or_.as_ptr().add(k));
+            let pi = V::load(oi.as_ptr().add(k));
+            pr.add(vr.mul(ar).sub(vi.mul(ai))).store(or_.as_mut_ptr().add(k));
+            pi.add(vr.mul(ai).add(vi.mul(ar))).store(oi.as_mut_ptr().add(k));
+        }
+        k += V::LANES;
+    }
+    while k < n {
+        let (ar, ai) = (xr[k], xi[k]);
+        or_[k] += gr * ar - gi * ai;
+        oi[k] += gr * ai + gi * ar;
+        k += 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// closed-form transform kernels (FFT / FWHT / DCT / DST / Hartley /
+// circulant spectrum)
+// ---------------------------------------------------------------------
+
+/// One FFT butterfly row over batch lanes, in place:
+/// `t = w·hi; hi = lo − t; lo = lo + t` in the `FftPlan` shape.
+#[inline(always)]
+pub(crate) fn fft_bf<V: Vf32>(wr: f32, wi: f32, rl: &mut [f32], il: &mut [f32], rh: &mut [f32], ih: &mut [f32]) {
+    let n = rl.len();
+    debug_assert!(il.len() == n && rh.len() == n && ih.len() == n);
+    let (vwr, vwi) = (V::splat(wr), V::splat(wi));
+    let mut k = 0;
+    while k + V::LANES <= n {
+        unsafe {
+            let hr = V::load(rh.as_ptr().add(k));
+            let hi = V::load(ih.as_ptr().add(k));
+            let lr = V::load(rl.as_ptr().add(k));
+            let li = V::load(il.as_ptr().add(k));
+            let tr = vwr.mul(hr).sub(vwi.mul(hi));
+            let ti = vwr.mul(hi).add(vwi.mul(hr));
+            lr.sub(tr).store(rh.as_mut_ptr().add(k));
+            li.sub(ti).store(ih.as_mut_ptr().add(k));
+            lr.add(tr).store(rl.as_mut_ptr().add(k));
+            li.add(ti).store(il.as_mut_ptr().add(k));
+        }
+        k += V::LANES;
+    }
+    while k < n {
+        let tr = wr * rh[k] - wi * ih[k];
+        let ti = wr * ih[k] + wi * rh[k];
+        rh[k] = rl[k] - tr;
+        ih[k] = il[k] - ti;
+        rl[k] += tr;
+        il[k] += ti;
+        k += 1;
+    }
+}
+
+/// One normalized Walsh–Hadamard pair over batch lanes, in place:
+/// `lo = (lo + hi)·s`, `hi = (lo₀ − hi₀)·s`.
+#[inline(always)]
+pub(crate) fn fwht_pair<V: Vf32>(s: f32, lo: &mut [f32], hi: &mut [f32]) {
+    let n = lo.len();
+    debug_assert_eq!(hi.len(), n);
+    let vs = V::splat(s);
+    let mut k = 0;
+    while k + V::LANES <= n {
+        unsafe {
+            let a = V::load(lo.as_ptr().add(k));
+            let b = V::load(hi.as_ptr().add(k));
+            a.add(b).mul(vs).store(lo.as_mut_ptr().add(k));
+            a.sub(b).mul(vs).store(hi.as_mut_ptr().add(k));
+        }
+        k += V::LANES;
+    }
+    while k < n {
+        let (a, b) = (lo[k], hi[k]);
+        lo[k] = (a + b) * s;
+        hi[k] = (a - b) * s;
+        k += 1;
+    }
+}
+
+/// In-place multiply of a complex lane row by the scalar `(hr, hi)`:
+/// `re = re·hr − im·hi`, `im = re₀·hi + im₀·hr` (circulant spectrum tap).
+#[inline(always)]
+pub(crate) fn cmul_scalar<V: Vf32>(hr: f32, hi: f32, re: &mut [f32], im: &mut [f32]) {
+    let n = re.len();
+    debug_assert_eq!(im.len(), n);
+    let (vhr, vhi) = (V::splat(hr), V::splat(hi));
+    let mut k = 0;
+    while k + V::LANES <= n {
+        unsafe {
+            let xr = V::load(re.as_ptr().add(k));
+            let xi = V::load(im.as_ptr().add(k));
+            xr.mul(vhr).sub(xi.mul(vhi)).store(re.as_mut_ptr().add(k));
+            xr.mul(vhi).add(xi.mul(vhr)).store(im.as_mut_ptr().add(k));
+        }
+        k += V::LANES;
+    }
+    while k < n {
+        let (xr, xi) = (re[k], im[k]);
+        re[k] = xr * hr - xi * hi;
+        im[k] = xr * hi + xi * hr;
+        k += 1;
+    }
+}
+
+/// `x = x · s` over lanes.
+#[inline(always)]
+pub(crate) fn scale<V: Vf32>(s: f32, x: &mut [f32]) {
+    let n = x.len();
+    let vs = V::splat(s);
+    let mut k = 0;
+    while k + V::LANES <= n {
+        unsafe {
+            V::load(x.as_ptr().add(k)).mul(vs).store(x.as_mut_ptr().add(k));
+        }
+        k += V::LANES;
+    }
+    while k < n {
+        x[k] *= s;
+        k += 1;
+    }
+}
+
+/// DCT/DST post-rotation row: `out = sc · ((c·vr) − (s·vi))`.
+#[inline(always)]
+pub(crate) fn rot_scale<V: Vf32>(c: f32, s: f32, sc: f32, vr: &[f32], vi: &[f32], out: &mut [f32]) {
+    let n = vr.len();
+    debug_assert!(vi.len() == n && out.len() == n);
+    let (vc, vs, vsc) = (V::splat(c), V::splat(s), V::splat(sc));
+    let mut k = 0;
+    while k + V::LANES <= n {
+        unsafe {
+            let ar = V::load(vr.as_ptr().add(k));
+            let ai = V::load(vi.as_ptr().add(k));
+            vsc.mul(vc.mul(ar).sub(vs.mul(ai))).store(out.as_mut_ptr().add(k));
+        }
+        k += V::LANES;
+    }
+    while k < n {
+        out[k] = sc * (c * vr[k] - s * vi[k]);
+        k += 1;
+    }
+}
+
+/// Hartley combine row: `out = (vr − vi) · s`.
+#[inline(always)]
+pub(crate) fn sub_scale<V: Vf32>(s: f32, vr: &[f32], vi: &[f32], out: &mut [f32]) {
+    let n = vr.len();
+    debug_assert!(vi.len() == n && out.len() == n);
+    let vs = V::splat(s);
+    let mut k = 0;
+    while k + V::LANES <= n {
+        unsafe {
+            V::load(vr.as_ptr().add(k)).sub(V::load(vi.as_ptr().add(k))).mul(vs).store(out.as_mut_ptr().add(k));
+        }
+        k += V::LANES;
+    }
+    while k < n {
+        out[k] = (vr[k] - vi[k]) * s;
+        k += 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// training span kernels (row-major layout: lanes = contiguous pair
+// indices j within one block of one batch row; twiddles vary per lane)
+// ---------------------------------------------------------------------
+
+/// Forward complex 2×2 butterfly span with per-lane twiddles, in place,
+/// training shape (`(a−b)+(c−d)` per real part — the `Cpx` operator
+/// order of the legacy `level_forward`).
+#[inline(always)]
+pub(crate) fn bf2_cpx_span_fwd<V: Vf32>(tw: &TwSpan<'_>, rlo: &mut [f32], ilo: &mut [f32], rhi: &mut [f32], ihi: &mut [f32]) {
+    let n = rlo.len();
+    debug_assert!(ilo.len() == n && rhi.len() == n && ihi.len() == n);
+    debug_assert!(tw.g00r.len() == n && tw.g11i.len() == n);
+    let mut k = 0;
+    while k + V::LANES <= n {
+        unsafe {
+            let g00r = V::load(tw.g00r.as_ptr().add(k));
+            let g00i = V::load(tw.g00i.as_ptr().add(k));
+            let g01r = V::load(tw.g01r.as_ptr().add(k));
+            let g01i = V::load(tw.g01i.as_ptr().add(k));
+            let g10r = V::load(tw.g10r.as_ptr().add(k));
+            let g10i = V::load(tw.g10i.as_ptr().add(k));
+            let g11r = V::load(tw.g11r.as_ptr().add(k));
+            let g11i = V::load(tw.g11i.as_ptr().add(k));
+            let x0r = V::load(rlo.as_ptr().add(k));
+            let x0i = V::load(ilo.as_ptr().add(k));
+            let x1r = V::load(rhi.as_ptr().add(k));
+            let x1i = V::load(ihi.as_ptr().add(k));
+            let y0r = g00r.mul(x0r).sub(g00i.mul(x0i)).add(g01r.mul(x1r).sub(g01i.mul(x1i)));
+            let y0i = g00r.mul(x0i).add(g00i.mul(x0r)).add(g01r.mul(x1i).add(g01i.mul(x1r)));
+            let y1r = g10r.mul(x0r).sub(g10i.mul(x0i)).add(g11r.mul(x1r).sub(g11i.mul(x1i)));
+            let y1i = g10r.mul(x0i).add(g10i.mul(x0r)).add(g11r.mul(x1i).add(g11i.mul(x1r)));
+            y0r.store(rlo.as_mut_ptr().add(k));
+            y0i.store(ilo.as_mut_ptr().add(k));
+            y1r.store(rhi.as_mut_ptr().add(k));
+            y1i.store(ihi.as_mut_ptr().add(k));
+        }
+        k += V::LANES;
+    }
+    while k < n {
+        let (x0r, x0i, x1r, x1i) = (rlo[k], ilo[k], rhi[k], ihi[k]);
+        let (g00r, g00i, g01r, g01i) = (tw.g00r[k], tw.g00i[k], tw.g01r[k], tw.g01i[k]);
+        let (g10r, g10i, g11r, g11i) = (tw.g10r[k], tw.g10i[k], tw.g11r[k], tw.g11i[k]);
+        rlo[k] = (g00r * x0r - g00i * x0i) + (g01r * x1r - g01i * x1i);
+        ilo[k] = (g00r * x0i + g00i * x0r) + (g01r * x1i + g01i * x1r);
+        rhi[k] = (g10r * x0r - g10i * x0i) + (g11r * x1r - g11i * x1i);
+        ihi[k] = (g10r * x0i + g10i * x0r) + (g11r * x1i + g11i * x1r);
+        k += 1;
+    }
+}
+
+/// Backward complex 2×2 butterfly span with per-lane twiddles: one batch
+/// row's contribution. Accumulates `dG += dy ⊗ conj(x)` into the SoA
+/// slots (caller loops rows in batch order, preserving the legacy
+/// register-accumulation order) and rewrites `d* = conj(G)ᵀ·dy` in
+/// place. Conjugations go through an exact sign flip ([`Vf32::neg`]) so
+/// every intermediate — including zero signs — matches the legacy `Cpx`
+/// arithmetic bit for bit.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+pub(crate) fn bf2_cpx_span_bwd<V: Vf32>(
+    tw: &TwSpan<'_>,
+    dg: &mut TwSpanMut<'_>,
+    x0r: &[f32],
+    x0i: &[f32],
+    x1r: &[f32],
+    x1i: &[f32],
+    d0r: &mut [f32],
+    d0i: &mut [f32],
+    d1r: &mut [f32],
+    d1i: &mut [f32],
+) {
+    let n = x0r.len();
+    debug_assert!(x1i.len() == n && d0r.len() == n && d1i.len() == n);
+    debug_assert!(tw.g00r.len() == n && dg.g11i.len() == n);
+    let mut k = 0;
+    while k + V::LANES <= n {
+        unsafe {
+            let a0r = V::load(x0r.as_ptr().add(k));
+            let a0i = V::load(x0i.as_ptr().add(k));
+            let a1r = V::load(x1r.as_ptr().add(k));
+            let a1i = V::load(x1i.as_ptr().add(k));
+            let e0r = V::load(d0r.as_ptr().add(k));
+            let e0i = V::load(d0i.as_ptr().add(k));
+            let e1r = V::load(d1r.as_ptr().add(k));
+            let e1i = V::load(d1i.as_ptr().add(k));
+            // dG += d ⊗ conj(x): conj(x) = (xr, −xi), product expanded
+            // exactly as Cpx::mul of (d, conj(x))
+            let n0i = a0i.neg();
+            let n1i = a1i.neg();
+            macro_rules! dg_acc {
+                ($gr:expr, $gi:expr, $dr:expr, $di:expr, $xr:expr, $nxi:expr) => {{
+                    let pr = $dr.mul($xr).sub($di.mul($nxi));
+                    let pi = $dr.mul($nxi).add($di.mul($xr));
+                    V::load($gr.as_ptr().add(k)).add(pr).store($gr.as_mut_ptr().add(k));
+                    V::load($gi.as_ptr().add(k)).add(pi).store($gi.as_mut_ptr().add(k));
+                }};
+            }
+            dg_acc!(dg.g00r, dg.g00i, e0r, e0i, a0r, n0i);
+            dg_acc!(dg.g01r, dg.g01i, e0r, e0i, a1r, n1i);
+            dg_acc!(dg.g10r, dg.g10i, e1r, e1i, a0r, n0i);
+            dg_acc!(dg.g11r, dg.g11i, e1r, e1i, a1r, n1i);
+            // dx = conj(G)ᵀ·d: conj(g) = (gr, −gi), expanded as
+            // Cpx::mul(conj(g), d) then Cpx::add — the legacy shape
+            let g00r = V::load(tw.g00r.as_ptr().add(k));
+            let g00i = V::load(tw.g00i.as_ptr().add(k)).neg();
+            let g01r = V::load(tw.g01r.as_ptr().add(k));
+            let g01i = V::load(tw.g01i.as_ptr().add(k)).neg();
+            let g10r = V::load(tw.g10r.as_ptr().add(k));
+            let g10i = V::load(tw.g10i.as_ptr().add(k)).neg();
+            let g11r = V::load(tw.g11r.as_ptr().add(k));
+            let g11i = V::load(tw.g11i.as_ptr().add(k)).neg();
+            let dx0r = g00r.mul(e0r).sub(g00i.mul(e0i)).add(g10r.mul(e1r).sub(g10i.mul(e1i)));
+            let dx0i = g00r.mul(e0i).add(g00i.mul(e0r)).add(g10r.mul(e1i).add(g10i.mul(e1r)));
+            let dx1r = g01r.mul(e0r).sub(g01i.mul(e0i)).add(g11r.mul(e1r).sub(g11i.mul(e1i)));
+            let dx1i = g01r.mul(e0i).add(g01i.mul(e0r)).add(g11r.mul(e1i).add(g11i.mul(e1r)));
+            dx0r.store(d0r.as_mut_ptr().add(k));
+            dx0i.store(d0i.as_mut_ptr().add(k));
+            dx1r.store(d1r.as_mut_ptr().add(k));
+            dx1i.store(d1i.as_mut_ptr().add(k));
+        }
+        k += V::LANES;
+    }
+    while k < n {
+        let (a0r, a0i, a1r, a1i) = (x0r[k], x0i[k], x1r[k], x1i[k]);
+        let (e0r, e0i, e1r, e1i) = (d0r[k], d0i[k], d1r[k], d1i[k]);
+        let (n0i, n1i) = (-a0i, -a1i);
+        dg.g00r[k] += e0r * a0r - e0i * n0i;
+        dg.g00i[k] += e0r * n0i + e0i * a0r;
+        dg.g01r[k] += e0r * a1r - e0i * n1i;
+        dg.g01i[k] += e0r * n1i + e0i * a1r;
+        dg.g10r[k] += e1r * a0r - e1i * n0i;
+        dg.g10i[k] += e1r * n0i + e1i * a0r;
+        dg.g11r[k] += e1r * a1r - e1i * n1i;
+        dg.g11i[k] += e1r * n1i + e1i * a1r;
+        let (g00r, g00i) = (tw.g00r[k], -tw.g00i[k]);
+        let (g01r, g01i) = (tw.g01r[k], -tw.g01i[k]);
+        let (g10r, g10i) = (tw.g10r[k], -tw.g10i[k]);
+        let (g11r, g11i) = (tw.g11r[k], -tw.g11i[k]);
+        d0r[k] = (g00r * e0r - g00i * e0i) + (g10r * e1r - g10i * e1i);
+        d0i[k] = (g00r * e0i + g00i * e0r) + (g10r * e1i + g10i * e1r);
+        d1r[k] = (g01r * e0r - g01i * e0i) + (g11r * e1r - g11i * e1i);
+        d1i[k] = (g01r * e0i + g01i * e0r) + (g11r * e1i + g11i * e1r);
+        k += 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// nn layer kernels
+// ---------------------------------------------------------------------
+
+/// `y = max(x, 0)` over lanes.
+#[inline(always)]
+pub(crate) fn relu_fwd<V: Vf32>(x: &[f32], y: &mut [f32]) {
+    let n = x.len();
+    debug_assert_eq!(y.len(), n);
+    let zero = V::splat(0.0);
+    let mut k = 0;
+    while k + V::LANES <= n {
+        unsafe {
+            V::load(x.as_ptr().add(k)).vmax(zero).store(y.as_mut_ptr().add(k));
+        }
+        k += V::LANES;
+    }
+    while k < n {
+        y[k] = x[k].max(0.0);
+        k += 1;
+    }
+}
+
+/// `dx = dy ⊙ [x > 0]` over lanes.
+#[inline(always)]
+pub(crate) fn relu_bwd<V: Vf32>(x: &[f32], dy: &[f32], dx: &mut [f32]) {
+    let n = dx.len();
+    debug_assert!(x.len() >= n && dy.len() >= n);
+    let mut k = 0;
+    while k + V::LANES <= n {
+        unsafe {
+            V::load(x.as_ptr().add(k))
+                .gt_zero_select(V::load(dy.as_ptr().add(k)))
+                .store(dx.as_mut_ptr().add(k));
+        }
+        k += V::LANES;
+    }
+    while k < n {
+        dx[k] = if x[k] > 0.0 { dy[k] } else { 0.0 };
+        k += 1;
+    }
+}
+
+/// Momentum-SGD parameter update over lanes:
+/// `v = momentum·v + g + wd·p; p = p − lr·v`.
+#[inline(always)]
+pub(crate) fn sgd_step<V: Vf32>(p: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, momentum: f32, wd: f32) {
+    let n = p.len();
+    debug_assert!(v.len() == n && g.len() == n);
+    let (vlr, vmom, vwd) = (V::splat(lr), V::splat(momentum), V::splat(wd));
+    let mut k = 0;
+    while k + V::LANES <= n {
+        unsafe {
+            let pv = V::load(p.as_ptr().add(k));
+            let vv = V::load(v.as_ptr().add(k));
+            let gv = V::load(g.as_ptr().add(k));
+            let nv = vmom.mul(vv).add(gv).add(vwd.mul(pv));
+            nv.store(v.as_mut_ptr().add(k));
+            pv.sub(vlr.mul(nv)).store(p.as_mut_ptr().add(k));
+        }
+        k += V::LANES;
+    }
+    while k < n {
+        v[k] = momentum * v[k] + g[k] + wd * p[k];
+        p[k] -= lr * v[k];
+        k += 1;
+    }
+}
+
+/// Masked momentum-SGD update over lanes (butterfly layers: the mask
+/// pins imaginary planes of real modules and fixed-permutation logits):
+/// `v = momentum·v + (g + wd·p)·m; p = p − lr·v`.
+#[inline(always)]
+pub(crate) fn masked_sgd_step<V: Vf32>(
+    p: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    m: &[f32],
+    lr: f32,
+    momentum: f32,
+    wd: f32,
+) {
+    let n = p.len();
+    debug_assert!(v.len() == n && g.len() == n && m.len() == n);
+    let (vlr, vmom, vwd) = (V::splat(lr), V::splat(momentum), V::splat(wd));
+    let mut k = 0;
+    while k + V::LANES <= n {
+        unsafe {
+            let pv = V::load(p.as_ptr().add(k));
+            let vv = V::load(v.as_ptr().add(k));
+            let gv = V::load(g.as_ptr().add(k));
+            let mv = V::load(m.as_ptr().add(k));
+            let gi = gv.add(vwd.mul(pv)).mul(mv);
+            let nv = vmom.mul(vv).add(gi);
+            nv.store(v.as_mut_ptr().add(k));
+            pv.sub(vlr.mul(nv)).store(p.as_mut_ptr().add(k));
+        }
+        k += V::LANES;
+    }
+    while k < n {
+        let gi = (g[k] + wd * p[k]) * m[k];
+        v[k] = momentum * v[k] + gi;
+        p[k] -= lr * v[k];
+        k += 1;
+    }
+}
+
+/// Plain accumulate over lanes: `out += x` (bias gradients, `dh` sums).
+#[inline(always)]
+pub(crate) fn add_acc<V: Vf32>(x: &[f32], out: &mut [f32]) {
+    let n = out.len();
+    debug_assert!(x.len() >= n);
+    let mut k = 0;
+    while k + V::LANES <= n {
+        unsafe {
+            let o = V::load(out.as_ptr().add(k));
+            o.add(V::load(x.as_ptr().add(k))).store(out.as_mut_ptr().add(k));
+        }
+        k += V::LANES;
+    }
+    while k < n {
+        out[k] += x[k];
+        k += 1;
+    }
+}
+
+/// In-place elementwise complex Hadamard product `x ← h ∘ x`:
+/// `xr = hr·xr − hi·xi`, `xi = hr·xi + hi·xr` (circulant spectra).
+#[inline(always)]
+pub(crate) fn cmul_ew<V: Vf32>(hr: &[f32], hi: &[f32], xr: &mut [f32], xi: &mut [f32]) {
+    let n = xr.len();
+    debug_assert!(hr.len() >= n && hi.len() >= n && xi.len() == n);
+    let mut k = 0;
+    while k + V::LANES <= n {
+        unsafe {
+            let hrv = V::load(hr.as_ptr().add(k));
+            let hiv = V::load(hi.as_ptr().add(k));
+            let a = V::load(xr.as_ptr().add(k));
+            let b = V::load(xi.as_ptr().add(k));
+            hrv.mul(a).sub(hiv.mul(b)).store(xr.as_mut_ptr().add(k));
+            hrv.mul(b).add(hiv.mul(a)).store(xi.as_mut_ptr().add(k));
+        }
+        k += V::LANES;
+    }
+    while k < n {
+        let (a, b) = (xr[k], xi[k]);
+        xr[k] = hr[k] * a - hi[k] * b;
+        xi[k] = hr[k] * b + hi[k] * a;
+        k += 1;
+    }
+}
+
+/// Out-of-place elementwise conjugate Hadamard product `o = conj(h) ∘ x`:
+/// `or = hr·xr + hi·xi`, `oi = hr·xi − hi·xr` (circulant backward).
+#[inline(always)]
+pub(crate) fn cmulc_ew<V: Vf32>(hr: &[f32], hi: &[f32], xr: &[f32], xi: &[f32], or_: &mut [f32], oi: &mut [f32]) {
+    let n = or_.len();
+    debug_assert!(hr.len() >= n && hi.len() >= n && xr.len() >= n && xi.len() >= n && oi.len() == n);
+    let mut k = 0;
+    while k + V::LANES <= n {
+        unsafe {
+            let hrv = V::load(hr.as_ptr().add(k));
+            let hiv = V::load(hi.as_ptr().add(k));
+            let a = V::load(xr.as_ptr().add(k));
+            let b = V::load(xi.as_ptr().add(k));
+            hrv.mul(a).add(hiv.mul(b)).store(or_.as_mut_ptr().add(k));
+            hrv.mul(b).sub(hiv.mul(a)).store(oi.as_mut_ptr().add(k));
+        }
+        k += V::LANES;
+    }
+    while k < n {
+        or_[k] = hr[k] * xr[k] + hi[k] * xi[k];
+        oi[k] = hr[k] * xi[k] - hi[k] * xr[k];
+        k += 1;
+    }
+}
+
+/// Dot product with running init: scalar backend computes the exact
+/// legacy `acc = init; acc += a[i]·b[i]` chain; vector backends keep
+/// `LANES` FMA partial sums reduced left-to-right, then add `init` and
+/// the scalar tail. The reassociation moves the result by
+/// `≲ len·ε·Σ|aᵢ·bᵢ|` relative to scalar — the one non-bitwise kernel
+/// (see `tests/kernel_conformance.rs` for the enforced bound).
+#[inline(always)]
+pub(crate) fn dot_acc<V: Vf32>(init: f32, a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    debug_assert_eq!(b.len(), n);
+    if V::LANES == 1 || n < V::LANES {
+        let mut acc = init;
+        for k in 0..n {
+            acc += a[k] * b[k];
+        }
+        return acc;
+    }
+    let mut accv = V::splat(0.0);
+    let mut k = 0;
+    while k + V::LANES <= n {
+        unsafe {
+            accv = V::load(a.as_ptr().add(k)).mul_add(V::load(b.as_ptr().add(k)), accv);
+        }
+        k += V::LANES;
+    }
+    let mut acc = init + accv.hsum();
+    while k < n {
+        acc += a[k] * b[k];
+        k += 1;
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------
+// permutation gate (gather-bound — scalar on every backend)
+// ---------------------------------------------------------------------
+
+/// One relaxed-permutation gate blend over a contiguous block of one
+/// batch row: `out[i] = p·x[table[i]] + q·x[i]`. The `table` gather is
+/// data-dependent random access, so no backend vectorizes it — routing
+/// it through `kernels` keeps the dispatch story complete (and leaves a
+/// single place to add an ISA gather later).
+#[inline(always)]
+pub(crate) fn gate_blend(p: f32, q: f32, x: &[f32], table: &[usize], out: &mut [f32]) {
+    debug_assert!(out.len() == table.len() && x.len() == table.len());
+    for (i, &ti) in table.iter().enumerate() {
+        out[i] = p * x[ti] + q * x[i];
+    }
+}

@@ -1,0 +1,142 @@
+//! NEON instantiation of the generic kernel bodies (aarch64 only).
+//!
+//! NEON is mandatory on aarch64, so unlike the AVX2 path there is no
+//! runtime feature check to make — the wrappers still mirror the
+//! `target_feature` shape so all backends go through the same dispatch
+//! macro. Only [`V4::mul_add`] emits FMA (`vfmaq_f32`); everything else
+//! is plain lane-wise IEEE arithmetic, keeping the elementwise kernels
+//! bitwise identical to the scalar reference.
+#![cfg(target_arch = "aarch64")]
+
+use core::arch::aarch64::*;
+
+use super::generic::{self, TwSpan, TwSpanMut, Vf32};
+
+/// 4-lane f32 vector backed by a `float32x4_t`.
+#[derive(Clone, Copy)]
+pub(crate) struct V4(float32x4_t);
+
+impl Vf32 for V4 {
+    const LANES: usize = 4;
+    #[inline(always)]
+    unsafe fn load(p: *const f32) -> Self {
+        V4(vld1q_f32(p))
+    }
+    #[inline(always)]
+    unsafe fn store(self, p: *mut f32) {
+        vst1q_f32(p, self.0)
+    }
+    #[inline(always)]
+    fn splat(x: f32) -> Self {
+        unsafe { V4(vdupq_n_f32(x)) }
+    }
+    #[inline(always)]
+    fn add(self, o: Self) -> Self {
+        unsafe { V4(vaddq_f32(self.0, o.0)) }
+    }
+    #[inline(always)]
+    fn sub(self, o: Self) -> Self {
+        unsafe { V4(vsubq_f32(self.0, o.0)) }
+    }
+    #[inline(always)]
+    fn mul(self, o: Self) -> Self {
+        unsafe { V4(vmulq_f32(self.0, o.0)) }
+    }
+    #[inline(always)]
+    fn neg(self) -> Self {
+        // vnegq is an exact IEEE sign flip
+        unsafe { V4(vnegq_f32(self.0)) }
+    }
+    #[inline(always)]
+    fn vmax(self, o: Self) -> Self {
+        unsafe { V4(vmaxq_f32(self.0, o.0)) }
+    }
+    #[inline(always)]
+    fn mul_add(self, a: Self, b: Self) -> Self {
+        // vfmaq_f32(acc, x, y) = acc + x*y, fused; dot-product family only
+        unsafe { V4(vfmaq_f32(b.0, self.0, a.0)) }
+    }
+    #[inline(always)]
+    fn gt_zero_select(self, t: Self) -> Self {
+        unsafe {
+            let mask = vcgtq_f32(self.0, vdupq_n_f32(0.0));
+            V4(vreinterpretq_f32_u32(vandq_u32(mask, vreinterpretq_u32_f32(t.0))))
+        }
+    }
+    #[inline(always)]
+    fn hsum(self) -> f32 {
+        // fixed left-to-right lane order for a deterministic reduction
+        let mut lanes = [0.0f32; 4];
+        unsafe { vst1q_f32(lanes.as_mut_ptr(), self.0) };
+        let mut acc = lanes[0];
+        for &l in &lanes[1..] {
+            acc += l;
+        }
+        acc
+    }
+}
+
+macro_rules! neon_wrap {
+    ($(fn $name:ident($($arg:ident: $ty:ty),* $(,)?) $(-> $ret:ty)?;)*) => {
+        $(
+            /// # Safety
+            /// NEON is baseline on aarch64; `unsafe` is kept for dispatch
+            /// symmetry with the AVX2 wrappers.
+            #[target_feature(enable = "neon")]
+            pub(crate) unsafe fn $name($($arg: $ty),*) $(-> $ret)? {
+                generic::$name::<V4>($($arg),*)
+            }
+        )*
+    };
+}
+
+neon_wrap! {
+    fn bf2_real(g00: f32, g01: f32, g10: f32, g11: f32, lo: &mut [f32], hi: &mut [f32]);
+    fn bf2_complex(g: &[f32; 8], rlo: &mut [f32], ilo: &mut [f32], rhi: &mut [f32], ihi: &mut [f32]);
+    fn axpy_set(w: f32, x: &[f32], out: &mut [f32]);
+    fn axpy_acc(w: f32, x: &[f32], out: &mut [f32]);
+    fn axpy2_acc(w: f32, x1: &[f32], x2: &[f32], o1: &mut [f32], o2: &mut [f32]);
+    fn caxpy_set(gr: f32, gi: f32, xr: &[f32], xi: &[f32], or_: &mut [f32], oi: &mut [f32]);
+    fn caxpy_acc(gr: f32, gi: f32, xr: &[f32], xi: &[f32], or_: &mut [f32], oi: &mut [f32]);
+    fn cmul_acc(gr: f32, gi: f32, xr: &[f32], xi: &[f32], or_: &mut [f32], oi: &mut [f32]);
+    fn fft_bf(wr: f32, wi: f32, rl: &mut [f32], il: &mut [f32], rh: &mut [f32], ih: &mut [f32]);
+    fn fwht_pair(s: f32, lo: &mut [f32], hi: &mut [f32]);
+    fn cmul_scalar(hr: f32, hi: f32, re: &mut [f32], im: &mut [f32]);
+    fn scale(s: f32, x: &mut [f32]);
+    fn rot_scale(c: f32, s: f32, sc: f32, vr: &[f32], vi: &[f32], out: &mut [f32]);
+    fn sub_scale(s: f32, vr: &[f32], vi: &[f32], out: &mut [f32]);
+    fn relu_fwd(x: &[f32], y: &mut [f32]);
+    fn relu_bwd(x: &[f32], dy: &[f32], dx: &mut [f32]);
+    fn sgd_step(p: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, momentum: f32, wd: f32);
+    fn masked_sgd_step(p: &mut [f32], v: &mut [f32], g: &[f32], m: &[f32], lr: f32, momentum: f32, wd: f32);
+    fn add_acc(x: &[f32], out: &mut [f32]);
+    fn cmul_ew(hr: &[f32], hi: &[f32], xr: &mut [f32], xi: &mut [f32]);
+    fn cmulc_ew(hr: &[f32], hi: &[f32], xr: &[f32], xi: &[f32], or_: &mut [f32], oi: &mut [f32]);
+    fn dot_acc(init: f32, a: &[f32], b: &[f32]) -> f32;
+}
+
+/// # Safety
+/// NEON is baseline on aarch64; kept `unsafe` for dispatch symmetry.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn bf2_cpx_span_fwd(tw: &TwSpan<'_>, rlo: &mut [f32], ilo: &mut [f32], rhi: &mut [f32], ihi: &mut [f32]) {
+    generic::bf2_cpx_span_fwd::<V4>(tw, rlo, ilo, rhi, ihi)
+}
+
+/// # Safety
+/// NEON is baseline on aarch64; kept `unsafe` for dispatch symmetry.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn bf2_cpx_span_bwd(
+    tw: &TwSpan<'_>,
+    dg: &mut TwSpanMut<'_>,
+    x0r: &[f32],
+    x0i: &[f32],
+    x1r: &[f32],
+    x1i: &[f32],
+    d0r: &mut [f32],
+    d0i: &mut [f32],
+    d1r: &mut [f32],
+    d1i: &mut [f32],
+) {
+    generic::bf2_cpx_span_bwd::<V4>(tw, dg, x0r, x0i, x1r, x1i, d0r, d0i, d1r, d1i)
+}

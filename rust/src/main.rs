@@ -33,6 +33,20 @@ fn main() {
     if args.flag("verbose") {
         log::set_level(log::Level::Debug);
     }
+    // resolve the kernel backend before any worker threads spin up:
+    // --kernels beats BUTTERFLY_KERNELS beats auto-detection
+    if let Some(name) = args.get("kernels") {
+        match butterfly::kernels::Backend::parse(name) {
+            Some(be) => {
+                let got = butterfly::kernels::set_active(be);
+                log::debug(&format!("kernel backend: {}", got.name()));
+            }
+            None => {
+                eprintln!("error: unknown --kernels value '{name}' (expected scalar|avx2|neon|auto)");
+                std::process::exit(2);
+            }
+        }
+    }
     let code = match args.command.as_str() {
         "factorize" => cmd_factorize(&args),
         "zoo" => cmd_zoo(&args),
@@ -112,6 +126,9 @@ COMMANDS:
   help        this text
 
 Add --verbose anywhere for debug logs.
+Add --kernels scalar|avx2|neon|auto anywhere to pin the SIMD kernel
+backend (default: auto-detect; BUTTERFLY_KERNELS env works too, the
+flag wins). Unavailable backends fall back to auto with a warning.
 ";
 
 fn parse_kind(args: &Args) -> Result<TransformKind, String> {

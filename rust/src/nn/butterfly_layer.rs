@@ -63,11 +63,7 @@ pub struct ButterflyLayer {
 /// shared by the legacy and workspace paths (the mask pins the imaginary
 /// plane of real modules and the fixed-permutation logits).
 fn masked_sgd_update(p: &mut [f32], v: &mut [f32], g: &[f32], m: &[f32], lr: f32, momentum: f32, weight_decay: f32) {
-    for i in 0..p.len() {
-        let gi = (g[i] + weight_decay * p[i]) * m[i];
-        v[i] = momentum * v[i] + gi;
-        p[i] -= lr * v[i];
-    }
+    crate::kernels::masked_sgd_step(crate::kernels::active(), p, v, g, m, lr, momentum, weight_decay);
 }
 
 impl ButterflyLayer {
@@ -123,10 +119,9 @@ impl ButterflyLayer {
 
     fn add_bias(&self, y: &mut [f32], batch: usize) {
         let n = self.n();
+        let be = crate::kernels::active();
         for bi in 0..batch {
-            for i in 0..n {
-                y[bi * n + i] += self.bias[i];
-            }
+            crate::kernels::add_acc(be, &self.bias, &mut y[bi * n..(bi + 1) * n]);
         }
     }
 
@@ -204,10 +199,9 @@ impl ButterflyLayer {
         let n = self.n();
         let len = batch * n;
         let (mods_grad, bias_grad) = grad.split_at_mut(self.grad_len() - n);
+        let be = crate::kernels::active();
         for bi in 0..batch {
-            for i in 0..n {
-                bias_grad[i] += dy[bi * n + i];
-            }
+            crate::kernels::add_acc(be, &dy[bi * n..(bi + 1) * n], &mut bias_grad[..n]);
         }
         dim[..len].fill(0.0);
         // split the flat module-gradient region into per-module slices
@@ -298,10 +292,9 @@ impl Layer for ButterflyLayer {
         let n = self.n();
         let mut dre = dy.to_vec();
         let mut dim = vec![0.0f32; batch * n];
+        let be = crate::kernels::active();
         for bi in 0..batch {
-            for i in 0..n {
-                self.gbias[i] += dre[bi * n + i];
-            }
+            crate::kernels::add_acc(be, &dre[bi * n..(bi + 1) * n], &mut self.gbias);
         }
         self.stack.backward(&self.saves, &mut dre, &mut dim, &mut self.grad, batch);
         dre

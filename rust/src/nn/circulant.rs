@@ -17,6 +17,7 @@
 //! [`circulant_op`] the closed-form factory serves) with the bias riding
 //! in the [`LayerArtifact`](crate::runtime::artifacts::LayerArtifact).
 
+use crate::kernels;
 use crate::nn::layers::{sgd_update, Layer};
 use crate::runtime::artifacts::LayerArtifact;
 use crate::transforms::fast::FftPlan;
@@ -54,6 +55,7 @@ fn circ_forward_kernel(
     xi: &mut [f32],
 ) {
     let n = plan.n;
+    let be = kernels::active();
     for bi in 0..batch {
         xr[..n].copy_from_slice(&x[bi * n..(bi + 1) * n]);
         xi[..n].fill(0.0);
@@ -63,15 +65,11 @@ fn circ_forward_kernel(
             save[bi * 2 * n + n..(bi + 1) * 2 * n].copy_from_slice(&xi[..n]);
         }
         // Y = H ∘ X, in place over the X scratch
-        for k in 0..n {
-            let (a, b) = (xr[k], xi[k]);
-            xr[k] = hr[k] * a - hi[k] * b;
-            xi[k] = hr[k] * b + hi[k] * a;
-        }
+        kernels::cmul_ew(be, hr, hi, &mut xr[..n], &mut xi[..n]);
         plan.inverse_scaled(&mut xr[..n], &mut xi[..n]);
-        for i in 0..n {
-            y[bi * n + i] = xr[i] + bias[i];
-        }
+        let yr = &mut y[bi * n..(bi + 1) * n];
+        yr.copy_from_slice(&xr[..n]);
+        kernels::add_acc(be, bias, yr);
     }
 }
 
@@ -95,31 +93,23 @@ fn circ_backward_kernel(
     ti: &mut [f32],
 ) {
     let n = plan.n;
+    let be = kernels::active();
     for bi in 0..batch {
-        for i in 0..n {
-            gb[i] += dy[bi * n + i];
-        }
-        dyr[..n].copy_from_slice(&dy[bi * n..(bi + 1) * n]);
+        let dy_row = &dy[bi * n..(bi + 1) * n];
+        kernels::add_acc(be, dy_row, &mut gb[..n]);
+        dyr[..n].copy_from_slice(dy_row);
         dyi[..n].fill(0.0);
         plan.forward(&mut dyr[..n], &mut dyi[..n]);
         // dx = ifft(conj(H) ∘ DY)
-        for k in 0..n {
-            tr[k] = hr[k] * dyr[k] + hi[k] * dyi[k];
-            ti[k] = hr[k] * dyi[k] - hi[k] * dyr[k];
-        }
+        kernels::cmulc_ew(be, hr, hi, &dyr[..n], &dyi[..n], &mut tr[..n], &mut ti[..n]);
         plan.inverse_scaled(&mut tr[..n], &mut ti[..n]);
         dx[bi * n..(bi + 1) * n].copy_from_slice(&tr[..n]);
         // dh += ifft(conj(X) ∘ DY)
         let xr = &x_freq[bi * 2 * n..bi * 2 * n + n];
         let xi = &x_freq[bi * 2 * n + n..(bi + 1) * 2 * n];
-        for k in 0..n {
-            tr[k] = xr[k] * dyr[k] + xi[k] * dyi[k];
-            ti[k] = xr[k] * dyi[k] - xi[k] * dyr[k];
-        }
+        kernels::cmulc_ew(be, xr, xi, &dyr[..n], &dyi[..n], &mut tr[..n], &mut ti[..n]);
         plan.inverse_scaled(&mut tr[..n], &mut ti[..n]);
-        for k in 0..n {
-            gh[k] += tr[k];
-        }
+        kernels::add_acc(be, &tr[..n], &mut gh[..n]);
     }
 }
 

@@ -18,16 +18,22 @@
 //!   [`MlpTrainer`](crate::nn::workspace::MlpTrainer) run minibatch
 //!   chunks data-parallel.
 //!
-//! Both paths run the identical free-function kernels below, so the
-//! workspace engine is bit-identical to the legacy step whenever the
-//! chunking covers the batch in one piece (`tests/nn_gradcheck.rs`,
-//! `tests/nn_compress.rs`).
+//! Both paths run the identical free-function kernels below — which in
+//! turn route through the runtime-dispatched [`crate::kernels`] layer —
+//! so the workspace engine is bit-identical to the legacy step whenever
+//! the chunking covers the batch in one piece (`tests/nn_gradcheck.rs`,
+//! `tests/nn_compress.rs`). One caveat: the dense matvec uses the
+//! `dot_acc` kernel, the single kernel whose SIMD variants reassociate
+//! (FMA partial sums), so training trajectories are reproducible per
+//! *backend*, not across backends — pin `BUTTERFLY_KERNELS=scalar` for
+//! cross-machine comparisons.
 //!
 //! Gradient layout contract for the workspace path: each layer flattens
 //! its parameter gradients into one `[grad_len()]` slice (`DenseLayer`:
 //! `[gw | gb]`; `LowRankLayer`: `[v | u]`, each `[gw | gb]`), and
 //! [`apply_grad`](DenseLayer::apply_grad) consumes the same layout.
 
+use crate::kernels;
 use crate::util::rng::Rng;
 
 /// Minimal layer interface for sequential models (the legacy
@@ -63,16 +69,13 @@ pub(crate) fn dense_forward_kernel(
     batch: usize,
 ) {
     debug_assert!(x.len() >= batch * in_dim && y.len() >= batch * out_dim);
+    let be = kernels::active();
     for bi in 0..batch {
         let xr = &x[bi * in_dim..(bi + 1) * in_dim];
         let yr = &mut y[bi * out_dim..(bi + 1) * out_dim];
         for o in 0..out_dim {
             let wr = &w[o * in_dim..(o + 1) * in_dim];
-            let mut acc = b[o];
-            for i in 0..in_dim {
-                acc += wr[i] * xr[i];
-            }
-            yr[o] = acc;
+            yr[o] = kernels::dot_acc(be, b[o], wr, xr);
         }
     }
 }
@@ -91,6 +94,7 @@ pub(crate) fn dense_backward_kernel(
     gb: &mut [f32],
     batch: usize,
 ) {
+    let be = kernels::active();
     for bi in 0..batch {
         let xr = &x[bi * in_dim..(bi + 1) * in_dim];
         let dyr = &dy[bi * out_dim..(bi + 1) * out_dim];
@@ -98,40 +102,30 @@ pub(crate) fn dense_backward_kernel(
         for o in 0..out_dim {
             let g = dyr[o];
             if g == 0.0 {
-                continue;
+                continue; // dead ReLU rows skip two whole axpys
             }
             gb[o] += g;
             let wr = &w[o * in_dim..(o + 1) * in_dim];
             let gwr = &mut gw[o * in_dim..(o + 1) * in_dim];
-            for i in 0..in_dim {
-                gwr[i] += g * xr[i];
-                dxr[i] += g * wr[i];
-            }
+            kernels::axpy2_acc(be, g, xr, wr, gwr, dxr);
         }
     }
 }
 
 /// One momentum-SGD update: `v ← μv + g + λp`, `p ← p − η·v`.
 pub(crate) fn sgd_update(p: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, momentum: f32, weight_decay: f32) {
-    for i in 0..p.len() {
-        v[i] = momentum * v[i] + g[i] + weight_decay * p[i];
-        p[i] -= lr * v[i];
-    }
+    kernels::sgd_step(kernels::active(), p, v, g, lr, momentum, weight_decay);
 }
 
 /// Elementwise `y = max(x, 0)`.
 pub(crate) fn relu_forward_kernel(x: &[f32], y: &mut [f32]) {
-    for (yi, &xi) in y.iter_mut().zip(x) {
-        *yi = xi.max(0.0);
-    }
+    kernels::relu_fwd(kernels::active(), x, y);
 }
 
 /// `dx = dy ⊙ [x > 0]`, recomputing the mask from the saved
 /// pre-activation (no mask storage needed on the workspace path).
 pub(crate) fn relu_backward_kernel(x: &[f32], dy: &[f32], dx: &mut [f32]) {
-    for i in 0..dx.len() {
-        dx[i] = if x[i] > 0.0 { dy[i] } else { 0.0 };
-    }
+    kernels::relu_bwd(kernels::active(), x, dy, dx);
 }
 
 /// Fused softmax + cross-entropy kernel: writes

@@ -187,6 +187,11 @@ pub struct EnvFingerprint {
     /// "measured" for harness output; committed seeds may carry
     /// "estimated" until re-baselined, which keeps them advisory.
     pub provenance: String,
+    /// Detected ISA features, comma-joined (e.g. "avx2,fma"); "" when
+    /// the CPU reports none of the ones the kernel layer can use.
+    pub isa: String,
+    /// Kernel backend the run dispatched to ("scalar"/"avx2"/"neon").
+    pub kernels: String,
 }
 
 impl EnvFingerprint {
@@ -200,13 +205,18 @@ impl EnvFingerprint {
             flags: if cfg!(debug_assertions) { "debug".into() } else { "release".into() },
             smoke,
             provenance: "measured".into(),
+            isa: crate::kernels::detected_features().join(","),
+            kernels: crate::kernels::active().name().into(),
         }
     }
 
     /// Whether `self` (the baseline) and `current` are comparable
-    /// enough to hard-gate: same CPU model, core count, and build
-    /// flags, both actually measured. Smoke mode is deliberately NOT
-    /// part of the match — it only widens the noise band.
+    /// enough to hard-gate: same CPU model, core count, build flags
+    /// and kernel backend, both actually measured. Smoke mode is
+    /// deliberately NOT part of the match — it only widens the noise
+    /// band. A backend mismatch (e.g. baseline measured with AVX2,
+    /// current run pinned to scalar) downgrades regressions to
+    /// advisory, like any other environment difference.
     pub fn matches(&self, current: &EnvFingerprint) -> bool {
         self.provenance == "measured"
             && current.provenance == "measured"
@@ -214,6 +224,7 @@ impl EnvFingerprint {
             && self.cpu == current.cpu
             && self.cores == current.cores
             && self.flags == current.flags
+            && self.kernels == current.kernels
     }
 
     fn to_json(&self) -> Json {
@@ -225,6 +236,8 @@ impl EnvFingerprint {
             ("flags", self.flags.as_str().into()),
             ("smoke", self.smoke.into()),
             ("provenance", self.provenance.as_str().into()),
+            ("isa", self.isa.as_str().into()),
+            ("kernels", self.kernels.as_str().into()),
         ])
     }
 
@@ -241,6 +254,10 @@ impl EnvFingerprint {
             flags: s("flags")?,
             smoke: field("smoke")?.as_bool().ok_or("env 'smoke' must be a bool")?,
             provenance: v.get("provenance").and_then(|p| p.as_str()).unwrap_or("measured").to_string(),
+            // optional for pre-kernel-layer baselines: "" means unknown,
+            // which fails the backend-equality gate and stays advisory
+            isa: v.get("isa").and_then(|p| p.as_str()).unwrap_or("").to_string(),
+            kernels: v.get("kernels").and_then(|p| p.as_str()).unwrap_or("").to_string(),
         })
     }
 }
@@ -587,15 +604,20 @@ impl Comparison {
             }
         ));
         if !self.env_match {
+            let show = |e: &EnvFingerprint| {
+                format!(
+                    "{} / {} cores / {} / {} / kernels={}",
+                    e.cpu,
+                    e.cores,
+                    e.flags,
+                    e.provenance,
+                    if e.kernels.is_empty() { "?" } else { e.kernels.as_str() },
+                )
+            };
             out.push_str(&format!(
-                "note: baseline env ({} / {} cores / {} / {}) != current env ({} / {} cores / {}) — not hard-gating\n",
-                self.baseline_env.cpu,
-                self.baseline_env.cores,
-                self.baseline_env.flags,
-                self.baseline_env.provenance,
-                self.current_env.cpu,
-                self.current_env.cores,
-                self.current_env.flags,
+                "note: baseline env ({}) != current env ({}) — not hard-gating\n",
+                show(&self.baseline_env),
+                show(&self.current_env),
             ));
         }
         out

@@ -30,6 +30,7 @@
 //! the serving coalescer. Row-major `[batch, n]` wrappers keep the old
 //! reference semantics for callers that don't control layout.
 
+use crate::kernels;
 use crate::linalg::Cpx;
 
 /// Grow a caller-owned scratch plane to at least `len` (never shrinks).
@@ -163,12 +164,9 @@ impl FftPlan {
     pub fn inverse_scaled_batch_col(&self, re: &mut [f32], im: &mut [f32], batch: usize) {
         self.run_batch_col(re, im, batch, true);
         let inv = 1.0 / self.n as f32;
-        for v in re.iter_mut() {
-            *v *= inv;
-        }
-        for v in im.iter_mut() {
-            *v *= inv;
-        }
+        let be = kernels::active();
+        kernels::scale(be, inv, re);
+        kernels::scale(be, inv, im);
     }
 
     /// The column-major batched kernel behind the `*_batch_col` entries.
@@ -189,7 +187,9 @@ impl FftPlan {
                 lo[i * batch..(i + 1) * batch].swap_with_slice(&mut hi[..batch]);
             }
         }
-        // Iterative butterflies; twiddles hoisted out of the lane loop.
+        // Iterative butterflies; twiddles hoisted out of the lane loop,
+        // which is a kernels::fft_bf microkernel call per unit.
+        let be = kernels::active();
         for s in 0..self.tw_re.len() {
             let half = 1usize << s;
             let m = half * 2;
@@ -206,14 +206,7 @@ impl FftPlan {
                     let il = &mut im_lo[j * batch..(j + 1) * batch];
                     let rh = &mut re_hi[j * batch..(j + 1) * batch];
                     let ih = &mut im_hi[j * batch..(j + 1) * batch];
-                    for k in 0..batch {
-                        let tr = wr * rh[k] - wi * ih[k];
-                        let ti = wr * ih[k] + wi * rh[k];
-                        rh[k] = rl[k] - tr;
-                        ih[k] = il[k] - ti;
-                        rl[k] += tr;
-                        il[k] += ti;
-                    }
+                    kernels::fft_bf(be, wr, wi, rl, il, rh, ih);
                 }
                 base += m;
             }
@@ -311,6 +304,7 @@ pub fn fwht_batch_col(x: &mut [f32], batch: usize) {
     assert_eq!(x.len(), batch * n);
     assert!(n.is_power_of_two());
     let s = std::f32::consts::FRAC_1_SQRT_2;
+    let be = kernels::active();
     let mut h = 1usize;
     while h < n {
         let m = h * 2;
@@ -320,12 +314,7 @@ pub fn fwht_batch_col(x: &mut [f32], batch: usize) {
             for j in 0..h {
                 let lj = &mut lo[j * batch..(j + 1) * batch];
                 let hj = &mut hi[j * batch..(j + 1) * batch];
-                for k in 0..batch {
-                    let a = lj[k];
-                    let b = hj[k];
-                    lj[k] = (a + b) * s;
-                    hj[k] = (a - b) * s;
-                }
+                kernels::fwht_pair(be, s, lj, hj);
             }
             base += m;
         }
@@ -452,6 +441,7 @@ impl RealTransformPlan {
         self.makhoul_permute(io, vre, batch, false);
         vim.fill(0.0);
         self.fft.forward_batch_col(vre, vim, batch);
+        let be = kernels::active();
         for k in 0..n {
             // X_k = s_k · Re[e^{-iπk/2N} V_k]  (the "2·Re" of Makhoul's
             // unnormalized form is folded into s_k = √(2/N)).
@@ -459,9 +449,7 @@ impl RealTransformPlan {
             let out = &mut io[k * batch..(k + 1) * batch];
             let vr = &vre[k * batch..(k + 1) * batch];
             let vi = &vim[k * batch..(k + 1) * batch];
-            for b in 0..batch {
-                out[b] = sc * (c * vr[b] - s * vi[b]);
-            }
+            kernels::rot_scale(be, c, s, sc, vr, vi, out);
         }
     }
 
@@ -488,15 +476,14 @@ impl RealTransformPlan {
         self.makhoul_permute(io, vre, batch, true);
         vim.fill(0.0);
         self.fft.forward_batch_col(vre, vim, batch);
+        let be = kernels::active();
         for k in 0..n {
             let (c, s, sc) = (self.rot_re[k], self.rot_im[k], self.dct_scale[k]);
             // DST-II(x)_{n-1-k} = DCT-II(y)_k
             let out = &mut io[(n - 1 - k) * batch..(n - k) * batch];
             let vr = &vre[k * batch..(k + 1) * batch];
             let vi = &vim[k * batch..(k + 1) * batch];
-            for b in 0..batch {
-                out[b] = sc * (c * vr[b] - s * vi[b]);
-            }
+            kernels::rot_scale(be, c, s, sc, vr, vi, out);
         }
     }
 
@@ -523,13 +510,12 @@ impl RealTransformPlan {
         vim.fill(0.0);
         self.fft.forward_batch_col(vre, vim, batch);
         let s = 1.0 / (n as f32).sqrt();
+        let be = kernels::active();
         for k in 0..n {
             let out = &mut io[k * batch..(k + 1) * batch];
             let vr = &vre[k * batch..(k + 1) * batch];
             let vi = &vim[k * batch..(k + 1) * batch];
-            for b in 0..batch {
-                out[b] = (vr[b] - vi[b]) * s;
-            }
+            kernels::sub_scale(be, s, vr, vi, out);
         }
     }
 
@@ -601,15 +587,12 @@ impl CirculantPlan {
             return;
         }
         self.fft.forward_batch_col(re, im, batch);
+        let be = kernels::active();
         for k in 0..n {
             let (hr, hi) = (self.h_re[k], self.h_im[k]);
             let rrow = &mut re[k * batch..(k + 1) * batch];
             let irow = &mut im[k * batch..(k + 1) * batch];
-            for b in 0..batch {
-                let (xr, xi) = (rrow[b], irow[b]);
-                rrow[b] = xr * hr - xi * hi;
-                irow[b] = xr * hi + xi * hr;
-            }
+            kernels::cmul_scalar(be, hr, hi, rrow, irow);
         }
         self.fft.inverse_scaled_batch_col(re, im, batch);
     }

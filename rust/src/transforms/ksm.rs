@@ -26,6 +26,7 @@
 //! [`LinearOp`]: crate::transforms::op::LinearOp
 //! [`OpWorkspace`]: crate::transforms::op::OpWorkspace
 
+use crate::kernels;
 use crate::transforms::op::{check_planes, LinearOp, OpWorkspace};
 
 /// One fused block-sparse factor in the 4-D `ks_values` layout.
@@ -103,6 +104,7 @@ impl KsKernel {
         let (span, stride) = (self.span, self.stride);
         let outer = self.n / (span * stride);
         let w = &self.w_re;
+        let be = kernels::active();
         let mut wi = 0usize;
         for a in 0..outer {
             let abase = a * span * stride * batch;
@@ -113,18 +115,12 @@ impl KsKernel {
                     let orow = &mut out[o0..o0 + batch];
                     let w0 = w[wi];
                     wi += 1;
-                    let xrow = &x[base..base + batch];
-                    for b in 0..batch {
-                        orow[b] = w0 * xrow[b];
-                    }
+                    kernels::axpy_set(be, w0, &x[base..base + batch], orow);
                     for c in 1..span {
                         let wc = w[wi];
                         wi += 1;
                         let x0 = base + c * stride * batch;
-                        let xrow = &x[x0..x0 + batch];
-                        for b in 0..batch {
-                            orow[b] = orow[b] + wc * xrow[b];
-                        }
+                        kernels::axpy_acc(be, wc, &x[x0..x0 + batch], orow);
                     }
                 }
             }
@@ -149,6 +145,7 @@ impl KsKernel {
         let (span, stride) = (self.span, self.stride);
         let outer = self.n / (span * stride);
         let (wr_all, wi_all) = (&self.w_re, &self.w_im);
+        let be = kernels::active();
         let mut wi = 0usize;
         for a in 0..outer {
             let abase = a * span * stride * batch;
@@ -160,22 +157,12 @@ impl KsKernel {
                     let oi = &mut out_im[o0..o0 + batch];
                     let (gr, gi) = (wr_all[wi], wi_all[wi]);
                     wi += 1;
-                    let xr = &xre[base..base + batch];
-                    let xi = &xim[base..base + batch];
-                    for b in 0..batch {
-                        or[b] = gr * xr[b] - gi * xi[b];
-                        oi[b] = gr * xi[b] + gi * xr[b];
-                    }
+                    kernels::caxpy_set(be, gr, gi, &xre[base..base + batch], &xim[base..base + batch], or, oi);
                     for c in 1..span {
                         let (gr, gi) = (wr_all[wi], wi_all[wi]);
                         wi += 1;
                         let x0 = base + c * stride * batch;
-                        let xr = &xre[x0..x0 + batch];
-                        let xi = &xim[x0..x0 + batch];
-                        for b in 0..batch {
-                            or[b] = or[b] + gr * xr[b] - gi * xi[b];
-                            oi[b] = oi[b] + gr * xi[b] + gi * xr[b];
-                        }
+                        kernels::caxpy_acc(be, gr, gi, &xre[x0..x0 + batch], &xim[x0..x0 + batch], or, oi);
                     }
                 }
             }

@@ -46,6 +46,7 @@
 use crate::butterfly::closed_form::{closed_form_stack, CompareMode};
 use crate::butterfly::fast::{BatchWorkspace, FastBp};
 use crate::butterfly::module::BpStack;
+use crate::kernels;
 use crate::linalg::CMat;
 use crate::transforms::fast::{fwht_batch_col, CirculantPlan, FftPlan, RealTransformPlan};
 use crate::transforms::fuse::{self, FuseSpec};
@@ -235,12 +236,9 @@ impl LinearOp for FftOp {
             self.plan.forward_batch_col(re, im, batch);
         }
         let s = 1.0 / (self.plan.n as f32).sqrt();
-        for v in re.iter_mut() {
-            *v *= s;
-        }
-        for v in im.iter_mut() {
-            *v *= s;
-        }
+        let be = kernels::active();
+        kernels::scale(be, s, re);
+        kernels::scale(be, s, im);
     }
 }
 
@@ -486,6 +484,7 @@ impl LinearOp for DenseOp {
 /// `y[i,b] = Σ_j a[i,j] · x[j,b]` for a row-major `[rows, cols]` matrix
 /// on column-major lanes, batch innermost.
 fn real_matvec_col(a: &[f32], rows: usize, cols: usize, x: &[f32], y: &mut [f32], batch: usize) {
+    let be = kernels::active();
     for i in 0..rows {
         let yrow = &mut y[i * batch..(i + 1) * batch];
         yrow.fill(0.0);
@@ -493,10 +492,7 @@ fn real_matvec_col(a: &[f32], rows: usize, cols: usize, x: &[f32], y: &mut [f32]
             if aij == 0.0 {
                 continue;
             }
-            let xrow = &x[j * batch..(j + 1) * batch];
-            for b in 0..batch {
-                yrow[b] += aij * xrow[b];
-            }
+            kernels::axpy_acc(be, aij, &x[j * batch..(j + 1) * batch], yrow);
         }
     }
 }
@@ -511,6 +507,7 @@ fn complex_matvec_col(
     batch: usize,
 ) {
     let n = m.rows;
+    let be = kernels::active();
     for i in 0..n {
         let yr = &mut yre[i * batch..(i + 1) * batch];
         let yi = &mut yim[i * batch..(i + 1) * batch];
@@ -524,10 +521,7 @@ fn complex_matvec_col(
             }
             let xr = &xre[j * batch..(j + 1) * batch];
             let xi = &xim[j * batch..(j + 1) * batch];
-            for b in 0..batch {
-                yr[b] += ar * xr[b] - ai * xi[b];
-                yi[b] += ar * xi[b] + ai * xr[b];
-            }
+            kernels::cmul_acc(be, ar, ai, xr, xi, yr, yi);
         }
     }
 }

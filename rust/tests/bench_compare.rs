@@ -21,6 +21,8 @@ fn env(cpu: &str, smoke: bool) -> EnvFingerprint {
         flags: "release".to_string(),
         smoke,
         provenance: "measured".to_string(),
+        isa: "avx2,fma".to_string(),
+        kernels: "avx2".to_string(),
     }
 }
 
@@ -238,6 +240,52 @@ fn cross_machine_regression_is_advisory_only() {
     assert!(cmp.gate());
     assert_eq!(gate_exit_code(&[cmp]), 0);
     assert!(cmp.render().contains("advisory"), "render must say why it passed:\n{}", cmp.render());
+}
+
+#[test]
+fn kernel_backend_mismatch_is_advisory_only() {
+    // same machine, but the baseline was measured with AVX2 kernels and
+    // the current run is pinned to scalar — numbers aren't comparable
+    let base = report(
+        "ops",
+        env("cpu-a", false),
+        vec![scenario("ops/dft/n1024/B1", Unit::NsPerVec, 1000.0)],
+    );
+    let mut cur_env = env("cpu-a", false);
+    cur_env.kernels = "scalar".to_string();
+    let cur = report(
+        "ops",
+        cur_env,
+        vec![scenario("ops/dft/n1024/B1", Unit::NsPerVec, 3000.0)],
+    );
+    let cmp = Comparison::compare(&base, &cur);
+    assert!(!cmp.env_match);
+    assert_eq!(row(&cmp, "ops/dft/n1024/B1").verdict, Verdict::Regressed);
+    assert!(cmp.gate(), "backend mismatch must not hard-fail the gate");
+    assert_eq!(gate_exit_code(&[cmp]), 0);
+}
+
+#[test]
+fn pre_kernel_layer_baselines_never_hard_gate() {
+    // baselines committed before the kernel layer existed have no
+    // "kernels" field; they deserialize as "" and can only be advisory
+    let mut old_env = env("cpu-a", false);
+    old_env.isa = String::new();
+    old_env.kernels = String::new();
+    let base = report(
+        "ops",
+        old_env,
+        vec![scenario("ops/dft/n1024/B1", Unit::NsPerVec, 1000.0)],
+    );
+    let cur = report(
+        "ops",
+        env("cpu-a", false),
+        vec![scenario("ops/dft/n1024/B1", Unit::NsPerVec, 5000.0)],
+    );
+    let cmp = Comparison::compare(&base, &cur);
+    assert!(!cmp.env_match);
+    assert!(cmp.gate());
+    assert_eq!(gate_exit_code(&[cmp]), 0);
 }
 
 #[test]

@@ -1,0 +1,315 @@
+//! Kernel conformance property suite: every SIMD backend is pinned
+//! against the scalar reference implementation.
+//!
+//! Contract under test (see `src/kernels/mod.rs` module docs):
+//!
+//! * **Elementwise kernels are bitwise identical** across backends,
+//!   including odd/tail lanes — they perform no fused multiply-adds and
+//!   no cross-lane reduction, so vectorization cannot change a single
+//!   rounding. These are asserted with `f32::to_bits` equality.
+//! * **`dot_acc` is the one reassociating kernel**: SIMD backends keep
+//!   `LANES` FMA partial sums and reduce them left-to-right, so bitwise
+//!   equality is impossible by design. Its documented contract is the
+//!   relative bound `|scalar − simd| ≤ 1e-6 · max(1, |init| + Σ|aᵢ·bᵢ|)`
+//!   (each fused/reassociated op perturbs by ≤ ε·|term|; 1e-6 ≈ 8ε gives
+//!   slack for the lane-count partial sums at every size tested here).
+//!
+//! Sweep: batch/lane sizes {1, 3, 8, 64} plus vector-width straddling
+//! tails for both 4-lane (NEON) and 8-lane (AVX2) backends, and problem
+//! sizes N ∈ {8 … 1024} for the reduction, span, and end-to-end checks.
+
+use butterfly::kernels::{self, Backend, TwSpan, TwSpanMut};
+
+/// Batch-lane sizes: the required {1, 3, 8, 64} plus straddling tails
+/// around the 4-lane and 8-lane vector widths.
+const LANES: &[usize] = &[1, 2, 3, 4, 5, 7, 8, 9, 12, 13, 16, 17, 31, 33, 64, 65];
+
+/// Problem sizes for the reduction / span sweeps.
+const NS: &[usize] = &[8, 16, 32, 64, 128, 256, 512, 1024];
+
+/// Deterministic LCG fill, values in (−1, 1), no zeros/NaNs — mixed
+/// signs so relu/select paths exercise both branches.
+fn fill(seed: u64, n: usize) -> Vec<f32> {
+    let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+    (0..n)
+        .map(|_| {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let v = ((s >> 33) as u32 as f32) / (u32::MAX as f32) * 2.0 - 1.0;
+            if v == 0.0 {
+                0.5
+            } else {
+                v
+            }
+        })
+        .collect()
+}
+
+/// Every backend other than scalar that this CPU can run.
+fn simd_backends() -> Vec<Backend> {
+    Backend::all()
+        .into_iter()
+        .filter(|be| *be != Backend::Scalar && be.available())
+        .collect()
+}
+
+#[track_caller]
+fn assert_bits(scalar: &[f32], simd: &[f32], kernel: &str, be: Backend, n: usize) {
+    for (i, (a, b)) in scalar.iter().zip(simd).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{kernel}: backend {} diverges from scalar at lane {i}/{n} ({a} vs {b})",
+            be.name()
+        );
+    }
+}
+
+/// Run `f` once under scalar and once under `be` on freshly cloned
+/// buffers, then assert every mutated buffer is bitwise identical.
+#[track_caller]
+fn check_bitwise<F>(bufs: &[Vec<f32>], be: Backend, kernel: &str, mut f: F)
+where
+    F: FnMut(Backend, &mut [Vec<f32>]),
+{
+    let mut s: Vec<Vec<f32>> = bufs.to_vec();
+    let mut v: Vec<Vec<f32>> = bufs.to_vec();
+    f(Backend::Scalar, &mut s);
+    f(be, &mut v);
+    for (sb, vb) in s.iter().zip(&v) {
+        assert_bits(sb, vb, kernel, be, sb.len());
+    }
+}
+
+#[test]
+fn elementwise_kernels_bitwise_across_backends_and_tails() {
+    for be in simd_backends() {
+        for &n in LANES {
+            let x = fill(1, n);
+            let y = fill(2, n);
+            let z = fill(3, n);
+            let w = fill(4, n);
+            let acc1 = fill(5, n);
+            let acc2 = fill(6, n);
+
+            check_bitwise(&[x.clone(), y.clone()], be, "bf2_real", |b, m| {
+                let [lo, hi] = m else { unreachable!() };
+                kernels::bf2_real(b, 0.8, -0.3, 0.55, 1.1, lo, hi);
+            });
+            let g: [f32; 8] = [0.9, -0.2, 0.4, 0.3, -0.6, 0.1, 1.05, -0.8];
+            check_bitwise(
+                &[x.clone(), y.clone(), z.clone(), w.clone()],
+                be,
+                "bf2_complex",
+                |b, m| {
+                    let [rlo, ilo, rhi, ihi] = m else { unreachable!() };
+                    kernels::bf2_complex(b, &g, rlo, ilo, rhi, ihi);
+                },
+            );
+            check_bitwise(&[acc1.clone()], be, "axpy_set", |b, m| {
+                kernels::axpy_set(b, 0.73, &x, &mut m[0]);
+            });
+            check_bitwise(&[acc1.clone()], be, "axpy_acc", |b, m| {
+                kernels::axpy_acc(b, -0.37, &x, &mut m[0]);
+            });
+            check_bitwise(&[acc1.clone(), acc2.clone()], be, "axpy2_acc", |b, m| {
+                let [o1, o2] = m else { unreachable!() };
+                kernels::axpy2_acc(b, 0.41, &x, &y, o1, o2);
+            });
+            check_bitwise(&[acc1.clone(), acc2.clone()], be, "caxpy_set", |b, m| {
+                let [o1, o2] = m else { unreachable!() };
+                kernels::caxpy_set(b, 0.6, -0.75, &x, &y, o1, o2);
+            });
+            check_bitwise(&[acc1.clone(), acc2.clone()], be, "caxpy_acc", |b, m| {
+                let [o1, o2] = m else { unreachable!() };
+                kernels::caxpy_acc(b, 0.6, -0.75, &x, &y, o1, o2);
+            });
+            check_bitwise(&[acc1.clone(), acc2.clone()], be, "cmul_acc", |b, m| {
+                let [o1, o2] = m else { unreachable!() };
+                kernels::cmul_acc(b, 0.6, -0.75, &x, &y, o1, o2);
+            });
+            check_bitwise(
+                &[x.clone(), y.clone(), z.clone(), w.clone()],
+                be,
+                "fft_bf",
+                |b, m| {
+                    let [rl, il, rh, ih] = m else { unreachable!() };
+                    kernels::fft_bf(b, 0.31, -0.95, rl, il, rh, ih);
+                },
+            );
+            check_bitwise(&[x.clone(), y.clone()], be, "fwht_pair", |b, m| {
+                let [lo, hi] = m else { unreachable!() };
+                kernels::fwht_pair(b, std::f32::consts::FRAC_1_SQRT_2, lo, hi);
+            });
+            check_bitwise(&[x.clone(), y.clone()], be, "cmul_scalar", |b, m| {
+                let [re, im] = m else { unreachable!() };
+                kernels::cmul_scalar(b, -0.42, 0.87, re, im);
+            });
+            check_bitwise(&[x.clone()], be, "scale", |b, m| {
+                kernels::scale(b, 1.37, &mut m[0]);
+            });
+            check_bitwise(&[acc1.clone()], be, "rot_scale", |b, m| {
+                kernels::rot_scale(b, 0.92, -0.39, 0.5, &x, &y, &mut m[0]);
+            });
+            check_bitwise(&[acc1.clone()], be, "sub_scale", |b, m| {
+                kernels::sub_scale(b, 0.707, &x, &y, &mut m[0]);
+            });
+            check_bitwise(&[acc1.clone()], be, "relu_fwd", |b, m| {
+                kernels::relu_fwd(b, &x, &mut m[0]);
+            });
+            check_bitwise(&[acc1.clone()], be, "relu_bwd", |b, m| {
+                kernels::relu_bwd(b, &x, &y, &mut m[0]);
+            });
+            check_bitwise(&[x.clone(), y.clone()], be, "sgd_step", |b, m| {
+                let [p, v] = m else { unreachable!() };
+                kernels::sgd_step(b, p, v, &z, 0.01, 0.9, 5e-4);
+            });
+            let mask: Vec<f32> = (0..n).map(|i| if i % 3 == 0 { 0.0 } else { 1.0 }).collect();
+            check_bitwise(&[x.clone(), y.clone()], be, "masked_sgd_step", |b, m| {
+                let [p, v] = m else { unreachable!() };
+                kernels::masked_sgd_step(b, p, v, &z, &mask, 0.01, 0.9, 5e-4);
+            });
+            check_bitwise(&[acc1.clone()], be, "add_acc", |b, m| {
+                kernels::add_acc(b, &x, &mut m[0]);
+            });
+            check_bitwise(&[z.clone(), w.clone()], be, "cmul_ew", |b, m| {
+                let [xr, xi] = m else { unreachable!() };
+                kernels::cmul_ew(b, &x, &y, xr, xi);
+            });
+            check_bitwise(&[acc1.clone(), acc2.clone()], be, "cmulc_ew", |b, m| {
+                let [or_, oi] = m else { unreachable!() };
+                kernels::cmulc_ew(b, &x, &y, &z, &w, or_, oi);
+            });
+        }
+    }
+}
+
+#[test]
+fn span_kernels_bitwise_across_backends_and_sizes() {
+    for be in simd_backends() {
+        for &n in LANES.iter().chain(NS) {
+            let tw: Vec<Vec<f32>> = (0..8).map(|i| fill(10 + i, n)).collect();
+            let span = TwSpan {
+                g00r: &tw[0],
+                g00i: &tw[1],
+                g01r: &tw[2],
+                g01i: &tw[3],
+                g10r: &tw[4],
+                g10i: &tw[5],
+                g11r: &tw[6],
+                g11i: &tw[7],
+            };
+
+            // forward: four data buffers mutated in place
+            let data: Vec<Vec<f32>> = (0..4).map(|i| fill(20 + i, n)).collect();
+            check_bitwise(&data, be, "bf2_cpx_span_fwd", |b, m| {
+                let [rlo, ilo, rhi, ihi] = m else { unreachable!() };
+                kernels::bf2_cpx_span_fwd(b, &span, rlo, ilo, rhi, ihi);
+            });
+
+            // backward: deltas rewritten in place + gradient accumulators
+            // (pre-seeded nonzero so the accumulate order is exercised)
+            let x: Vec<Vec<f32>> = (0..4).map(|i| fill(30 + i, n)).collect();
+            let mut bufs: Vec<Vec<f32>> = (0..4).map(|i| fill(40 + i, n)).collect();
+            bufs.extend((0..8).map(|i| fill(50 + i, n)));
+            check_bitwise(&bufs, be, "bf2_cpx_span_bwd", |b, m| {
+                let [d0r, d0i, d1r, d1i, g00r, g00i, g01r, g01i, g10r, g10i, g11r, g11i] = m else {
+                    unreachable!()
+                };
+                let mut dg = TwSpanMut { g00r, g00i, g01r, g01i, g10r, g10i, g11r, g11i };
+                kernels::bf2_cpx_span_bwd(b, &span, &mut dg, &x[0], &x[1], &x[2], &x[3], d0r, d0i, d1r, d1i);
+            });
+        }
+    }
+}
+
+#[test]
+fn gate_blend_identical_across_backends() {
+    // gate_blend is gather-bound and runs the same scalar loop on every
+    // backend by contract — pin that it really is backend-independent.
+    for be in simd_backends() {
+        for &n in LANES {
+            let x = fill(60, n);
+            let table: Vec<usize> = (0..n).map(|i| (i * 7 + 3) % n).collect();
+            let mut s = vec![0.0f32; n];
+            let mut v = vec![0.0f32; n];
+            kernels::gate_blend(Backend::Scalar, 0.85, 0.15, &x, &table, &mut s);
+            kernels::gate_blend(be, 0.85, 0.15, &x, &table, &mut v);
+            assert_bits(&s, &v, "gate_blend", be, n);
+        }
+    }
+}
+
+#[test]
+fn dot_acc_within_documented_relative_bound() {
+    for be in simd_backends() {
+        for &n in LANES.iter().chain(NS) {
+            let a = fill(70, n);
+            let b = fill(71, n);
+            for init in [0.0f32, 0.37, -123.5] {
+                let s = kernels::dot_acc(Backend::Scalar, init, &a, &b);
+                let v = kernels::dot_acc(be, init, &a, &b);
+                // documented contract: relative to the magnitude of the
+                // terms actually summed, floored at 1 near cancellation
+                let mag: f32 = init.abs() + a.iter().zip(&b).map(|(p, q)| (p * q).abs()).sum::<f32>();
+                let tol = 1e-6 * mag.max(1.0);
+                assert!(
+                    (s - v).abs() <= tol,
+                    "dot_acc: backend {} exceeds relative bound at n={n} init={init}: \
+                     scalar={s} simd={v} |Δ|={} tol={tol}",
+                    be.name(),
+                    (s - v).abs()
+                );
+            }
+        }
+    }
+}
+
+/// End-to-end: a whole serving apply and a whole training loss+grad are
+/// bitwise identical under every backend, because every kernel on those
+/// paths is elementwise. This is the only test in the suite that flips
+/// the process-wide backend override, and it is confined to this single
+/// `#[test]` so the file stays race-free under the parallel test runner.
+#[test]
+fn end_to_end_apply_and_training_bitwise_across_backends() {
+    use butterfly::butterfly::fast::{BatchWorkspace, FastBp};
+    use butterfly::runtime::bench::recovery_workload;
+
+    let natives = simd_backends();
+    if natives.is_empty() {
+        return; // scalar-only host: nothing to compare
+    }
+    let prev = kernels::active();
+    for &n in &[8usize, 64, 256] {
+        let (stack, loss) = recovery_workload(n, 64.min(n), 11);
+        let fast = FastBp::from_stack(&stack);
+        for &batch in &[1usize, 3, 8, 64] {
+            let re0 = fill(80, n * batch);
+            let im0 = fill(81, n * batch);
+            let mut ws = BatchWorkspace::new();
+            kernels::set_active(Backend::Scalar);
+            let (mut sre, mut sim) = (re0.clone(), im0.clone());
+            fast.apply_complex_batch_col(&mut sre, &mut sim, batch, &mut ws);
+            for &be in &natives {
+                kernels::set_active(be);
+                let (mut vre, mut vim) = (re0.clone(), im0.clone());
+                fast.apply_complex_batch_col(&mut vre, &mut vim, batch, &mut ws);
+                assert_bits(&sre, &vre, "apply_complex_batch_col re", be, n * batch);
+                assert_bits(&sim, &vim, "apply_complex_batch_col im", be, n * batch);
+            }
+        }
+        // training loss + full gradient vector, scalar vs each backend
+        kernels::set_active(Backend::Scalar);
+        let mut sg = stack.zero_grad();
+        let sl = loss.loss_and_grad(&stack, &mut sg);
+        for &be in &natives {
+            kernels::set_active(be);
+            let mut vg = stack.zero_grad();
+            let vl = loss.loss_and_grad(&stack, &mut vg);
+            assert_eq!(sl.to_bits(), vl.to_bits(), "loss under {} at n={n}", be.name());
+            for (sm, vm) in sg.iter().zip(&vg) {
+                assert_bits(sm, vm, "stack gradient", be, sm.len());
+            }
+        }
+    }
+    kernels::set_active(prev);
+}

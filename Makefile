@@ -1,6 +1,6 @@
 # Convenience targets; CI runs the same commands (see .github/workflows/ci.yml).
 
-.PHONY: build test bench-smoke bench bench-json bench-compare fmt clippy py-test artifacts all
+.PHONY: build test bench-smoke bench bench-json bench-compare serve-net bench-net fmt clippy py-test artifacts all
 
 all: build test py-test
 
@@ -26,6 +26,17 @@ bench-json:
 # baselines; exits nonzero on an out-of-band regression.
 bench-compare:
 	cd rust && cargo run --release -- bench --json --smoke --compare
+
+# Serve the closed-form DCT over the std-only HTTP front end; blocks
+# until drained (ctrl-c / SIGTERM / POST /admin/drain).
+serve-net:
+	cd rust && cargo run --release -- serve --transform dct --n 256 --exact --listen 127.0.0.1:8437
+
+# Drive a running server (default: the serve-net address) with the
+# multi-connection keep-alive load generator; prints req/s, vectors/s,
+# and client-observed p50/p99.
+bench-net:
+	cd rust && cargo run --release -- bench --net --addr 127.0.0.1:8437 --route dct --n 256 --connections 8 --requests 400 --batch 8
 
 fmt:
 	cd rust && cargo fmt

@@ -186,6 +186,37 @@ mod tests {
     }
 
     #[test]
+    fn network_serving_invocations() {
+        // serve --listen with the admission/window knobs
+        let a = parse("serve --transform dct --n 256 --exact --listen 127.0.0.1:8437 --max-conns 128 --budget 256 --window-us 1500");
+        assert_eq!(a.command, "serve");
+        assert!(a.flag("exact"));
+        assert_eq!(a.get("listen"), Some("127.0.0.1:8437"));
+        assert_eq!(a.usize_or("max-conns", 0).unwrap(), 128);
+        assert_eq!(a.usize_or("budget", 0).unwrap(), 256);
+        assert_eq!(a.usize_or("window-us", 0).unwrap(), 1500);
+        // compress --serve --listen (ephemeral port form)
+        let b = parse("compress --smoke --serve --listen 127.0.0.1:0 --fuse auto");
+        assert!(b.flag("serve"));
+        assert_eq!(b.get("listen"), Some("127.0.0.1:0"));
+        assert_eq!(b.get("fuse"), Some("auto"));
+        // bench --net: loadgen mode, self-hosted ...
+        let c = parse("bench --net --connections 32 --requests 400 --batch 8");
+        assert!(c.flag("net"));
+        assert_eq!(c.usize_or("connections", 8).unwrap(), 32);
+        assert_eq!(c.usize_or("requests", 0).unwrap(), 400);
+        // ... or against a running server
+        let d = parse("bench --net --addr 127.0.0.1:8437 --route compressed-hidden --n 64");
+        assert!(d.flag("net"));
+        assert_eq!(d.get("addr"), Some("127.0.0.1:8437"));
+        assert_eq!(d.get("route"), Some("compressed-hidden"));
+        // the net area also rides the ordinary matrix spelling
+        let e = parse("bench --areas net --json --smoke");
+        assert!(!e.flag("net"));
+        assert_eq!(e.list_or("areas", "train,ops,serving,net"), vec!["net"]);
+    }
+
+    #[test]
     fn defaults_and_errors() {
         let a = parse("zoo");
         assert_eq!(a.usize_or("n", 8).unwrap(), 8);

@@ -93,6 +93,14 @@ COMMANDS:
                           back to the unfused fast op
               (pool workers drain ONE shared queue; --replicas is an
               accepted alias from the old per-replica-queue design)
+              --listen ADDR   serve over HTTP instead of the in-process
+                          demo loop (std-only server; POST /v1/apply,
+                          GET /metrics, POST /admin/reload, graceful
+                          drain on SIGTERM / POST /admin/drain)
+              --max-conns 256 concurrent connections (503 beyond)
+              --budget 512    in-flight vector budget (429 beyond)
+              --window-us 2000  adaptive batch-window cap in µs
+                          (0 = fixed window, no adaptation)
   compress    the §4.2 / Table 1 workload: train compressed hidden layers
               on a synthetic image task, compare accuracy / parameters /
               inference speed, export the trained butterfly layer as a
@@ -106,14 +114,16 @@ COMMANDS:
               --methods bpbp-real,bpbp-complex,low-rank-matched,circulant,dense
               --save PATH     write the trained layer artifact (θ + bias)
               --serve         serve the exported op through a worker pool
-                              (--requests 2000 --pool-workers 2)
+                              (--requests 2000 --pool-workers 2);
+                              add --listen ADDR to serve it over HTTP
+                              (same endpoints/flags as `serve --listen`)
               --fuse auto|memory|balanced[:K]
                               serve a bp artifact as fused kernels
                               (circulant artifacts serve unfused)
               --smoke         tiny end-to-end run (CI)
   bench       run the pinned perf scenario matrix (the perf-trajectory
               harness behind the CI bench-gate job)
-              --areas train,ops,serving   subset of areas to run
+              --areas train,ops,serving,net   subset of areas to run
               --json          write BENCH_<area>.json at the repo root
               --out DIR       write the JSON elsewhere
               --smoke         1 repetition, short timed blocks (CI gate;
@@ -122,6 +132,12 @@ COMMANDS:
                               (default: the repo root); exits 1 on an
                               out-of-band regression when the env
                               fingerprints match, 0 otherwise
+              --net           one-shot HTTP load-generator mode instead
+                              of the matrix: --connections 8 --requests
+                              400 --batch 8 --route dct --n 256, plus
+                              --addr HOST:PORT to target a running
+                              server (otherwise self-hosts on loopback);
+                              prints req/s, vectors/s, p50/p99
   engines     report available execution engines / artifacts
   help        this text
 
@@ -284,6 +300,11 @@ fn cmd_serve(args: &Args) -> i32 {
         );
         let mut router = Router::new();
         router.install(kind.name(), op, workers, BatcherConfig::default());
+        // --listen switches from the in-process demo loop to the
+        // std-only network front end (blocks until drained)
+        if let Some(listen) = args.get("listen") {
+            return serve_over_http(args, router, listen, fuse);
+        }
         let t0 = Instant::now();
         let handle = router.handle(kind.name()).unwrap();
         let client_threads: Vec<_> = (0..4)
@@ -318,6 +339,50 @@ fn cmd_serve(args: &Args) -> i32 {
             2
         }
     }
+}
+
+/// Shared `--listen` tail for `serve` and `compress --serve`: wrap the
+/// already-installed router in the std-only HTTP server and block until
+/// it drains (SIGTERM/SIGINT, `POST /admin/drain`, or ctrl-c). The
+/// `fuse` spec carries over as the default rebuild policy for
+/// `/admin/reload` bodies that don't name one.
+fn serve_over_http(args: &Args, router: Router, listen: &str, fuse: Option<FuseSpec>) -> Result<(), String> {
+    use butterfly::net::{install_signal_drain, Server, ServerConfig};
+    let window_us = args.usize_or("window-us", 2000)?;
+    let cfg = ServerConfig {
+        listen: listen.to_string(),
+        max_connections: args.usize_or("max-conns", 256)?,
+        inflight_budget: args.usize_or("budget", 512)?,
+        // --window-us 0 pins the fixed BatcherConfig window instead of
+        // the adaptive controller
+        adaptive_cap: if window_us == 0 {
+            None
+        } else {
+            Some(std::time::Duration::from_micros(window_us as u64))
+        },
+        fuse,
+    };
+    install_signal_drain();
+    let server = Server::start(router, cfg).map_err(|e| format!("bind {listen}: {e}"))?;
+    println!("listening on http://{}", server.local_addr());
+    println!("  POST /v1/apply     JSON vector batches -> transformed vectors");
+    println!("  GET  /metrics      Prometheus text exposition");
+    println!("  GET  /v1/routes    installed routes");
+    println!("  POST /admin/reload hot-swap a route from a layer artifact");
+    println!("  POST /admin/drain  graceful drain (SIGTERM/SIGINT work too)");
+    let stats = server.join();
+    let mut names: Vec<&String> = stats.keys().collect();
+    names.sort();
+    for name in names {
+        let s = &stats[name];
+        println!(
+            "route '{name}': served {} vectors in {} batches (mean batch {:.2})",
+            s.served,
+            s.batches,
+            s.served as f64 / s.batches.max(1) as f64
+        );
+    }
+    Ok(())
 }
 
 fn cmd_compress(args: &Args) -> i32 {
@@ -494,9 +559,10 @@ fn cmd_compress(args: &Args) -> i32 {
             let workers = args.usize_or("pool-workers", 2)?;
             // --fuse serves the artifact's fused rebuild (bp artifacts
             // only; circulant serves unfused — see LayerArtifact::to_op_with)
-            let serve_op = match args.get("fuse").map(FuseSpec::parse).transpose()? {
+            let fuse = args.get("fuse").map(FuseSpec::parse).transpose()?;
+            let serve_op = match &fuse {
                 Some(spec) => {
-                    let fused = art.to_op_with(Some(&spec)).map_err(|e| e.to_string())?;
+                    let fused = art.to_op_with(Some(spec)).map_err(|e| e.to_string())?;
                     println!("serving fused op '{}'", fused.name());
                     fused
                 }
@@ -504,6 +570,9 @@ fn cmd_compress(args: &Args) -> i32 {
             };
             let mut router = Router::new();
             router.install("compressed-hidden", serve_op, workers, BatcherConfig::default());
+            if let Some(listen) = args.get("listen") {
+                return serve_over_http(args, router, listen, fuse);
+            }
             let handle = router.handle("compressed-hidden").unwrap();
             let t0 = Instant::now();
             let clients: Vec<_> = (0..4u64)
@@ -548,14 +617,18 @@ fn cmd_compress(args: &Args) -> i32 {
 fn cmd_bench(args: &Args) -> i32 {
     use butterfly::runtime::bench::{self, Comparison, Report};
 
+    // --net is the one-shot load-generator mode, not a matrix area run
+    if args.flag("net") {
+        return cmd_bench_net(args);
+    }
     let run = || -> Result<i32, String> {
         // --smoke on this invocation or the shared env knob
         // (BUTTERFLY_BENCH_SMOKE=1 / legacy BENCH_FAST=1)
         let smoke = args.flag("smoke") || butterfly::util::timer::smoke_mode();
-        let areas = args.list_or("areas", "train,ops,serving");
+        let areas = args.list_or("areas", "train,ops,serving,net");
         for a in &areas {
             if !bench::AREAS.contains(&a.as_str()) {
-                return Err(format!("unknown area '{a}' (want one of train, ops, serving)"));
+                return Err(format!("unknown area '{a}' (want one of train, ops, serving, net)"));
             }
         }
         let out_dir = args.get("out").map(std::path::PathBuf::from).unwrap_or_else(bench::default_root);
@@ -606,6 +679,80 @@ fn cmd_bench(args: &Args) -> i32 {
     };
     match run() {
         Ok(code) => code,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+/// `bench --net`: drive `/v1/apply` with the keep-alive load generator
+/// and print requests/sec, vectors/sec, and p50/p99 latency. With
+/// `--addr` it targets an already-running server (any route); without
+/// one it self-hosts a closed-form transform on an ephemeral loopback
+/// port, runs the load, and drains.
+fn cmd_bench_net(args: &Args) -> i32 {
+    use butterfly::net::loadgen::{self, LoadgenConfig};
+    use butterfly::net::{Server, ServerConfig};
+
+    let run = || -> Result<(), String> {
+        let smoke = args.flag("smoke") || butterfly::util::timer::smoke_mode();
+        let connections = args.usize_or("connections", 8)?.max(1);
+        let batch = args.usize_or("batch", 8)?.max(1);
+        let requests = args.usize_or("requests", if smoke { 48 } else { 400 })?;
+        let route = args.get_or("route", "dct").to_string();
+        let n = args.usize_or("n", 256)?;
+        let (addr, server) = match args.get("addr") {
+            Some(a) => (a.to_string(), None),
+            None => {
+                let kind = TransformKind::parse(&route).ok_or_else(|| {
+                    format!(
+                        "unknown transform '{route}' — self-hosted --net serves a closed-form \
+                         transform; point --addr at a running server for other routes"
+                    )
+                })?;
+                let mut rng = butterfly::util::rng::Rng::new(7);
+                let op = butterfly::transforms::op::plan_with_rng(kind, n, &mut rng);
+                let mut router = Router::new();
+                router.install(&route, op, args.usize_or("pool-workers", 2)?, BatcherConfig::default());
+                let server = Server::start(
+                    router,
+                    ServerConfig { listen: "127.0.0.1:0".into(), ..ServerConfig::default() },
+                )
+                .map_err(|e| format!("bind loopback: {e}"))?;
+                (server.local_addr().to_string(), Some(server))
+            }
+        };
+        let cfg = LoadgenConfig {
+            addr,
+            route,
+            n,
+            complex: args.flag("complex"),
+            connections,
+            requests_per_conn: (requests / connections).max(1),
+            batch,
+            seed: args.u64_or("seed", 1)?,
+        };
+        let report = loadgen::run(&cfg)?;
+        println!(
+            "net loadgen: {} conn(s) x {} request(s) x batch {} against {}",
+            cfg.connections, cfg.requests_per_conn, cfg.batch, cfg.addr
+        );
+        println!("  requests   : {} ({} ok, {} shed)", report.requests, report.ok, report.shed);
+        println!(
+            "  throughput : {:.0} req/s, {:.0} vectors/s",
+            report.requests_per_sec(),
+            report.vectors_per_sec()
+        );
+        println!("  latency    : p50 {:.0} us, p99 {:.0} us", report.p50_micros, report.p99_micros);
+        if let Some(server) = server {
+            server.shutdown_handle().drain();
+            server.join();
+        }
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
         Err(e) => {
             eprintln!("error: {e}");
             2

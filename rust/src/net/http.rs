@@ -1,0 +1,444 @@
+//! Hand-rolled HTTP/1.1, just enough for the serving edge: request-line
+//! and header parsing with hard size limits, `Content-Length` bodies,
+//! keep-alive, and status writing. The crate is dependency-free by
+//! design, so this layer is written against `std::io` traits only —
+//! which also makes every parse path unit-testable on in-memory buffers
+//! with no sockets involved.
+//!
+//! Protocol stance (deliberately narrow):
+//! - Methods/paths are opaque tokens; routing happens upstream.
+//! - Bodies require `Content-Length`; `Transfer-Encoding` is refused
+//!   with 400 rather than half-implemented.
+//! - Limits are hard: an oversized request line, header block, or body
+//!   maps to 413 and the connection closes. Malformed syntax maps to
+//!   400. A worker never panics on client bytes.
+//! - Keep-alive follows HTTP/1.1 defaults (`Connection: close` opts
+//!   out; HTTP/1.0 must opt in with `Connection: keep-alive`).
+
+use std::io::{self, BufRead, Write};
+
+/// Hard limit on the request line (method + path + version).
+pub const MAX_REQUEST_LINE: usize = 8 * 1024;
+/// Hard limit on any single header line.
+pub const MAX_HEADER_LINE: usize = 8 * 1024;
+/// Hard limit on the number of headers.
+pub const MAX_HEADERS: usize = 64;
+/// Hard limit on a request body.
+pub const MAX_BODY_BYTES: usize = 8 * 1024 * 1024;
+
+/// One parsed request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    /// Header names lowercased, values trimmed.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// Whether the connection should stay open after the response.
+    pub keep_alive: bool,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// What reading one request from a connection produced.
+#[derive(Debug)]
+pub enum ReadOutcome {
+    /// A complete, well-formed request.
+    Request(Request),
+    /// The peer closed (or truncated) the connection; nothing to answer.
+    Closed,
+    /// Protocol violation: answer with this status, then close.
+    Bad { status: u16, reason: &'static str },
+}
+
+enum Line {
+    Data(Vec<u8>),
+    /// EOF with no bytes read (clean end of a keep-alive connection).
+    Eof,
+    /// EOF after a partial line (truncated request).
+    Truncated,
+    TooLong,
+}
+
+/// Read one `\n`-terminated line (CR stripped) without ever buffering
+/// more than `max` bytes of it.
+fn read_line_limited(r: &mut impl BufRead, max: usize) -> io::Result<Line> {
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        let buf = r.fill_buf()?;
+        if buf.is_empty() {
+            return Ok(if line.is_empty() { Line::Eof } else { Line::Truncated });
+        }
+        if let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+            if line.len() + pos > max {
+                r.consume(pos + 1);
+                return Ok(Line::TooLong);
+            }
+            line.extend_from_slice(&buf[..pos]);
+            r.consume(pos + 1);
+            if line.last() == Some(&b'\r') {
+                line.pop();
+            }
+            return Ok(Line::Data(line));
+        }
+        let len = buf.len();
+        if line.len() + len > max {
+            r.consume(len);
+            return Ok(Line::TooLong);
+        }
+        line.extend_from_slice(buf);
+        r.consume(len);
+    }
+}
+
+/// Read and parse one request. I/O errors propagate (the caller decides
+/// whether a timeout means "poll the drain flag" or "give up"); protocol
+/// problems come back as [`ReadOutcome::Bad`] so the caller can answer
+/// with the right status instead of panicking or hanging.
+pub fn read_request(r: &mut impl BufRead) -> io::Result<ReadOutcome> {
+    // request line
+    let line = match read_line_limited(r, MAX_REQUEST_LINE)? {
+        Line::Data(l) => l,
+        Line::Eof | Line::Truncated => return Ok(ReadOutcome::Closed),
+        Line::TooLong => {
+            return Ok(ReadOutcome::Bad { status: 413, reason: "request line too long" })
+        }
+    };
+    let line = match std::str::from_utf8(&line) {
+        Ok(s) => s,
+        Err(_) => return Ok(ReadOutcome::Bad { status: 400, reason: "request line not utf-8" }),
+    };
+    let mut parts = line.split(' ').filter(|p| !p.is_empty());
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None) => (m, p, v),
+        _ => return Ok(ReadOutcome::Bad { status: 400, reason: "malformed request line" }),
+    };
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        _ => return Ok(ReadOutcome::Bad { status: 400, reason: "unsupported HTTP version" }),
+    };
+    if method.is_empty() || !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Ok(ReadOutcome::Bad { status: 400, reason: "malformed method" });
+    }
+    if !path.starts_with('/') {
+        return Ok(ReadOutcome::Bad { status: 400, reason: "malformed path" });
+    }
+
+    // headers
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let line = match read_line_limited(r, MAX_HEADER_LINE)? {
+            Line::Data(l) => l,
+            Line::Eof | Line::Truncated => return Ok(ReadOutcome::Closed),
+            Line::TooLong => {
+                return Ok(ReadOutcome::Bad { status: 413, reason: "header line too long" })
+            }
+        };
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Ok(ReadOutcome::Bad { status: 413, reason: "too many headers" });
+        }
+        let line = match std::str::from_utf8(&line) {
+            Ok(s) => s,
+            Err(_) => return Ok(ReadOutcome::Bad { status: 400, reason: "header not utf-8" }),
+        };
+        let Some((name, value)) = line.split_once(':') else {
+            return Ok(ReadOutcome::Bad { status: 400, reason: "header missing ':'" });
+        };
+        if name.is_empty() || name.contains(' ') {
+            return Ok(ReadOutcome::Bad { status: 400, reason: "malformed header name" });
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    // body
+    if headers.iter().any(|(k, _)| k == "transfer-encoding") {
+        return Ok(ReadOutcome::Bad { status: 400, reason: "transfer-encoding unsupported" });
+    }
+    let body = match headers.iter().find(|(k, _)| k == "content-length") {
+        None => Vec::new(),
+        Some((_, v)) => {
+            let len: usize = match v.parse() {
+                Ok(l) => l,
+                Err(_) => {
+                    return Ok(ReadOutcome::Bad { status: 400, reason: "bad content-length" })
+                }
+            };
+            if len > MAX_BODY_BYTES {
+                return Ok(ReadOutcome::Bad { status: 413, reason: "body too large" });
+            }
+            let mut body = vec![0u8; len];
+            if io::Read::read_exact(r, &mut body).is_err() {
+                // truncated body: the peer is gone (or lying); either way
+                // there is no one to answer
+                return Ok(ReadOutcome::Closed);
+            }
+            body
+        }
+    };
+
+    let keep_alive = match headers.iter().find(|(k, _)| k == "connection") {
+        Some((_, v)) if v.eq_ignore_ascii_case("close") => false,
+        Some((_, v)) if v.eq_ignore_ascii_case("keep-alive") => true,
+        _ => http11,
+    };
+    Ok(ReadOutcome::Request(Request {
+        method: method.to_string(),
+        path: path.to_string(),
+        headers,
+        body,
+        keep_alive,
+    }))
+}
+
+/// A response ready to serialize.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+    /// Extra headers (e.g. `Retry-After`), written verbatim.
+    pub extra: Vec<(String, String)>,
+    pub keep_alive: bool,
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: body.into_bytes(),
+            extra: Vec::new(),
+            keep_alive: true,
+        }
+    }
+
+    pub fn text(status: u16, body: impl Into<String>) -> Response {
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: body.into().into_bytes(),
+            extra: Vec::new(),
+            keep_alive: true,
+        }
+    }
+
+    /// A JSON error envelope: `{"error": reason}`.
+    pub fn error(status: u16, reason: &str) -> Response {
+        let body = crate::util::json::obj(vec![("error", reason.into())]).to_string_compact();
+        Response::json(status, body)
+    }
+
+    pub fn with_header(mut self, name: &str, value: String) -> Response {
+        self.extra.push((name.to_string(), value));
+        self
+    }
+
+    pub fn close(mut self) -> Response {
+        self.keep_alive = false;
+        self
+    }
+}
+
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Serialize one response (status line, headers, body). The caller
+/// flushes.
+pub fn write_response(w: &mut impl Write, resp: &Response) -> io::Result<()> {
+    write!(w, "HTTP/1.1 {} {}\r\n", resp.status, status_reason(resp.status))?;
+    write!(w, "content-type: {}\r\n", resp.content_type)?;
+    write!(w, "content-length: {}\r\n", resp.body.len())?;
+    for (k, v) in &resp.extra {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    write!(w, "connection: {}\r\n", if resp.keep_alive { "keep-alive" } else { "close" })?;
+    w.write_all(b"\r\n")?;
+    w.write_all(&resp.body)
+}
+
+/// Client side: read one response (status + body). Used by the load
+/// generator and the loopback tests; tolerant of any headers but still
+/// requires `Content-Length` (which our server always sends).
+pub fn read_response(r: &mut impl BufRead) -> io::Result<(u16, Vec<u8>)> {
+    let status_line = match read_line_limited(r, MAX_REQUEST_LINE)? {
+        Line::Data(l) => l,
+        _ => return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "no status line")),
+    };
+    let status_line = std::str::from_utf8(&status_line)
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "status line not utf-8"))?;
+    let status: u16 = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "malformed status line"))?;
+    let mut content_length: Option<usize> = None;
+    loop {
+        let line = match read_line_limited(r, MAX_HEADER_LINE)? {
+            Line::Data(l) => l,
+            _ => return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "truncated headers")),
+        };
+        if line.is_empty() {
+            break;
+        }
+        let line = std::str::from_utf8(&line)
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "header not utf-8"))?;
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().ok();
+            }
+        }
+    }
+    let len = content_length
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "missing content-length"))?;
+    let mut body = vec![0u8; len];
+    io::Read::read_exact(r, &mut body)?;
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn req(bytes: &[u8]) -> ReadOutcome {
+        read_request(&mut BufReader::new(bytes)).unwrap()
+    }
+
+    #[test]
+    fn parses_a_post_with_body() {
+        let raw = b"POST /v1/apply HTTP/1.1\r\ncontent-length: 4\r\nHost: x\r\n\r\nabcd";
+        match req(raw) {
+            ReadOutcome::Request(r) => {
+                assert_eq!(r.method, "POST");
+                assert_eq!(r.path, "/v1/apply");
+                assert_eq!(r.body, b"abcd");
+                assert!(r.keep_alive, "HTTP/1.1 defaults to keep-alive");
+                assert_eq!(r.header("host"), Some("x"), "header names lowercase");
+            }
+            other => panic!("expected request, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn keep_alive_follows_version_defaults() {
+        let cases: [(&[u8], bool); 4] = [
+            (b"GET / HTTP/1.1\r\n\r\n", true),
+            (b"GET / HTTP/1.1\r\nconnection: close\r\n\r\n", false),
+            (b"GET / HTTP/1.0\r\n\r\n", false),
+            (b"GET / HTTP/1.0\r\nConnection: Keep-Alive\r\n\r\n", true),
+        ];
+        for (raw, want) in cases {
+            match req(raw) {
+                ReadOutcome::Request(r) => assert_eq!(r.keep_alive, want),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_inputs_map_to_400_never_panic() {
+        let bads: [&[u8]; 7] = [
+            b"GET\r\n\r\n",
+            b"GET / HTTP/2\r\n\r\n",
+            b"get / HTTP/1.1\r\n\r\n",
+            b"GET noslash HTTP/1.1\r\n\r\n",
+            b"GET / HTTP/1.1\r\nnocolon\r\n\r\n",
+            b"GET / HTTP/1.1\r\ncontent-length: pony\r\n\r\n",
+            b"POST / HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n0\r\n\r\n",
+        ];
+        for raw in bads {
+            match req(raw) {
+                ReadOutcome::Bad { status: 400, .. } => {}
+                other => panic!("expected 400 for {:?}, got {other:?}", String::from_utf8_lossy(raw)),
+            }
+        }
+    }
+
+    #[test]
+    fn oversize_maps_to_413() {
+        let long_path = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(MAX_REQUEST_LINE));
+        match req(long_path.as_bytes()) {
+            ReadOutcome::Bad { status: 413, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        let long_header =
+            format!("GET / HTTP/1.1\r\nx-pad: {}\r\n\r\n", "b".repeat(MAX_HEADER_LINE));
+        match req(long_header.as_bytes()) {
+            ReadOutcome::Bad { status: 413, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        let huge_body = format!("POST / HTTP/1.1\r\ncontent-length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        match req(huge_body.as_bytes()) {
+            ReadOutcome::Bad { status: 413, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        let many: String = std::iter::repeat("x-h: 1\r\n").take(MAX_HEADERS + 1).collect();
+        match req(format!("GET / HTTP/1.1\r\n{many}\r\n").as_bytes()) {
+            ReadOutcome::Bad { status: 413, .. } => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncation_is_closed_not_an_answerable_error() {
+        let cases: [&[u8]; 4] = [
+            b"",
+            b"GET / HT",
+            b"GET / HTTP/1.1\r\nhost: x",
+            b"POST / HTTP/1.1\r\ncontent-length: 10\r\n\r\nabc",
+        ];
+        for raw in cases {
+            match req(raw) {
+                ReadOutcome::Closed => {}
+                other => panic!("expected Closed for {:?}, got {other:?}", String::from_utf8_lossy(raw)),
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_requests_parse_back_to_back() {
+        let raw = b"GET /a HTTP/1.1\r\n\r\nPOST /b HTTP/1.1\r\ncontent-length: 2\r\n\r\nhiGET /c HTTP/1.1\r\nconnection: close\r\n\r\n";
+        let mut r = BufReader::new(&raw[..]);
+        let paths: Vec<String> = (0..3)
+            .map(|_| match read_request(&mut r).unwrap() {
+                ReadOutcome::Request(req) => req.path,
+                other => panic!("{other:?}"),
+            })
+            .collect();
+        assert_eq!(paths, ["/a", "/b", "/c"]);
+        assert!(matches!(read_request(&mut r).unwrap(), ReadOutcome::Closed));
+    }
+
+    #[test]
+    fn response_round_trips_through_client_reader() {
+        let resp = Response::json(429, "{\"error\":\"busy\"}".into())
+            .with_header("retry-after", "1".into());
+        let mut wire = Vec::new();
+        write_response(&mut wire, &resp).unwrap();
+        let (status, body) = read_response(&mut BufReader::new(&wire[..])).unwrap();
+        assert_eq!(status, 429);
+        assert_eq!(body, resp.body);
+        let text = String::from_utf8(wire).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("retry-after: 1\r\n"));
+    }
+}

@@ -1,0 +1,211 @@
+//! Multi-connection load generator for the network tier (`butterfly
+//! bench --net`): `C` threads, one keep-alive connection each, drive
+//! `/v1/apply` batches at a loopback (or remote) server and report
+//! requests/sec, vectors/sec, and client-observed p50/p99 latency.
+//!
+//! Every request carries a unique `tag`; the reply must echo it, so a
+//! lost, duplicated, or cross-wired reply is detected end to end rather
+//! than inferred from counters. 429s (admission control) are counted as
+//! shed — not errors, and not latency samples — which is exactly how a
+//! well-behaved client experiences backpressure.
+
+use crate::net::http;
+use crate::util::json::{self, obj, Json};
+use crate::util::rng::Rng;
+use crate::util::timer::percentile;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Server address, e.g. `127.0.0.1:8437`.
+    pub addr: String,
+    /// Route to drive.
+    pub route: String,
+    /// Vector length the route expects.
+    pub n: usize,
+    /// Whether to send an imaginary plane too.
+    pub complex: bool,
+    /// Concurrent keep-alive connections.
+    pub connections: usize,
+    /// `/v1/apply` requests per connection.
+    pub requests_per_conn: usize,
+    /// Vectors per request.
+    pub batch: usize,
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: "127.0.0.1:8437".into(),
+            route: "dft".into(),
+            n: 256,
+            complex: false,
+            connections: 8,
+            requests_per_conn: 50,
+            batch: 8,
+            seed: 1,
+        }
+    }
+}
+
+/// What one run observed, aggregated over every connection.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    /// Requests sent (and answered — every request gets *a* response).
+    pub requests: usize,
+    /// Requests answered 200 with a correctly echoed tag.
+    pub ok: usize,
+    /// Requests shed by the server (429).
+    pub shed: usize,
+    /// Vectors transformed (ok requests × batch).
+    pub vectors: usize,
+    pub elapsed: Duration,
+    /// Client-observed whole-request latency percentiles, microseconds
+    /// (over ok requests).
+    pub p50_micros: f64,
+    pub p99_micros: f64,
+}
+
+impl LoadgenReport {
+    pub fn requests_per_sec(&self) -> f64 {
+        if self.elapsed.as_secs_f64() > 0.0 {
+            self.requests as f64 / self.elapsed.as_secs_f64()
+        } else {
+            0.0
+        }
+    }
+
+    pub fn vectors_per_sec(&self) -> f64 {
+        if self.elapsed.as_secs_f64() > 0.0 {
+            self.vectors as f64 / self.elapsed.as_secs_f64()
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Build one `/v1/apply` body: `batch` seeded-random vectors plus a tag.
+fn apply_body(cfg: &LoadgenConfig, rng: &mut Rng, tag: u64) -> String {
+    let mut plane = |_: usize| -> Json {
+        let rows: Vec<Json> = (0..cfg.batch)
+            .map(|_| {
+                let mut v = vec![0.0f32; cfg.n];
+                rng.fill_normal(&mut v, 0.0, 1.0);
+                Json::Arr(v.into_iter().map(|x| Json::Num(f64::from(x))).collect())
+            })
+            .collect();
+        Json::Arr(rows)
+    };
+    let mut fields = vec![
+        ("route", Json::from(cfg.route.as_str())),
+        ("re", plane(0)),
+    ];
+    if cfg.complex {
+        fields.push(("im", plane(1)));
+    }
+    fields.push(("tag", Json::Num(tag as f64)));
+    obj(fields).to_string_compact()
+}
+
+/// One connection's worth of work. Returns
+/// `(sent, ok, shed, latencies_us)` or an error string.
+fn run_connection(
+    cfg: &LoadgenConfig,
+    conn_id: usize,
+) -> Result<(usize, usize, usize, Vec<f64>), String> {
+    let stream = TcpStream::connect(&cfg.addr).map_err(|e| format!("connect {}: {e}", cfg.addr))?;
+    stream.set_nodelay(true).ok();
+    let read_half = stream.try_clone().map_err(|e| format!("clone stream: {e}"))?;
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    let mut rng = Rng::new(cfg.seed.wrapping_mul(1_000_003).wrapping_add(conn_id as u64));
+    let mut sent = 0usize;
+    let mut ok = 0usize;
+    let mut shed = 0usize;
+    let mut lats = Vec::with_capacity(cfg.requests_per_conn);
+    for i in 0..cfg.requests_per_conn {
+        let tag = (conn_id as u64) << 32 | i as u64;
+        let body = apply_body(cfg, &mut rng, tag);
+        let t0 = Instant::now();
+        write!(
+            writer,
+            "POST /v1/apply HTTP/1.1\r\ncontent-type: application/json\r\ncontent-length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        )
+        .map_err(|e| format!("write: {e}"))?;
+        writer.flush().map_err(|e| format!("flush: {e}"))?;
+        sent += 1;
+        let (status, resp_body) =
+            http::read_response(&mut reader).map_err(|e| format!("read: {e}"))?;
+        let lat = t0.elapsed().as_micros() as f64;
+        match status {
+            200 => {
+                let doc = json::parse(
+                    std::str::from_utf8(&resp_body).map_err(|e| format!("utf-8: {e}"))?,
+                )
+                .map_err(|e| format!("response json: {e}"))?;
+                let echoed = doc.get("tag").and_then(|t| t.as_f64());
+                if echoed != Some(tag as f64) {
+                    return Err(format!(
+                        "conn {conn_id} req {i}: tag mismatch (sent {tag}, got {echoed:?}) — lost or cross-wired reply"
+                    ));
+                }
+                let rows = doc.get("re").and_then(|r| r.as_arr()).map(|r| r.len());
+                if rows != Some(cfg.batch) {
+                    return Err(format!(
+                        "conn {conn_id} req {i}: expected {} vectors back, got {rows:?}",
+                        cfg.batch
+                    ));
+                }
+                ok += 1;
+                lats.push(lat);
+            }
+            429 => shed += 1,
+            other => {
+                return Err(format!(
+                    "conn {conn_id} req {i}: status {other}: {}",
+                    String::from_utf8_lossy(&resp_body)
+                ))
+            }
+        }
+    }
+    Ok((sent, ok, shed, lats))
+}
+
+/// Drive the server with `cfg.connections` concurrent keep-alive
+/// connections and aggregate what came back. Any lost/duplicated/
+/// cross-wired reply or non-(200|429) status is an `Err`.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
+    let t0 = Instant::now();
+    let threads: Vec<_> = (0..cfg.connections.max(1))
+        .map(|c| {
+            let cfg = cfg.clone();
+            std::thread::spawn(move || run_connection(&cfg, c))
+        })
+        .collect();
+    let mut requests = 0usize;
+    let mut ok = 0usize;
+    let mut shed = 0usize;
+    let mut lats: Vec<f64> = Vec::new();
+    for t in threads {
+        let (s, o, sh, l) = t.join().map_err(|_| "loadgen thread panicked".to_string())??;
+        requests += s;
+        ok += o;
+        shed += sh;
+        lats.extend(l);
+    }
+    let elapsed = t0.elapsed();
+    Ok(LoadgenReport {
+        requests,
+        ok,
+        shed,
+        vectors: ok * cfg.batch,
+        elapsed,
+        p50_micros: if lats.is_empty() { 0.0 } else { percentile(&lats, 50.0) },
+        p99_micros: if lats.is_empty() { 0.0 } else { percentile(&lats, 99.0) },
+    })
+}

@@ -1,0 +1,339 @@
+//! Lock-cheap serving metrics for the network tier, rendered in
+//! Prometheus text exposition format by [`render`].
+//!
+//! Every recorder is a relaxed atomic — the hot path (one request)
+//! touches a handful of counters and one histogram bucket, with no lock
+//! and no allocation. Latencies land in fixed log-spaced buckets;
+//! [`NetMetrics::latency_quantile`] interpolates inside the winning
+//! bucket, which is the standard Prometheus-histogram estimate (exact
+//! at bucket edges, monotone in between).
+//!
+//! The contract the loopback tests pin: `http_requests_total` counts
+//! every successfully *parsed* request — whatever status it ends up
+//! with — so a load generator that sent R well-formed requests must
+//! read exactly R back from `/metrics`.
+
+use crate::serving::{ServiceStats, BATCH_BUCKETS};
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Latency histogram bucket upper bounds, microseconds (log-spaced);
+/// one extra overflow bucket follows.
+pub const LATENCY_BUCKETS_US: [u64; 12] =
+    [50, 100, 200, 500, 1_000, 2_000, 5_000, 10_000, 20_000, 50_000, 100_000, 500_000];
+
+/// Statuses broken out as labeled counters (everything else lands in
+/// the `"other"` bucket).
+const STATUSES: [u16; 7] = [200, 400, 404, 405, 413, 429, 503];
+
+#[derive(Default)]
+pub struct NetMetrics {
+    /// Well-formed requests parsed off the wire (any status).
+    pub http_requests: AtomicU64,
+    /// Responses by status; index mirrors `STATUSES`, last is "other".
+    responses: [AtomicU64; STATUSES.len() + 1],
+    /// Connections accepted / finished.
+    pub connections_opened: AtomicU64,
+    pub connections_closed: AtomicU64,
+    /// Connections refused at the accept gate (mapped to 503).
+    pub connections_refused: AtomicU64,
+    /// `/v1/apply` requests answered 200, and the vectors they carried.
+    pub apply_requests: AtomicU64,
+    pub apply_vectors: AtomicU64,
+    /// `/v1/apply` requests shed by admission control (429).
+    pub apply_shed: AtomicU64,
+    /// Whole-request apply latency histogram (microseconds).
+    latency_hist: [AtomicU64; LATENCY_BUCKETS_US.len() + 1],
+    latency_sum_us: AtomicU64,
+    latency_count: AtomicU64,
+}
+
+impl NetMetrics {
+    pub fn record_status(&self, status: u16) {
+        let idx =
+            STATUSES.iter().position(|&s| s == status).unwrap_or(STATUSES.len());
+        self.responses[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn responses_for(&self, status: u16) -> u64 {
+        let idx =
+            STATUSES.iter().position(|&s| s == status).unwrap_or(STATUSES.len());
+        self.responses[idx].load(Ordering::Relaxed)
+    }
+
+    /// Record one successful `/v1/apply`: `vectors` served in
+    /// `latency_us` microseconds wall time.
+    pub fn record_apply(&self, vectors: usize, latency_us: u64) {
+        self.apply_requests.fetch_add(1, Ordering::Relaxed);
+        self.apply_vectors.fetch_add(vectors as u64, Ordering::Relaxed);
+        let idx = LATENCY_BUCKETS_US
+            .iter()
+            .position(|&hi| latency_us <= hi)
+            .unwrap_or(LATENCY_BUCKETS_US.len());
+        self.latency_hist[idx].fetch_add(1, Ordering::Relaxed);
+        self.latency_sum_us.fetch_add(latency_us, Ordering::Relaxed);
+        self.latency_count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Histogram-estimated latency quantile in microseconds (`q` in
+    /// [0, 1]); 0 when nothing was recorded. Linear interpolation inside
+    /// the winning bucket; the overflow bucket reports its lower edge.
+    pub fn latency_quantile(&self, q: f64) -> f64 {
+        let counts: Vec<u64> =
+            self.latency_hist.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= target {
+                let lo = if i == 0 { 0.0 } else { LATENCY_BUCKETS_US[i - 1] as f64 };
+                if i == LATENCY_BUCKETS_US.len() {
+                    return lo; // overflow bucket: no upper edge to lerp to
+                }
+                let hi = LATENCY_BUCKETS_US[i] as f64;
+                let frac = (target - seen) as f64 / c as f64;
+                return lo + frac * (hi - lo);
+            }
+            seen += c;
+        }
+        LATENCY_BUCKETS_US[LATENCY_BUCKETS_US.len() - 1] as f64
+    }
+}
+
+/// One route's live state for the exporter.
+pub struct RouteSnapshot {
+    pub name: String,
+    pub stats: ServiceStats,
+    /// Live adaptive batch window, when the route runs adaptive mode.
+    pub window: Option<std::time::Duration>,
+}
+
+/// Render everything in Prometheus text exposition format. Counters are
+/// cumulative since process start; `butterfly_route_*` series carry a
+/// `route` label per installed route.
+pub fn render(m: &NetMetrics, routes: &[RouteSnapshot]) -> String {
+    let mut out = String::with_capacity(4096);
+    let counter = |out: &mut String, name: &str, help: &str, v: u64| {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {v}");
+    };
+    let ld = Ordering::Relaxed;
+
+    counter(
+        &mut out,
+        "butterfly_http_requests_total",
+        "Well-formed HTTP requests parsed.",
+        m.http_requests.load(ld),
+    );
+
+    let _ = writeln!(out, "# HELP butterfly_http_responses_total Responses by status code.");
+    let _ = writeln!(out, "# TYPE butterfly_http_responses_total counter");
+    for (i, &s) in STATUSES.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "butterfly_http_responses_total{{code=\"{s}\"}} {}",
+            m.responses[i].load(ld)
+        );
+    }
+    let _ = writeln!(
+        out,
+        "butterfly_http_responses_total{{code=\"other\"}} {}",
+        m.responses[STATUSES.len()].load(ld)
+    );
+
+    counter(
+        &mut out,
+        "butterfly_connections_opened_total",
+        "TCP connections accepted.",
+        m.connections_opened.load(ld),
+    );
+    counter(
+        &mut out,
+        "butterfly_connections_closed_total",
+        "TCP connections finished.",
+        m.connections_closed.load(ld),
+    );
+    counter(
+        &mut out,
+        "butterfly_connections_refused_total",
+        "Connections refused at the accept gate (503).",
+        m.connections_refused.load(ld),
+    );
+    counter(
+        &mut out,
+        "butterfly_apply_requests_total",
+        "Successful /v1/apply requests.",
+        m.apply_requests.load(ld),
+    );
+    counter(
+        &mut out,
+        "butterfly_apply_vectors_total",
+        "Vectors transformed via /v1/apply.",
+        m.apply_vectors.load(ld),
+    );
+    counter(
+        &mut out,
+        "butterfly_apply_shed_total",
+        "/v1/apply requests shed by admission control (429).",
+        m.apply_shed.load(ld),
+    );
+
+    // apply latency histogram (Prometheus-cumulative, seconds)
+    let _ = writeln!(
+        out,
+        "# HELP butterfly_apply_latency_seconds Whole-request /v1/apply latency."
+    );
+    let _ = writeln!(out, "# TYPE butterfly_apply_latency_seconds histogram");
+    let mut cum = 0u64;
+    for (i, &hi) in LATENCY_BUCKETS_US.iter().enumerate() {
+        cum += m.latency_hist[i].load(ld);
+        let _ = writeln!(
+            out,
+            "butterfly_apply_latency_seconds_bucket{{le=\"{}\"}} {cum}",
+            hi as f64 / 1e6
+        );
+    }
+    cum += m.latency_hist[LATENCY_BUCKETS_US.len()].load(ld);
+    let _ = writeln!(out, "butterfly_apply_latency_seconds_bucket{{le=\"+Inf\"}} {cum}");
+    let _ = writeln!(
+        out,
+        "butterfly_apply_latency_seconds_sum {}",
+        m.latency_sum_us.load(ld) as f64 / 1e6
+    );
+    let _ = writeln!(out, "butterfly_apply_latency_seconds_count {}", m.latency_count.load(ld));
+    let _ = writeln!(
+        out,
+        "# HELP butterfly_apply_latency_p50_seconds Estimated median apply latency."
+    );
+    let _ = writeln!(out, "# TYPE butterfly_apply_latency_p50_seconds gauge");
+    let _ = writeln!(out, "butterfly_apply_latency_p50_seconds {}", m.latency_quantile(0.50) / 1e6);
+    let _ = writeln!(
+        out,
+        "# HELP butterfly_apply_latency_p99_seconds Estimated p99 apply latency."
+    );
+    let _ = writeln!(out, "# TYPE butterfly_apply_latency_p99_seconds gauge");
+    let _ = writeln!(out, "butterfly_apply_latency_p99_seconds {}", m.latency_quantile(0.99) / 1e6);
+
+    // per-route pool state
+    let series: [(&str, &str, &str); 6] = [
+        ("butterfly_route_served_total", "counter", "Vectors served by the route's pool."),
+        ("butterfly_route_batches_total", "counter", "Batches drained by the route's pool."),
+        ("butterfly_route_rejected_total", "counter", "Requests shed by the route's bounded queue."),
+        ("butterfly_route_queue_depth", "gauge", "Requests waiting in the route's queue."),
+        ("butterfly_route_in_flight", "gauge", "Accepted requests not yet answered."),
+        ("butterfly_route_batch_window_seconds", "gauge", "Live adaptive batch window."),
+    ];
+    for (name, kind, help) in series {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} {kind}");
+        for r in routes {
+            let v: f64 = match name {
+                "butterfly_route_served_total" => r.stats.served as f64,
+                "butterfly_route_batches_total" => r.stats.batches as f64,
+                "butterfly_route_rejected_total" => r.stats.rejected as f64,
+                "butterfly_route_queue_depth" => r.stats.queue_depth as f64,
+                "butterfly_route_in_flight" => r.stats.in_flight as f64,
+                _ => r.window.map(|w| w.as_secs_f64()).unwrap_or(0.0),
+            };
+            let _ = writeln!(out, "{name}{{route=\"{}\"}} {v}", r.name);
+        }
+    }
+
+    // batch-size histogram per route (cumulative over BATCH_BUCKETS)
+    let _ = writeln!(out, "# HELP butterfly_route_batch_size Drained batch sizes per route.");
+    let _ = writeln!(out, "# TYPE butterfly_route_batch_size histogram");
+    for r in routes {
+        let mut cum = 0usize;
+        for (i, &hi) in BATCH_BUCKETS.iter().enumerate() {
+            cum += r.stats.batch_hist[i];
+            let _ = writeln!(
+                out,
+                "butterfly_route_batch_size_bucket{{route=\"{}\",le=\"{hi}\"}} {cum}",
+                r.name
+            );
+        }
+        cum += r.stats.batch_hist[BATCH_BUCKETS.len()];
+        let _ = writeln!(
+            out,
+            "butterfly_route_batch_size_bucket{{route=\"{}\",le=\"+Inf\"}} {cum}",
+            r.name
+        );
+        let _ = writeln!(
+            out,
+            "butterfly_route_batch_size_sum{{route=\"{}\"}} {}",
+            r.name, r.stats.served
+        );
+        let _ = writeln!(
+            out,
+            "butterfly_route_batch_size_count{{route=\"{}\"}} {}",
+            r.name, r.stats.batches
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_interpolate_within_buckets() {
+        let m = NetMetrics::default();
+        assert_eq!(m.latency_quantile(0.5), 0.0, "empty histogram reports 0");
+        // 100 samples all in the (100, 200] bucket
+        for _ in 0..100 {
+            m.record_apply(1, 150);
+        }
+        let p50 = m.latency_quantile(0.5);
+        assert!((100.0..=200.0).contains(&p50), "p50 {p50} inside the winning bucket");
+        let p99 = m.latency_quantile(0.99);
+        assert!(p99 >= p50, "p99 {p99} must not undercut p50 {p50}");
+        assert!(p99 <= 200.0);
+        // one straggler in the overflow bucket pulls p100 but not p50
+        m.record_apply(1, 10_000_000);
+        assert!(m.latency_quantile(0.5) <= 200.0);
+        assert_eq!(m.latency_quantile(1.0), 500_000.0, "overflow bucket reports its lower edge");
+    }
+
+    #[test]
+    fn render_emits_parseable_prometheus_text() {
+        let m = NetMetrics::default();
+        m.http_requests.fetch_add(7, Ordering::Relaxed);
+        m.record_status(200);
+        m.record_status(200);
+        m.record_status(429);
+        m.record_status(418); // lands in "other"
+        m.record_apply(8, 1234);
+        let routes = vec![RouteSnapshot {
+            name: "dft".into(),
+            stats: crate::serving::ServiceStats::merge(std::iter::empty()),
+            window: Some(std::time::Duration::from_micros(250)),
+        }];
+        let text = render(&m, &routes);
+        assert!(text.contains("butterfly_http_requests_total 7"));
+        assert!(text.contains("butterfly_http_responses_total{code=\"200\"} 2"));
+        assert!(text.contains("butterfly_http_responses_total{code=\"429\"} 1"));
+        assert!(text.contains("butterfly_http_responses_total{code=\"other\"} 1"));
+        assert!(text.contains("butterfly_apply_vectors_total 8"));
+        assert!(text.contains("butterfly_route_queue_depth{route=\"dft\"} 0"));
+        assert!(text.contains("butterfly_route_batch_window_seconds{route=\"dft\"} 0.00025"));
+        assert!(text.contains("butterfly_apply_latency_seconds_bucket{le=\"+Inf\"} 1"));
+        // exposition-format sanity: every non-comment line is "name[{labels}] value"
+        for line in text.lines() {
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            let (name, value) = line.rsplit_once(' ').expect("metric line has a value");
+            assert!(!name.is_empty());
+            assert!(value.parse::<f64>().is_ok(), "unparseable value in {line:?}");
+        }
+        assert_eq!(m.responses_for(429), 1);
+    }
+}

@@ -1,0 +1,37 @@
+//! The network serving tier: a dependency-free (std-only) HTTP front
+//! end over the in-process serving stack, turning the paper's fast
+//! butterfly multiply into a servable system — ROADMAP item 3's
+//! "millions of users" story, minus nothing but the users.
+//!
+//! The crate is intentionally crate-free, so there is no tokio and no
+//! hyper here: [`server`] is `std::net::TcpListener`, a nonblocking
+//! accept loop, and a thread per connection, which at the batch sizes
+//! the pool coalesces is more than enough to saturate the transform
+//! kernels — concurrency pressure lands in the shared [`BatchQueue`],
+//! not in the socket layer.
+//!
+//! - [`http`] — hand-rolled HTTP/1.1: hard size limits, `Content-Length`
+//!   bodies, keep-alive, 400/413/429/503 mapping. Pure `std::io`, so
+//!   every parse path is fuzzable in memory.
+//! - [`server`] — the edge: `POST /v1/apply` (JSON vectors → the
+//!   [`Router`] ticket API, bitwise identical to in-process calls),
+//!   admission control with `Retry-After`, `GET /metrics`, graceful
+//!   drain (admin endpoint, handle, SIGTERM), and `/admin/reload`
+//!   artifact hot-swap.
+//! - [`metrics`] — lock-cheap atomic recorders rendered in Prometheus
+//!   text exposition format.
+//! - [`loadgen`] — the many-connection load generator behind
+//!   `butterfly bench --net`, with per-request tag echo so lost or
+//!   duplicated replies are detected end to end.
+//!
+//! [`BatchQueue`]: crate::serving::BatchQueue
+//! [`Router`]: crate::serving::Router
+
+pub mod http;
+pub mod loadgen;
+pub mod metrics;
+pub mod server;
+
+pub use loadgen::{LoadgenConfig, LoadgenReport};
+pub use metrics::NetMetrics;
+pub use server::{install_signal_drain, Server, ServerConfig, ShutdownHandle};

@@ -1,0 +1,686 @@
+//! The std-only HTTP serving edge: `std::net::TcpListener` + a thread
+//! per connection, no async runtime (the crate is dependency-free by
+//! design — see ROADMAP item 3). The server is a thin shell over the
+//! in-process serving stack: every `/v1/apply` batch goes through the
+//! same [`Router`] → [`submit`](crate::serving::ServiceHandle::submit)
+//! ticket path an embedded caller would use, so network responses are
+//! *bitwise identical* to
+//! `Router::call` for the same vectors (pinned by
+//! `tests/net_integration.rs`).
+//!
+//! Endpoints:
+//! - `POST /v1/apply` — `{"route": r, "re": [[..]], "im"?: [[..]],
+//!   "tag"?: t}`; planes are vectors of length `n`; `im` may be omitted
+//!   (zero-filled on complex routes, single-plane on real ones). Replies
+//!   echo the shape (and `tag`, for end-to-end loss/duplication
+//!   detection). Admission control: when the route's live in-flight
+//!   count plus the incoming batch exceeds the budget, the request is
+//!   shed with 429 + `Retry-After` instead of queued.
+//! - `GET /metrics` — Prometheus text ([`crate::net::metrics`]).
+//! - `GET /v1/routes`, `GET /healthz` — discovery and liveness.
+//! - `POST /admin/reload` — `{"route": r, "artifact": path,
+//!   "fuse"?: spec}`: load a [`LayerArtifact`], rebuild its op (honoring
+//!   the server's `--fuse` default unless overridden), and atomically
+//!   hot-swap it into the route without dropping queued requests.
+//! - `POST /admin/drain` — graceful drain: stop accepting, let every
+//!   connection finish its current request, then exit. SIGTERM/SIGINT
+//!   (via [`install_signal_drain`]) and [`ShutdownHandle::drain`]
+//!   trigger the same path.
+//!
+//! Connection handling notes: reads carry a short timeout so parked
+//! keep-alive connections notice a drain promptly; a client that stalls
+//! mid-request for longer than the timeout is dropped (loopback clients
+//! write whole requests at once, and a serving edge should not hold
+//! buffers for trickling peers anyway).
+
+use crate::net::http::{self, ReadOutcome, Request, Response};
+use crate::net::metrics::{render, NetMetrics, RouteSnapshot};
+use crate::runtime::artifacts::LayerArtifact;
+use crate::serving::{Router, ServiceStats};
+use crate::transforms::fuse::FuseSpec;
+use crate::util::json::{self, obj, Json};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Largest vector batch one `/v1/apply` may carry.
+pub const MAX_APPLY_BATCH: usize = 1024;
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// `addr:port`; port 0 binds an ephemeral port (tests, benches).
+    pub listen: String,
+    /// Concurrent connections beyond this are answered 503 and closed.
+    pub max_connections: usize,
+    /// Per-route admission budget: a batch is shed with 429 when the
+    /// route's live in-flight count plus the batch would exceed this.
+    pub inflight_budget: usize,
+    /// Adaptive batch-window cap applied to every route at startup;
+    /// `None` keeps the fixed per-route `max_wait`.
+    pub adaptive_cap: Option<Duration>,
+    /// Default fusion spec for `/admin/reload` (the CLI's `--fuse`).
+    pub fuse: Option<FuseSpec>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            listen: "127.0.0.1:0".into(),
+            max_connections: 256,
+            inflight_budget: 512,
+            adaptive_cap: Some(Duration::from_millis(2)),
+            fuse: None,
+        }
+    }
+}
+
+struct Shared {
+    router: Router,
+    metrics: NetMetrics,
+    cfg: ServerConfig,
+    drain: AtomicBool,
+    active_conns: AtomicUsize,
+}
+
+impl Shared {
+    fn draining(&self) -> bool {
+        self.drain.load(Ordering::SeqCst) || signal_drain_requested()
+    }
+}
+
+/// Cheap clonable handle that triggers (or observes) a graceful drain.
+#[derive(Clone)]
+pub struct ShutdownHandle {
+    shared: Arc<Shared>,
+}
+
+impl ShutdownHandle {
+    pub fn drain(&self) {
+        self.shared.drain.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.shared.draining()
+    }
+}
+
+/// A running server: accept loop + connection threads over a [`Router`].
+pub struct Server {
+    shared: Arc<Shared>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    local_addr: SocketAddr,
+}
+
+impl Server {
+    /// Bind `cfg.listen` and start serving `router`'s routes. The router
+    /// is owned by the server from here on; get it back (shut down, with
+    /// final stats) from [`join`](Server::join).
+    pub fn start(router: Router, cfg: ServerConfig) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(&cfg.listen)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        if let Some(cap) = cfg.adaptive_cap {
+            let _ = router.set_adaptive_window(None, cap);
+        }
+        let shared = Arc::new(Shared {
+            router,
+            metrics: NetMetrics::default(),
+            cfg,
+            drain: AtomicBool::new(false),
+            active_conns: AtomicUsize::new(0),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("net-accept".into())
+            .spawn(move || accept_loop(listener, accept_shared))?;
+        Ok(Server { shared, accept: Some(accept), local_addr })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    pub fn shutdown_handle(&self) -> ShutdownHandle {
+        ShutdownHandle { shared: Arc::clone(&self.shared) }
+    }
+
+    /// Live counter access (loopback tests cross-check these against the
+    /// `/metrics` rendering).
+    pub fn metrics(&self) -> &NetMetrics {
+        &self.shared.metrics
+    }
+
+    /// Block until a drain is requested (admin endpoint, handle, or
+    /// signal), every connection has finished, and every route pool has
+    /// drained; returns the final per-route stats.
+    pub fn join(mut self) -> HashMap<String, ServiceStats> {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // the accept loop only exits on drain; wait for the connection
+        // threads (which see the same flag within one read timeout)
+        while self.shared.active_conns.load(Ordering::SeqCst) > 0 {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let mut shared = self.shared;
+        let inner = loop {
+            // conn threads have all decremented active_conns; their Arc
+            // clones die with the threads a moment later
+            match Arc::try_unwrap(shared) {
+                Ok(inner) => break inner,
+                Err(back) => {
+                    shared = back;
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+        };
+        inner.router.shutdown()
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    loop {
+        if shared.draining() {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                shared.metrics.connections_opened.fetch_add(1, Ordering::Relaxed);
+                if shared.active_conns.load(Ordering::SeqCst) >= shared.cfg.max_connections {
+                    shared.metrics.connections_refused.fetch_add(1, Ordering::Relaxed);
+                    shared.metrics.record_status(503);
+                    let mut w = BufWriter::new(stream);
+                    let _ = http::write_response(
+                        &mut w,
+                        &Response::error(503, "connection limit reached")
+                            .with_header("retry-after", "1".into())
+                            .close(),
+                    );
+                    let _ = w.flush();
+                    shared.metrics.connections_closed.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                shared.active_conns.fetch_add(1, Ordering::SeqCst);
+                let conn_shared = Arc::clone(&shared);
+                let spawned = std::thread::Builder::new()
+                    .name("net-conn".into())
+                    .spawn(move || run_connection(conn_shared, stream));
+                if spawned.is_err() {
+                    shared.active_conns.fetch_sub(1, Ordering::SeqCst);
+                    shared.metrics.connections_closed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+/// Decrements the live-connection gauge however the thread exits.
+struct ConnGuard(Arc<Shared>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.active_conns.fetch_sub(1, Ordering::SeqCst);
+        self.0.metrics.connections_closed.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+fn run_connection(shared: Arc<Shared>, stream: TcpStream) {
+    let _guard = ConnGuard(Arc::clone(&shared));
+    let _ = stream.set_nodelay(true);
+    // the read timeout is what lets parked keep-alive connections notice
+    // a drain: reads wake every 200ms and re-check the flag
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        // Park phase: wait for the next request's first byte. A timeout
+        // here consumed nothing, so re-checking the drain flag and
+        // waiting again is safe; once bytes exist, a timeout *inside*
+        // read_request means a mid-request stall, and retrying would
+        // desynchronize the stream — those connections are dropped.
+        match reader.fill_buf() {
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if shared.draining() {
+                    return;
+                }
+                continue;
+            }
+            Err(_) => return,
+            Ok([]) => return, // clean EOF between requests
+            Ok(_) => {}
+        }
+        match http::read_request(&mut reader) {
+            Err(_) => return,
+            Ok(ReadOutcome::Closed) => return,
+            Ok(ReadOutcome::Bad { status, reason }) => {
+                // protocol violation: answer once, then close — the
+                // stream may be desynchronized past this point
+                shared.metrics.record_status(status);
+                let _ = http::write_response(&mut writer, &Response::error(status, reason).close());
+                let _ = writer.flush();
+                return;
+            }
+            Ok(ReadOutcome::Request(req)) => {
+                shared.metrics.http_requests.fetch_add(1, Ordering::Relaxed);
+                let mut resp = handle_request(&shared, &req);
+                let keep = req.keep_alive && resp.keep_alive && !shared.draining();
+                resp.keep_alive = keep;
+                shared.metrics.record_status(resp.status);
+                if http::write_response(&mut writer, &resp).is_err() || writer.flush().is_err() {
+                    return;
+                }
+                if !keep {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+fn handle_request(shared: &Shared, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Response::text(200, "ok\n"),
+        ("GET", "/metrics") => handle_metrics(shared),
+        ("GET", "/v1/routes") => handle_routes(shared),
+        ("POST", "/v1/apply") => handle_apply(shared, &req.body),
+        ("POST", "/admin/reload") => handle_reload(shared, &req.body),
+        ("POST", "/admin/drain") => {
+            shared.drain.store(true, Ordering::SeqCst);
+            Response::json(200, obj(vec![("draining", true.into())]).to_string_compact()).close()
+        }
+        (_, "/healthz" | "/metrics" | "/v1/routes" | "/v1/apply" | "/admin/reload"
+        | "/admin/drain") => Response::error(405, "method not allowed"),
+        _ => Response::error(404, "no such endpoint"),
+    }
+}
+
+fn route_snapshots(shared: &Shared) -> Vec<RouteSnapshot> {
+    let mut names: Vec<String> = shared.router.names().iter().map(|s| s.to_string()).collect();
+    names.sort();
+    names
+        .into_iter()
+        .filter_map(|name| {
+            let pool = shared.router.pool(&name)?;
+            Some(RouteSnapshot { name, stats: pool.stats(), window: pool.adaptive_window() })
+        })
+        .collect()
+}
+
+fn handle_metrics(shared: &Shared) -> Response {
+    let body = render(&shared.metrics, &route_snapshots(shared));
+    Response {
+        status: 200,
+        content_type: "text/plain; version=0.0.4",
+        body: body.into_bytes(),
+        extra: Vec::new(),
+        keep_alive: true,
+    }
+}
+
+fn handle_routes(shared: &Shared) -> Response {
+    let routes: Vec<Json> = route_snapshots(shared)
+        .into_iter()
+        .filter_map(|snap| {
+            let h = shared.router.handle(&snap.name)?;
+            Some(obj(vec![
+                ("name", snap.name.into()),
+                ("n", h.n().into()),
+                ("complex", h.is_complex().into()),
+            ]))
+        })
+        .collect();
+    Response::json(200, obj(vec![("routes", Json::Arr(routes))]).to_string_compact())
+}
+
+/// Parse one plane array-of-vectors; every row must have length `n`.
+fn parse_plane(v: &Json, n: usize, what: &str) -> Result<Vec<Vec<f32>>, String> {
+    let rows = v.as_arr().ok_or_else(|| format!("'{what}' must be an array of vectors"))?;
+    let mut out = Vec::with_capacity(rows.len());
+    for (i, row) in rows.iter().enumerate() {
+        let row = row.as_arr().ok_or_else(|| format!("'{what}'[{i}] must be an array"))?;
+        if row.len() != n {
+            return Err(format!("'{what}'[{i}] has length {}, route expects {n}", row.len()));
+        }
+        let mut lane = Vec::with_capacity(n);
+        for (j, x) in row.iter().enumerate() {
+            let x = x.as_f64().ok_or_else(|| format!("'{what}'[{i}][{j}] is not a number"))?;
+            lane.push(x as f32);
+        }
+        out.push(lane);
+    }
+    Ok(out)
+}
+
+fn plane_to_json(rows: &[Vec<f32>]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| Json::Arr(r.iter().map(|&v| Json::Num(f64::from(v))).collect()))
+            .collect(),
+    )
+}
+
+fn handle_apply(shared: &Shared, body: &[u8]) -> Response {
+    let t0 = Instant::now();
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return Response::error(400, "body is not utf-8"),
+    };
+    let doc = match json::parse(text) {
+        Ok(d) => d,
+        Err(e) => return Response::error(400, &format!("bad json: {e}")),
+    };
+    let Some(route) = doc.get("route").and_then(|r| r.as_str()) else {
+        return Response::error(400, "missing 'route'");
+    };
+    let Some(handle) = shared.router.handle(route) else {
+        return Response::error(404, &format!("no route '{route}'"));
+    };
+    let n = handle.n();
+    let Some(re_field) = doc.get("re") else {
+        return Response::error(400, "missing 're'");
+    };
+    let re = match parse_plane(re_field, n, "re") {
+        Ok(p) => p,
+        Err(e) => return Response::error(400, &e),
+    };
+    let batch = re.len();
+    if batch == 0 {
+        return Response::error(400, "'re' must contain at least one vector");
+    }
+    if batch > MAX_APPLY_BATCH {
+        return Response::error(413, &format!("batch {batch} exceeds cap {MAX_APPLY_BATCH}"));
+    }
+    let im = match doc.get("im") {
+        None => None,
+        Some(v) => match parse_plane(v, n, "im") {
+            Ok(p) if p.len() == batch => Some(p),
+            Ok(p) => {
+                return Response::error(
+                    400,
+                    &format!("'im' has {} vectors but 're' has {batch}", p.len()),
+                )
+            }
+            Err(e) => return Response::error(400, &e),
+        },
+    };
+    let echo_im = im.is_some() || handle.is_complex();
+
+    // Admission control: shed the whole batch when it would push the
+    // route past its in-flight budget. The gauge is decremented by the
+    // worker the moment a reply is sent, so the budget bounds queued +
+    // in-service work, not merely queue depth.
+    if handle.in_flight() + batch > shared.cfg.inflight_budget {
+        shared.metrics.apply_shed.fetch_add(1, Ordering::Relaxed);
+        return Response::error(429, "route at in-flight capacity")
+            .with_header("retry-after", "1".into());
+    }
+
+    // Pipeline the whole batch through the ticket API, then redeem in
+    // order — identical to what an in-process caller would do.
+    let mut tickets = Vec::with_capacity(batch);
+    for (i, lane) in re.into_iter().enumerate() {
+        let lane_im = match &im {
+            Some(planes) => planes[i].clone(),
+            None if handle.is_complex() => vec![0.0; n],
+            None => Vec::new(),
+        };
+        match handle.submit(lane, lane_im) {
+            Ok(t) => tickets.push(t),
+            Err(e) if e.contains("backpressure") => {
+                // the bounded queue itself shed us; earlier lanes of this
+                // batch still complete (their tickets drop harmlessly)
+                shared.metrics.apply_shed.fetch_add(1, Ordering::Relaxed);
+                return Response::error(429, "route queue full")
+                    .with_header("retry-after", "1".into());
+            }
+            Err(e) => return Response::error(503, &e),
+        }
+    }
+    let mut out_re = Vec::with_capacity(batch);
+    let mut out_im = Vec::with_capacity(batch);
+    for t in tickets {
+        match t.wait() {
+            Ok((r, i)) => {
+                out_re.push(r);
+                if echo_im {
+                    out_im.push(if i.is_empty() { vec![0.0; n] } else { i });
+                }
+            }
+            Err(e) => return Response::error(503, &e),
+        }
+    }
+    let mut fields = vec![
+        ("route", Json::from(route)),
+        ("n", n.into()),
+        ("re", plane_to_json(&out_re)),
+    ];
+    if echo_im {
+        fields.push(("im", plane_to_json(&out_im)));
+    }
+    if let Some(tag) = doc.get("tag") {
+        fields.push(("tag", tag.clone()));
+    }
+    let resp = Response::json(200, obj(fields).to_string_compact());
+    shared.metrics.record_apply(batch, t0.elapsed().as_micros() as u64);
+    resp
+}
+
+fn handle_reload(shared: &Shared, body: &[u8]) -> Response {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return Response::error(400, "body is not utf-8"),
+    };
+    let doc = match json::parse(text) {
+        Ok(d) => d,
+        Err(e) => return Response::error(400, &format!("bad json: {e}")),
+    };
+    let Some(route) = doc.get("route").and_then(|r| r.as_str()) else {
+        return Response::error(400, "missing 'route'");
+    };
+    let Some(path) = doc.get("artifact").and_then(|p| p.as_str()) else {
+        return Response::error(400, "missing 'artifact'");
+    };
+    let fuse = match doc.get("fuse").and_then(|f| f.as_str()) {
+        Some(s) => match FuseSpec::parse(s) {
+            Ok(spec) => Some(spec),
+            Err(e) => return Response::error(400, &format!("bad fuse spec: {e}")),
+        },
+        None => shared.cfg.fuse.clone(),
+    };
+    let art = match LayerArtifact::load(path) {
+        Ok(a) => a,
+        Err(e) => return Response::error(400, &format!("artifact load failed: {e}")),
+    };
+    let op = match art.to_op_with(fuse.as_ref()) {
+        Ok(op) => op,
+        Err(e) => return Response::error(400, &format!("artifact rebuild failed: {e}")),
+    };
+    let n = op.n();
+    match shared.router.swap_op(route, op) {
+        Ok(()) => Response::json(
+            200,
+            obj(vec![
+                ("route", route.into()),
+                ("artifact", path.into()),
+                ("n", n.into()),
+                ("fused", fuse.is_some().into()),
+            ])
+            .to_string_compact(),
+        ),
+        Err(e) => Response::error(400, &e),
+    }
+}
+
+static SIGNAL_DRAIN: AtomicBool = AtomicBool::new(false);
+
+/// Whether a drain signal (SIGTERM/SIGINT) has been delivered.
+pub fn signal_drain_requested() -> bool {
+    SIGNAL_DRAIN.load(Ordering::SeqCst)
+}
+
+/// Route SIGTERM and SIGINT into the graceful-drain flag. Std links
+/// libc already, so the raw `signal(2)` symbol is declared directly
+/// instead of pulling in a crate; the handler only stores an atomic,
+/// which is async-signal-safe.
+#[cfg(unix)]
+pub fn install_signal_drain() {
+    extern "C" fn on_signal(_sig: i32) {
+        SIGNAL_DRAIN.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_signal as usize);
+        signal(SIGINT, on_signal as usize);
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install_signal_drain() {}
+
+/// Convenience reader used by tests: drive one request through an
+/// in-memory parse→handle cycle without a socket.
+#[cfg(test)]
+fn handle_raw(shared: &Shared, raw: &[u8]) -> Response {
+    let mut r = std::io::BufReader::new(raw);
+    match http::read_request(&mut r).unwrap() {
+        ReadOutcome::Request(req) => handle_request(shared, &req),
+        other => panic!("not a full request: {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::BatcherConfig;
+    use crate::transforms::op::plan;
+    use crate::transforms::spec::TransformKind;
+
+    fn test_shared(budget: usize) -> Shared {
+        let mut router = Router::new();
+        router.install("dct", plan(TransformKind::Dct, 8), 1, BatcherConfig::default());
+        Shared {
+            router,
+            metrics: NetMetrics::default(),
+            cfg: ServerConfig { inflight_budget: budget, ..ServerConfig::default() },
+            drain: AtomicBool::new(false),
+            active_conns: AtomicUsize::new(0),
+        }
+    }
+
+    fn apply_req(body: &str) -> Vec<u8> {
+        format!("POST /v1/apply HTTP/1.1\r\ncontent-length: {}\r\n\r\n{body}", body.len())
+            .into_bytes()
+    }
+
+    #[test]
+    fn apply_answers_and_matches_in_process_call() {
+        let shared = test_shared(512);
+        let body = r#"{"route":"dct","re":[[1,0,0,0,0,0,0,0]],"tag":7}"#;
+        let resp = handle_raw(&shared, &apply_req(body));
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        let doc = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(doc.get("tag").unwrap().as_f64(), Some(7.0), "tag echoes");
+        let got: Vec<f32> = doc.get("re").unwrap().as_arr().unwrap()[0]
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        let mut x = vec![0.0f32; 8];
+        x[0] = 1.0;
+        let want = shared.router.call_real("dct", x).unwrap();
+        assert_eq!(got, want, "network answer is bitwise the in-process answer");
+    }
+
+    #[test]
+    fn malformed_apply_is_400_not_panic() {
+        let shared = test_shared(512);
+        let bads = [
+            "not json at all",
+            r#"{"re":[[1]]}"#,
+            r#"{"route":"nope","re":[[1,0,0,0,0,0,0,0]]}"#,
+            r#"{"route":"dct"}"#,
+            r#"{"route":"dct","re":[]}"#,
+            r#"{"route":"dct","re":[[1,2,3]]}"#,
+            r#"{"route":"dct","re":[[1,0,0,0,0,0,0,"x"]]}"#,
+            r#"{"route":"dct","re":[[1,0,0,0,0,0,0,0]],"im":[]}"#,
+        ];
+        for body in bads {
+            let resp = handle_raw(&shared, &apply_req(body));
+            assert!(
+                resp.status == 400 || resp.status == 404,
+                "{body:?} → {}",
+                resp.status
+            );
+        }
+        // the route still serves after all that garbage
+        let ok = handle_raw(&shared, &apply_req(r#"{"route":"dct","re":[[0,1,0,0,0,0,0,0]]}"#));
+        assert_eq!(ok.status, 200);
+    }
+
+    #[test]
+    fn admission_control_sheds_with_429() {
+        let shared = test_shared(2);
+        let body = r#"{"route":"dct","re":[[1,0,0,0,0,0,0,0],[0,1,0,0,0,0,0,0],[0,0,1,0,0,0,0,0]]}"#;
+        let resp = handle_raw(&shared, &apply_req(body));
+        assert_eq!(resp.status, 429, "batch of 3 over budget 2 must shed");
+        assert!(resp.extra.iter().any(|(k, _)| k == "retry-after"));
+        assert_eq!(shared.metrics.apply_shed.load(Ordering::Relaxed), 1);
+        // a batch within budget goes through
+        let ok = handle_raw(&shared, &apply_req(r#"{"route":"dct","re":[[1,0,0,0,0,0,0,0]]}"#));
+        assert_eq!(ok.status, 200);
+    }
+
+    #[test]
+    fn discovery_and_unknown_endpoints() {
+        let shared = test_shared(512);
+        let routes = handle_raw(&shared, b"GET /v1/routes HTTP/1.1\r\n\r\n");
+        assert_eq!(routes.status, 200);
+        let doc = json::parse(std::str::from_utf8(&routes.body).unwrap()).unwrap();
+        let arr = doc.get("routes").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("name").unwrap().as_str(), Some("dct"));
+        assert_eq!(arr[0].get("n").unwrap().as_usize(), Some(8));
+        assert_eq!(arr[0].get("complex").unwrap().as_bool(), Some(false));
+        assert_eq!(handle_raw(&shared, b"GET /nope HTTP/1.1\r\n\r\n").status, 404);
+        assert_eq!(handle_raw(&shared, b"GET /v1/apply HTTP/1.1\r\n\r\n").status, 405);
+        assert_eq!(handle_raw(&shared, b"GET /healthz HTTP/1.1\r\n\r\n").status, 200);
+    }
+
+    #[test]
+    fn metrics_endpoint_renders_routes() {
+        let shared = test_shared(512);
+        let _ = handle_raw(&shared, &apply_req(r#"{"route":"dct","re":[[1,0,0,0,0,0,0,0]]}"#));
+        let resp = handle_raw(&shared, b"GET /metrics HTTP/1.1\r\n\r\n");
+        assert_eq!(resp.status, 200);
+        let text = String::from_utf8(resp.body).unwrap();
+        assert!(text.contains("butterfly_route_served_total{route=\"dct\"} 1"));
+        assert!(text.contains("butterfly_apply_vectors_total 1"));
+    }
+
+    #[test]
+    fn drain_endpoint_flips_the_flag_and_closes() {
+        let shared = test_shared(512);
+        assert!(!shared.draining());
+        let resp = handle_raw(&shared, b"POST /admin/drain HTTP/1.1\r\n\r\n");
+        assert_eq!(resp.status, 200);
+        assert!(!resp.keep_alive, "drain response closes the connection");
+        assert!(shared.draining());
+    }
+}

@@ -13,7 +13,7 @@
 //!
 //! ## The matrix
 //!
-//! Three areas, each a fixed list of scenario ids (the ids are the
+//! Four areas, each a fixed list of scenario ids (the ids are the
 //! contract — smoke mode shrinks repetitions, never ids or sizes, so a
 //! smoke run remains comparable against a committed full baseline):
 //!
@@ -29,6 +29,12 @@
 //! - **serving** — end-to-end `ServicePool` throughput in vectors per
 //!   second under a fixed offered load, at W ∈ {1, 2, 4, 8} workers
 //!   draining one shared queue.
+//! - **net** — the network tier end to end: a loopback
+//!   [`net::Server`](crate::net::Server) driven by
+//!   [`net::loadgen`](crate::net::loadgen) at C ∈ {1, 8, 32} keep-alive
+//!   connections, reporting both requests/sec and client-observed p99
+//!   latency (two scenarios per C — throughput and tail regress
+//!   independently).
 //!
 //! ## Determinism
 //!
@@ -79,8 +85,8 @@ pub const DEFAULT_NOISE_BAND: f64 = 0.15;
 /// regressions.
 pub const SMOKE_NOISE_BAND: f64 = 0.35;
 
-/// The three areas, in run order. Each maps to one `BENCH_<area>.json`.
-pub const AREAS: [&str; 3] = ["train", "ops", "serving"];
+/// The four areas, in run order. Each maps to one `BENCH_<area>.json`.
+pub const AREAS: [&str; 4] = ["train", "ops", "serving", "net"];
 
 /// Schema version stamped into every report.
 pub const SCHEMA_VERSION: usize = 1;
@@ -125,6 +131,10 @@ pub enum Unit {
     NsPerVec,
     StepsPerSec,
     VectorsPerSec,
+    /// HTTP requests per second observed by the network load generator.
+    RequestsPerSec,
+    /// Client-observed 99th-percentile request latency, microseconds.
+    P99Micros,
 }
 
 impl Unit {
@@ -133,6 +143,8 @@ impl Unit {
             Unit::NsPerVec => "ns_per_vec",
             Unit::StepsPerSec => "steps_per_sec",
             Unit::VectorsPerSec => "vectors_per_sec",
+            Unit::RequestsPerSec => "requests_per_sec",
+            Unit::P99Micros => "p99_micros",
         }
     }
 
@@ -141,6 +153,8 @@ impl Unit {
             "ns_per_vec" => Some(Unit::NsPerVec),
             "steps_per_sec" => Some(Unit::StepsPerSec),
             "vectors_per_sec" => Some(Unit::VectorsPerSec),
+            "requests_per_sec" => Some(Unit::RequestsPerSec),
+            "p99_micros" => Some(Unit::P99Micros),
             _ => None,
         }
     }
@@ -148,7 +162,7 @@ impl Unit {
     /// Whether a larger median is an improvement (throughputs) or a
     /// regression (latencies).
     pub fn higher_is_better(self) -> bool {
-        !matches!(self, Unit::NsPerVec)
+        !matches!(self, Unit::NsPerVec | Unit::P99Micros)
     }
 }
 
@@ -899,12 +913,86 @@ pub fn run_serving(smoke: bool) -> Report {
     Report { area: "serving".into(), env: EnvFingerprint::detect(smoke), scenarios }
 }
 
+/// The network tier end to end: a loopback std-only HTTP server over a
+/// 2-worker pool serving the fast DCT at N = 256, driven by the
+/// keep-alive load generator at C ∈ {1, 8, 32} connections (batch 8).
+/// Each C yields two scenarios — `.../rps` (requests/sec, higher is
+/// better) and `.../p99us` (client-observed tail latency, lower is
+/// better) — because a change can trade one for the other and the gate
+/// should see both. Every repetition binds a fresh server on an
+/// ephemeral port and drains it cleanly, so repetitions are
+/// independent; the admission budget is set high enough that a healthy
+/// run sheds nothing (a shed in this closed-loop workload would mean
+/// the accounting itself regressed, and the loadgen errors out on any
+/// lost or cross-wired reply).
+pub fn run_net(smoke: bool) -> Report {
+    use crate::net::loadgen::{self, LoadgenConfig};
+    use crate::net::{Server, ServerConfig};
+
+    let (reps, requests_per_conn) = if smoke { (1usize, 6usize) } else { (3, 40) };
+    let n = 256usize;
+    let batch = 8usize;
+    let mut scenarios = Vec::new();
+    for c in [1usize, 8, 32] {
+        let base = format!("net/apply-dct/n{n}/C{c}");
+        let seed = scenario_seed(&base);
+        let run_once = |per_conn: usize| -> loadgen::LoadgenReport {
+            let op = plan_with_rng(TransformKind::Dct, n, &mut Rng::new(seed));
+            let mut router = Router::new();
+            router.install(
+                "bench-dct",
+                op,
+                2,
+                BatcherConfig { max_batch: 32, max_wait: Duration::from_micros(500), queue_cap: 65536 },
+            );
+            let server = Server::start(
+                router,
+                ServerConfig {
+                    listen: "127.0.0.1:0".into(),
+                    max_connections: 64,
+                    inflight_budget: 1 << 20,
+                    adaptive_cap: None,
+                    fuse: None,
+                },
+            )
+            .expect("bind loopback for net bench");
+            let cfg = LoadgenConfig {
+                addr: server.local_addr().to_string(),
+                route: "bench-dct".into(),
+                n,
+                complex: false,
+                connections: c,
+                requests_per_conn: per_conn,
+                batch,
+                seed,
+            };
+            let report = loadgen::run(&cfg).expect("net bench loadgen");
+            server.shutdown_handle().drain();
+            server.join();
+            report
+        };
+        // warm repetition (shorter) pays one-time thread/page costs
+        run_once(requests_per_conn.min(4));
+        let mut rps = Vec::with_capacity(reps);
+        let mut p99 = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let r = run_once(requests_per_conn);
+            rps.push(r.requests_per_sec());
+            p99.push(r.p99_micros);
+        }
+        push(&mut scenarios, format!("{base}/rps"), Unit::RequestsPerSec, &rps);
+        push(&mut scenarios, format!("{base}/p99us"), Unit::P99Micros, &p99);
+    }
+    Report { area: "net".into(), env: EnvFingerprint::detect(smoke), scenarios }
+}
+
 /// Run one area by name.
 pub fn run_area(area: &str, smoke: bool) -> Option<Report> {
     match area {
         "train" => Some(run_train(smoke)),
         "ops" => Some(run_ops(smoke)),
         "serving" => Some(run_serving(smoke)),
+        "net" => Some(run_net(smoke)),
         _ => None,
     }
 }
@@ -933,11 +1021,20 @@ mod tests {
 
     #[test]
     fn unit_round_trip() {
-        for u in [Unit::NsPerVec, Unit::StepsPerSec, Unit::VectorsPerSec] {
+        for u in [
+            Unit::NsPerVec,
+            Unit::StepsPerSec,
+            Unit::VectorsPerSec,
+            Unit::RequestsPerSec,
+            Unit::P99Micros,
+        ] {
             assert_eq!(Unit::parse(u.as_str()), Some(u));
         }
-        assert!(Unit::NsPerVec.higher_is_better() == false);
+        // latencies regress upward, throughputs downward
+        assert!(!Unit::NsPerVec.higher_is_better());
+        assert!(!Unit::P99Micros.higher_is_better());
         assert!(Unit::StepsPerSec.higher_is_better() && Unit::VectorsPerSec.higher_is_better());
+        assert!(Unit::RequestsPerSec.higher_is_better());
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Dynamic batching queue: requests accumulate until either `max_batch`
-//! are pending or `max_wait` has elapsed since the oldest arrival —
-//! the standard latency/throughput knob of serving systems. The queue is
-//! bounded; producers get backpressure errors instead of unbounded
+//! are pending or the batch window has elapsed since the oldest arrival
+//! — the standard latency/throughput knob of serving systems. The queue
+//! is bounded; producers get backpressure errors instead of unbounded
 //! memory growth.
 //!
 //! The queue is MPMC: any number of producers push, and any number of
@@ -10,10 +10,25 @@
 //! and a drainer that leaves requests behind wakes a sibling, so the
 //! pool is work-conserving: no request waits while a worker idles.
 //!
+//! ## Adaptive batch windows
+//!
+//! By default the window is the fixed `max_wait` from [`BatcherConfig`].
+//! [`set_adaptive`](BatchQueue::set_adaptive) switches the queue to a
+//! **deadline-driven adaptive window** bounded by a cap: every drained
+//! batch feeds the controller — full batches or a remaining backlog
+//! (sustained load) double the window toward the cap so later batches
+//! fill further; small batches that empty the queue (idle or trickle
+//! traffic) halve it toward zero so a lone request is answered at once
+//! instead of being held for stragglers that never come. The controller
+//! is a pair of relaxed atomics — no extra locking on either the
+//! producer or drainer path — and the live window is exported to the
+//! `/metrics` endpoint by the network tier.
+//!
 //! [`ServicePool`]: crate::serving::service::ServicePool
 //! [`next_batch`]: BatchQueue::next_batch
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -40,6 +55,11 @@ pub struct BatchQueue<T> {
     cfg: BatcherConfig,
     inner: Mutex<Inner<T>>,
     cv: Condvar,
+    /// Adaptive-window cap in nanoseconds; 0 = fixed `cfg.max_wait`.
+    adaptive_cap: AtomicU64,
+    /// Current adaptive window in nanoseconds (only read when the cap
+    /// is nonzero).
+    window_nanos: AtomicU64,
 }
 
 #[derive(Debug, PartialEq, Eq)]
@@ -50,7 +70,67 @@ pub enum PushError {
 
 impl<T> BatchQueue<T> {
     pub fn new(cfg: BatcherConfig) -> Self {
-        BatchQueue { cfg, inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }), cv: Condvar::new() }
+        BatchQueue {
+            cfg,
+            inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            adaptive_cap: AtomicU64::new(0),
+            window_nanos: AtomicU64::new(0),
+        }
+    }
+
+    /// Switch the batch window from the fixed `cfg.max_wait` to a
+    /// deadline-driven adaptive window in `[0, cap]`. The window starts
+    /// at zero (idle ⇒ immediate dispatch) and adapts per drained batch:
+    /// sustained load doubles it toward `cap`, idleness halves it back
+    /// toward zero. Safe to call at any time, including while drainers
+    /// are parked.
+    pub fn set_adaptive(&self, cap: Duration) {
+        self.window_nanos.store(0, Ordering::Relaxed);
+        self.adaptive_cap.store((cap.as_nanos() as u64).max(1), Ordering::Relaxed);
+    }
+
+    /// The live adaptive window, or `None` when the queue runs the
+    /// fixed `cfg.max_wait` window.
+    pub fn adaptive_window(&self) -> Option<Duration> {
+        match self.adaptive_cap.load(Ordering::Relaxed) {
+            0 => None,
+            _ => Some(Duration::from_nanos(self.window_nanos.load(Ordering::Relaxed))),
+        }
+    }
+
+    /// The window a drain should honor right now.
+    fn effective_wait(&self) -> Duration {
+        match self.adaptive_cap.load(Ordering::Relaxed) {
+            0 => self.cfg.max_wait,
+            _ => Duration::from_nanos(self.window_nanos.load(Ordering::Relaxed)),
+        }
+    }
+
+    /// Feed the adaptive controller one drain observation: `take` items
+    /// left with this batch, `remaining` stayed queued. Relaxed atomics
+    /// — concurrent drainers may interleave updates, which only jitters
+    /// the window inside its `[0, cap]` bounds.
+    fn adapt(&self, take: usize, remaining: usize) {
+        let cap = self.adaptive_cap.load(Ordering::Relaxed);
+        if cap == 0 {
+            return;
+        }
+        let cur = self.window_nanos.load(Ordering::Relaxed);
+        if take >= self.cfg.max_batch || remaining > 0 {
+            // Sustained load: a full batch (or a backlog we could not
+            // fit) means arrivals outpace drains — widen the window so
+            // the next batches amortize more per apply. The growth step
+            // floor (cap/64, ≥ 1 µs) gets a zero window moving.
+            let step = (cap / 64).max(1_000);
+            let grown = cur.saturating_mul(2).max(step).min(cap);
+            self.window_nanos.store(grown, Ordering::Relaxed);
+        } else if take.saturating_mul(2) <= self.cfg.max_batch {
+            // Light traffic that drained the queue dry: collapse toward
+            // zero so a lone request is never held waiting for phantom
+            // stragglers.
+            self.window_nanos.store(cur / 2, Ordering::Relaxed);
+        }
     }
 
     /// Enqueue one request (producer side). Errors instead of blocking
@@ -83,17 +163,20 @@ impl<T> BatchQueue<T> {
                 }
                 g = self.cv.wait(g).unwrap();
             }
-            // Batch window: wait for more arrivals up to max_wait from
-            // the oldest pending request. The front is re-read on every
-            // iteration — a sibling drainer may have taken the request we
-            // measured from while we were parked in wait_timeout.
+            // Batch window: wait for more arrivals up to the current
+            // window (fixed max_wait, or the live adaptive value)
+            // measured from the oldest pending request. The front is
+            // re-read on every iteration — a sibling drainer may have
+            // taken the request we measured from while we were parked in
+            // wait_timeout.
+            let max_wait = self.effective_wait();
             while g.queue.len() < self.cfg.max_batch && !g.closed {
                 let oldest = g.queue.front().unwrap().1;
                 let elapsed = oldest.elapsed();
-                if elapsed >= self.cfg.max_wait {
+                if elapsed >= max_wait {
                     break;
                 }
-                let (g2, timeout) = self.cv.wait_timeout(g, self.cfg.max_wait - elapsed).unwrap();
+                let (g2, timeout) = self.cv.wait_timeout(g, max_wait - elapsed).unwrap();
                 g = g2;
                 if g.queue.is_empty() {
                     break;
@@ -109,12 +192,15 @@ impl<T> BatchQueue<T> {
             }
             let take = g.queue.len().min(self.cfg.max_batch);
             let batch: Vec<T> = g.queue.drain(..take).map(|(t, _)| t).collect();
-            if !g.queue.is_empty() {
+            let remaining = g.queue.len();
+            if remaining > 0 {
                 // Work remains beyond what fit in this batch: hand it to
                 // an idle sibling now instead of leaving it until the
                 // next push's notify (which may never come).
                 self.cv.notify_one();
             }
+            drop(g);
+            self.adapt(take, remaining);
             return Some(batch);
         }
     }
@@ -263,6 +349,70 @@ mod tests {
         q.close();
         let total: usize = drainers.into_iter().map(|d| d.join().unwrap()).sum();
         assert_eq!(total, 20);
+    }
+
+    #[test]
+    fn adaptive_window_grows_under_load_and_collapses_when_idle() {
+        let q = BatchQueue::new(BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(50),
+            queue_cap: 256,
+        });
+        // fixed-window queue reports no adaptive window
+        assert_eq!(q.adaptive_window(), None);
+        q.set_adaptive(Duration::from_millis(2));
+        // starts collapsed: a lone request dispatches without a hold
+        assert_eq!(q.adaptive_window(), Some(Duration::ZERO));
+        let t0 = Instant::now();
+        q.push(0).unwrap();
+        assert_eq!(q.next_batch().unwrap(), vec![0]);
+        assert!(t0.elapsed() < Duration::from_millis(40), "zero window must not hold a lone request");
+
+        // sustained load: full batches (with backlog) grow the window
+        for i in 0..12 {
+            q.push(i).unwrap();
+        }
+        let mut grown = Duration::ZERO;
+        for _ in 0..3 {
+            assert_eq!(q.next_batch().unwrap().len(), 4);
+            let w = q.adaptive_window().unwrap();
+            assert!(w >= grown, "window must be nondecreasing under sustained load");
+            grown = w;
+        }
+        assert!(grown > Duration::ZERO, "full batches must open the window");
+        assert!(grown <= Duration::from_millis(2), "window never exceeds the cap");
+
+        // idle trickle: singleton drains that empty the queue collapse it
+        for _ in 0..40 {
+            q.push(99).unwrap();
+            q.next_batch().unwrap();
+            if q.adaptive_window() == Some(Duration::ZERO) {
+                break;
+            }
+        }
+        assert_eq!(q.adaptive_window(), Some(Duration::ZERO), "idleness must collapse the window");
+    }
+
+    #[test]
+    fn adaptive_window_caps_at_configured_limit() {
+        let q = BatchQueue::new(BatcherConfig {
+            max_batch: 2,
+            max_wait: Duration::from_secs(10), // irrelevant once adaptive
+            queue_cap: 4096,
+        });
+        let cap = Duration::from_micros(500);
+        q.set_adaptive(cap);
+        // hammer the controller with saturated drains; the window must
+        // converge to the cap and stay there
+        for round in 0..64 {
+            for i in 0..4 {
+                q.push(round * 4 + i).unwrap();
+            }
+            q.next_batch().unwrap();
+            q.next_batch().unwrap();
+            assert!(q.adaptive_window().unwrap() <= cap);
+        }
+        assert_eq!(q.adaptive_window(), Some(cap));
     }
 
     #[test]

@@ -23,7 +23,10 @@
 //! no zeroed imaginary vector is allocated, queued, transformed, or
 //! returned.
 //!
-//! - [`batcher`] — the MPMC dynamic batching queue (max batch / max wait).
+//! - [`batcher`] — the MPMC dynamic batching queue (max batch / max
+//!   wait, plus opt-in deadline-driven **adaptive windows** that grow
+//!   toward a cap under sustained load and collapse when idle —
+//!   [`BatchQueue::set_adaptive`]).
 //! - [`service`] — [`ServicePool`]: `W` workers sharing one
 //!   `Arc<dyn LinearOp>`, each with a private
 //!   [`OpWorkspace`](crate::transforms::op::OpWorkspace); sync [`call`]
@@ -39,4 +42,4 @@ pub mod service;
 
 pub use batcher::{BatchQueue, BatcherConfig};
 pub use router::Router;
-pub use service::{ServiceHandle, ServicePool, ServiceStats, Ticket};
+pub use service::{ServiceHandle, ServicePool, ServiceStats, Ticket, BATCH_BUCKETS};

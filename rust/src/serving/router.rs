@@ -70,9 +70,40 @@ impl Router {
     }
 
     /// Everything the router served, aggregated across routes with
-    /// served-weighted means (see [`ServiceStats::merge`]).
+    /// served-weighted means (see [`ServiceStats::merge`]); the live
+    /// `queue_depth`/`in_flight` gauges sum across routes.
     pub fn overall(&self) -> ServiceStats {
         ServiceStats::merge(self.routes.values().map(|p| p.stats()))
+    }
+
+    /// Borrow `name`'s pool directly — for pool-level operations the
+    /// handle can't do ([`swap_op`](ServicePool::swap_op),
+    /// [`set_adaptive_window`](ServicePool::set_adaptive_window),
+    /// live gauges).
+    pub fn pool(&self, name: &str) -> Option<&ServicePool> {
+        self.routes.get(name)
+    }
+
+    /// Hot-swap `name`'s served op (see [`ServicePool::swap_op`]).
+    pub fn swap_op(&self, name: &str, op: Arc<dyn LinearOp>) -> Result<(), String> {
+        self.routes.get(name).ok_or_else(|| format!("no route '{name}'"))?.swap_op(op)
+    }
+
+    /// Enable adaptive batch windows on `name`'s queue, or on every
+    /// route when `name` is `None`.
+    pub fn set_adaptive_window(&self, name: Option<&str>, cap: std::time::Duration) -> Result<(), String> {
+        match name {
+            Some(n) => {
+                self.routes.get(n).ok_or_else(|| format!("no route '{n}'"))?.set_adaptive_window(cap);
+                Ok(())
+            }
+            None => {
+                for pool in self.routes.values() {
+                    pool.set_adaptive_window(cap);
+                }
+                Ok(())
+            }
+        }
     }
 
     /// Shut every pool down (drain, join workers), returning final
@@ -182,7 +213,30 @@ mod tests {
             assert_eq!(fin[name].served, 50);
         }
         assert_eq!(overall.served, 100);
+        // quiescent: the aggregated live gauges are back to zero
+        assert_eq!(overall.in_flight, 0);
+        assert_eq!(overall.queue_depth, 0);
         let lat = (fin["dft"].mean_latency_micros * 50.0 + fin["hadamard"].mean_latency_micros * 50.0) / 100.0;
         assert!((overall.mean_latency_micros - lat).abs() < 1e-9);
+    }
+
+    #[test]
+    fn router_exposes_pool_level_controls() {
+        use std::time::Duration;
+        let n = 16;
+        let mut r = Router::new();
+        r.install("dct", plan(TransformKind::Dct, n), 1, BatcherConfig::default());
+        assert!(r.pool("dct").is_some());
+        assert!(r.pool("nope").is_none());
+        assert!(r.swap_op("nope", plan(TransformKind::Dct, n)).is_err());
+        r.swap_op("dct", plan(TransformKind::Dst, n)).unwrap();
+        let got = r.call_real("dct", { let mut x = vec![0.0f32; n]; x[2] = 1.0; x }).unwrap();
+        let d = crate::transforms::matrices::dst_matrix(n);
+        for i in 0..n {
+            assert!((got[i] - d.data[i * n + 2]).abs() < 1e-4, "swapped route answers with new op");
+        }
+        assert!(r.set_adaptive_window(Some("nope"), Duration::from_millis(1)).is_err());
+        r.set_adaptive_window(None, Duration::from_millis(1)).unwrap();
+        assert_eq!(r.pool("dct").unwrap().adaptive_window(), Some(Duration::ZERO));
     }
 }

@@ -45,8 +45,18 @@
 use crate::serving::batcher::{BatchQueue, BatcherConfig, PushError};
 use crate::transforms::op::{LinearOp, OpWorkspace};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
-use std::time::Instant;
+use std::sync::{mpsc, Arc, RwLock};
+use std::time::{Duration, Instant};
+
+/// Batch-size histogram bucket upper bounds (inclusive): a drained batch
+/// of size `b` lands in the first bucket with `b <= bound`, or in a
+/// final overflow bucket. Public so the `/metrics` exporter and the
+/// stats snapshot agree on the bucketing scheme.
+pub const BATCH_BUCKETS: [usize; 9] = [1, 2, 4, 8, 16, 32, 64, 128, 256];
+
+fn batch_bucket(b: usize) -> usize {
+    BATCH_BUCKETS.iter().position(|&hi| b <= hi).unwrap_or(BATCH_BUCKETS.len())
+}
 
 /// A request: planar input + reply channel. `im` is empty for
 /// single-plane requests on real routes.
@@ -64,8 +74,13 @@ struct Stats {
     batches: AtomicUsize,
     rejected: AtomicUsize,
     bad_request: AtomicUsize,
+    /// Accepted requests whose reply has not been sent yet (admission
+    /// control reads this; quiescence drives it back to zero).
+    in_flight: AtomicUsize,
     /// Sum of request latencies, microseconds.
     latency_micros: AtomicU64,
+    /// Drained-batch size histogram over [`BATCH_BUCKETS`] + overflow.
+    batch_hist: [AtomicUsize; BATCH_BUCKETS.len() + 1],
 }
 
 /// Snapshot of a pool's counters.
@@ -76,8 +91,14 @@ pub struct ServiceStats {
     pub rejected: usize,
     /// Requests refused before enqueueing (wrong plane lengths).
     pub bad_request: usize,
+    /// Live: requests sitting in the queue at snapshot time.
+    pub queue_depth: usize,
+    /// Live: accepted requests not yet replied to (queued or coalescing).
+    pub in_flight: usize,
     pub mean_latency_micros: f64,
     pub mean_batch: f64,
+    /// Drained-batch size histogram over [`BATCH_BUCKETS`] + overflow.
+    pub batch_hist: [usize; BATCH_BUCKETS.len() + 1],
 }
 
 impl ServiceStats {
@@ -93,8 +114,11 @@ impl ServiceStats {
             batches: 0,
             rejected: 0,
             bad_request: 0,
+            queue_depth: 0,
+            in_flight: 0,
             mean_latency_micros: 0.0,
             mean_batch: 0.0,
+            batch_hist: [0; BATCH_BUCKETS.len() + 1],
         };
         let mut lat_sum = 0.0f64;
         for s in parts {
@@ -103,6 +127,11 @@ impl ServiceStats {
             out.batches += s.batches;
             out.rejected += s.rejected;
             out.bad_request += s.bad_request;
+            out.queue_depth += s.queue_depth;
+            out.in_flight += s.in_flight;
+            for (o, v) in out.batch_hist.iter_mut().zip(s.batch_hist.iter()) {
+                *o += v;
+            }
         }
         if out.served > 0 {
             out.mean_latency_micros = lat_sum / out.served as f64;
@@ -151,6 +180,12 @@ impl ServiceHandle {
         self.complex
     }
 
+    /// The route's vector length (every plane must have exactly this
+    /// many elements).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
     /// Non-blocking submit: validate, enqueue, and return a [`Ticket`]
     /// immediately. `im` must be a full plane, or empty on a real route
     /// (use [`submit_real`](ServiceHandle::submit_real) for that).
@@ -169,13 +204,20 @@ impl ServiceHandle {
         }
         let (tx, rx) = mpsc::channel();
         let req = Request { re, im, reply: tx, enqueued: Instant::now() };
+        // Count the request in-flight *before* the push so a worker's
+        // post-reply decrement can never race ahead of the increment.
+        self.stats.in_flight.fetch_add(1, Ordering::Relaxed);
         match self.queue.push(req) {
             Ok(()) => Ok(Ticket { rx }),
             Err(PushError::Full) => {
+                self.stats.in_flight.fetch_sub(1, Ordering::Relaxed);
                 self.stats.rejected.fetch_add(1, Ordering::Relaxed);
                 Err("queue full (backpressure)".into())
             }
-            Err(PushError::Closed) => Err("service shut down".into()),
+            Err(PushError::Closed) => {
+                self.stats.in_flight.fetch_sub(1, Ordering::Relaxed);
+                Err("service shut down".into())
+            }
         }
     }
 
@@ -202,18 +244,33 @@ impl ServiceHandle {
     pub fn stats(&self) -> ServiceStats {
         let served = self.stats.served.load(Ordering::Relaxed);
         let batches = self.stats.batches.load(Ordering::Relaxed);
+        let mut batch_hist = [0usize; BATCH_BUCKETS.len() + 1];
+        for (o, c) in batch_hist.iter_mut().zip(self.stats.batch_hist.iter()) {
+            *o = c.load(Ordering::Relaxed);
+        }
         ServiceStats {
             served,
             batches,
             rejected: self.stats.rejected.load(Ordering::Relaxed),
             bad_request: self.stats.bad_request.load(Ordering::Relaxed),
+            queue_depth: self.queue.len(),
+            in_flight: self.stats.in_flight.load(Ordering::Relaxed),
             mean_latency_micros: if served > 0 {
                 self.stats.latency_micros.load(Ordering::Relaxed) as f64 / served as f64
             } else {
                 0.0
             },
             mean_batch: if batches > 0 { served as f64 / batches as f64 } else { 0.0 },
+            batch_hist,
         }
+    }
+
+    /// Live count of accepted requests whose reply has not been sent
+    /// yet. This is what admission control budgets against: it covers
+    /// both queued requests and those being coalesced/applied right now,
+    /// and returns to zero once the route is quiescent.
+    pub fn in_flight(&self) -> usize {
+        self.stats.in_flight.load(Ordering::Relaxed)
     }
 
     pub fn pending(&self) -> usize {
@@ -227,6 +284,12 @@ pub struct ServicePool {
     pub name: String,
     handle: ServiceHandle,
     queue: Arc<BatchQueue<Request>>,
+    /// The served op, swappable at runtime ([`swap_op`]): workers
+    /// re-read the slot once per drained batch, so a swap lands on batch
+    /// granularity without dropping anything already queued.
+    ///
+    /// [`swap_op`]: ServicePool::swap_op
+    op_slot: Arc<RwLock<Arc<dyn LinearOp>>>,
     /// Batches drained per worker (observability: proves siblings
     /// participate instead of one lane serializing everything).
     worker_batches: Arc<Vec<AtomicUsize>>,
@@ -252,11 +315,12 @@ impl ServicePool {
         let handle =
             ServiceHandle { n, complex, queue: Arc::clone(&queue), stats: Arc::clone(&stats) };
         let w = workers.max(1);
+        let op_slot: Arc<RwLock<Arc<dyn LinearOp>>> = Arc::new(RwLock::new(op));
         let worker_batches: Arc<Vec<AtomicUsize>> =
             Arc::new((0..w).map(|_| AtomicUsize::new(0)).collect());
         let workers = (0..w)
             .map(|wi| {
-                let op = Arc::clone(&op);
+                let wslot = Arc::clone(&op_slot);
                 let wq = Arc::clone(&queue);
                 let wstats = Arc::clone(&stats);
                 let wloads = Arc::clone(&worker_batches);
@@ -268,6 +332,9 @@ impl ServicePool {
                         let mut re: Vec<f32> = Vec::new();
                         let mut im: Vec<f32> = Vec::new();
                         while let Some(batch) = wq.next_batch() {
+                            // Re-read the op slot per batch: a hot-swap
+                            // takes effect here, on a batch boundary.
+                            let op = Arc::clone(&*wslot.read().expect("op slot poisoned"));
                             let b = batch.len();
                             let len = b * n;
                             re.resize(len, 0.0);
@@ -305,6 +372,7 @@ impl ServicePool {
                             // batch it was part of.
                             wstats.served.fetch_add(b, Ordering::Relaxed);
                             wstats.batches.fetch_add(1, Ordering::Relaxed);
+                            wstats.batch_hist[batch_bucket(b)].fetch_add(1, Ordering::Relaxed);
                             wloads[wi].fetch_add(1, Ordering::Relaxed);
                             let now = Instant::now();
                             for (i, r) in batch.into_iter().enumerate() {
@@ -319,6 +387,13 @@ impl ServicePool {
                                 }
                                 let lat = now.duration_since(enqueued).as_micros() as u64;
                                 wstats.latency_micros.fetch_add(lat, Ordering::Relaxed);
+                                // decrement BEFORE the send (counters
+                                // first): once a client holds its reply,
+                                // its request must no longer be counted
+                                // in-flight — that is what lets tests
+                                // (and admission control) assert the
+                                // gauge is zero at quiescence.
+                                wstats.in_flight.fetch_sub(1, Ordering::Relaxed);
                                 let _ = reply.send((out_re, out_im));
                             }
                         }
@@ -326,7 +401,56 @@ impl ServicePool {
                     .expect("spawn pool worker")
             })
             .collect();
-        ServicePool { name, handle, queue, worker_batches, workers }
+        ServicePool { name, handle, queue, op_slot, worker_batches, workers }
+    }
+
+    /// Atomically replace the served op (admin hot-reload). The new op
+    /// must match the route's shape contract — same `n()` and the same
+    /// `is_complex()` — because every queued request was already
+    /// validated against those; on mismatch the swap is refused and the
+    /// old op keeps serving. Nothing queued is dropped: workers pick up
+    /// the new op at their next drained batch.
+    pub fn swap_op(&self, op: Arc<dyn LinearOp>) -> Result<(), String> {
+        if op.n() != self.handle.n {
+            return Err(format!(
+                "hot-swap refused: route '{}' serves n={} but new op has n={}",
+                self.name,
+                self.handle.n,
+                op.n()
+            ));
+        }
+        if op.is_complex() != self.handle.complex {
+            return Err(format!(
+                "hot-swap refused: route '{}' has is_complex={} but new op reports {}",
+                self.name,
+                self.handle.complex,
+                op.is_complex()
+            ));
+        }
+        *self.op_slot.write().expect("op slot poisoned") = op;
+        Ok(())
+    }
+
+    /// Enable deadline-driven adaptive batch windows on this route's
+    /// queue (see [`BatchQueue::set_adaptive`]).
+    pub fn set_adaptive_window(&self, cap: Duration) {
+        self.queue.set_adaptive(cap);
+    }
+
+    /// Current adaptive window, `None` when running fixed windows.
+    pub fn adaptive_window(&self) -> Option<Duration> {
+        self.queue.adaptive_window()
+    }
+
+    /// Requests sitting in this route's queue right now.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Accepted requests not yet replied to (see
+    /// [`ServiceHandle::in_flight`]).
+    pub fn in_flight(&self) -> usize {
+        self.handle.in_flight()
     }
 
     pub fn handle(&self) -> ServiceHandle {
@@ -516,10 +640,52 @@ mod tests {
         for c in clients {
             c.join().unwrap();
         }
+        // All clients joined: the route is quiescent, so the live gauges
+        // must have returned to zero.
+        let live = h.stats();
+        assert_eq!(live.in_flight, 0, "quiescent route must report zero in-flight");
+        assert_eq!(live.queue_depth, 0, "quiescent route must report an empty queue");
+        assert_eq!(
+            live.batch_hist.iter().sum::<usize>(),
+            live.batches,
+            "every drained batch lands in exactly one histogram bucket"
+        );
         let stats = svc.shutdown();
         assert_eq!(stats.served, 8);
         assert!(stats.mean_batch >= 1.0);
         assert!(stats.mean_latency_micros > 0.0);
+    }
+
+    #[test]
+    fn hot_swap_changes_answers_without_dropping_requests() {
+        let n = 16;
+        let svc = ServicePool::spawn(
+            "route",
+            plan(TransformKind::Dct, n),
+            2,
+            BatcherConfig { max_batch: 4, max_wait: Duration::from_micros(200), queue_cap: 256 },
+        );
+        let h = svc.handle();
+        let dct = crate::transforms::matrices::dct_matrix(n);
+        let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+        let before = h.call_real(x.clone()).unwrap();
+        let want_dct = dct.matvec(&x);
+        for i in 0..n {
+            assert!((before[i] - want_dct[i]).abs() < 1e-4);
+        }
+        // shape-mismatched swaps are refused, old op keeps serving
+        assert!(svc.swap_op(plan(TransformKind::Dct, 2 * n)).is_err(), "wrong n");
+        assert!(svc.swap_op(stack_op("dft", &dft_stack(n))).is_err(), "complex on a real route");
+        // a matching real op swaps in atomically
+        svc.swap_op(plan(TransformKind::Dst, n)).unwrap();
+        let after = h.call_real(x.clone()).unwrap();
+        let want_dst = crate::transforms::matrices::dst_matrix(n).matvec(&x);
+        for i in 0..n {
+            assert!((after[i] - want_dst[i]).abs() < 1e-4, "post-swap answer must be the new op's");
+        }
+        let stats = svc.shutdown();
+        assert_eq!(stats.served, 2);
+        assert_eq!(stats.in_flight, 0);
     }
 
     #[test]
@@ -572,27 +738,42 @@ mod tests {
 
     #[test]
     fn merge_weights_means_by_served() {
+        let mut hist_a = [0usize; BATCH_BUCKETS.len() + 1];
+        hist_a[3] = 3;
+        let mut hist_b = [0usize; BATCH_BUCKETS.len() + 1];
+        hist_b[3] = 1;
+        hist_b[0] = 1;
         let a = ServiceStats {
             served: 30,
             batches: 3,
             rejected: 1,
             bad_request: 0,
+            queue_depth: 2,
+            in_flight: 3,
             mean_latency_micros: 100.0,
             mean_batch: 10.0,
+            batch_hist: hist_a,
         };
         let b = ServiceStats {
             served: 10,
             batches: 2,
             rejected: 0,
             bad_request: 2,
+            queue_depth: 1,
+            in_flight: 4,
             mean_latency_micros: 500.0,
             mean_batch: 5.0,
+            batch_hist: hist_b,
         };
         let m = ServiceStats::merge([a, b]);
         assert_eq!(m.served, 40);
         assert_eq!(m.batches, 5);
         assert_eq!(m.rejected, 1);
         assert_eq!(m.bad_request, 2);
+        assert_eq!(m.queue_depth, 3, "live gauges sum across routes");
+        assert_eq!(m.in_flight, 7);
+        assert_eq!(m.batch_hist[3], 4, "histograms merge elementwise");
+        assert_eq!(m.batch_hist[0], 1);
         // (30·100 + 10·500) / 40 = 200, not the first part's 100
         assert!((m.mean_latency_micros - 200.0).abs() < 1e-9);
         assert!((m.mean_batch - 8.0).abs() < 1e-9);

@@ -1,0 +1,231 @@
+//! HTTP-layer property tests against a live loopback server: malformed
+//! request lines, oversized headers/bodies, truncated writes, pipelined
+//! keep-alive, and bad JSON — every one must map to the documented
+//! status (400/413) or a silent close, and none may wedge or kill the
+//! server. The in-memory equivalents live in `net::http`'s unit tests;
+//! this suite proves the connection loop wires them to real sockets.
+
+use butterfly::net::http;
+use butterfly::net::{Server, ServerConfig};
+use butterfly::serving::{BatcherConfig, Router};
+use butterfly::transforms::op::plan;
+use butterfly::transforms::spec::TransformKind;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+fn start_server(max_connections: usize) -> Server {
+    let mut router = Router::new();
+    router.install("dct", plan(TransformKind::Dct, 8), 1, BatcherConfig::default());
+    Server::start(
+        router,
+        ServerConfig {
+            listen: "127.0.0.1:0".into(),
+            max_connections,
+            inflight_budget: 512,
+            adaptive_cap: None,
+            fuse: None,
+        },
+    )
+    .expect("bind loopback")
+}
+
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Conn {
+    fn open(addr: &str) -> Conn {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_nodelay(true).ok();
+        let read_half = stream.try_clone().expect("clone");
+        Conn { reader: BufReader::new(read_half), writer: BufWriter::new(stream) }
+    }
+
+    fn send(&mut self, raw: &[u8]) {
+        self.writer.write_all(raw).unwrap();
+        self.writer.flush().unwrap();
+    }
+
+    fn response(&mut self) -> (u16, Vec<u8>) {
+        http::read_response(&mut self.reader).expect("response")
+    }
+
+    /// True when the server closed the connection (clean EOF).
+    fn at_eof(&mut self) -> bool {
+        matches!(self.reader.fill_buf(), Ok(buf) if buf.is_empty())
+    }
+}
+
+fn server_is_alive(addr: &str) {
+    let mut c = Conn::open(addr);
+    c.send(b"GET /healthz HTTP/1.1\r\n\r\n");
+    let (status, body) = c.response();
+    assert_eq!(status, 200);
+    assert_eq!(body, b"ok\n");
+}
+
+#[test]
+fn malformed_request_lines_get_400_then_close() {
+    let server = start_server(64);
+    let addr = server.local_addr().to_string();
+    let bads: [&[u8]; 5] = [
+        b"GARBAGE\r\n\r\n",
+        b"GET /healthz HTTP/2.0\r\n\r\n",
+        b"get /healthz HTTP/1.1\r\n\r\n",
+        b"GET healthz HTTP/1.1\r\n\r\n",
+        b"\xff\xfe\xfd bytes that are not utf-8\r\n\r\n",
+    ];
+    for raw in bads {
+        let mut c = Conn::open(&addr);
+        c.send(raw);
+        let (status, _) = c.response();
+        assert_eq!(status, 400, "{:?}", String::from_utf8_lossy(raw));
+        assert!(c.at_eof(), "protocol violations close the connection");
+    }
+    server_is_alive(&addr);
+    server.shutdown_handle().drain();
+    server.join();
+}
+
+#[test]
+fn oversize_inputs_get_413() {
+    let server = start_server(64);
+    let addr = server.local_addr().to_string();
+    // request line far over the 8K limit
+    let mut c = Conn::open(&addr);
+    c.send(format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(10_000)).as_bytes());
+    assert_eq!(c.response().0, 413);
+    // one oversized header line
+    let mut c = Conn::open(&addr);
+    c.send(format!("GET /healthz HTTP/1.1\r\nx-big: {}\r\n\r\n", "b".repeat(10_000)).as_bytes());
+    assert_eq!(c.response().0, 413);
+    // too many headers
+    let mut c = Conn::open(&addr);
+    let mut raw = String::from("GET /healthz HTTP/1.1\r\n");
+    for i in 0..100 {
+        raw.push_str(&format!("x-h{i}: v\r\n"));
+    }
+    raw.push_str("\r\n");
+    c.send(raw.as_bytes());
+    assert_eq!(c.response().0, 413);
+    // declared body over the cap — rejected from the header alone, no
+    // body bytes ever sent
+    let mut c = Conn::open(&addr);
+    c.send(b"POST /v1/apply HTTP/1.1\r\ncontent-length: 9000000\r\n\r\n");
+    assert_eq!(c.response().0, 413);
+    server_is_alive(&addr);
+    server.shutdown_handle().drain();
+    server.join();
+}
+
+#[test]
+fn truncated_and_stalled_requests_are_dropped_not_fatal() {
+    let server = start_server(64);
+    let addr = server.local_addr().to_string();
+    // body cut short, then close: no response, just a dropped connection
+    {
+        let mut c = Conn::open(&addr);
+        c.send(b"POST /v1/apply HTTP/1.1\r\ncontent-length: 100\r\n\r\n{\"ro");
+    } // drop closes our half
+    // headers cut short, then close
+    {
+        let mut c = Conn::open(&addr);
+        c.send(b"GET /healthz HTTP/1.1\r\ncontent-");
+    }
+    // a stalled mid-request connection (bytes written, then silence)
+    // outlives the read timeout and is dropped without desynchronizing
+    // anything else
+    let mut stalled = Conn::open(&addr);
+    stalled.send(b"POST /v1/apply HTTP/1.1\r\ncontent-le");
+    std::thread::sleep(Duration::from_millis(450));
+    let mut probe = [0u8; 1];
+    let n = stalled.reader.read(&mut probe).unwrap_or(0);
+    assert_eq!(n, 0, "stalled connection closed with no response bytes");
+    server_is_alive(&addr);
+    server.shutdown_handle().drain();
+    server.join();
+}
+
+#[test]
+fn pipelined_keep_alive_requests_answer_in_order() {
+    let server = start_server(64);
+    let addr = server.local_addr().to_string();
+    let mut c = Conn::open(&addr);
+    let body = r#"{"route":"dct","re":[[1,0,0,0,0,0,0,0]],"tag":42}"#;
+    let mut raw = String::new();
+    raw.push_str("GET /healthz HTTP/1.1\r\n\r\n");
+    raw.push_str(&format!(
+        "POST /v1/apply HTTP/1.1\r\ncontent-length: {}\r\n\r\n{body}",
+        body.len()
+    ));
+    raw.push_str("GET /v1/routes HTTP/1.1\r\n\r\n");
+    c.send(raw.as_bytes());
+    let (s1, b1) = c.response();
+    assert_eq!((s1, b1.as_slice()), (200, b"ok\n".as_slice()));
+    let (s2, b2) = c.response();
+    assert_eq!(s2, 200);
+    assert!(String::from_utf8_lossy(&b2).contains("\"tag\":42"));
+    let (s3, b3) = c.response();
+    assert_eq!(s3, 200);
+    assert!(String::from_utf8_lossy(&b3).contains("\"name\":\"dct\""));
+    server.shutdown_handle().drain();
+    server.join();
+}
+
+#[test]
+fn bad_json_is_400_and_keeps_the_connection_and_server() {
+    let server = start_server(64);
+    let addr = server.local_addr().to_string();
+    let mut c = Conn::open(&addr);
+    // bad JSON is an application-level 400 — well-formed HTTP, so the
+    // keep-alive connection survives and the next request answers
+    let bad = "{\"route\":\"dct\",\"re\":[[1,2,";
+    c.send(
+        format!("POST /v1/apply HTTP/1.1\r\ncontent-length: {}\r\n\r\n{bad}", bad.len())
+            .as_bytes(),
+    );
+    let (status, body) = c.response();
+    assert_eq!(status, 400);
+    assert!(String::from_utf8_lossy(&body).contains("error"));
+    let good = r#"{"route":"dct","re":[[0,1,0,0,0,0,0,0]]}"#;
+    c.send(
+        format!("POST /v1/apply HTTP/1.1\r\ncontent-length: {}\r\n\r\n{good}", good.len())
+            .as_bytes(),
+    );
+    assert_eq!(c.response().0, 200, "same connection serves after a 400");
+    server_is_alive(&addr);
+    server.shutdown_handle().drain();
+    server.join();
+}
+
+#[test]
+fn connection_cap_answers_503_with_retry_after() {
+    let server = start_server(1);
+    let addr = server.local_addr().to_string();
+    let mut a = Conn::open(&addr);
+    a.send(b"GET /healthz HTTP/1.1\r\n\r\n");
+    assert_eq!(a.response().0, 200, "first connection is in");
+    let mut b = Conn::open(&addr);
+    b.send(b"GET /healthz HTTP/1.1\r\n\r\n");
+    let (status, _) = b.response();
+    assert_eq!(status, 503, "second connection is over the cap");
+    assert!(b.at_eof(), "refused connections are closed");
+    drop(a);
+    drop(b);
+    // once the parked connection notices the close (≤ one read timeout)
+    // a newcomer fits under the cap again
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let mut c = Conn::open(&addr);
+        c.send(b"GET /healthz HTTP/1.1\r\n\r\n");
+        if c.response().0 == 200 {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "slot never freed");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    server.shutdown_handle().drain();
+    server.join();
+}

@@ -74,10 +74,21 @@ fn soak_every_reply_matches_dense_reference() {
     // reply was sent, so with all clients joined this snapshot is exact
     let loads = pool.worker_loads();
     let active = loads.iter().filter(|&&b| b > 0).count();
+    // all clients joined ⇒ the pool is quiescent and the live gauges
+    // (which admission control budgets against) are back to zero
+    assert_eq!(pool.in_flight(), 0, "quiescent pool must report zero in-flight");
+    assert_eq!(pool.queue_depth(), 0, "quiescent pool must report an empty queue");
     let stats = pool.shutdown();
     assert_eq!(stats.served, clients * per_client);
     assert_eq!(stats.rejected, 0);
     assert_eq!(stats.bad_request, 0);
+    assert_eq!(stats.in_flight, 0);
+    assert_eq!(stats.queue_depth, 0);
+    assert_eq!(
+        stats.batch_hist.iter().sum::<usize>(),
+        stats.batches,
+        "every drained batch lands in exactly one histogram bucket"
+    );
     // on a single-core machine the OS may legitimately let one worker
     // drain everything; with real parallelism the shared queue must not
     if parallel_cores() >= 2 {
@@ -236,6 +247,8 @@ fn shutdown_while_pending_drains_every_accepted_request_exactly_once() {
     // the whole backlog before joining
     let stats = pool.shutdown();
     assert_eq!(stats.served, total, "shutdown must drain every accepted request");
+    assert_eq!(stats.in_flight, 0, "drained pool must report zero in-flight");
+    assert_eq!(stats.queue_depth, 0);
     for (i, t) in tickets.into_iter().enumerate() {
         let (re, im) = t.wait().unwrap_or_else(|e| panic!("ticket {i} dropped: {e}"));
         assert!(re.iter().chain(im.iter()).all(|v| v.is_finite()));

@@ -35,7 +35,7 @@ fn identity_levels(p: &mut BpParams) {
 /// unit j gets `scale · [[1, w_j], [1, −w_j]]`, `w_j = e^{sign·2πi·j/m}`.
 /// `sign = −1` is the forward DFT (ε twiddles), `+1` the inverse.
 /// `scale = 1/√2` yields the unitary transform after all L levels.
-fn fft_levels(p: &mut BpParams, sign: f64, scale: f32) {
+pub(crate) fn fft_levels(p: &mut BpParams, sign: f64, scale: f32) {
     assert_eq!(p.twiddle_tying, TwiddleTying::Factor, "FFT twiddles are factor-tied by nature");
     for l in 0..p.levels {
         let m = (1usize << (l + 1)) as f64;
@@ -56,7 +56,7 @@ fn fft_levels(p: &mut BpParams, sign: f64, scale: f32) {
 /// Fold a left diagonal `diag(d)` into the **top** butterfly factor
 /// (level L−1, single block): row `k` of the factor is scaled by `d_k`.
 /// Unit `j` owns rows `j` and `j + N/2`.
-fn fold_diag_top(p: &mut BpParams, d: &[Cpx]) {
+pub(crate) fn fold_diag_top(p: &mut BpParams, d: &[Cpx]) {
     let n = p.n;
     assert_eq!(d.len(), n);
     let l = p.levels - 1;

@@ -1,0 +1,333 @@
+//! Closed-form butterfly identification via hierarchical two-factor
+//! SVDs (Zheng–Riccietti–Gribonval 2021).
+//!
+//! The paper's §4.1 experiments recover transforms by Adam from random
+//! init; this module recovers them **with zero optimizer steps** when
+//! the target is exactly butterfly. The key structural fact: if
+//! `S = B_ℓ · diag(R0, R1)` is an m×m butterfly product (top factor
+//! `B_ℓ` mixing rows `j` and `j+m/2`, lower levels block-diagonal over
+//! the two halves), then for every `j` the 2×(m/2) submatrix
+//! `S[{j, j+m/2}, 0..m/2]` is **rank 1** — its best rank-1 factors are
+//! the unit column `(g00, g10)` and row `j` of `R0` (and the right
+//! half gives `(g01, g11)` and `R1`). One SVD per unit peels the top
+//! factor; recursing on `R0`/`R1` peels the whole hierarchy in
+//! O(N²) work. On an exactly-butterfly target every truncation is
+//! exact, so the product reconstructs to fp32 roundoff; otherwise the
+//! rank-1 truncations give the *hierarchically optimal* projection —
+//! the warm start the coordinator can hand to Adam instead of random
+//! init.
+//!
+//! Identification is stated for `B` alone; learned targets are `B · P`.
+//! We search the paper's permutation hypotheses (identity and
+//! bit-reversal — the perms every Proposition-1 closed form uses),
+//! un-permute the columns, peel, and keep the best reconstruction.
+//! Circulant targets (BP², not BP¹) are detected in entry space
+//! (`M[i,j]` depends only on `(i−j) mod n`) and rebuilt closed-form as
+//! a [`KMatrix`] from their eigenvalue spectrum.
+
+use crate::butterfly::kmatrix::KMatrix;
+use crate::butterfly::module::{BpModule, BpStack};
+use crate::butterfly::params::{log2_exact, BpParams, Field, PermTying, TwiddleTying};
+use crate::butterfly::permutation::hard_perm_table;
+use crate::linalg::complex::Cpx;
+use crate::linalg::dense::CMat;
+use crate::linalg::svd::svd_complex;
+
+/// Relative reconstruction error below which a target counts as
+/// *exactly identified* (fp32 roundoff through log₂N peeled levels).
+pub const EXACT_REL_RMSE: f64 = 1e-4;
+
+/// Result of [`identify`]: the best closed-form candidate.
+pub struct Identified {
+    /// The reconstructed stack (depth 1 for plain butterfly, depth 2
+    /// for a circulant K-matrix). Ready for `stack_op`, `FastBp`, or as
+    /// a training warm start.
+    pub stack: BpStack,
+    /// `CMat::rmse_to` against the target (‖diff‖_F / N for square N×N).
+    pub rmse: f64,
+    /// `rmse` relative to the target's RMS entry magnitude.
+    pub relative: f64,
+    /// `relative < EXACT_REL_RMSE`: the target was recovered closed-form.
+    pub exact: bool,
+    /// Which hypothesis won, e.g. `"butterfly/bit-reversal"`.
+    pub method: &'static str,
+}
+
+/// Peel one hierarchical level: `s` is the `2^{level+1}`-sized
+/// sub-block sitting at block index `block` of its level, `out` the
+/// Block-tied parameter set being filled.
+fn peel(s: &CMat, level: usize, block: usize, out: &mut BpParams) {
+    let m = s.rows;
+    debug_assert_eq!(m, 1 << (level + 1));
+    if m == 2 {
+        // the 2×2 block IS the unit
+        let u = out.unit_index(0, block, 0);
+        out.set_unit(
+            0,
+            u,
+            [
+                [(s.at(0, 0).re, s.at(0, 0).im), (s.at(0, 1).re, s.at(0, 1).im)],
+                [(s.at(1, 0).re, s.at(1, 0).im), (s.at(1, 1).re, s.at(1, 1).im)],
+            ],
+        );
+        return;
+    }
+    let h = m / 2;
+    let mut r0 = CMat::zeros(h, h);
+    let mut r1 = CMat::zeros(h, h);
+    for j in 0..h {
+        // left half → (g00, g10) + row j of R0; right half → (g01, g11)
+        // + row j of R1. If a 2×h block is zero its σ is 0, the R row
+        // comes out zero, and the (arbitrary-gauge) unit column is
+        // multiplied by that zero row — the product stays exact.
+        let left = CMat::from_fn(2, h, |r, c| s.at(if r == 0 { j } else { j + h }, c));
+        let sl = svd_complex(&left);
+        let (g00, g10) = (sl.u.at(0, 0), sl.u.at(1, 0));
+        for c in 0..h {
+            r0.set(j, c, sl.vh.at(0, c).scale(sl.s[0]));
+        }
+        let right = CMat::from_fn(2, h, |r, c| s.at(if r == 0 { j } else { j + h }, c + h));
+        let sr = svd_complex(&right);
+        let (g01, g11) = (sr.u.at(0, 0), sr.u.at(1, 0));
+        for c in 0..h {
+            r1.set(j, c, sr.vh.at(0, c).scale(sr.s[0]));
+        }
+        let u = out.unit_index(level, block, j);
+        out.set_unit(
+            level,
+            u,
+            [[(g00.re, g00.im), (g01.re, g01.im)], [(g10.re, g10.im), (g11.re, g11.im)]],
+        );
+    }
+    peel(&r0, level - 1, 2 * block, out);
+    peel(&r1, level - 1, 2 * block + 1, out);
+}
+
+/// Hierarchically factor `b` (N×N, N a power of two ≥ 2) into one
+/// Block-tied butterfly matrix with a fixed identity permutation — no
+/// optimizer. Exact when `b` is exactly butterfly; otherwise the
+/// truncated hierarchical SVD projection. Callers modeling `B·P` can
+/// re-fix the permutation to their hypothesis afterwards.
+pub fn peel_butterfly(b: &CMat) -> BpParams {
+    let n = b.rows;
+    assert_eq!(b.cols, n, "identification wants a square target");
+    let levels = log2_exact(n);
+    let mut p = BpParams::new(n, Field::Complex, TwiddleTying::Block, PermTying::Untied);
+    peel(b, levels - 1, 0, &mut p);
+    p.fix_identity_perm();
+    p
+}
+
+/// Gather `out[:, j] = m[:, t[j]]`: for a target `M = B·P` with
+/// `(Px)[i] = x[t[i]]`, this recovers the butterfly part `B`.
+fn gather_cols(m: &CMat, t: &[usize]) -> CMat {
+    CMat::from_fn(m.rows, m.cols, |i, j| m.at(i, t[j]))
+}
+
+/// Entry-space circulant test: `m` is circulant iff `m[i,j]` depends
+/// only on `(i−j) mod n`. Returns the **unnormalized** eigenvalue
+/// spectrum (DFT of the first column, f64 accumulation) when the
+/// relative down-diagonal residual power is below 1e-6.
+pub fn circulant_spectrum(m: &CMat) -> Option<Vec<Cpx>> {
+    let n = m.rows;
+    if m.cols != n || n == 0 {
+        return None;
+    }
+    let mut h = vec![(0.0f64, 0.0f64); n];
+    for (k, hk) in h.iter_mut().enumerate() {
+        for i in 0..n {
+            let e = m.at((i + k) % n, i);
+            hk.0 += e.re as f64;
+            hk.1 += e.im as f64;
+        }
+        hk.0 /= n as f64;
+        hk.1 /= n as f64;
+    }
+    let (mut resid, mut total) = (0.0f64, 0.0f64);
+    for (k, hk) in h.iter().enumerate() {
+        for i in 0..n {
+            let e = m.at((i + k) % n, i);
+            let (dr, di) = (e.re as f64 - hk.0, e.im as f64 - hk.1);
+            resid += dr * dr + di * di;
+            total += e.re as f64 * e.re as f64 + e.im as f64 * e.im as f64;
+        }
+    }
+    if resid > 1e-6 * total.max(1e-30) {
+        return None;
+    }
+    let spectrum = (0..n)
+        .map(|k| {
+            let (mut ar, mut ai) = (0.0f64, 0.0f64);
+            for (j, hj) in h.iter().enumerate() {
+                let th = -2.0 * std::f64::consts::PI * (k as f64) * (j as f64) / n as f64;
+                let (c, s) = (th.cos(), th.sin());
+                ar += hj.0 * c - hj.1 * s;
+                ai += hj.0 * s + hj.1 * c;
+            }
+            Cpx::new(ar as f32, ai as f32)
+        })
+        .collect();
+    Some(spectrum)
+}
+
+/// The permutation hypotheses searched: the two hard perms every
+/// Proposition-1 closed form uses. `[bool; 3]` are the per-step
+/// `{a, b, c}` gate choices of the relaxed permutation.
+fn perm_hypotheses(levels: usize) -> [(&'static str, &'static str, Vec<[bool; 3]>); 2] {
+    [
+        ("butterfly/identity", "kmatrix-circulant/identity", vec![[false, false, false]; levels]),
+        (
+            "butterfly/bit-reversal",
+            "kmatrix-circulant/bit-reversal",
+            vec![[true, false, false]; levels],
+        ),
+    ]
+}
+
+/// Identify `target` against every closed-form hypothesis — plain
+/// butterfly and circulant K-matrix, each under identity and
+/// bit-reversal permutations — and return the best reconstruction.
+/// `exact` means the target was recovered to fp32 roundoff with zero
+/// optimizer steps; otherwise the stack is the truncated hierarchical
+/// SVD **warm start** (hand it to the trainer in place of random init).
+pub fn identify(target: &CMat) -> Identified {
+    let n = target.rows;
+    assert_eq!(target.cols, n, "identification wants a square target");
+    let levels = log2_exact(n);
+    let rms = (target.frobenius_norm() / n as f64).max(1e-30);
+    let mut best: Option<Identified> = None;
+    let mut consider = |stack: BpStack, method: &'static str, best: &mut Option<Identified>| {
+        let rmse = stack.rmse_to(target);
+        if best.as_ref().map_or(true, |b| rmse < b.rmse) {
+            let relative = rmse / rms;
+            *best =
+                Some(Identified { stack, rmse, relative, exact: relative < EXACT_REL_RMSE, method });
+        }
+    };
+    for (bf_name, circ_name, choices) in perm_hypotheses(levels) {
+        let t = hard_perm_table(n, &choices);
+        let gathered = gather_cols(target, &t);
+        let mut p = peel_butterfly(&gathered);
+        p.fix_permutation(&choices);
+        consider(BpStack::new(vec![BpModule::new(p)]), bf_name, &mut best);
+        if let Some(d) = circulant_spectrum(&gathered) {
+            // K = F⁻¹·diag(d)·F already applies bit-reversal first; a
+            // bit-reversal hypothesis composes with it to the identity.
+            let mut stack = KMatrix::from_diag_spectrum(&d).into_stack();
+            if choices[0][0] {
+                stack.modules[0].params.fix_identity_perm();
+            }
+            consider(stack, circ_name, &mut best);
+        }
+    }
+    best.expect("at least the butterfly hypotheses were evaluated")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::butterfly::closed_form::{convolution_stack, dft_stack, hadamard_stack};
+    use crate::transforms::matrices;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dft_identified_exactly_bitrev_perm() {
+        for n in [4usize, 16, 64] {
+            let got = identify(&matrices::dft_matrix(n));
+            assert!(got.exact, "n={n}: relative {}", got.relative);
+            assert_eq!(got.method, "butterfly/bit-reversal", "n={n}");
+            assert_eq!(got.stack.depth(), 1);
+        }
+    }
+
+    #[test]
+    fn hadamard_identified_exactly_identity_perm() {
+        for n in [4usize, 16, 64] {
+            let got = identify(&matrices::hadamard_matrix(n).to_cmat());
+            assert!(got.exact, "n={n}: relative {}", got.relative);
+            assert_eq!(got.method, "butterfly/identity", "n={n}");
+        }
+    }
+
+    #[test]
+    fn circulant_identified_as_kmatrix() {
+        let mut rng = Rng::new(9);
+        for n in [8usize, 32] {
+            let mut h = vec![0.0f32; n];
+            rng.fill_normal(&mut h, 0.0, (1.0 / n as f64).sqrt() as f32);
+            let target = matrices::circulant_matrix(&h).to_cmat();
+            let got = identify(&target);
+            assert!(got.exact, "n={n}: relative {}", got.relative);
+            assert_eq!(got.method, "kmatrix-circulant/identity", "n={n}");
+            assert_eq!(got.stack.depth(), 2, "n={n}");
+        }
+    }
+
+    #[test]
+    fn permuted_circulant_identified_under_bitrev_hypothesis() {
+        // target = C · P_bitrev: not circulant in entry space, but the
+        // un-permuted gather is — the K-matrix absorbs the hypothesis
+        // perm into its first module.
+        let n = 16;
+        let mut rng = Rng::new(4);
+        let mut h = vec![0.0f32; n];
+        rng.fill_normal(&mut h, 0.0, (1.0 / n as f64).sqrt() as f32);
+        let c = matrices::circulant_matrix(&h).to_cmat();
+        let choices = vec![[true, false, false]; log2_exact(n)];
+        let t = hard_perm_table(n, &choices);
+        // (C·P)[:, j] = C[:, inv(t)[j]] ⇔ gathering by t recovers C
+        let inv = crate::butterfly::permutation::invert_table(&t);
+        let target = CMat::from_fn(n, n, |i, j| c.at(i, inv[j]));
+        let got = identify(&target);
+        assert!(got.exact, "relative {}", got.relative);
+        assert_eq!(got.method, "kmatrix-circulant/bit-reversal");
+    }
+
+    #[test]
+    fn peel_alone_is_exact_on_a_bare_butterfly_matrix() {
+        // the DFT stack with its bit-reversal stripped is a pure
+        // butterfly matrix B: peel must reconstruct it with no perm
+        // search at all
+        for n in [8usize, 32] {
+            let mut stack = dft_stack(n);
+            stack.modules[0].params.fix_identity_perm();
+            let dense = stack.to_matrix();
+            let p = peel_butterfly(&dense);
+            let rebuilt = BpStack::new(vec![BpModule::new(p)]);
+            let rms = (dense.frobenius_norm() / n as f64).max(1e-30);
+            let rel = rebuilt.rmse_to(&dense) / rms;
+            assert!(rel < EXACT_REL_RMSE, "n={n}: relative {rel}");
+        }
+        for n in [8usize, 32] {
+            let got = identify(&hadamard_stack(n).to_matrix());
+            assert!(got.exact, "n={n}: relative {}", got.relative);
+        }
+    }
+
+    #[test]
+    fn convolution_stack_identified() {
+        let n = 32;
+        let mut rng = Rng::new(11);
+        let mut h = vec![0.0f32; n];
+        rng.fill_normal(&mut h, 0.0, (1.0 / n as f64).sqrt() as f32);
+        let dense = convolution_stack(&h).to_matrix();
+        let got = identify(&dense);
+        assert!(got.exact, "relative {}", got.relative);
+        assert!(got.method.starts_with("kmatrix-circulant"), "{}", got.method);
+    }
+
+    #[test]
+    fn non_butterfly_target_gets_a_finite_warm_start() {
+        let n = 16;
+        let mut rng = Rng::new(5);
+        let target =
+            CMat::from_fn(n, n, |_, _| Cpx::new(rng.normal_f32(0.0, 1.0), rng.normal_f32(0.0, 1.0)));
+        let got = identify(&target);
+        assert!(!got.exact);
+        assert!(got.rmse.is_finite());
+        assert_eq!(got.stack.n(), n);
+        // the hierarchical projection must capture *some* target mass —
+        // strictly better than the zero matrix (relative rmse 1.0)
+        assert!(got.relative < 1.0, "relative {}", got.relative);
+    }
+}

@@ -1,0 +1,285 @@
+//! K-matrices (Kaleidoscope / BB* products, Dao et al. 2020).
+//!
+//! A K-matrix here is a **depth-2 [`BpStack`] with Block-tied twiddles
+//! and fixed permutations** — the BB* shape: two butterfly factors with
+//! every 2×2 unit untied across blocks, which is exactly the family
+//! Kaleidoscope proves captures *all* structured linear maps
+//! (convolutions, sparse+permuted transforms, low-depth circuits) with
+//! near-optimal parameter counts. The closed-form `convolution_stack`
+//! already has this shape with Factor tying; Block tying is what the
+//! hierarchical identification of [`crate::butterfly::identify`]
+//! produces, and it is the full Kaleidoscope parameterization.
+//!
+//! Everything composes with the existing machinery: a `KMatrix` *is* a
+//! `BpStack`, so it trains through `FactorizeLoss`/`ParallelTrainer`
+//! (with the same per-thread-count bit-reproducibility contract),
+//! hardens through `stack_op`/`stack_op_fused`, and serves through the
+//! `ServicePool` like any other stack. What this module adds is the
+//! shape contract, a closed-form circulant constructor, and the θ
+//! interchange for the `"kmatrix"` [`LayerArtifact`] kind — the
+//! Factor-tied `pack_stack` layout cannot carry Block-tied modules.
+//!
+//! [`LayerArtifact`]: crate::runtime::artifacts::LayerArtifact
+
+use crate::butterfly::closed_form::{fft_levels, fold_diag_top};
+use crate::butterfly::module::{BpModule, BpStack};
+use crate::butterfly::params::{BpParams, Field, InitScheme, PermTying, TwiddleTying};
+use crate::linalg::complex::Cpx;
+use crate::linalg::dense::CMat;
+use crate::util::rng::Rng;
+
+/// K-matrices are BB*: always two butterfly factors.
+pub const KMATRIX_DEPTH: usize = 2;
+
+/// Per-module θ length of the `"kmatrix"` interchange: the raw `data`
+/// vector of a Block-tied complex module. Both planes are always stored
+/// (a real K-matrix just carries a zero imaginary plane), and
+/// Untied/Fixed permutations store the same 3·L logits, so this length
+/// is independent of field and of whether the perms were hardened.
+pub fn kmatrix_module_len(n: usize) -> usize {
+    BpParams::new(n, Field::Complex, TwiddleTying::Block, PermTying::Untied).data.len()
+}
+
+/// Flat θ length of a packed K-matrix (two modules).
+pub fn kmatrix_theta_len(n: usize) -> usize {
+    KMATRIX_DEPTH * kmatrix_module_len(n)
+}
+
+/// Expand a Factor-tied module's parameters to Block tying: level ℓ's
+/// shared unit `j` is copied into every block, logits are copied
+/// verbatim (so a fixed permutation stays fixed). The expanded module
+/// computes bitwise the same matrix — the level kernels read the same
+/// scalar values, just from per-block storage.
+pub fn expand_to_block(src: &BpParams) -> BpParams {
+    assert_eq!(src.twiddle_tying, TwiddleTying::Factor, "expand_to_block wants a Factor-tied source");
+    assert_ne!(src.perm_tying, PermTying::Tied, "Tied logits have no per-level layout to copy");
+    let n = src.n;
+    let mut dst = BpParams::new(n, src.field, TwiddleTying::Block, PermTying::Untied);
+    for l in 0..src.levels {
+        let span = 1usize << l;
+        for j in 0..span {
+            let mut g = [[(0.0f32, 0.0f32); 2]; 2];
+            for r in 0..2 {
+                for c in 0..2 {
+                    g[r][c] =
+                        (src.data[src.tw_idx(l, 0, j, r, c)], src.data[src.tw_idx(l, 1, j, r, c)]);
+                }
+            }
+            for b in 0..n / (2 * span) {
+                let u = dst.unit_index(l, b, j);
+                dst.set_unit(l, u, g);
+            }
+        }
+    }
+    let (s_off, d_off) = (src.logits_off(), dst.logits_off());
+    let logits = src.data[s_off..].to_vec();
+    dst.data[d_off..].copy_from_slice(&logits);
+    dst.perm_tying = src.perm_tying;
+    dst
+}
+
+/// A K-matrix: two Block-tied butterfly factors (BB*) behind the
+/// ordinary [`BpStack`] machinery.
+#[derive(Debug, Clone)]
+pub struct KMatrix {
+    stack: BpStack,
+}
+
+impl KMatrix {
+    /// Random init (OrthogonalLike twiddles, both permutations fixed to
+    /// bit-reversal — the same convention as the paper's BPBP layers).
+    pub fn init(n: usize, field: Field, rng: &mut Rng) -> KMatrix {
+        let modules: Vec<BpModule> = (0..KMATRIX_DEPTH)
+            .map(|_| {
+                let mut p = BpParams::init(
+                    n,
+                    field,
+                    TwiddleTying::Block,
+                    PermTying::Untied,
+                    InitScheme::OrthogonalLike,
+                    rng,
+                );
+                p.fix_bit_reversal();
+                BpModule::new(p)
+            })
+            .collect();
+        KMatrix { stack: BpStack::new(modules) }
+    }
+
+    /// Adopt an existing stack; panics unless it has the K-matrix shape
+    /// (depth 2, Block tying on both modules).
+    pub fn from_stack(stack: BpStack) -> KMatrix {
+        assert_eq!(stack.depth(), KMATRIX_DEPTH, "a K-matrix is a BB* product (depth 2)");
+        for m in &stack.modules {
+            assert_eq!(m.params.twiddle_tying, TwiddleTying::Block, "K-matrix factors are Block-tied");
+        }
+        KMatrix { stack }
+    }
+
+    /// Closed-form K-matrix for `F⁻¹ · diag(d) · F` where `d` is an
+    /// **unnormalized** DFT spectrum (eigenvalues of the circulant):
+    /// module 1 = forward FFT levels with `diag(d)` folded into the top
+    /// factor, module 2 = conjugate FFT with `1/N` folded on top — the
+    /// `convolution_stack` construction, expanded to Block tying.
+    /// Exact to fp32 roundoff for any circulant target.
+    pub fn from_diag_spectrum(d: &[Cpx]) -> KMatrix {
+        let n = d.len();
+        let mut m1 = BpParams::new(n, Field::Complex, TwiddleTying::Factor, PermTying::Untied);
+        fft_levels(&mut m1, -1.0, 1.0);
+        fold_diag_top(&mut m1, d);
+        m1.fix_bit_reversal();
+
+        let mut m2 = BpParams::new(n, Field::Complex, TwiddleTying::Factor, PermTying::Untied);
+        fft_levels(&mut m2, 1.0, 1.0);
+        let inv_n = vec![Cpx::real(1.0 / n as f32); n];
+        fold_diag_top(&mut m2, &inv_n);
+        m2.fix_bit_reversal();
+
+        KMatrix {
+            stack: BpStack::from_params(vec![expand_to_block(&m1), expand_to_block(&m2)]),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.stack.n()
+    }
+
+    pub fn stack(&self) -> &BpStack {
+        &self.stack
+    }
+
+    pub fn into_stack(self) -> BpStack {
+        self.stack
+    }
+
+    pub fn trainable_len(&self) -> usize {
+        self.stack.trainable_len()
+    }
+
+    /// Row-major `[batch, n]` planar apply (the training-path layout).
+    pub fn apply_batch(&self, re: &mut [f32], im: &mut [f32], batch: usize) {
+        self.stack.apply_batch(re, im, batch);
+    }
+
+    pub fn to_matrix(&self) -> CMat {
+        self.stack.to_matrix()
+    }
+
+    pub fn rmse_to(&self, target: &CMat) -> f64 {
+        self.stack.rmse_to(target)
+    }
+
+    /// Packed θ in the `"kmatrix"` interchange layout.
+    pub fn pack(&self) -> Vec<f32> {
+        pack_kmatrix(&self.stack)
+    }
+}
+
+/// Pack a K-matrix-shaped stack into the flat `"kmatrix"` θ: the two
+/// modules' raw `data` vectors concatenated (`[module 0 | module 1]`).
+/// Hardened ±30 permutation logits are plain f32s inside `data`, so the
+/// layout round-trips bitwise through the JSON artifact path.
+pub fn pack_kmatrix(stack: &BpStack) -> Vec<f32> {
+    assert_eq!(stack.depth(), KMATRIX_DEPTH, "kmatrix θ is two modules");
+    let n = stack.n();
+    let mlen = kmatrix_module_len(n);
+    let mut theta = Vec::with_capacity(KMATRIX_DEPTH * mlen);
+    for m in &stack.modules {
+        assert_eq!(m.params.twiddle_tying, TwiddleTying::Block, "kmatrix θ carries Block-tied modules");
+        assert_eq!(m.params.data.len(), mlen, "module data length mismatch");
+        theta.extend_from_slice(&m.params.data);
+    }
+    theta
+}
+
+/// Rebuild the stack from a flat `"kmatrix"` θ. Modules come back as
+/// Complex/Block/Untied carrying the packed data verbatim — hardening
+/// (`FastBp::from_stack`) decides real vs complex from the imaginary
+/// plane and the saturated logits reproduce the fixed permutations, so
+/// `pack_kmatrix(&unpack_kmatrix(n, θ)) == θ` bitwise.
+pub fn unpack_kmatrix(n: usize, theta: &[f32]) -> BpStack {
+    let mlen = kmatrix_module_len(n);
+    assert_eq!(theta.len(), KMATRIX_DEPTH * mlen, "kmatrix θ length mismatch for n={n}");
+    let params: Vec<BpParams> = (0..KMATRIX_DEPTH)
+        .map(|i| {
+            let mut p = BpParams::new(n, Field::Complex, TwiddleTying::Block, PermTying::Untied);
+            p.data.copy_from_slice(&theta[i * mlen..(i + 1) * mlen]);
+            p
+        })
+        .collect();
+    BpStack::from_params(params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::butterfly::closed_form::dft_stack;
+    use crate::transforms::matrices;
+
+    #[test]
+    fn expand_to_block_preserves_the_matrix() {
+        let n = 16;
+        let factor = dft_stack(n);
+        let block = BpStack::from_params(vec![expand_to_block(&factor.modules[0].params)]);
+        let a = factor.to_matrix();
+        let b = block.to_matrix();
+        assert_eq!(a.re, b.re, "re plane");
+        assert_eq!(a.im, b.im, "im plane");
+        assert_eq!(block.modules[0].params.perm_tying, PermTying::Fixed);
+    }
+
+    #[test]
+    fn diag_spectrum_kmatrix_is_the_circulant() {
+        let mut rng = Rng::new(42);
+        for n in [8usize, 32, 128] {
+            let mut h = vec![0.0f32; n];
+            rng.fill_normal(&mut h, 0.0, (1.0 / n as f64).sqrt() as f32);
+            // unnormalized spectrum d = F h, in f64
+            let d: Vec<Cpx> = (0..n)
+                .map(|k| {
+                    let (mut ar, mut ai) = (0.0f64, 0.0f64);
+                    for (j, &hj) in h.iter().enumerate() {
+                        let th = -2.0 * std::f64::consts::PI * (k as f64) * (j as f64) / n as f64;
+                        ar += hj as f64 * th.cos();
+                        ai += hj as f64 * th.sin();
+                    }
+                    Cpx::new(ar as f32, ai as f32)
+                })
+                .collect();
+            let k = KMatrix::from_diag_spectrum(&d);
+            let target = matrices::circulant_matrix(&h).to_cmat();
+            let e = k.rmse_to(&target);
+            assert!(e < 1e-5, "n={n}: rmse {e}");
+        }
+    }
+
+    #[test]
+    fn pack_unpack_round_trips_bitwise() {
+        let mut rng = Rng::new(7);
+        for field in [Field::Real, Field::Complex] {
+            let k = KMatrix::init(16, field, &mut rng);
+            let theta = k.pack();
+            assert_eq!(theta.len(), kmatrix_theta_len(16));
+            let back = unpack_kmatrix(16, &theta);
+            assert_eq!(pack_kmatrix(&back), theta, "{field:?}");
+            // and the rebuilt stack computes the same matrix
+            let (a, b) = (k.to_matrix(), back.to_matrix());
+            assert_eq!(a.re, b.re, "{field:?} re");
+            assert_eq!(a.im, b.im, "{field:?} im");
+        }
+    }
+
+    #[test]
+    fn kmatrix_shape_contract() {
+        let mut rng = Rng::new(3);
+        let k = KMatrix::init(8, Field::Complex, &mut rng);
+        assert_eq!(k.n(), 8);
+        assert_eq!(k.stack().depth(), KMATRIX_DEPTH);
+        // Block tying spends n/2 units per level instead of 2^ℓ: a
+        // K-matrix strictly out-parameterizes a Factor-tied stack of the
+        // same depth, but stays O(n log n).
+        assert!(k.trainable_len() > 2 * dft_stack(8).trainable_len());
+        let roundtrip = KMatrix::from_stack(k.clone().into_stack());
+        assert_eq!(roundtrip.n(), 8);
+    }
+}

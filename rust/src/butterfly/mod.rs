@@ -24,9 +24,16 @@
 //!    parameters (the serving hot loop).
 //!  - [`closed_form`] — Proposition 1 constructions: exact BP (DFT, iDFT,
 //!    Hadamard) and BP² (DCT, DST, convolution) factorizations.
+//!  - [`kmatrix`] — the kaleidoscope (BB*) generalization: depth-2
+//!    Block-tied stacks with a flat-θ artifact contract.
+//!  - [`identify`] — closed-form butterfly identification by hierarchical
+//!    two-factor SVDs: exact recovery of butterfly targets with zero
+//!    optimizer steps, truncated-SVD warm starts for everything else.
 
 pub mod closed_form;
 pub mod fast;
+pub mod identify;
+pub mod kmatrix;
 pub mod level;
 pub mod module;
 pub mod params;
@@ -34,6 +41,11 @@ pub mod permutation;
 pub mod workspace;
 
 pub use fast::{FastBp, Workspace};
+pub use identify::{circulant_spectrum, identify, peel_butterfly, Identified};
+pub use kmatrix::{
+    expand_to_block, kmatrix_module_len, kmatrix_theta_len, pack_kmatrix, unpack_kmatrix, KMatrix,
+    KMATRIX_DEPTH,
+};
 pub use module::{BpModule, BpStack, FactorizeLoss, StackGrad};
 pub use params::{BpParams, Field, InitScheme, PermTying, TwiddleTying};
 pub use permutation::{hard_perm_table, PermChoice, PermTables, RelaxedPerm};

@@ -24,5 +24,5 @@ pub mod trial;
 pub use job::{FactorizeJob, JobResult, TrialConfig};
 pub use metrics::Metrics;
 pub use registry::{Registry, TrialStatus};
-pub use scheduler::{run_job, SchedulerConfig};
+pub use scheduler::{identify_job, run_job, SchedulerConfig};
 pub use trial::Trial;

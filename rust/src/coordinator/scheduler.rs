@@ -89,6 +89,19 @@ fn fnv1a_64(s: &str) -> u64 {
     h
 }
 
+/// Identification-first front door for a recovery job: run the
+/// closed-form hierarchical identification (`butterfly::identify`,
+/// O(N²) SVD work) before spending any optimizer steps. Returns the
+/// identified stack and its RMSE when it already meets the job's
+/// target — DFT/Hadamard/circulant-family targets under the searched
+/// permutation hypotheses resolve here with **zero Adam steps**.
+/// Otherwise `None`: callers fall back to [`run_job`], optionally
+/// seeding a trial from the truncated hierarchical-SVD projection.
+pub fn identify_job(job: &FactorizeJob) -> Option<(crate::butterfly::BpStack, f64)> {
+    let idd = crate::butterfly::identify(&job.target);
+    (idd.exact && idd.rmse <= job.target_rmse).then(|| (idd.stack, idd.rmse))
+}
+
 /// Run a full Hyperband search for one job on a worker pool; returns the
 /// best trial found.
 pub fn run_job(job: &FactorizeJob, cfg: &SchedulerConfig, metrics: &Metrics, registry: &Registry) -> JobResult {
@@ -358,6 +371,27 @@ mod tests {
             first_configs.push(registry.get(0).expect("trial 0 registered").config);
         }
         assert_ne!(first_configs[0], first_configs[1], "dft/dct drew identical trial configs");
+    }
+
+    #[test]
+    fn identify_job_short_circuits_exact_targets_with_zero_steps() {
+        // DFT and Hadamard are exactly butterfly: the closed-form
+        // identification must meet the paper's 1e-4 RMSE target without
+        // a single optimizer step.
+        for kind in [TransformKind::Dft, TransformKind::Hadamard] {
+            let job = FactorizeJob::paper(kind, 16, 42, 20_000);
+            let (stack, rmse) = identify_job(&job).unwrap_or_else(|| panic!("{} not identified", kind.name()));
+            assert!(rmse <= job.target_rmse, "{}: rmse {rmse}", kind.name());
+            assert_eq!(stack.n(), 16);
+        }
+        // a dense random target is not butterfly — identification must
+        // decline so the Hyperband search still runs
+        let mut job = FactorizeJob::paper(TransformKind::Dft, 8, 42, 100);
+        let mut rng = Rng::new(77);
+        job.target = crate::linalg::dense::CMat::from_fn(8, 8, |_, _| {
+            crate::linalg::complex::Cpx::new(rng.normal_f32(0.0, 1.0), rng.normal_f32(0.0, 1.0))
+        });
+        assert!(identify_job(&job).is_none());
     }
 
     #[test]

@@ -12,7 +12,7 @@
 
 use butterfly::butterfly::fast::{FastBp, Workspace};
 use butterfly::cli::Args;
-use butterfly::coordinator::{run_job, FactorizeJob, Metrics, Registry, SchedulerConfig};
+use butterfly::coordinator::{identify_job, run_job, FactorizeJob, Metrics, Registry, SchedulerConfig};
 use butterfly::runtime::engine::{auto_engine, unpack_op, unpack_op_fused};
 use butterfly::serving::{BatcherConfig, Router};
 use butterfly::transforms::fuse::FuseSpec;
@@ -79,6 +79,10 @@ COMMANDS:
               --quantum 50        adam steps per resource unit
               --workers 0         worker threads (0 = all cores)
               --seed 42
+              --no-identify   skip the closed-form identification
+                          pre-pass (hierarchical two-factor SVDs);
+                          by default exactly-butterfly targets are
+                          recovered with zero optimizer steps
   zoo         run the Figure-3 recovery grid
               --max-n 64 --transforms dft,dct,... --max-resource 27
   serve       learn a transform then serve it with dynamic batching
@@ -112,13 +116,16 @@ COMMANDS:
                               results are bit-identical for any value)
               --chunk 8       samples per parallel chunk
               --methods bpbp-real,bpbp-complex,low-rank-matched,circulant,dense
+                              (also: kmatrix — the BB* kaleidoscope layer)
+              --hidden KIND   shorthand: train only this hidden kind
+                              (overrides --methods; e.g. --hidden kmatrix)
               --save PATH     write the trained layer artifact (θ + bias)
               --serve         serve the exported op through a worker pool
                               (--requests 2000 --pool-workers 2);
                               add --listen ADDR to serve it over HTTP
                               (same endpoints/flags as `serve --listen`)
               --fuse auto|memory|balanced[:K]
-                              serve a bp artifact as fused kernels
+                              serve a bp/kmatrix artifact as fused kernels
                               (circulant artifacts serve unfused)
               --smoke         tiny end-to-end run (CI)
   bench       run the pinned perf scenario matrix (the perf-trajectory
@@ -167,6 +174,19 @@ fn cmd_factorize(args: &Args) -> i32 {
         let max_steps = args.usize_or("max-steps", 20_000)?;
         let job = FactorizeJob::paper(kind, n, seed, max_steps);
         log::info(&format!("factorizing {} (n = {n}, depth = {})", kind.name(), job.depth));
+        // closed-form identification first: exactly-butterfly targets
+        // (DFT/Hadamard/circulant family) resolve by hierarchical SVD
+        // peeling with zero Adam steps
+        if !args.flag("no-identify") {
+            if let Some((stack, rmse)) = identify_job(&job) {
+                println!("job            : {}", job.id());
+                println!("best RMSE      : {} (closed-form identification)", fmt_sci(rmse));
+                println!("machine prec.  : YES (< 1e-4)");
+                println!("optimizer steps: 0 (hierarchical two-factor SVDs; depth {})", stack.depth());
+                return Ok(());
+            }
+            log::info("target not exactly butterfly under the searched hypotheses; falling back to hyperband");
+        }
         let metrics = Metrics::new();
         let registry = Registry::new();
         let t0 = Instant::now();
@@ -281,12 +301,22 @@ fn cmd_serve(args: &Args) -> i32 {
                 },
                 None => {
                     let job = FactorizeJob::paper(kind, n, 42, 4000);
-                    let cfg = SchedulerConfig::default();
-                    let res = run_job(&job, &cfg, &Metrics::new(), &Registry::new());
-                    log::info(&format!("learned {} to rmse {}", kind.name(), fmt_sci(res.best_rmse)));
-                    match &fuse {
-                        Some(spec) => unpack_op_fused(kind.name(), n, job.depth, &res.best_theta, spec),
-                        None => unpack_op(kind.name(), n, job.depth, &res.best_theta),
+                    if let Some((stack, rmse)) = identify_job(&job) {
+                        // exactly butterfly under a searched hypothesis:
+                        // serve the identified stack, zero optimizer steps
+                        log::info(&format!("identified {} closed-form to rmse {}", kind.name(), fmt_sci(rmse)));
+                        match &fuse {
+                            Some(spec) => stack_op_fused(kind.name(), &stack, spec),
+                            None => stack_op(kind.name(), &stack),
+                        }
+                    } else {
+                        let cfg = SchedulerConfig::default();
+                        let res = run_job(&job, &cfg, &Metrics::new(), &Registry::new());
+                        log::info(&format!("learned {} to rmse {}", kind.name(), fmt_sci(res.best_rmse)));
+                        match &fuse {
+                            Some(spec) => unpack_op_fused(kind.name(), n, job.depth, &res.best_theta, spec),
+                            None => unpack_op(kind.name(), n, job.depth, &res.best_theta),
+                        }
                     }
                 }
             }
@@ -419,23 +449,30 @@ fn cmd_compress(args: &Args) -> i32 {
             seed,
             ..TrainConfig::default()
         };
-        let methods: Vec<HiddenKind> = args
-            .list_or(
-                "methods",
-                if smoke {
-                    "bpbp-real,low-rank-matched"
-                } else {
-                    "bpbp-real,bpbp-complex,low-rank-matched,circulant,dense"
-                },
-            )
-            .iter()
-            .map(|m| match m.as_str() {
-                "low-rank-matched" => {
-                    Ok(HiddenKind::LowRank { rank: HiddenKind::parameter_matched_rank(dim) })
-                }
-                other => HiddenKind::parse(other).ok_or_else(|| format!("unknown method '{other}'")),
-            })
-            .collect::<Result<_, _>>()?;
+        let parse_method = |m: &str| match m {
+            "low-rank-matched" => {
+                Ok(HiddenKind::LowRank { rank: HiddenKind::parameter_matched_rank(dim) })
+            }
+            other => HiddenKind::parse(other).ok_or_else(|| format!("unknown method '{other}'")),
+        };
+        // --hidden KIND is the single-method shorthand (it overrides
+        // --methods): `compress --hidden kmatrix --save …` trains and
+        // exports exactly that layer kind.
+        let methods: Vec<HiddenKind> = match args.get("hidden") {
+            Some(h) => vec![parse_method(h)?],
+            None => args
+                .list_or(
+                    "methods",
+                    if smoke {
+                        "bpbp-real,low-rank-matched"
+                    } else {
+                        "bpbp-real,bpbp-complex,low-rank-matched,circulant,dense"
+                    },
+                )
+                .iter()
+                .map(|m| parse_method(m.as_str()))
+                .collect::<Result<_, _>>()?,
+        };
 
         log::info(&format!(
             "compress: {} at dim {dim} ({train_n} train / {test_n} test), {} epochs, {} thread(s)",
@@ -481,7 +518,10 @@ fn cmd_compress(args: &Args) -> i32 {
             }
             let exportable = matches!(
                 kind,
-                HiddenKind::BpbpReal | HiddenKind::BpbpComplex | HiddenKind::Circulant
+                HiddenKind::BpbpReal
+                    | HiddenKind::BpbpComplex
+                    | HiddenKind::Circulant
+                    | HiddenKind::Kmatrix
             );
             if exportable && hero.as_ref().map_or(true, |(_, best)| rep.test_acc > *best) {
                 hero = Some((model, rep.test_acc));
@@ -494,7 +534,7 @@ fn cmd_compress(args: &Args) -> i32 {
                 // --smoke exists to exercise export + serving in CI, so a
                 // method list with nothing exportable must fail loudly too
                 return Err(
-                    "--save/--serve/--smoke need a structured method (bpbp-real, bpbp-complex, or circulant) in --methods"
+                    "--save/--serve/--smoke need a structured method (bpbp-real, bpbp-complex, circulant, or kmatrix) in --methods"
                         .into(),
                 );
             }

@@ -46,6 +46,11 @@ pub struct NetMetrics {
     latency_hist: [AtomicU64; LATENCY_BUCKETS_US.len() + 1],
     latency_sum_us: AtomicU64,
     latency_count: AtomicU64,
+    /// Largest latency ever recorded (µs). The overflow bucket has no
+    /// upper edge, so quantiles landing there report this instead of
+    /// the bucket's lower edge (which pinned every >500 ms tail to
+    /// exactly 0.5 s on `/metrics`).
+    latency_max_us: AtomicU64,
 }
 
 impl NetMetrics {
@@ -73,11 +78,18 @@ impl NetMetrics {
         self.latency_hist[idx].fetch_add(1, Ordering::Relaxed);
         self.latency_sum_us.fetch_add(latency_us, Ordering::Relaxed);
         self.latency_count.fetch_add(1, Ordering::Relaxed);
+        self.latency_max_us.fetch_max(latency_us, Ordering::Relaxed);
+    }
+
+    /// Largest latency recorded so far, in microseconds (0 when empty).
+    pub fn latency_max_us(&self) -> u64 {
+        self.latency_max_us.load(Ordering::Relaxed)
     }
 
     /// Histogram-estimated latency quantile in microseconds (`q` in
     /// [0, 1]); 0 when nothing was recorded. Linear interpolation inside
-    /// the winning bucket; the overflow bucket reports its lower edge.
+    /// the winning bucket; quantiles landing in the overflow bucket
+    /// report the observed maximum (the bucket has no upper edge).
     pub fn latency_quantile(&self, q: f64) -> f64 {
         let counts: Vec<u64> =
             self.latency_hist.iter().map(|c| c.load(Ordering::Relaxed)).collect();
@@ -94,7 +106,10 @@ impl NetMetrics {
             if seen + c >= target {
                 let lo = if i == 0 { 0.0 } else { LATENCY_BUCKETS_US[i - 1] as f64 };
                 if i == LATENCY_BUCKETS_US.len() {
-                    return lo; // overflow bucket: no upper edge to lerp to
+                    // No upper edge to lerp to: the observed max is the
+                    // only honest tail estimate (returning `lo` rendered
+                    // every >500 ms tail as exactly 0.5 s).
+                    return (self.latency_max_us.load(Ordering::Relaxed) as f64).max(lo);
                 }
                 let hi = LATENCY_BUCKETS_US[i] as f64;
                 let frac = (target - seen) as f64 / c as f64;
@@ -220,6 +235,16 @@ pub fn render(m: &NetMetrics, routes: &[RouteSnapshot]) -> String {
     );
     let _ = writeln!(out, "# TYPE butterfly_apply_latency_p99_seconds gauge");
     let _ = writeln!(out, "butterfly_apply_latency_p99_seconds {}", m.latency_quantile(0.99) / 1e6);
+    let _ = writeln!(
+        out,
+        "# HELP butterfly_apply_latency_max_seconds Largest observed apply latency."
+    );
+    let _ = writeln!(out, "# TYPE butterfly_apply_latency_max_seconds gauge");
+    let _ = writeln!(
+        out,
+        "butterfly_apply_latency_max_seconds {}",
+        m.latency_max_us.load(ld) as f64 / 1e6
+    );
 
     // per-route pool state
     let series: [(&str, &str, &str); 6] = [
@@ -299,7 +324,25 @@ mod tests {
         // one straggler in the overflow bucket pulls p100 but not p50
         m.record_apply(1, 10_000_000);
         assert!(m.latency_quantile(0.5) <= 200.0);
-        assert_eq!(m.latency_quantile(1.0), 500_000.0, "overflow bucket reports its lower edge");
+        assert_eq!(m.latency_quantile(1.0), 10_000_000.0, "overflow bucket reports the observed max");
+    }
+
+    #[test]
+    fn overflow_tail_reports_observed_max_not_bucket_edge() {
+        // Regression: with most of the mass past the last bucket edge,
+        // p99 used to render as exactly 0.5 s (the overflow bucket's
+        // lower edge) no matter how slow the tail actually was.
+        let m = NetMetrics::default();
+        m.record_apply(1, 100);
+        for _ in 0..99 {
+            m.record_apply(1, 2_750_000); // 2.75 s ≫ the 500 ms edge
+        }
+        assert_eq!(m.latency_max_us(), 2_750_000);
+        let p99 = m.latency_quantile(0.99);
+        assert_eq!(p99, 2_750_000.0, "p99 pinned to the overflow bucket's lower edge: {p99}");
+        let text = render(&m, &[]);
+        assert!(text.contains("butterfly_apply_latency_p99_seconds 2.75"));
+        assert!(text.contains("butterfly_apply_latency_max_seconds 2.75"));
     }
 
     #[test]

@@ -102,6 +102,74 @@ impl ButterflyLayer {
         }
     }
 
+    /// The kaleidoscope (BB*) hidden layer: depth-2 with **Block-tied**
+    /// twiddles — every unit in a level free, n/2 units per level
+    /// instead of 2^ℓ. Same training surfaces (the kernels are
+    /// tying-agnostic); exports flow through the `"kmatrix"` artifact
+    /// kind instead of the Factor-tied `"bp"` θ interchange.
+    pub fn kmatrix(n: usize, field: Field, rng: &mut Rng) -> Self {
+        let modules: Vec<BpModule> = (0..crate::butterfly::kmatrix::KMATRIX_DEPTH)
+            .map(|_| {
+                let mut p = BpParams::init(
+                    n,
+                    field,
+                    TwiddleTying::Block,
+                    PermTying::Untied,
+                    InitScheme::OrthogonalLike,
+                    rng,
+                );
+                p.fix_bit_reversal();
+                BpModule::new(p)
+            })
+            .collect();
+        let stack = BpStack::new(modules);
+        let grad = stack.zero_grad();
+        let vel = stack.zero_grad();
+        let masks = stack.modules.iter().map(|m| m.params.trainable_mask()).collect();
+        ButterflyLayer {
+            stack,
+            bias: vec![0.0; n],
+            grad,
+            vel,
+            masks,
+            gbias: vec![0.0; n],
+            vbias: vec![0.0; n],
+            saves: Vec::new(),
+        }
+    }
+
+    /// Wrap a closed-form or identified stack (e.g. the output of
+    /// `butterfly::identify`) as a trainable layer — the warm-start
+    /// path: zero optimizer steps needed when identification was exact,
+    /// fine-tuning from a principled init otherwise. Export via
+    /// [`export_artifact`](Self::export_artifact) needs either a
+    /// Factor-tied stack (`"bp"`) or a depth-2 Block-tied one
+    /// (`"kmatrix"`); other shapes can still serve directly through
+    /// [`export_op`](Self::export_op).
+    pub fn from_stack(stack: BpStack) -> Self {
+        let n = stack.n();
+        let grad = stack.zero_grad();
+        let vel = stack.zero_grad();
+        let masks = stack.modules.iter().map(|m| m.params.trainable_mask()).collect();
+        ButterflyLayer {
+            stack,
+            bias: vec![0.0; n],
+            grad,
+            vel,
+            masks,
+            gbias: vec![0.0; n],
+            vbias: vec![0.0; n],
+            saves: Vec::new(),
+        }
+    }
+
+    /// Whether this layer uses the kaleidoscope (Block-tied, depth-2)
+    /// parameterization rather than the paper's Factor-tied BPBP.
+    pub fn is_kmatrix(&self) -> bool {
+        self.stack.depth() == crate::butterfly::kmatrix::KMATRIX_DEPTH
+            && self.stack.modules.iter().all(|m| m.params.twiddle_tying == TwiddleTying::Block)
+    }
+
     pub fn n(&self) -> usize {
         self.stack.n()
     }
@@ -243,13 +311,19 @@ impl ButterflyLayer {
     // export
     // -----------------------------------------------------------------
 
-    /// Packed flat θ in the AOT interchange layout (concatenated module
-    /// parameter planes; see `runtime::engine`). The bias is not part of
+    /// Packed flat θ: the AOT interchange layout for Factor-tied BPBP
+    /// stacks (`runtime::engine::pack_stack`), the raw concatenated
+    /// module planes for kaleidoscope layers
+    /// (`butterfly::kmatrix::pack_kmatrix`). The bias is not part of
     /// θ — it travels separately (see [`export_artifact`]).
     ///
     /// [`export_artifact`]: ButterflyLayer::export_artifact
     pub fn export_theta(&self) -> Vec<f32> {
-        crate::runtime::engine::pack_stack(&self.stack)
+        if self.is_kmatrix() {
+            crate::butterfly::kmatrix::pack_kmatrix(&self.stack)
+        } else {
+            crate::runtime::engine::pack_stack(&self.stack)
+        }
     }
 
     /// Harden the layer's **linear part** into a serveable
@@ -264,7 +338,7 @@ impl ButterflyLayer {
     pub fn export_artifact(&self, name: impl Into<String>) -> LayerArtifact {
         LayerArtifact {
             name: name.into(),
-            kind: "bp".into(),
+            kind: if self.is_kmatrix() { "kmatrix" } else { "bp" }.into(),
             n: self.n(),
             depth: self.depth(),
             theta: self.export_theta(),
@@ -498,6 +572,25 @@ mod tests {
         let theta = layer.export_theta();
         let stack = crate::runtime::engine::unpack_stack(16, 2, &theta);
         assert_eq!(crate::runtime::engine::pack_stack(&stack), theta);
+    }
+
+    #[test]
+    fn kmatrix_layer_exports_kmatrix_artifact_bitwise() {
+        let mut rng = Rng::new(34);
+        let n = 16;
+        let layer = ButterflyLayer::kmatrix(n, Field::Real, &mut rng);
+        assert!(layer.is_kmatrix());
+        assert!(!ButterflyLayer::new(n, 2, Field::Real, &mut rng).is_kmatrix());
+        // kaleidoscope spends more parameters than Factor-tied BPBP
+        assert!(layer.param_count() > ButterflyLayer::new(n, 2, Field::Real, &mut rng).param_count());
+        let art = layer.export_artifact("hidden");
+        assert_eq!(art.kind, "kmatrix");
+        assert_eq!(art.theta.len(), crate::butterfly::kmatrix::kmatrix_theta_len(n));
+        let rebuilt = crate::butterfly::kmatrix::unpack_kmatrix(n, &art.theta);
+        for (a, b) in layer.stack.modules.iter().zip(&rebuilt.modules) {
+            assert_eq!(a.params.data, b.params.data);
+        }
+        assert!(art.to_op().is_ok());
     }
 
     #[test]

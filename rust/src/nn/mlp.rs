@@ -56,6 +56,9 @@ pub enum HiddenKind {
     LowRank { rank: usize },
     /// Circulant / 1-D convolution (Cheng et al.).
     Circulant,
+    /// Kaleidoscope (BB*): depth-2 Block-tied butterfly stack — every
+    /// unit in a level free (n/2 per level vs 2^ℓ), real twiddles.
+    Kmatrix,
 }
 
 impl HiddenKind {
@@ -66,6 +69,7 @@ impl HiddenKind {
             HiddenKind::BpbpComplex => "bpbp-complex".into(),
             HiddenKind::LowRank { rank } => format!("low-rank-{rank}"),
             HiddenKind::Circulant => "circulant".into(),
+            HiddenKind::Kmatrix => "kmatrix".into(),
         }
     }
 
@@ -75,6 +79,7 @@ impl HiddenKind {
             "bpbp-real" | "bpbp" => Some(HiddenKind::BpbpReal),
             "bpbp-complex" => Some(HiddenKind::BpbpComplex),
             "circulant" => Some(HiddenKind::Circulant),
+            "kmatrix" => Some(HiddenKind::Kmatrix),
             _ => s.strip_prefix("low-rank-").and_then(|r| r.parse().ok()).map(|rank| HiddenKind::LowRank { rank }),
         }
     }
@@ -178,6 +183,7 @@ impl CompressMlp {
             HiddenKind::BpbpComplex => HiddenLayer::Butterfly(ButterflyLayer::new(n, 2, Field::Complex, rng)),
             HiddenKind::LowRank { rank } => HiddenLayer::LowRank(LowRankLayer::new(n, n, rank, rng)),
             HiddenKind::Circulant => HiddenLayer::Circulant(CirculantLayer::new(n, rng)),
+            HiddenKind::Kmatrix => HiddenLayer::Butterfly(ButterflyLayer::kmatrix(n, Field::Real, rng)),
         };
         CompressMlp { kind, n, classes, hidden, relu: ReluLayer::new(), head: DenseLayer::new(n, classes, rng) }
     }

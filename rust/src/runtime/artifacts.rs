@@ -138,8 +138,9 @@ impl Manifest {
 
 /// A trained compressed layer on disk: θ (+ bias) with enough metadata
 /// to rebuild the serveable op. `kind` selects the rebuild path:
-/// `"bp"` (butterfly stack θ, `runtime::engine` interchange layout) or
-/// `"circulant"` (θ = the learned filter `h`).
+/// `"bp"` (butterfly stack θ, `runtime::engine` interchange layout),
+/// `"kmatrix"` (depth-2 Block-tied BB* stack, raw concatenated module
+/// data), or `"circulant"` (θ = the learned filter `h`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct LayerArtifact {
     pub name: String,
@@ -245,6 +246,20 @@ impl LayerArtifact {
                     None => crate::runtime::engine::unpack_op(self.name.clone(), self.n, self.depth, &self.theta),
                 })
             }
+            "kmatrix" => {
+                if self.depth != crate::butterfly::kmatrix::KMATRIX_DEPTH {
+                    bail!("kmatrix artifact '{}': depth {} is not {}", self.name, self.depth, crate::butterfly::kmatrix::KMATRIX_DEPTH);
+                }
+                let want = crate::butterfly::kmatrix::kmatrix_theta_len(self.n);
+                if self.theta.len() != want {
+                    bail!("kmatrix artifact '{}': theta has {} scalars, want {want}", self.name, self.theta.len());
+                }
+                let stack = crate::butterfly::kmatrix::unpack_kmatrix(self.n, &self.theta);
+                Ok(match fuse {
+                    Some(spec) => crate::transforms::op::stack_op_fused(self.name.clone(), &stack, spec),
+                    None => crate::transforms::op::stack_op(self.name.clone(), &stack),
+                })
+            }
             "circulant" => {
                 if self.theta.len() != self.n {
                     bail!("circulant artifact '{}': filter has {} taps, want {}", self.name, self.theta.len(), self.n);
@@ -336,6 +351,16 @@ mod tests {
         assert!(a.to_op().is_ok());
         // a truncated bias must not rebuild either
         a.bias = vec![0.0; 7];
+        assert!(a.to_op().is_err());
+        a.bias = vec![0.0; 8];
+        // kmatrix wants depth 2 and the Block-tied theta length exactly
+        a.kind = "kmatrix".into();
+        a.depth = 1;
+        a.theta = vec![0.0; crate::butterfly::kmatrix::kmatrix_theta_len(8)];
+        assert!(a.to_op().is_err());
+        a.depth = 2;
+        assert!(a.to_op().is_ok());
+        a.theta.pop();
         assert!(a.to_op().is_err());
     }
 }

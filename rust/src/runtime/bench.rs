@@ -884,6 +884,27 @@ pub fn run_ops(smoke: bool) -> Report {
             }
         }
     }
+    // the kaleidoscope (BB*) stack: same O(N log N) apply structure as
+    // stack-fft but with per-block twiddles — the serving-cost claim the
+    // K-matrix module makes is that Block tying is apply-time free
+    {
+        let km = crate::butterfly::kmatrix::KMatrix::init(n, Field::Real, &mut Rng::new(0xB0B5));
+        for b in [1usize, 64] {
+            let id = format!("ops/kmatrix/n{n}/B{b}");
+            let seed = scenario_seed(&id);
+            let op = stack_op("kmatrix", km.stack());
+            let samples = op_ns_per_vec_samples(op.as_ref(), b, reps, iters, seed ^ 0xBE7C);
+            push(&mut scenarios, id, Unit::NsPerVec, &samples);
+        }
+        let spec = FuseSpec::with_k(4, FuseStrategy::Balanced);
+        for b in [1usize, 64] {
+            let id = format!("ops/fused-kmatrix-k4/n{n}/B{b}");
+            let seed = scenario_seed(&id);
+            let op = stack_op_fused("fused-kmatrix", km.stack(), &spec);
+            let samples = op_ns_per_vec_samples(op.as_ref(), b, reps, iters, seed ^ 0xBE7C);
+            push(&mut scenarios, id, Unit::NsPerVec, &samples);
+        }
+    }
     Report { area: "ops".into(), env: EnvFingerprint::detect(smoke), scenarios }
 }
 

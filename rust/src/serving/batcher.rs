@@ -88,6 +88,12 @@ impl<T> BatchQueue<T> {
     pub fn set_adaptive(&self, cap: Duration) {
         self.window_nanos.store(0, Ordering::Relaxed);
         self.adaptive_cap.store((cap.as_nanos() as u64).max(1), Ordering::Relaxed);
+        // Wake any drainer parked in a straggler hold so the new window
+        // takes effect now, not when the previously-read deadline fires.
+        // The lock is taken (and immediately dropped) so a drainer that
+        // is *about to* park cannot miss the wakeup.
+        drop(self.inner.lock().unwrap());
+        self.cv.notify_all();
     }
 
     /// The live adaptive window, or `None` when the queue runs the
@@ -108,28 +114,32 @@ impl<T> BatchQueue<T> {
     }
 
     /// Feed the adaptive controller one drain observation: `take` items
-    /// left with this batch, `remaining` stayed queued. Relaxed atomics
-    /// — concurrent drainers may interleave updates, which only jitters
-    /// the window inside its `[0, cap]` bounds.
+    /// left with this batch, `remaining` stayed queued. Each update is a
+    /// `fetch_update` CAS loop, so concurrent drainers compose their
+    /// transforms instead of overwriting each other — a halving that
+    /// raced a doubling used to silently discard the doubling (a relaxed
+    /// load-then-store), leaving the window stuck low just as a burst
+    /// landed. With CAS, saturated drains are monotone nondecreasing up
+    /// to the cap regardless of interleaving.
     fn adapt(&self, take: usize, remaining: usize) {
         let cap = self.adaptive_cap.load(Ordering::Relaxed);
         if cap == 0 {
             return;
         }
-        let cur = self.window_nanos.load(Ordering::Relaxed);
         if take >= self.cfg.max_batch || remaining > 0 {
             // Sustained load: a full batch (or a backlog we could not
             // fit) means arrivals outpace drains — widen the window so
             // the next batches amortize more per apply. The growth step
             // floor (cap/64, ≥ 1 µs) gets a zero window moving.
             let step = (cap / 64).max(1_000);
-            let grown = cur.saturating_mul(2).max(step).min(cap);
-            self.window_nanos.store(grown, Ordering::Relaxed);
+            let _ = self.window_nanos.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+                Some(cur.saturating_mul(2).max(step).min(cap))
+            });
         } else if take.saturating_mul(2) <= self.cfg.max_batch {
             // Light traffic that drained the queue dry: collapse toward
             // zero so a lone request is never held waiting for phantom
             // stragglers.
-            self.window_nanos.store(cur / 2, Ordering::Relaxed);
+            let _ = self.window_nanos.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| Some(cur / 2));
         }
     }
 
@@ -165,25 +175,29 @@ impl<T> BatchQueue<T> {
             }
             // Batch window: wait for more arrivals up to the current
             // window (fixed max_wait, or the live adaptive value)
-            // measured from the oldest pending request. The front is
-            // re-read on every iteration — a sibling drainer may have
-            // taken the request we measured from while we were parked in
-            // wait_timeout.
-            let max_wait = self.effective_wait();
+            // measured from the oldest pending request. Both the front
+            // *and the window* are re-read on every iteration — a
+            // sibling drainer may have taken the request we measured
+            // from, and the adaptive controller (or a `set_adaptive`
+            // call, which wakes us) may have collapsed the window while
+            // we were parked in wait_timeout. Capturing the window once
+            // per batch held lone requests for a deadline that no
+            // longer existed.
             while g.queue.len() < self.cfg.max_batch && !g.closed {
+                let max_wait = self.effective_wait();
                 let oldest = g.queue.front().unwrap().1;
                 let elapsed = oldest.elapsed();
                 if elapsed >= max_wait {
                     break;
                 }
-                let (g2, timeout) = self.cv.wait_timeout(g, max_wait - elapsed).unwrap();
+                let (g2, _timeout) = self.cv.wait_timeout(g, max_wait - elapsed).unwrap();
                 g = g2;
                 if g.queue.is_empty() {
                     break;
                 }
-                if timeout.timed_out() {
-                    break;
-                }
+                // No break on timeout: the loop head re-checks elapsed
+                // against the *live* window, so an unchanged window
+                // still exits here while a collapsed one exits sooner.
             }
             if g.queue.is_empty() {
                 // A sibling drained everything during our window; park
@@ -413,6 +427,94 @@ mod tests {
             assert!(q.adaptive_window().unwrap() <= cap);
         }
         assert_eq!(q.adaptive_window(), Some(cap));
+    }
+
+    #[test]
+    fn window_collapse_is_honored_mid_hold() {
+        // Regression: next_batch used to capture effective_wait() once
+        // per batch, so a drainer already parked in the straggler hold
+        // slept out the stale deadline even after the window collapsed.
+        // Grow the window to ~1 s, park a drainer on a lone request,
+        // collapse mid-hold: dispatch must be prompt.
+        let q = Arc::new(BatchQueue::new(BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 64,
+        }));
+        q.set_adaptive(Duration::from_secs(32)); // growth step = cap/64 = 500 ms
+        for i in 0..8 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.next_batch().unwrap().len(), 4); // grow: 0 → 500 ms
+        assert_eq!(q.next_batch().unwrap().len(), 4); // grow: 500 ms → 1 s
+        assert!(q.adaptive_window().unwrap() >= Duration::from_millis(900));
+
+        q.push(99).unwrap();
+        let q2 = Arc::clone(&q);
+        let t0 = Instant::now();
+        let h = std::thread::spawn(move || {
+            let b = q2.next_batch().unwrap();
+            (b, t0.elapsed())
+        });
+        std::thread::sleep(Duration::from_millis(30)); // let the drainer park in the hold
+        q.set_adaptive(Duration::from_millis(1)); // collapse the window mid-hold
+        let (batch, held) = h.join().unwrap();
+        assert_eq!(batch, vec![99]);
+        assert!(held < Duration::from_millis(500), "stale 1 s window was honored for {held:?}");
+    }
+
+    #[test]
+    fn window_is_monotone_under_concurrent_saturated_drains() {
+        // Regression for the adapt() lost update: concurrent drainers
+        // all observing saturation must compose their doublings (CAS)
+        // instead of overwriting each other — an observer polling the
+        // window may never see it move backwards, and it must converge
+        // to (and park at) the cap.
+        use std::sync::atomic::AtomicBool;
+        let q = Arc::new(BatchQueue::new(BatcherConfig {
+            max_batch: 2,
+            max_wait: Duration::from_secs(10), // irrelevant once adaptive
+            queue_cap: 1 << 14,
+        }));
+        // pre-fill so every racing drain observes saturation (full batch
+        // or backlog): only grow transforms run while the watcher looks
+        for i in 0..8192 {
+            q.push(i).unwrap();
+        }
+        let cap = Duration::from_micros(800);
+        q.set_adaptive(cap);
+        let done = Arc::new(AtomicBool::new(false));
+        let watcher = {
+            let q = Arc::clone(&q);
+            let done = Arc::clone(&done);
+            std::thread::spawn(move || {
+                let mut last = Duration::ZERO;
+                while !done.load(Ordering::Relaxed) {
+                    let w = q.adaptive_window().unwrap();
+                    assert!(w >= last, "window moved backwards under saturation: {last:?} → {w:?}");
+                    assert!(w <= cap, "window exceeded cap: {w:?}");
+                    last = w;
+                    std::thread::yield_now();
+                }
+            })
+        };
+        let drainers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    // 4 × 300 × 2 = 2400 items ≤ 8192: never runs dry
+                    for _ in 0..300 {
+                        q.next_batch().unwrap();
+                    }
+                })
+            })
+            .collect();
+        for d in drainers {
+            d.join().unwrap();
+        }
+        done.store(true, Ordering::Relaxed);
+        watcher.join().unwrap();
+        assert_eq!(q.adaptive_window(), Some(cap), "saturated drains must converge to the cap");
     }
 
     #[test]

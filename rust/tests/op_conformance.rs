@@ -8,6 +8,8 @@
 //! **bit-for-bit**.
 
 use butterfly::butterfly::closed_form::{dct_stack, dft_stack, hadamard_stack};
+use butterfly::butterfly::kmatrix::KMatrix;
+use butterfly::butterfly::params::Field;
 use butterfly::linalg::{CMat, Cpx};
 use butterfly::transforms::fuse::{FuseSpec, FuseStrategy};
 use butterfly::transforms::matrices::{dft_matrix, idft_matrix, target_matrix};
@@ -112,6 +114,21 @@ fn stack_adapter_matches_closed_form_targets() {
     assert!(!had.is_complex());
     let dense = target_matrix(butterfly::transforms::spec::TransformKind::Hadamard, n, &mut Rng::new(1));
     check_against_dense(had.as_ref(), &dense, 1e-3, 13);
+}
+
+#[test]
+fn kmatrix_op_matches_its_dense_reconstruction() {
+    // the Block-tied BB* stack through the same adapter: complex and
+    // real fields, dense parity at batch {1, 3, 64} (single-plane path
+    // included for the real field inside check_against_dense)
+    let n = 32;
+    for (field, seed) in [(Field::Complex, 14u64), (Field::Real, 15u64)] {
+        let mut rng = Rng::new(seed);
+        let k = KMatrix::init(n, field, &mut rng);
+        let op = stack_op("kmatrix", k.stack());
+        assert_eq!(op.is_complex(), field == Field::Complex);
+        check_against_dense(op.as_ref(), &k.to_matrix(), 1e-3, seed + 100);
+    }
 }
 
 /// Every fused variant of a stack (K ∈ {2, 3, 4} × both strategies) must
@@ -236,6 +253,13 @@ fn one_arc_op_shared_by_8_threads_is_bitwise_serial() {
         // scratch through the workspace's fused planes — same proof
         stack_op_fused("fused-dft", &dft_stack(n), &FuseSpec::with_k(3, FuseStrategy::Balanced)),
         stack_op_fused("fused-fwht", &hadamard_stack(n), &FuseSpec::with_k(2, FuseStrategy::Memory)),
+        // Block-tied BB* stack (K-matrix): same immutable-tables claim
+        stack_op("kmatrix", KMatrix::init(n, Field::Complex, &mut Rng::new(5)).stack()),
+        stack_op_fused(
+            "fused-kmatrix",
+            KMatrix::init(n, Field::Real, &mut Rng::new(5)).stack(),
+            &FuseSpec::with_k(2, FuseStrategy::Balanced),
+        ),
     ];
     for op in ops {
         let mut rng = Rng::new(6);
